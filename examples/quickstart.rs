@@ -1,0 +1,108 @@
+//! Quickstart: the full three-layer composition in one binary.
+//!
+//! 1. Quantize a vector / matrix with the rust lattice engine (L3).
+//! 2. Load the Pallas fused decode-GEMV HLO artifact (L1, AOT-lowered by
+//!    python) through the PJRT runtime and check it against the rust
+//!    decoder on identical coded inputs.
+//! 3. Load the trained char-LM forward artifact (L2) and check its logits
+//!    against the native rust forward.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::{Context, Result};
+use nestquant::io::tensorfile::{find, read_tensors};
+use nestquant::lattice::nested::NestedLatticeQuantizer;
+use nestquant::model::weights::ModelWeights;
+use nestquant::quant::matrix::QuantizedMatrix;
+use nestquant::runtime::{ModelRunner, Runtime};
+use nestquant::util::{stats, Rng};
+use std::path::PathBuf;
+
+fn main() -> Result<()> {
+    let artifacts = PathBuf::from("artifacts");
+
+    // --- 1. the quantization primitive (pure rust) ---
+    println!("== L3: nested-lattice quantization primitive ==");
+    let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+    let mut rng = Rng::new(1);
+    let a = rng.gauss_vec(256);
+    let b = rng.gauss_vec(256);
+    let qa = nq.quantize(&a);
+    let qb = nq.quantize(&b);
+    println!(
+        "  quantized 256-dim vectors at {:.2} bits/entry (raw rate)",
+        nq.raw_rate()
+    );
+    println!(
+        "  inner product: exact {:+.3}, via Algorithm 4 {:+.3}",
+        stats::dot(&a, &b),
+        nq.dot(&qa, &qb)
+    );
+    println!(
+        "  roundtrip RMSE: {:.4}",
+        stats::rmse(&a, &nq.roundtrip(&a))
+    );
+
+    // --- 2. the Pallas kernel artifact through PJRT ---
+    println!("\n== L1: Pallas fused decode-GEMV via PJRT ==");
+    let rt = Runtime::cpu()?;
+    println!("  PJRT platform: {}", rt.platform());
+    let demo = read_tensors(&artifacts.join("qmatmul_demo.nqt"))
+        .context("run `make artifacts` first")?;
+    let codes_t = find(&demo, "codes")?;
+    let (rows, cols) = (codes_t.dims[0], codes_t.dims[1]);
+    let codes: Vec<i32> = match &codes_t.data {
+        nestquant::io::tensorfile::TensorData::I32(v) => v.clone(),
+        _ => anyhow::bail!("codes dtype"),
+    };
+    let beta_idx: Vec<i32> = match &find(&demo, "beta_idx")?.data {
+        nestquant::io::tensorfile::TensorData::I32(v) => v.clone(),
+        _ => anyhow::bail!("beta_idx dtype"),
+    };
+    let scales = find(&demo, "scales")?.as_f32()?.to_vec();
+    let betas = find(&demo, "betas")?.as_f32()?.to_vec();
+    let x = Rng::new(2).gauss_vec(cols);
+
+    let exe = rt.load_hlo(&artifacts.join("qmatmul_demo.hlo.txt"))?;
+    let lits = vec![
+        rt.lit_i32(&codes, &[rows, cols])?,
+        rt.lit_i32(&beta_idx, &[rows, cols / 8])?,
+        rt.lit_f32(&scales, &[rows])?,
+        rt.lit_f32(&x, &[cols])?,
+    ];
+    let y_pallas = exe.run(&lits)?;
+
+    // rust-side reference: decode the same codes and do the same GEMV
+    let nq_demo =
+        NestedLatticeQuantizer::new_m(14, betas.clone());
+    let qm = QuantizedMatrix {
+        rows,
+        cols,
+        codes: codes.iter().map(|&c| c as u8).collect(),
+        beta_idx: beta_idx.iter().map(|&b| b as u8).collect(),
+        scales,
+    };
+    let y_rust = qm.qgemv(&nq_demo, &x);
+    let err = stats::rmse(&y_pallas, &y_rust);
+    println!("  pallas-vs-rust GEMV RMSE: {err:.2e} over {rows} outputs");
+    anyhow::ensure!(err < 1e-4, "pallas and rust decoders disagree");
+    println!("  ✓ L1 kernel (AOT) and L3 decoder agree bit-for-bit");
+
+    // --- 3. the model forward artifact ---
+    println!("\n== L2: char-LM forward via PJRT vs native rust ==");
+    let w = ModelWeights::load(&artifacts.join("model_tiny.nqt"))?;
+    let runner = ModelRunner::load(&artifacts, "tiny", 1, &w)?;
+    let toks: Vec<i32> = w.val_tokens[..w.cfg.ctx].to_vec();
+    let logits_hlo = runner.forward(&toks)?;
+    let logits_native = nestquant::model::forward::forward_window(&w, &toks);
+    let err = stats::rmse(&logits_hlo, &logits_native.data);
+    println!(
+        "  HLO-vs-native logits RMSE: {err:.2e} over {} values",
+        logits_hlo.len()
+    );
+    anyhow::ensure!(err < 1e-3, "HLO and native forward disagree");
+    println!("  ✓ L2 artifact and the native engine agree");
+
+    println!("\nAll three layers compose. Next: examples/quantize_and_eval.rs");
+    Ok(())
+}

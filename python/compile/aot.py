@@ -1,0 +1,169 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO *text* artifacts the rust
+runtime (L3) loads via PJRT.
+
+Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md and gen_hlo.py there).
+
+Artifacts (per trained model size):
+  model_fwd_<name>_b<B>.hlo.txt — batched scoring forward:
+      (tokens i32[B,S], *flat_params) → (logits f32[B,S,V],)
+  qmatmul_demo.hlo.txt          — the L1 fused decode-GEMV Pallas kernel on
+      a real quantized matrix (three-layer composition proof; executed by
+      examples/quickstart.rs and checked against the rust decoder)
+  plus a `aot_manifest.txt` listing arg orders for the rust loader.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, nqt
+from .model import Config, flatten_names, forward_batch
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_model(path: str):
+    tensors = nqt.read(path)
+    vocab, ctx, d_model, n_layer, n_head, d_ff = [int(x) for x in tensors["config"]]
+    cfg = Config(vocab=vocab, ctx=ctx, d_model=d_model, n_layer=n_layer,
+                 n_head=n_head, d_ff=d_ff)
+    params = {
+        "tok_emb": jnp.asarray(tensors["w/tok_emb"]),
+        "pos_emb": jnp.asarray(tensors["w/pos_emb"]),
+        "head": jnp.asarray(tensors["w/head"]),
+        "final_norm": jnp.asarray(tensors["w/final_norm"]),
+        "layers": [],
+    }
+    for i in range(cfg.n_layer):
+        params["layers"].append(
+            {k: jnp.asarray(tensors[f"w/layers.{i}.{k}"])
+             for k in ["ln1", "ln2", "wq", "wk", "wv", "wo", "w_up", "w_down"]}
+        )
+    return cfg, params
+
+
+def export_model_fwd(name: str, out_dir: str, batch: int) -> str:
+    cfg, params = load_model(os.path.join(out_dir, f"model_{name}.nqt"))
+    names = [n for n, _ in flatten_names(params, cfg)]
+
+    def fwd(tokens, *flat):
+        # rebuild the params pytree from the flat argument list
+        p = {
+            "tok_emb": flat[0],
+            "pos_emb": flat[1],
+            "head": flat[2],
+            "final_norm": flat[3],
+            "layers": [],
+        }
+        idx = 4
+        for _ in range(cfg.n_layer):
+            layer = {}
+            for key in ["ln1", "ln2", "wq", "wk", "wv", "wo", "w_up", "w_down"]:
+                layer[key] = flat[idx]
+                idx += 1
+            p["layers"].append(layer)
+        logits = forward_batch(p, tokens, cfg)
+        # flatten: XLA-CPU pads the minor dim of (B,S,V) buffers when V is
+        # not register-aligned, which breaks PjRtBuffer→Literal conversion
+        # on the rust side; a 1-D result is layout-trivial.
+        return (logits.reshape(-1),)
+
+    tok_spec = jax.ShapeDtypeStruct((batch, cfg.ctx), jnp.int32)
+    flat_specs = [
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in flatten_names(params, cfg)
+    ]
+    lowered = jax.jit(fwd).lower(tok_spec, *flat_specs)
+    text = to_hlo_text(lowered)
+    fname = f"model_fwd_{name}_b{batch}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"wrote {fname} ({len(text) / 1e6:.2f} MB), args: tokens + {len(names)} params")
+    return fname
+
+
+def export_qmatmul_demo(out_dir: str) -> str:
+    """Quantize a small Gaussian matrix with the jnp reference quantizer and
+    export the Pallas fused decode-GEMV over it."""
+    from .kernels import ref
+    from .kernels.qmatmul import qmatmul
+
+    rows, cols, q = 32, 64, 14
+    betas = (0.25, 0.32, 0.45, 1.0)
+    rng = np.random.default_rng(11)
+    w = rng.standard_normal((rows, cols), dtype=np.float32)
+    codes = np.zeros((rows, cols), dtype=np.int32)
+    beta_idx = np.zeros((rows, cols // 8), dtype=np.int32)
+    scales = np.zeros((rows,), dtype=np.float32)
+    for r in range(rows):
+        c, bi, s = ref.nested_quantize(jnp.asarray(w[r]), q, betas, m_variant=True)
+        codes[r] = np.asarray(c)
+        beta_idx[r] = np.asarray(bi)
+        scales[r] = float(s)
+
+    def fn(codes_, beta_idx_, scales_, x):
+        return (qmatmul(codes_, beta_idx_, scales_, x, q=q, betas=betas),)
+
+    specs = [
+        jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        jax.ShapeDtypeStruct((rows, cols // 8), jnp.int32),
+        jax.ShapeDtypeStruct((rows,), jnp.float32),
+        jax.ShapeDtypeStruct((cols,), jnp.float32),
+    ]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = "qmatmul_demo.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # save the quantized matrix so rust can feed identical inputs
+    nqt.write(
+        os.path.join(out_dir, "qmatmul_demo.nqt"),
+        {
+            "codes": codes,
+            "beta_idx": beta_idx,
+            "scales": scales,
+            "betas": np.asarray(betas, dtype=np.float32),
+            "q": np.asarray([q], dtype=np.int32),
+            "w_original": w,
+        },
+    )
+    print(f"wrote {fname} ({len(text) / 1e3:.0f} kB) + qmatmul_demo.nqt")
+    return fname
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="tiny,small,base")
+    ap.add_argument("--batches", default="1,4")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = ["# artifact -> argument order (rust loader contract)"]
+    for name in args.models.split(","):
+        cfg, params = load_model(os.path.join(args.out_dir, f"model_{name}.nqt"))
+        pnames = ", ".join(n for n, _ in flatten_names(params, cfg))
+        for b in [int(x) for x in args.batches.split(",")]:
+            fname = export_model_fwd(name.strip(), args.out_dir, b)
+            manifest.append(f"{fname}: tokens[i32 {b}x{cfg.ctx}], {pnames}")
+    manifest.append("qmatmul_demo.hlo.txt: codes, beta_idx, scales, x")
+    export_qmatmul_demo(args.out_dir)
+    with open(os.path.join(args.out_dir, "aot_manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    # corpus vocab is part of the contract; stamp it
+    print(f"vocab={corpus.VOCAB_SIZE}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Deterministic synthetic character-level corpus.
+
+Stands in for wikitext2 (unavailable offline — see DESIGN.md §2): a mixture
+of structured pattern families a small LM can learn in a few hundred steps,
+with enough entropy that quantization-induced degradation is measurable:
+
+* arithmetic lines       "37+25=62;"
+* counting sequences     "7 8 9 10 11."
+* PCFG prose             "the red fox chases a small bird."
+* bracket nesting        "([{}])" with balanced structure
+* key-value records      "k3=v17, k8=v2;"
+
+Everything is generated from a seeded PRNG; train/val splits are disjoint
+streams from different seeds.
+"""
+
+import random
+import string
+
+# Character vocabulary: fixed, independent of the corpus realization.
+VOCAB = string.ascii_lowercase + string.digits + " .,;=+-()[]{}<>\n"
+VOCAB_SIZE = len(VOCAB)
+CHAR_TO_ID = {c: i for i, c in enumerate(VOCAB)}
+ID_TO_CHAR = {i: c for i, c in enumerate(VOCAB)}
+
+_NOUNS = "fox bird dog cat tree river stone cloud fish mouse".split()
+_ADJS = "red small big old quick dark cold tall wet dry".split()
+_VERBS = "chases sees finds follows likes avoids watches guards".split()
+
+
+def _arith(rng: random.Random) -> str:
+    a = rng.randrange(0, 50)
+    b = rng.randrange(0, 50)
+    return f"{a}+{b}={a + b};"
+
+
+def _count(rng: random.Random) -> str:
+    start = rng.randrange(0, 90)
+    k = rng.randrange(3, 7)
+    return " ".join(str(start + i) for i in range(k)) + "."
+
+
+def _prose(rng: random.Random) -> str:
+    det1, det2 = rng.choice(["the", "a"]), rng.choice(["the", "a"])
+    return (
+        f"{det1} {rng.choice(_ADJS)} {rng.choice(_NOUNS)} "
+        f"{rng.choice(_VERBS)} {det2} {rng.choice(_ADJS)} {rng.choice(_NOUNS)}."
+    )
+
+
+def _brackets(rng: random.Random, depth: int = 0) -> str:
+    if depth > 3 or rng.random() < 0.3:
+        return ""
+    pairs = [("(", ")"), ("[", "]"), ("{", "}")]
+    o, c = rng.choice(pairs)
+    inner = _brackets(rng, depth + 1)
+    tail = _brackets(rng, depth + 1) if rng.random() < 0.4 else ""
+    return o + inner + c + tail
+
+
+def _record(rng: random.Random) -> str:
+    k = rng.randrange(2, 4)
+    items = [f"k{rng.randrange(10)}=v{rng.randrange(30)}" for _ in range(k)]
+    return ", ".join(items) + ";"
+
+
+_FAMILIES = [_arith, _count, _prose, _brackets, _record]
+
+
+def generate(n_chars: int, seed: int) -> str:
+    """Generate a corpus of at least n_chars characters."""
+    rng = random.Random(seed)
+    parts = []
+    total = 0
+    while total < n_chars:
+        fam = rng.choice(_FAMILIES)
+        s = fam(rng)
+        if not s:
+            continue
+        s += "\n"
+        parts.append(s)
+        total += len(s)
+    return "".join(parts)[:n_chars]
+
+
+def encode(text: str) -> list[int]:
+    return [CHAR_TO_ID[c] for c in text if c in CHAR_TO_ID]
+
+
+def decode(ids) -> str:
+    return "".join(ID_TO_CHAR[int(i)] for i in ids)
+
+
+def train_val_tokens(n_train: int, n_val: int, seed: int = 7):
+    """Disjoint train/val token streams."""
+    train = encode(generate(n_train, seed))
+    val = encode(generate(n_val, seed + 1000))
+    return train, val
+
+
+if __name__ == "__main__":
+    t, v = train_val_tokens(500, 200)
+    print(decode(t[:200]))
+    print("---val---")
+    print(decode(v[:100]))

@@ -1,0 +1,158 @@
+"""Layer-1 Pallas kernels: E8 Voronoi encode / decode over blocked inputs.
+
+Kernels are written TPU-shaped — BlockSpec tiles a (blocks, 8) array of
+8-vectors into VMEM-sized row tiles — but are always lowered with
+``interpret=True``: the CPU PJRT plugin cannot execute Mosaic custom calls
+(see /opt/xla-example/README.md), so interpret mode is both the correctness
+path and what the AOT artifacts embed.
+
+Correctness is pytest-checked against ``ref.py`` (hypothesis sweeps shapes,
+q, and seeds).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+D = 8
+# Row tile: 8-vectors per VMEM tile. 512 blocks × 8 lanes × 4 B ≈ 16 KiB in,
+# ~3 tiles live (in/codes/out) — well under the ~16 MiB VMEM budget; sized
+# so the (blocks/TILE) grid stays coarse enough to amortize dispatch.
+TILE = 512
+
+
+def _decode_halfunits(t, q):
+    """Shared integer decode (NestQuantM flip-0 variant), t int32 (..., 8)."""
+    m = 2 * q
+    r1 = (t + q) // m
+    e1 = t - m * r1
+    r2 = t // m
+    e2 = t - q - m * r2
+
+    def fix(e, r):
+        par = jnp.mod(jnp.sum(r, axis=-1, keepdims=True), 2)
+        dir_ = jnp.where(e[..., :1] >= 0, 1, -1)
+        delta = jnp.concatenate(
+            [m * dir_, jnp.zeros_like(e[..., 1:])], axis=-1
+        )
+        return jnp.where(par == 1, e - delta, e)
+
+    e1 = fix(e1, r1)
+    e2 = fix(e2, r2)
+    c1 = jnp.sum(e1 * e1, axis=-1, keepdims=True)
+    c2 = jnp.sum(e2 * e2, axis=-1, keepdims=True)
+    return jnp.where(c1 <= c2, e1, e2)
+
+
+def _gmul(c):
+    """t = G·c for the Appendix-E generator (sparse form), c int32 (..., 8)."""
+    c0 = c[..., 0:1]
+    s = jnp.sum(c[..., 2:], axis=-1, keepdims=True)
+    return jnp.concatenate(
+        [
+            c0,
+            c0 + 2 * c[..., 2:3],
+            c0 + 2 * c[..., 4:5],
+            c0 + 2 * c[..., 6:7],
+            c0 + 4 * c[..., 1:2] + 2 * s,
+            c0 + 2 * c[..., 3:4],
+            c0 + 2 * c[..., 5:6],
+            c0 + 2 * c[..., 7:8],
+        ],
+        axis=-1,
+    )
+
+
+def _decode_kernel(c_ref, o_ref, *, q):
+    c = c_ref[...].astype(jnp.int32)
+    e = _decode_halfunits(_gmul(c), q)
+    o_ref[...] = e.astype(jnp.float32) * 0.5
+
+
+@functools.partial(jax.jit, static_argnames=("q",))
+def e8_decode(codes, *, q: int):
+    """Decode coset codes (blocks, 8) int32 → lattice points (blocks, 8) f32.
+
+    NestQuantM decode oracle (flip position 0, Appendix D) — matches the
+    rust `decode_block_i32` exactly.
+    """
+    blocks = codes.shape[0]
+    assert codes.shape[1] == D
+    tile = TILE if blocks % TILE == 0 else blocks
+    grid = (blocks // tile,)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, q=q),
+        out_shape=jax.ShapeDtypeStruct((blocks, D), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, D), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, D), lambda i: (i, 0)),
+        interpret=True,
+    )(codes)
+
+
+def _quantize_kernel(x_ref, ginv_ref, codes_ref, recon_ref, *, q):
+    """Encode blocks of 8 (already scaled by 1/β) and emit decode(encode)."""
+    x = x_ref[...]
+    ginv = ginv_ref[...]
+    # nearest E8 point: D8 candidate and D8+½ candidate with parity fix.
+    # (full oracle: flip at argmax |x−r| — encode side is exact)
+    def nearest_d8(y):
+        r = jnp.floor(y + 0.5)
+        a = jnp.abs(y - r)
+        par = jnp.mod(jnp.sum(r, axis=-1, keepdims=True), 2.0)
+        pos = jnp.argmax(a, axis=-1)
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, y.shape, 1) == pos[..., None])
+        ev = jnp.sum(jnp.where(onehot, y - r, 0.0), axis=-1, keepdims=True)
+        dir_ = jnp.where(ev >= 0, 1.0, -1.0)
+        return jnp.where(par == 1.0, r + onehot * dir_, r)
+
+    c1 = nearest_d8(x)
+    c2 = nearest_d8(x - 0.5) + 0.5
+    d1 = jnp.sum((x - c1) ** 2, axis=-1, keepdims=True)
+    d2 = jnp.sum((x - c2) ** 2, axis=-1, keepdims=True)
+    p = jnp.where(d1 <= d2, c1, c2)
+    # coset code: v = G⁻¹·(2p) mod q
+    t = 2.0 * p
+    v = jnp.floor(t @ ginv.T + 0.5)
+    codes = jnp.mod(v, float(q))
+    codes_ref[...] = codes.astype(jnp.int32)
+    # reconstruction via the decode path (overload-aware)
+    e = _decode_halfunits(_gmul(codes.astype(jnp.int32)), q)
+    recon_ref[...] = e.astype(jnp.float32) * 0.5
+
+
+@functools.partial(jax.jit, static_argnames=("q",))
+def e8_quantize(x, *, q: int):
+    """Encode scaled blocks (blocks, 8) f32 → (codes int32, recon f32).
+
+    recon = decode(encode(x)) — equals the nearest lattice point unless the
+    encoder is in overload (paper §4.1).
+    """
+    import numpy as np
+
+    from . import ref
+
+    blocks = x.shape[0]
+    assert x.shape[1] == D
+    ginv = jnp.asarray(np.asarray(ref.G2E8_INV), dtype=jnp.float32)
+    tile = TILE if blocks % TILE == 0 else blocks
+    grid = (blocks // tile,)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, q=q),
+        out_shape=(
+            jax.ShapeDtypeStruct((blocks, D), jnp.int32),
+            jax.ShapeDtypeStruct((blocks, D), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, D), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile, D), lambda i: (i, 0)),
+            pl.BlockSpec((tile, D), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(x, ginv)

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: fused NestQuant decode → GEMV (the paper's
+Appendix-E CUDA kernel, re-thought for TPU).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of warp-level
+``__dp4a`` tricks, the kernel tiles rows of the packed weight into VMEM
+(BlockSpec), decodes each 8-block to a small-integer lattice point in
+registers, applies the 2-bit β dictionary, and feeds the dequantized tile
+to the vector unit / MXU as a dense dot. Memory traffic from HBM is the
+~4.25-bit payload, not f32 weights — the memory-bound GEMV win of Table 4.
+
+Lowered with interpret=True (CPU PJRT cannot run Mosaic custom calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .e8 import _decode_halfunits, _gmul
+
+D = 8
+ROW_TILE = 32
+
+
+def _qmatmul_kernel(codes_ref, beta_idx_ref, scale_ref, x_ref, o_ref, *, q, betas):
+    codes = codes_ref[...].astype(jnp.int32)          # (rt, cols)
+    rt, cols = codes.shape
+    b = cols // D
+    blocks = codes.reshape(rt, b, D)
+    e = _decode_halfunits(_gmul(blocks), q)           # (rt, b, 8) half-units
+    beta_idx = beta_idx_ref[...]                      # (rt, b) int32
+    # β dictionary select without capturing an array constant (pallas
+    # kernels may only close over scalars); βs are folded with the
+    # half-unit 0.5 factor.
+    bsel = jnp.zeros(beta_idx.shape, jnp.float32)
+    for t, beta in enumerate(betas):
+        bsel = jnp.where(beta_idx == t, beta * 0.5, bsel)
+    w = e.astype(jnp.float32) * bsel[..., None]
+    w = w.reshape(rt, cols)
+    x = x_ref[...]                                    # (cols,)
+    y = w @ x                                         # dense dot → MXU tile
+    o_ref[...] = y * scale_ref[...] / jnp.sqrt(float(cols))
+
+
+@functools.partial(jax.jit, static_argnames=("q", "betas"))
+def qmatmul(codes, beta_idx, row_scales, x, *, q: int, betas: tuple):
+    """y = W·x from quantized storage.
+
+    codes (rows, cols) int32 in [0,q); beta_idx (rows, cols/8) int32;
+    row_scales (rows,) f32 (s_r = ‖row‖₂); x (cols,) f32.
+    """
+    rows, cols = codes.shape
+    tile = ROW_TILE if rows % ROW_TILE == 0 else rows
+    grid = (rows // tile,)
+    return pl.pallas_call(
+        functools.partial(_qmatmul_kernel, q=q, betas=tuple(betas)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, cols), lambda i: (i, 0)),
+            pl.BlockSpec((tile, cols // D), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(codes, beta_idx, row_scales, x)
+
+
+def vmem_report(rows: int, cols: int, q: int) -> dict:
+    """Static VMEM/MXU estimate for DESIGN.md §Perf (interpret mode gives
+    no TPU timings — the paper-facing numbers are structural)."""
+    tile = ROW_TILE if rows % ROW_TILE == 0 else rows
+    codes_b = tile * cols * 4          # int32 in VMEM (packed u4 in HBM)
+    beta_b = tile * cols // D * 4
+    x_b = cols * 4
+    w_b = tile * cols * 4              # decoded tile
+    out_b = tile * 4
+    vmem = codes_b + beta_b + x_b + w_b + out_b
+    payload_bits = cols * (jnp.log2(q).item() if hasattr(jnp.log2(q), "item") else 4) + cols / D * 2
+    return {
+        "row_tile": tile,
+        "vmem_bytes_per_tile": vmem,
+        "hbm_bits_per_entry": 4 + 2 / D,  # u4 codes + 2-bit β
+        "mxu_tile": (tile, cols),
+        "flops_per_tile": 2 * tile * cols,
+        "payload_bits_per_row": payload_bits,
+    }

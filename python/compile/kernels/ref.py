@@ -1,0 +1,162 @@
+"""Pure-jnp oracles for the NestQuant kernels.
+
+Everything here is the *reference* implementation the Pallas kernels (and,
+transitively, the rust engine — see the cross-language golden tests) are
+checked against:
+
+* ``nearest_e8``      — Conway–Sloane closest point in E8 (paper Alg. 5)
+* ``voronoi_encode``  — coset code of the nearest lattice point (Alg. 1)
+* ``voronoi_decode``  — min-energy coset representative (Alg. 2), with the
+  integer half-unit formulation shared with the rust fast path
+* ``nested_quantize`` — multi-β quantization of 8-blocks (Alg. 3)
+* ``qmatmul_ref``     — dequantize-then-matmul reference for the fused
+  Pallas kernel
+
+Conventions match the rust side exactly: round-half-up tie-breaks and the
+Appendix-E generator matrix of 2·E8.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+D = 8
+
+# Appendix-E generator of 2·E8 (row-major; columns are generators).
+G2E8 = np.array(
+    [
+        [1, 0, 0, 0, 0, 0, 0, 0],
+        [1, 0, 2, 0, 0, 0, 0, 0],
+        [1, 0, 0, 0, 2, 0, 0, 0],
+        [1, 0, 0, 0, 0, 0, 2, 0],
+        [1, 4, 2, 2, 2, 2, 2, 2],
+        [1, 0, 0, 2, 0, 0, 0, 0],
+        [1, 0, 0, 0, 0, 2, 0, 0],
+        [1, 0, 0, 0, 0, 0, 0, 2],
+    ],
+    dtype=np.int64,
+)
+G2E8_INV = np.linalg.inv(G2E8.astype(np.float64))  # exact up to fp (det 256)
+
+
+def _round_half_up(x):
+    return jnp.floor(x + 0.5)
+
+
+def _nearest_d8(x, force_flip0: bool):
+    """Closest point of D8 = {v ∈ Z^8 : Σv even}; x has shape (..., 8)."""
+    r = _round_half_up(x)
+    parity = jnp.mod(jnp.sum(r, axis=-1), 2.0)  # 0 or 1
+    a = jnp.abs(x - r)
+    if force_flip0:
+        pos = jnp.zeros(x.shape[:-1], dtype=jnp.int32)
+    else:
+        pos = jnp.argmax(a, axis=-1).astype(jnp.int32)
+    dir_ = jnp.where(jnp.take_along_axis(x - r, pos[..., None], -1)[..., 0] >= 0, 1.0, -1.0)
+    onehot = jnp.arange(D) == pos[..., None]
+    r_flipped = r + onehot * dir_[..., None]
+    return jnp.where(parity[..., None] == 1.0, r_flipped, r)
+
+
+def nearest_e8(x, m_variant: bool = False):
+    """Closest point of E8 = D8 ∪ (D8 + ½); x shape (..., 8)."""
+    c1 = _nearest_d8(x, m_variant)
+    c2 = _nearest_d8(x - 0.5, m_variant) + 0.5
+    d1 = jnp.sum((x - c1) ** 2, axis=-1)
+    d2 = jnp.sum((x - c2) ** 2, axis=-1)
+    return jnp.where((d1 <= d2)[..., None], c1, c2)
+
+
+def voronoi_encode(x, q: int):
+    """Alg. 1: coset code (..., 8) of nearest lattice point; values in [0, q)."""
+    p = nearest_e8(x)
+    t = (2.0 * p)  # integer vector in 2E8
+    v = jnp.einsum("ij,...j->...i", jnp.asarray(G2E8_INV, dtype=x.dtype), t)
+    v = _round_half_up(v)
+    return jnp.mod(v, q).astype(jnp.int32)
+
+
+def voronoi_decode(c, q: int, m_variant: bool = False):
+    """Alg. 2 via the integer half-unit formulation (matches rust exactly).
+
+    t = G·c ≥ 0; m = 2q; candidates
+      e1 = t − m·round_half_up(t/m)   (D8 grid)
+      e2 = t − q − m·floor(t/m)       (D8+½ grid)
+    with parity flips; result = chosen e / 2.
+    """
+    t = jnp.einsum("ij,...j->...i", jnp.asarray(G2E8, dtype=jnp.int32), c.astype(jnp.int32))
+    m = 2 * q
+    r1 = (t + q) // m
+    e1 = t - m * r1
+    r2 = t // m
+    e2 = t - q - m * r2
+
+    def parity_fix(e, r, force0):
+        par = jnp.mod(jnp.sum(r, axis=-1), 2)
+        if force0:
+            pos = jnp.zeros(e.shape[:-1], dtype=jnp.int32)
+        else:
+            pos = jnp.argmax(jnp.abs(e), axis=-1).astype(jnp.int32)
+        ev = jnp.take_along_axis(e, pos[..., None], -1)[..., 0]
+        dir_ = jnp.where(ev >= 0, 1, -1)
+        onehot = (jnp.arange(D) == pos[..., None]).astype(e.dtype)
+        e_f = e - onehot * (m * dir_)[..., None]
+        return jnp.where(par[..., None] == 1, e_f, e)
+
+    e1 = parity_fix(e1, r1, m_variant)
+    e2 = parity_fix(e2, r2, m_variant)
+    c1 = jnp.sum(e1 * e1, axis=-1)
+    c2 = jnp.sum(e2 * e2, axis=-1)
+    e = jnp.where((c1 <= c2)[..., None], e1, e2)
+    return e.astype(jnp.float32) * 0.5
+
+
+def nested_quantize(a, q: int, betas, m_variant: bool = False):
+    """Alg. 3 on a 1-D vector (length divisible by 8).
+
+    Returns (codes (n,), beta_idx (n/8,), scale s). Opt-β strategy.
+    """
+    n = a.shape[-1]
+    assert n % D == 0
+    s = jnp.linalg.norm(a)
+    scale = jnp.where(s > 0, jnp.sqrt(float(n)) / s, 0.0)
+    v = (a * scale).reshape(-1, D)  # (b, 8)
+    betas = jnp.asarray(betas, dtype=jnp.float32)
+    # quantize each block at every beta, pick the best
+    errs, codes, recons = [], [], []
+    for bi in range(betas.shape[0]):
+        beta = betas[bi]
+        c = voronoi_encode(v / beta, q)
+        r = voronoi_decode(c, q, m_variant) * beta
+        errs.append(jnp.sum((r - v) ** 2, axis=-1))
+        codes.append(c)
+        recons.append(r)
+    errs = jnp.stack(errs)            # (k, b)
+    codes = jnp.stack(codes)          # (k, b, 8)
+    best = jnp.argmin(errs, axis=0)   # (b,)
+    code = jnp.take_along_axis(codes, best[None, :, None], 0)[0]
+    return code.reshape(n), best.astype(jnp.int32), s
+
+
+def nested_dequantize(codes, beta_idx, s, q: int, betas, m_variant: bool = False):
+    n = codes.shape[-1]
+    betas = jnp.asarray(betas, dtype=jnp.float32)
+    c = codes.reshape(-1, D)
+    r = voronoi_decode(c, q, m_variant)
+    r = r * betas[beta_idx][:, None]
+    denorm = jnp.where(s > 0, s / jnp.sqrt(float(n)), 0.0)
+    return (r * denorm).reshape(n)
+
+
+def qmatmul_ref(codes, beta_idx, row_scales, x, q: int, betas, m_variant: bool = True):
+    """Reference for the fused decode-matmul kernel: y = W·x.
+
+    codes (rows, cols) int32; beta_idx (rows, cols/8) int32;
+    row_scales (rows,) = s_r; x (cols,) f32.
+    """
+    rows, cols = codes.shape
+    betas = jnp.asarray(betas, dtype=jnp.float32)
+    c = codes.reshape(rows, cols // D, D)
+    dec = voronoi_decode(c, q, m_variant)           # (rows, b, 8)
+    dec = dec * betas[beta_idx][..., None]          # apply β per block
+    w = dec.reshape(rows, cols) * (row_scales / jnp.sqrt(float(cols)))[:, None]
+    return w @ x

@@ -1,0 +1,178 @@
+"""Layer-2 JAX model: a small GPT-style causal char-LM.
+
+Pure-functional parameters (nested dicts of jnp arrays) so the same weights
+serialize to ``.nqt`` for the rust native engine (which reimplements this
+forward bit-for-bit — parity-tested) and AOT-lower to HLO for the PJRT
+runtime.
+
+Architecture (mirrored exactly in rust/src/model/forward.rs):
+  tok_emb + pos_emb → N × [RMSNorm → MHA (causal) → +res →
+                           RMSNorm → MLP (GELU) → +res] → RMSNorm → head
+
+No biases anywhere; untied embedding/head; learned positions.
+``forward_qmatmul`` swaps the head matmul for the L1 Pallas kernel to
+prove the three layers compose into one HLO artifact.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int = 44
+    ctx: int = 128
+    d_model: int = 192
+    n_layer: int = 4
+    n_head: int = 4
+    d_ff: int = 512
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+
+def init_params(cfg: Config, key):
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by 1/√(2L)."""
+    keys = jax.random.split(key, 4 + 6 * cfg.n_layer)
+    it = iter(range(len(keys)))
+    std = 0.02
+    resid_std = std / (2.0 * cfg.n_layer) ** 0.5
+
+    def norm(shape, k, s=std):
+        return (jax.random.normal(keys[k], shape) * s).astype(jnp.float32)
+
+    p = {
+        "tok_emb": norm((cfg.vocab, cfg.d_model), next(it)),
+        "pos_emb": norm((cfg.ctx, cfg.d_model), next(it)),
+        "head": norm((cfg.vocab, cfg.d_model), next(it)),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": [],
+    }
+    _ = next(it)
+    for _l in range(cfg.n_layer):
+        layer = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            # weights stored (out, in) — rust GEMV convention
+            "wq": norm((cfg.d_model, cfg.d_model), next(it)),
+            "wk": norm((cfg.d_model, cfg.d_model), next(it)),
+            "wv": norm((cfg.d_model, cfg.d_model), next(it)),
+            "wo": norm((cfg.d_model, cfg.d_model), next(it), resid_std),
+            "w_up": norm((cfg.d_ff, cfg.d_model), next(it)),
+            "w_down": norm((cfg.d_model, cfg.d_ff), next(it), resid_std),
+        }
+        p["layers"].append(layer)
+    return p
+
+
+def rmsnorm(x, g, eps: float = 1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def gelu(x):
+    # tanh approximation (matched in rust)
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def attention(x, layer, cfg: Config):
+    """Causal multi-head attention; x (seq, d)."""
+    seq = x.shape[0]
+    q = x @ layer["wq"].T
+    k = x @ layer["wk"].T
+    v = x @ layer["wv"].T
+
+    def split(h):
+        return h.reshape(seq, cfg.n_head, cfg.d_head).transpose(1, 0, 2)
+
+    qh, kh, vh = split(q), split(k), split(v)  # (heads, seq, dh)
+    scores = qh @ kh.transpose(0, 2, 1) / jnp.sqrt(float(cfg.d_head))
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ vh).transpose(1, 0, 2).reshape(seq, cfg.d_model)
+    return out @ layer["wo"].T
+
+
+def block(x, layer, cfg: Config):
+    x = x + attention(rmsnorm(x, layer["ln1"]), layer, cfg)
+    h = rmsnorm(x, layer["ln2"])
+    h = gelu(h @ layer["w_up"].T) @ layer["w_down"].T
+    return x + h
+
+
+def forward(params, tokens, cfg: Config):
+    """tokens (seq,) int32 → logits (seq, vocab)."""
+    seq = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:seq]
+    for layer in params["layers"]:
+        x = block(x, layer, cfg)
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["head"].T
+
+
+def forward_batch(params, tokens, cfg: Config):
+    """tokens (batch, seq) → logits (batch, seq, vocab)."""
+    return jax.vmap(lambda t: forward(params, t, cfg))(tokens)
+
+
+def loss_fn(params, tokens, cfg: Config):
+    """Next-token cross-entropy over a (batch, seq+1) token block."""
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    logits = forward_batch(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def forward_qmatmul_head(params_q, tokens, cfg: Config, q: int, betas: tuple):
+    """Forward pass whose head matmul runs through the L1 Pallas kernel —
+    the three-layer composition demo AOT-exported for the rust runtime.
+
+    params_q: regular params plus quantized head storage
+    (head_codes (vocab, d) int32, head_beta (vocab, d/8) int32,
+    head_scales (vocab,) f32).
+    """
+    from .kernels.qmatmul import qmatmul
+
+    seq = tokens.shape[0]
+    x = params_q["tok_emb"][tokens] + params_q["pos_emb"][:seq]
+    for layer in params_q["layers"]:
+        x = block(x, layer, cfg)
+    x = rmsnorm(x, params_q["final_norm"])
+    logits = jax.vmap(
+        lambda xi: qmatmul(
+            params_q["head_codes"],
+            params_q["head_beta"],
+            params_q["head_scales"],
+            xi,
+            q=q,
+            betas=betas,
+        )
+    )(x)
+    return logits
+
+
+def count_params(params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(int(l.size) for l in leaves)
+
+
+def flatten_names(params, cfg: Config):
+    """Deterministic (name, array) list — the .nqt serialization order and
+    the argument order of the AOT-exported forward."""
+    out = [
+        ("tok_emb", params["tok_emb"]),
+        ("pos_emb", params["pos_emb"]),
+        ("head", params["head"]),
+        ("final_norm", params["final_norm"]),
+    ]
+    for i, layer in enumerate(params["layers"]):
+        for key in ["ln1", "ln2", "wq", "wk", "wv", "wo", "w_up", "w_down"]:
+            out.append((f"layers.{i}.{key}", layer[key]))
+    return out

@@ -1,0 +1,45 @@
+"""Python writer/reader for the `.nqt` tensor container (see
+rust/src/io/tensorfile.rs for the spec). Little-endian, self-describing."""
+
+import struct
+
+import numpy as np
+
+_MAGIC = b"NQT1"
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.uint8): 1, np.dtype(np.int32): 2}
+_DTYPES_REV = {0: np.float32, 1: np.uint8, 2: np.int32}
+
+
+def write(path, tensors: dict):
+    """tensors: {name: np.ndarray} with dtype f32/u8/i32."""
+    with open(path, "wb") as f:
+        f.write(_MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read(path) -> dict:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == _MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            dtype_id, ndim = struct.unpack("<BB", f.read(2))
+            dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(ndim)]
+            dt = np.dtype(_DTYPES_REV[dtype_id])
+            numel = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(numel * dt.itemsize), dtype=dt)
+            out[name] = data.reshape(dims)
+    return out

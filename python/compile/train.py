@@ -1,0 +1,154 @@
+"""Build-time training of the evaluation char-LMs (DESIGN.md §2: stands in
+for the Llama checkpoints the paper quantizes).
+
+Trains three sizes (tiny / small / base) on the synthetic corpus with a
+hand-rolled AdamW (optax unavailable offline), logs the loss curve to
+results/train_loss_<name>.tsv, and saves weights + config + token splits to
+artifacts/model_<name>.nqt for the rust engine.
+
+Run once via `make artifacts`; never on the request path.
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, nqt
+from .model import Config, count_params, flatten_names, init_params, loss_fn
+
+SIZES = {
+    # name: (d_model, n_layer, n_head, d_ff, steps)
+    "tiny": (64, 2, 2, 192, 250),
+    "small": (96, 3, 4, 256, 300),
+    "base": (192, 4, 4, 512, 400),
+}
+CTX = 128
+BATCH = 12
+LR_PEAK = 3e-3
+LR_FLOOR = 3e-4
+WARMUP = 20
+WD = 0.01
+B1, B2 = 0.9, 0.95
+EPS = 1e-8
+
+
+def batches(tokens: np.ndarray, rng: np.random.Generator):
+    """Random (BATCH, CTX+1) windows."""
+    starts = rng.integers(0, len(tokens) - CTX - 1, size=BATCH)
+    return np.stack([tokens[s : s + CTX + 1] for s in starts]).astype(np.int32)
+
+
+def lr_at(step: int, total: int) -> float:
+    if step < WARMUP:
+        return LR_PEAK * (step + 1) / WARMUP
+    frac = (step - WARMUP) / max(1, total - WARMUP)
+    return LR_FLOOR + 0.5 * (LR_PEAK - LR_FLOOR) * (1 + np.cos(np.pi * frac))
+
+
+def adamw_update(params, grads, m, v, step, lr):
+    def upd(p, g, m_, v_):
+        m2 = B1 * m_ + (1 - B1) * g
+        v2 = B2 * v_ + (1 - B2) * g * g
+        mhat = m2 / (1 - B1 ** (step + 1))
+        vhat = v2 / (1 - B2 ** (step + 1))
+        p2 = p - lr * (mhat / (jnp.sqrt(vhat) + EPS) + WD * p)
+        return p2, m2, v2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    ps, ms, vs = zip(*out)
+    return (
+        jax.tree_util.tree_unflatten(tree, ps),
+        jax.tree_util.tree_unflatten(tree, ms),
+        jax.tree_util.tree_unflatten(tree, vs),
+    )
+
+
+def eval_loss(params, cfg, tokens: np.ndarray, n_windows: int = 24) -> float:
+    rng = np.random.default_rng(1234)
+    total = 0.0
+    for _ in range(n_windows):
+        b = batches(tokens, rng)
+        total += float(loss_fn(params, jnp.asarray(b), cfg))
+    return total / n_windows
+
+
+def train_one(name: str, out_dir: str, results_dir: str, train_tok, val_tok) -> None:
+    d, layers, heads, ff, steps = SIZES[name]
+    cfg = Config(
+        vocab=corpus.VOCAB_SIZE, ctx=CTX, d_model=d, n_layer=layers, n_head=heads, d_ff=ff
+    )
+    key = jax.random.PRNGKey(42)
+    params = init_params(cfg, key)
+    print(f"[{name}] {count_params(params):,} params, {steps} steps")
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    m, v = zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, t: loss_fn(p, t, cfg)))
+
+    rng = np.random.default_rng(99)
+    curve = []
+    t0 = time.time()
+    train_np = np.asarray(train_tok)
+    val_np = np.asarray(val_tok)
+    for step in range(steps):
+        b = jnp.asarray(batches(train_np, rng))
+        loss, grads = grad_fn(params, b)
+        lr = lr_at(step, steps)
+        params, m, v = adamw_update(params, grads, m, v, step, lr)
+        curve.append((step, float(loss)))
+        if step % 50 == 0 or step == steps - 1:
+            print(f"[{name}] step {step:4d} loss {float(loss):.4f} lr {lr:.2e} "
+                  f"({time.time() - t0:.0f}s)")
+
+    val = eval_loss(params, cfg, val_np)
+    ppl = float(np.exp(val))
+    print(f"[{name}] val loss {val:.4f}  ppl {ppl:.3f}")
+
+    os.makedirs(results_dir, exist_ok=True)
+    with open(os.path.join(results_dir, f"train_loss_{name}.tsv"), "w") as f:
+        f.write("step\tloss\n")
+        for s, l in curve:
+            f.write(f"{s}\t{l:.5f}\n")
+        f.write(f"# val_loss\t{val:.5f}\n# val_ppl\t{ppl:.5f}\n")
+
+    tensors = {
+        "config": np.array(
+            [cfg.vocab, cfg.ctx, cfg.d_model, cfg.n_layer, cfg.n_head, cfg.d_ff],
+            dtype=np.int32,
+        ),
+        "tokens/val": val_np.astype(np.int32),
+        "tokens/calib": train_np[: 48 * (CTX + 1)].astype(np.int32),
+    }
+    for pname, arr in flatten_names(params, cfg):
+        tensors[f"w/{pname}"] = np.asarray(arr, dtype=np.float32)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"model_{name}.nqt")
+    nqt.write(path, tensors)
+    print(f"[{name}] wrote {path} ({os.path.getsize(path) / 1e6:.1f} MB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--results", default="../results")
+    ap.add_argument("--models", default="tiny,small,base")
+    args = ap.parse_args()
+
+    train_tok, val_tok = corpus.train_val_tokens(600_000, 40_000)
+    print(f"corpus: {len(train_tok):,} train / {len(val_tok):,} val tokens, "
+          f"vocab {corpus.VOCAB_SIZE}")
+    for name in args.models.split(","):
+        train_one(name.strip(), args.out_dir, args.results, train_tok, val_tok)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Model (L2) tests: shapes, loss behavior, determinism, serialization."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus
+from compile.model import (
+    Config,
+    count_params,
+    flatten_names,
+    forward,
+    forward_batch,
+    init_params,
+    loss_fn,
+)
+
+CFG = Config(vocab=corpus.VOCAB_SIZE, ctx=32, d_model=64, n_layer=2, n_head=2, d_ff=192)
+
+
+def _params():
+    return init_params(CFG, jax.random.PRNGKey(7))
+
+
+def test_forward_shapes():
+    p = _params()
+    toks = jnp.zeros((16,), jnp.int32)
+    logits = forward(p, toks, CFG)
+    assert logits.shape == (16, CFG.vocab)
+    batch = jnp.zeros((3, 32), jnp.int32)
+    lb = forward_batch(p, batch, CFG)
+    assert lb.shape == (3, 32, CFG.vocab)
+
+
+def test_initial_loss_near_uniform():
+    p = _params()
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(4, 33)).astype(np.int32))
+    loss = float(loss_fn(p, toks, CFG))
+    assert abs(loss - np.log(CFG.vocab)) < 0.25, loss
+
+
+def test_causality():
+    # changing a future token must not affect earlier logits
+    p = _params()
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, CFG.vocab, size=32).astype(np.int32)
+    l1 = np.asarray(forward(p, jnp.asarray(toks), CFG))
+    toks2 = toks.copy()
+    toks2[20] = (toks2[20] + 5) % CFG.vocab
+    l2 = np.asarray(forward(p, jnp.asarray(toks2), CFG))
+    np.testing.assert_allclose(l1[:20], l2[:20], atol=1e-5)
+    assert not np.allclose(l1[20:], l2[20:])
+
+
+def test_loss_decreases_when_overfitting_one_batch():
+    p = _params()
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 33)).astype(np.int32))
+    grad_fn = jax.jit(jax.value_and_grad(lambda pp: loss_fn(pp, toks, CFG)))
+    l0, _ = grad_fn(p)
+    for _ in range(30):
+        _, g = grad_fn(p)
+        p = jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g)
+    l1, _ = grad_fn(p)
+    assert float(l1) < float(l0) * 0.8, (float(l0), float(l1))
+
+
+def test_param_count_and_flatten_order():
+    p = _params()
+    names = [n for n, _ in flatten_names(p, CFG)]
+    assert names[0] == "tok_emb"
+    assert names[3] == "final_norm"
+    assert f"layers.{CFG.n_layer - 1}.w_down" == names[-1]
+    total = sum(int(a.size) for _, a in flatten_names(p, CFG))
+    assert total == count_params(p)
+
+
+def test_deterministic_init():
+    a = _params()
+    b = init_params(CFG, jax.random.PRNGKey(7))
+    for (_, x), (_, y) in zip(flatten_names(a, CFG), flatten_names(b, CFG)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_corpus_roundtrip_and_determinism():
+    t1 = corpus.generate(2000, seed=3)
+    t2 = corpus.generate(2000, seed=3)
+    assert t1 == t2
+    ids = corpus.encode(t1)
+    assert corpus.decode(ids) == t1  # all generated chars are in-vocab
+    t3 = corpus.generate(2000, seed=4)
+    assert t1 != t3
+
+
+def test_nqt_python_roundtrip(tmp_path):
+    from compile import nqt
+
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.arange(5, dtype=np.int32),
+        "c": np.arange(7, dtype=np.uint8),
+    }
+    p = tmp_path / "t.nqt"
+    nqt.write(p, tensors)
+    back = nqt.read(p)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])

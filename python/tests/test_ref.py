@@ -1,0 +1,129 @@
+"""Tests for the pure-jnp reference implementations (kernels/ref.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+
+def _rand_blocks(n, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, 8)).astype(np.float32) * scale)
+
+
+def _in_e8(p) -> bool:
+    p = np.asarray(p, dtype=np.float64)
+    if np.allclose(p, np.round(p)):
+        return int(np.round(p).sum()) % 2 == 0
+    h = p - 0.5
+    if np.allclose(h, np.round(h)):
+        return int(np.round(h).sum()) % 2 == 0
+    return False
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_nearest_e8_returns_lattice_points(seed):
+    x = _rand_blocks(16, seed, 2.0)
+    p = np.asarray(ref.nearest_e8(x))
+    for row in p:
+        assert _in_e8(row), row
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_nearest_e8_beats_random_lattice_neighbors(seed):
+    x = _rand_blocks(4, seed, 1.5)
+    p = np.asarray(ref.nearest_e8(x))
+    xs = np.asarray(x)
+    rng = np.random.default_rng(seed)
+    # random E8 perturbations of the found point must not be closer
+    for _ in range(50):
+        d8 = rng.integers(-2, 3, size=8)
+        if d8.sum() % 2 != 0:
+            d8[0] += 1
+        alt = p + d8.astype(np.float64)
+        d_found = ((xs - p) ** 2).sum(-1)
+        d_alt = ((xs - alt) ** 2).sum(-1)
+        assert (d_found <= d_alt + 1e-4).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([8, 14, 16]))
+def test_voronoi_roundtrip_no_overload(seed, q):
+    # σ=1 ≪ q·inradius(V_E8): decode(encode(x)) == nearest_e8(x).
+    # (q=3 would legitimately overload: 3·0.707 < E‖x‖ ≈ 2.8.)
+    x = _rand_blocks(32, seed)
+    p = np.asarray(ref.nearest_e8(x))
+    c = ref.voronoi_encode(x, q)
+    r = np.asarray(ref.voronoi_decode(c, q))
+    np.testing.assert_allclose(r, p, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([4, 14]))
+def test_voronoi_code_roundtrip(seed, q):
+    # decode → encode returns the same code
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.integers(0, q, size=(16, 8)).astype(np.int32))
+    r = ref.voronoi_decode(c, q)
+    c2 = ref.voronoi_encode(r, q)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(c))
+
+
+def test_voronoi_decode_m_variant_matches_rust_convention():
+    # golden values computed by the rust integer decoder (decode_block_i32)
+    # for q=14 — guards the cross-language contract.
+    c = jnp.asarray([[6, 0, 9, 6, 8, 11, 7, 6]], dtype=jnp.int32)
+    r = np.asarray(ref.voronoi_decode(c, 14, m_variant=True))[0]
+    expected = np.array([6, -4, -6, -8, -12, -10, 0, -10], dtype=np.float64) * 0.5
+    np.testing.assert_allclose(r, expected)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_nested_quantize_error_small(seed):
+    a = jnp.asarray(
+        np.random.default_rng(seed).standard_normal(128).astype(np.float32)
+    )
+    betas = (0.25, 0.32, 0.45, 1.0)
+    codes, bidx, s = ref.nested_quantize(a, 14, betas)
+    back = ref.nested_dequantize(codes, bidx, s, 14, betas)
+    rmse = float(jnp.sqrt(jnp.mean((back - a) ** 2)))
+    assert rmse < 0.12, rmse
+
+
+def test_nested_quantize_zero_vector():
+    a = jnp.zeros(64)
+    codes, bidx, s = ref.nested_quantize(a, 8, (0.3, 0.6))
+    assert float(s) == 0.0
+    back = ref.nested_dequantize(codes, bidx, s, 8, (0.3, 0.6))
+    np.testing.assert_allclose(np.asarray(back), 0.0)
+
+
+def test_qmatmul_ref_matches_dense():
+    rng = np.random.default_rng(5)
+    rows, cols, q = 16, 64, 14
+    betas = (0.25, 0.32, 0.45, 1.0)
+    w = rng.standard_normal((rows, cols)).astype(np.float32)
+    codes = np.zeros((rows, cols), np.int32)
+    bidx = np.zeros((rows, cols // 8), np.int32)
+    scales = np.zeros(rows, np.float32)
+    deq = np.zeros_like(w)
+    for r in range(rows):
+        c, bi, s = ref.nested_quantize(jnp.asarray(w[r]), q, betas, m_variant=True)
+        codes[r], bidx[r], scales[r] = np.asarray(c), np.asarray(bi), float(s)
+        deq[r] = np.asarray(
+            ref.nested_dequantize(c, bi, s, q, betas, m_variant=True)
+        )
+    x = rng.standard_normal(cols).astype(np.float32)
+    y = np.asarray(
+        ref.qmatmul_ref(
+            jnp.asarray(codes), jnp.asarray(bidx), jnp.asarray(scales),
+            jnp.asarray(x), q, betas,
+        )
+    )
+    np.testing.assert_allclose(y, deq @ x, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,145 @@
+//! `cargo bench` entry point (criterion is unavailable offline; this uses
+//! util::bench's warmup+median harness). Covers:
+//!
+//! * the Table 4 GEMV comparison (fp32 / NestQuantM packed / int4)
+//! * lattice primitive micro-benches (encode / decode / Alg. 4 dot)
+//! * rotation and KV-cache hot paths
+//!
+//! Output is also captured by `make bench` into bench_output.txt.
+
+use nestquant::lattice::nested::NestedLatticeQuantizer;
+use nestquant::lattice::voronoi::VoronoiCodec;
+use nestquant::quant::qgemm::{decode_block_i32, qdot_int, PackedNestMatrix};
+use nestquant::quant::uniform::PackedInt4Matrix;
+use nestquant::rotation::Rotation;
+use nestquant::util::bench::{bench, black_box};
+use nestquant::util::linalg::Mat;
+use nestquant::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(800);
+    let mut rng = Rng::new(42);
+    println!("# nestquant benches (1 CPU core)\n");
+
+    // --- lattice primitives ---
+    let codec = VoronoiCodec::new(14);
+    let blocks: Vec<[f32; 8]> = (0..4096)
+        .map(|_| {
+            let mut b = [0f32; 8];
+            rng.fill_gauss(&mut b);
+            b
+        })
+        .collect();
+    let r = bench("e8 nearest-point oracle (4096 blocks)", budget, || {
+        let mut acc = 0f32;
+        for b in &blocks {
+            acc += nestquant::lattice::nearest_e8(b)[0];
+        }
+        acc
+    });
+    println!("{}", r.report());
+    println!(
+        "  -> {:.1} M blocks/s ({:.1} M entries/s)",
+        4096.0 / r.median.as_secs_f64() / 1e6,
+        8.0 * 4096.0 / r.median.as_secs_f64() / 1e6
+    );
+
+    let codes: Vec<[u8; 8]> = blocks.iter().map(|b| codec.encode(b)).collect();
+    let r = bench("voronoi encode (4096 blocks)", budget, || {
+        let mut acc = 0u8;
+        for b in &blocks {
+            acc ^= codec.encode(b)[0];
+        }
+        acc
+    });
+    println!("{}", r.report());
+    let r = bench("integer decode (4096 blocks)", budget, || {
+        let mut acc = 0i32;
+        for c in &codes {
+            acc ^= decode_block_i32(c, 14)[0];
+        }
+        acc
+    });
+    println!("{}", r.report());
+    println!(
+        "  -> {:.1} M entries/s decoded",
+        8.0 * 4096.0 / r.median.as_secs_f64() / 1e6
+    );
+
+    // --- Algorithm 4 quantized dot ---
+    let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+    let a = rng.gauss_vec(4096);
+    let b = rng.gauss_vec(4096);
+    let qa = nq.quantize(&a);
+    let qb = nq.quantize(&b);
+    let r = bench("Alg.4 dot, 4096-dim (int path)", budget, || {
+        qdot_int(&nq, &qa, &qb)
+    });
+    println!("{}", r.report());
+    let r = bench("Alg.4 dot, 4096-dim (float path)", budget, || {
+        nq.dot(&qa, &qb)
+    });
+    println!("{}", r.report());
+
+    // --- Table 4: GEMV ---
+    println!("\n## Table 4 analog: n=2048 GEMV");
+    let n = 2048;
+    let w = Mat::from_vec(n, n, rng.gauss_vec(n * n));
+    let x = rng.gauss_vec(n);
+    let packed = PackedNestMatrix::quantize(&w, &nq);
+    let int4 = PackedInt4Matrix::quantize(&w);
+    let mut y = vec![0f32; n];
+    let r_fp = bench("fp32 GEMV", budget, || {
+        for r in 0..n {
+            let mut acc = 0f32;
+            let row = &w.data[r * n..(r + 1) * n];
+            for i in 0..n {
+                acc += row[i] * x[i];
+            }
+            y[r] = acc;
+        }
+        y[0]
+    });
+    println!("{}", r_fp.report());
+    let mut y2 = vec![0f32; n];
+    let r_nest = bench("NestQuantM packed GEMV (4.25b)", budget, || {
+        packed.gemv_into(&x, &mut y2);
+        y2[0]
+    });
+    println!("{}", r_nest.report());
+    let r_i4 = bench("int4 uniform GEMV", budget, || int4.gemv(&x)[0]);
+    println!("{}", r_i4.report());
+    println!(
+        "  speedup vs fp32: NestQuantM {:.2}x, int4 {:.2}x",
+        r_fp.median_us() / r_nest.median_us(),
+        r_fp.median_us() / r_i4.median_us()
+    );
+
+    // --- rotations ---
+    println!("\n## rotations");
+    let rot = Rotation::random_hadamard(4096, &mut rng);
+    let mut v = rng.gauss_vec(4096);
+    let r = bench("randomized Hadamard, n=4096", budget, || {
+        rot.apply(&mut v);
+        v[0]
+    });
+    println!("{}", r.report());
+
+    // --- KV cache append+score ---
+    println!("\n## kv cache");
+    let mut cache = nestquant::kvcache::KvCache::new_nest(1, 1, nq.clone(), nq.clone());
+    for _ in 0..128 {
+        let k = rng.gauss_vec(64);
+        let vv = rng.gauss_vec(64);
+        cache.append(0, 0, &k, &vv);
+    }
+    let q = rng.gauss_vec(64);
+    let mut scores = Vec::new();
+    let r = bench("quantized KV scores, 128 pos × 64 dim", budget, || {
+        cache.scores(0, 0, &q, &mut scores);
+        scores[0]
+    });
+    println!("{}", r.report());
+    black_box(&scores);
+}

@@ -1,0 +1,299 @@
+//! Information-theoretic reference curves (paper §2.1).
+//!
+//! * `d_of_r` — the Gaussian rate–distortion function D(R) = 2^(−2R).
+//! * `gamma` — the inner-product (matrix-multiplication) lower bound Γ(R)
+//!   of eq. (1)–(2), including the transcendental fixed point R* ≈ 0.906.
+//! * Gaussian measures of shaping bodies (Fig. 5): Euclidean ball (χ²
+//!   closed form), cube (erf^d), and the E8 Voronoi region (Monte Carlo
+//!   against the exact closest-point oracle).
+
+use crate::lattice::e8::{nearest_e8, D as D8};
+use crate::util::Rng;
+
+/// Gaussian rate–distortion function D(R) = 2^(−2R) (per dimension).
+pub fn d_of_r(r: f64) -> f64 {
+    2f64.powf(-2.0 * r)
+}
+
+/// The high-rate branch of Γ: g(R) = 2·2^(−2R) − 2^(−4R).
+fn gamma_high(r: f64) -> f64 {
+    let a = 2f64.powf(-2.0 * r);
+    2.0 * a - a * a
+}
+
+fn gamma_high_deriv(r: f64) -> f64 {
+    // d/dR [2·2^(−2R) − 2^(−4R)] = ln2 · (−4·2^(−2R) + 4·2^(−4R))
+    let ln2 = std::f64::consts::LN_2;
+    ln2 * (-4.0 * 2f64.powf(-2.0 * r) + 4.0 * 2f64.powf(-4.0 * r))
+}
+
+/// R* solves the tangency condition: the chord from (0, 1) to
+/// (R*, g(R*)) has slope g'(R*), i.e. (g(R*) − 1)/R* = g'(R*).
+pub fn r_star() -> f64 {
+    let f = |r: f64| (gamma_high(r) - 1.0) / r - gamma_high_deriv(r);
+    // f is continuous on (0, 3); bisect.
+    let (mut lo, mut hi) = (0.2f64, 3.0f64);
+    assert!(f(lo) * f(hi) < 0.0, "no sign change for R*");
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if f(lo) * f(mid) <= 0.0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Γ(R), eq. (2): linear (time-sharing) segment below R*, curve above.
+pub fn gamma(r: f64) -> f64 {
+    assert!(r >= 0.0);
+    let rs = r_star();
+    if r < rs {
+        1.0 - (1.0 - gamma_high(rs)) * r / rs
+    } else {
+        gamma_high(r)
+    }
+}
+
+/// Lower bound on RMSE per entry of an n×n · n×n quantized matrix product
+/// with iid N(0,1) entries at rate R (from eq. (1): E(X·Y − est)² ≥ nΓ(R),
+/// per-entry RMSE = √(n·Γ(R))).
+pub fn matmul_rmse_lower_bound(n: usize, r: f64) -> f64 {
+    ((n as f64) * gamma(r)).sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// Special functions (no external crates available offline).
+
+/// Error function, Abramowitz & Stegun 7.1.26 refinement via the
+/// regularized incomplete gamma: erf(x) = P(1/2, x²).
+pub fn erf(x: f64) -> f64 {
+    if x < 0.0 {
+        -erf(-x)
+    } else {
+        lower_inc_gamma_reg(0.5, x * x)
+    }
+}
+
+/// Standard normal CDF.
+pub fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Regularized lower incomplete gamma P(a, x) (series for x < a+1,
+/// continued fraction otherwise). Standard Numerical-Recipes scheme.
+pub fn lower_inc_gamma_reg(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0);
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // series
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut del = sum;
+        for _ in 0..500 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+    } else {
+        // continued fraction for Q(a,x), P = 1 − Q
+        let mut b = x + 1.0 - a;
+        let mut c = 1e300;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < 1e-300 {
+                d = 1e-300;
+            }
+            c = b + an / c;
+            if c.abs() < 1e-300 {
+                c = 1e-300;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-15 {
+                break;
+            }
+        }
+        1.0 - (-x + a * x.ln() - ln_gamma(a)).exp() * h
+    }
+}
+
+/// ln Γ(x), Lanczos approximation (g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+// ---------------------------------------------------------------------------
+// Gaussian masses of shaping regions (Fig. 5).
+
+/// μ(r·B) for the d-dim Euclidean ball of radius r: χ²_d CDF at r².
+pub fn gaussian_mass_ball(d: usize, r: f64) -> f64 {
+    lower_inc_gamma_reg(d as f64 / 2.0, r * r / 2.0)
+}
+
+/// μ(r·CUBE) for the centered cube [−r, r]^d: (2Φ(r) − 1)^d.
+pub fn gaussian_mass_cube(d: usize, r: f64) -> f64 {
+    (2.0 * phi(r) - 1.0).powi(d as i32)
+}
+
+/// Radius of the unit-volume d-ball, r_eff(1).
+pub fn r_eff_unit_volume(d: usize) -> f64 {
+    // vol = π^{d/2} r^d / Γ(d/2+1) = 1 → r = (Γ(d/2+1))^{1/d} / √π
+    (ln_gamma(d as f64 / 2.0 + 1.0) / d as f64).exp() / std::f64::consts::PI.sqrt()
+}
+
+/// μ(r·V_E8): Monte-Carlo estimate of the Gaussian mass of the scaled E8
+/// Voronoi region (x ∈ rV ⇔ Q_{E8}(x/r) = 0). E8 has unit covolume, so
+/// vol(rV_E8) = vol(rB) with B the unit-volume ball — exactly the Fig. 5
+/// comparison.
+pub fn gaussian_mass_e8_voronoi(r: f64, samples: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut inside = 0usize;
+    let mut x = [0f32; D8];
+    for _ in 0..samples {
+        for v in x.iter_mut() {
+            *v = (rng.gauss() / r) as f32;
+        }
+        if nearest_e8(&x) == [0f32; D8] {
+            inside += 1;
+        }
+    }
+    inside as f64 / samples as f64
+}
+
+/// Cube side scaled to unit volume in d dims (half-side 0.5) — the cubic
+/// shaping comparator at equal volume.
+pub fn gaussian_mass_unit_cube_scaled(d: usize, r: f64) -> f64 {
+    gaussian_mass_cube(d, r * 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r_star_matches_paper() {
+        let rs = r_star();
+        assert!((rs - 0.906).abs() < 0.01, "R*={rs}, paper says ≈0.906");
+    }
+
+    #[test]
+    fn gamma_properties() {
+        // Γ(0) = 1 (no information → error = E(XᵀY)² variance n·1)
+        assert!((gamma(0.0) - 1.0).abs() < 1e-12);
+        // continuous at R*
+        let rs = r_star();
+        assert!((gamma(rs - 1e-9) - gamma(rs + 1e-9)).abs() < 1e-6);
+        // decreasing
+        let mut last = gamma(0.0);
+        for i in 1..50 {
+            let g = gamma(i as f64 * 0.1);
+            assert!(g < last);
+            last = g;
+        }
+        // high-rate: Γ(R) ≈ 2·2^(−2R) = 2·D(R)
+        assert!((gamma(6.0) / (2.0 * d_of_r(6.0)) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-15);
+        assert!((erf(1.0) - 0.842_700_792_949_714_9).abs() < 1e-10);
+        assert!((erf(2.0) - 0.995_322_265_018_952_7).abs() < 1e-10);
+        assert!((erf(-1.0) + 0.842_700_792_949_714_9).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-12);
+        assert!((ln_gamma(2.0)).abs() < 1e-12);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn chi2_cdf_sanity() {
+        // χ²_2 CDF(x) = 1 − e^{−x/2}
+        for x in [0.5f64, 1.0, 3.0, 7.0] {
+            let p = lower_inc_gamma_reg(1.0, x / 2.0);
+            let expect = 1.0 - (-x / 2.0).exp();
+            assert!((p - expect).abs() < 1e-10, "x={x}: {p} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn ball_mass_dominates_cube_mass_at_equal_volume() {
+        // Fig. 5's message: at equal volume the ball captures more
+        // Gaussian mass than the cube in d=8.
+        let d = 8;
+        for scale in [1.5f64, 2.0, 2.5] {
+            let r = scale * r_eff_unit_volume(d);
+            let ball = gaussian_mass_ball(d, r);
+            // cube of the same volume: side = scale (unit-volume cube side 1)
+            let cube = gaussian_mass_cube(d, scale * 0.5);
+            assert!(
+                ball > cube,
+                "scale {scale}: ball {ball} ≤ cube {cube}"
+            );
+        }
+    }
+
+    #[test]
+    fn e8_voronoi_mass_close_to_ball_mass() {
+        // Fig. 5: μ(rV_E8) ≈ μ(rB) (equal volumes, E8 is nearly spherical).
+        let d = 8;
+        for scale in [1.8f64, 2.2] {
+            let r_ball = scale * r_eff_unit_volume(d);
+            let ball = gaussian_mass_ball(d, r_ball);
+            let voronoi = gaussian_mass_e8_voronoi(scale, 40_000, 801);
+            assert!(
+                (ball - voronoi).abs() < 0.05,
+                "scale {scale}: ball {ball} vs E8 {voronoi}"
+            );
+            // and both clearly above the cube
+            let cube = gaussian_mass_cube(d, scale * 0.5);
+            assert!(voronoi > cube);
+        }
+    }
+
+    #[test]
+    fn matmul_bound_scales_with_sqrt_n() {
+        let a = matmul_rmse_lower_bound(64, 4.0);
+        let b = matmul_rmse_lower_bound(256, 4.0);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

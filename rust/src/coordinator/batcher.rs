@@ -1,0 +1,105 @@
+//! Dynamic batcher: accumulates requests until the batch is full or a
+//! deadline expires — the standard continuous-batching admission policy
+//! (vLLM-style), sized to the AOT artifact's static batch dimension.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// maximum requests per batch (the artifact's batch dim)
+    pub max_batch: usize,
+    /// max time the first request may wait for the batch to fill
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Pulls from a channel, groups into batches under the policy.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel closed
+    /// and no items remain.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // block for the first item
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(10),
+            },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = channel::<i32>();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,115 @@
+//! Serving metrics: request latency quantiles, token throughput, batch
+//! occupancy, and KV-cache memory — the numbers the serve_demo example
+//! reports.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+struct Inner {
+    latencies_ms: Vec<f64>,
+    tokens_out: u64,
+    requests: u64,
+    batches: u64,
+    batch_slots: u64,
+    wall_ms: f64,
+    kv_bytes: usize,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, latency: Duration, tokens: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        g.tokens_out += tokens as u64;
+        g.requests += 1;
+    }
+
+    pub fn record_batch(&self, size: usize, capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_slots += size as u64;
+        let _ = capacity;
+    }
+
+    pub fn record_wall(&self, wall: Duration) {
+        self.inner.lock().unwrap().wall_ms += wall.as_secs_f64() * 1e3;
+    }
+
+    pub fn record_kv_bytes(&self, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.kv_bytes = g.kv_bytes.max(bytes);
+    }
+
+    pub fn report(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_ms.clone();
+        let (p50, p95) = if lat.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                crate::util::stats::quantile(&mut lat, 0.5),
+                crate::util::stats::quantile(&mut lat, 0.95),
+            )
+        };
+        let tput = if g.wall_ms > 0.0 {
+            g.tokens_out as f64 / (g.wall_ms / 1e3)
+        } else {
+            0.0
+        };
+        let occupancy = if g.batches > 0 {
+            g.batch_slots as f64 / g.batches as f64
+        } else {
+            0.0
+        };
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s p50={:.1}ms p95={:.1}ms \
+             mean_batch={:.2} kv_peak={:.1} KiB",
+            g.requests,
+            g.tokens_out,
+            tput,
+            p50,
+            p95,
+            occupancy,
+            g.kv_bytes as f64 / 1024.0
+        )
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        if g.wall_ms > 0.0 {
+            g.tokens_out as f64 / (g.wall_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(10), 5);
+        m.record_request(Duration::from_millis(30), 7);
+        m.record_batch(3, 4);
+        m.record_wall(Duration::from_millis(100));
+        m.record_kv_bytes(2048);
+        let r = m.report();
+        assert!(r.contains("requests=2"));
+        assert!(r.contains("tokens=12"));
+        assert!(r.contains("kv_peak=2.0 KiB"));
+        assert!(m.throughput_tok_s() > 0.0);
+    }
+}

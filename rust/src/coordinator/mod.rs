@@ -1,0 +1,18 @@
+//! Serving coordinator: request router → dynamic batcher → prefill/decode
+//! scheduler → engine workers. std-thread + mpsc based (tokio is not in
+//! the offline vendor set; the concurrency pattern is identical).
+//!
+//! The coordinator demonstrates NestQuant's motivating serving wins:
+//! generation keeps the KV cache in coded form (`kvcache`), and batched
+//! scoring goes through the PJRT HLO artifact (`runtime::ModelRunner`) —
+//! python never appears on the request path.
+
+pub mod batcher;
+pub mod generator;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use generator::GenSession;
+pub use metrics::Metrics;
+pub use server::{Request, Response, Server, ServerConfig};

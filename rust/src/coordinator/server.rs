@@ -1,0 +1,249 @@
+//! The serving front-end: a router thread fans requests out to a
+//! generation worker (continuous batching over `GenSession`s, quantized
+//! KV cache) and a scoring worker (batched full-window forward through
+//! the AOT HLO artifact when available, native engine otherwise).
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::generator::GenSession;
+use crate::coordinator::metrics::Metrics;
+use crate::model::engine::Engine;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A serving request.
+pub enum Request {
+    /// prompt tokens → generated tokens
+    Generate {
+        id: u64,
+        prompt: Vec<i32>,
+        n_new: usize,
+    },
+    /// full-window scoring: mean NLL of the window
+    Score { id: u64, window: Vec<i32> },
+}
+
+impl Request {
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Generate { id, .. } | Request::Score { id, .. } => *id,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub nll: Option<f64>,
+    pub latency_ms: f64,
+}
+
+#[derive(Clone, Copy)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Option<Sender<(Request, Instant)>>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Start the coordinator over a quantized engine. Responses are
+    /// delivered on the returned channel (out of order across batches).
+    pub fn start(
+        engine: Arc<Engine>,
+        cfg: ServerConfig,
+    ) -> (Self, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel::<(Request, Instant)>();
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+
+        let worker = std::thread::spawn(move || {
+            let batcher = Batcher::new(rx, cfg.policy);
+            while let Some(batch) = batcher.next_batch() {
+                m.record_batch(batch.len(), cfg.policy.max_batch);
+                let t_batch = Instant::now();
+                let mut total_tokens = 0usize;
+
+                // continuous-batching lite: round-robin one decode step
+                // per active session until all sessions finish.
+                struct Active<'a> {
+                    id: u64,
+                    t0: Instant,
+                    sess: GenSession<'a>,
+                    pending_prompt: Vec<i32>,
+                    remaining: usize,
+                    logits: Vec<f32>,
+                    out: Vec<i32>,
+                }
+                let mut gen_sessions: Vec<Active> = Vec::new();
+                for (req, t0) in batch {
+                    match req {
+                        Request::Generate { id, prompt, n_new } => {
+                            gen_sessions.push(Active {
+                                id,
+                                t0,
+                                sess: GenSession::new(&engine),
+                                pending_prompt: prompt,
+                                remaining: n_new,
+                                logits: Vec::new(),
+                                out: Vec::new(),
+                            });
+                        }
+                        Request::Score { id, window } => {
+                            // native scoring (the HLO path is exercised by
+                            // runtime::ModelRunner in examples/tests; the
+                            // in-process worker stays self-contained)
+                            let logits = engine.forward_window(&window[..window.len() - 1]);
+                            let nll =
+                                crate::model::forward::window_nll(&logits, &window[1..]);
+                            total_tokens += window.len();
+                            let _ = resp_tx.send(Response {
+                                id,
+                                tokens: Vec::new(),
+                                nll: Some(nll),
+                                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                            });
+                            m.record_request(t0.elapsed(), window.len());
+                        }
+                    }
+                }
+                // prefill phase (token-by-token through the cache)
+                for a in gen_sessions.iter_mut() {
+                    for &t in &a.pending_prompt.clone() {
+                        a.logits = a.sess.step(t);
+                    }
+                    total_tokens += a.pending_prompt.len();
+                }
+                // decode phase, round-robin
+                let mut done = false;
+                while !done {
+                    done = true;
+                    for a in gen_sessions.iter_mut() {
+                        if a.remaining == 0 || a.sess.position() >= engine.cfg.ctx {
+                            continue;
+                        }
+                        done = false;
+                        let next = GenSession::greedy(&a.logits);
+                        a.out.push(next);
+                        a.logits = a.sess.step(next);
+                        a.remaining -= 1;
+                        total_tokens += 1;
+                    }
+                }
+                for a in gen_sessions {
+                    m.record_kv_bytes(a.sess.kv_bytes());
+                    m.record_request(a.t0.elapsed(), a.out.len());
+                    let _ = resp_tx.send(Response {
+                        id: a.id,
+                        tokens: a.out,
+                        nll: None,
+                        latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
+                m.record_wall(t_batch.elapsed());
+                let _ = total_tokens;
+            }
+        });
+
+        (
+            Server {
+                tx: Some(tx),
+                worker: Some(worker),
+                metrics,
+            },
+            resp_rx,
+        )
+    }
+
+    pub fn submit(&self, req: Request) {
+        self.tx
+            .as_ref()
+            .expect("server closed")
+            .send((req, Instant::now()))
+            .expect("worker died");
+    }
+
+    /// Close the queue and wait for the worker to drain.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::engine::{EngineOptions, Regime};
+    use crate::model::weights::{artifact_path, ModelWeights};
+
+    fn engine() -> Option<Arc<Engine>> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let p = artifact_path(&dir, "tiny");
+        if !p.exists() {
+            return None;
+        }
+        let w = ModelWeights::load(&p).unwrap();
+        Some(Arc::new(Engine::build(
+            &w,
+            EngineOptions {
+                regime: Regime::WKv,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        )))
+    }
+
+    #[test]
+    fn serves_generate_and_score() {
+        let Some(eng) = engine() else { return };
+        let prompt: Vec<i32> = (0..8).collect();
+        let window: Vec<i32> = (0..33).map(|i| i % 40).collect();
+        let (srv, rx) = Server::start(eng, ServerConfig::default());
+        srv.submit(Request::Generate {
+            id: 1,
+            prompt: prompt.clone(),
+            n_new: 4,
+        });
+        srv.submit(Request::Score { id: 2, window });
+        srv.submit(Request::Generate {
+            id: 3,
+            prompt,
+            n_new: 2,
+        });
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..3 {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            got.insert(r.id, r);
+        }
+        assert_eq!(got[&1].tokens.len(), 4);
+        assert_eq!(got[&3].tokens.len(), 2);
+        assert!(got[&2].nll.unwrap() > 0.0);
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,42 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §4 for the index). Each experiment writes a
+//! markdown/TSV artifact to `results/<id>.md`; EXPERIMENTS.md records
+//! paper-vs-measured.
+
+pub mod llm;
+pub mod synthetic;
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Run one experiment by id ("fig3", "tab5", …) or "all".
+pub fn run(id: &str, artifacts: &Path, results: &Path) -> Result<()> {
+    let all = id == "all";
+    let mut ran = false;
+    macro_rules! exp {
+        ($name:literal, $f:expr) => {
+            if all || id == $name {
+                println!("=== {} ===", $name);
+                $f?;
+                ran = true;
+            }
+        };
+    }
+    exp!("fig2", synthetic::fig2_shaping_2d(results));
+    exp!("fig3", synthetic::fig3_matmul_rmse(results));
+    exp!("fig5", synthetic::fig5_gaussian_mass(results));
+    exp!("fig6", synthetic::fig6_qaldlq_tradeoff(results));
+    exp!("fig7", synthetic::fig7_granular_overload(results));
+    exp!("tab5", synthetic::tab5_opt_vs_first_beta(results));
+    exp!("tab4", synthetic::tab4_gemv_runtime(results));
+    exp!("fig1", llm::fig1_tab3_rate_sweep(artifacts, results, "base"));
+    exp!("fig8", llm::fig8_k_sweep(artifacts, results, "small"));
+    exp!("tab1", llm::tab1_benchmarks(artifacts, results, "base"));
+    exp!("tab2", llm::tab2_methods_by_size(artifacts, results));
+    exp!("tab6", llm::tab6_ldlq_ablation(artifacts, results, "base"));
+    exp!("tab7", llm::tab7_rotation_ablation(artifacts, results, "base"));
+    exp!("tab8", llm::tab8_small_model_sweep(artifacts, results, "tiny"));
+    exp!("tab9", llm::tab9_3bit(artifacts, results));
+    anyhow::ensure!(ran, "unknown experiment id '{id}'");
+    Ok(())
+}

@@ -1,0 +1,332 @@
+//! Synthetic-data experiments (no model needed): Figs. 2/3/5/6/7 and
+//! Tables 4/5.
+
+use crate::bounds;
+use crate::io::results::{fmt, MdTable, ResultsDoc};
+use crate::lattice::beta_dp::{default_beta_universe, optimal_betas, BetaTable};
+use crate::lattice::e8::D;
+use crate::lattice::hex::shaping_waste_2d;
+use crate::lattice::nested::{NestedLatticeQuantizer, Strategy};
+use crate::lattice::voronoi::VoronoiCodec;
+use crate::quant::qgemm::PackedNestMatrix;
+use crate::quant::uniform::{PackedInt4Matrix, UniformQuantizer};
+use crate::util::bench::bench;
+use crate::util::linalg::Mat;
+use crate::util::{stats, Rng};
+use anyhow::Result;
+use std::path::Path;
+use std::time::Duration;
+
+fn gaussian_blocks(n: usize, seed: u64) -> Vec<[f32; D]> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut b = [0f32; D];
+            rng.fill_gauss(&mut b);
+            b
+        })
+        .collect()
+}
+
+/// Fig. 2: fraction of codebook wasted outside the typical circle —
+/// uniform/cubic vs nested hexagonal shaping in 2-D.
+pub fn fig2_shaping_2d(results: &Path) -> Result<()> {
+    let mut doc = ResultsDoc::new(results, "fig2", "2-D shaping waste (uniform vs nested hex)");
+    doc.para(
+        "Paper Fig. 2 quotes ~32% (uniform) vs ~15% (hex) wasted bitstrings; \
+         with the circumscribing construction used here the asymptotes are \
+         1−π/4 ≈ 21.5% vs 1−π/(2√3) ≈ 9.3%. The reproduced quantity is the \
+         ~2.2× waste ratio.",
+    );
+    let mut t = MdTable::new(&["q (rate=log2 q)", "uniform waste", "hex waste", "ratio"]);
+    for q in [8u32, 16, 32, 64, 128] {
+        let (u, h) = shaping_waste_2d(q);
+        t.row(&[q.to_string(), fmt(u), fmt(h), fmt(u / h.max(1e-9))]);
+    }
+    doc.table(&t);
+    doc.write()
+}
+
+/// Fig. 3: RMSE of quantized matmul vs bits/entry — NestQuant (β-optimized)
+/// vs uniform (cubic shaping) vs the Γ(R) lower bound.
+pub fn fig3_matmul_rmse(results: &Path) -> Result<()> {
+    let n = 256; // paper: 4096; scaled for 1 vCPU (shape-preserving: RMSE ∝ √n)
+    let trials = 4;
+    let mut doc = ResultsDoc::new(results, "fig3", "quantized matmul RMSE vs rate");
+    doc.para(&format!(
+        "iid N(0,1) {n}×{n} matrices (paper uses 4096; per-entry RMSE scales \
+         as √(n·Γ(R)) so the curves are shape-identical). NestQuant βs are \
+         DP-optimized per q with k=4."
+    ));
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+
+    // helper: RMSE of A·Bᵀ per entry under a vector-quantizer roundtrip
+    let matmul_rmse = |quant: &dyn Fn(&[f32], &mut Rng) -> Vec<f32>, seed: u64| -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut err = 0f64;
+        let mut cnt = 0usize;
+        for _ in 0..trials {
+            let a: Vec<Vec<f32>> = (0..n).map(|_| rng.gauss_vec(n)).collect();
+            let b: Vec<Vec<f32>> = (0..n).map(|_| rng.gauss_vec(n)).collect();
+            let aq: Vec<Vec<f32>> = a.iter().map(|r| quant(r, &mut rng)).collect();
+            let bq: Vec<Vec<f32>> = b.iter().map(|r| quant(r, &mut rng)).collect();
+            // sample a subset of output entries for speed
+            for i in (0..n).step_by(8) {
+                for j in (0..n).step_by(8) {
+                    let exact = stats::dot(&a[i], &b[j]);
+                    let approx = stats::dot(&aq[i], &bq[j]);
+                    err += (exact - approx) * (exact - approx);
+                    cnt += 1;
+                }
+            }
+        }
+        (err / cnt as f64).sqrt()
+    };
+
+    // NestQuant frontier over q (k=4, DP βs tuned on Gaussian blocks)
+    for q in [3u32, 4, 6, 8, 10, 12, 14, 16] {
+        let codec = VoronoiCodec::new(q);
+        let blocks = gaussian_blocks(4096, 42 + q as u64);
+        let table = BetaTable::build(&codec, &blocks, &default_beta_universe(q as f32));
+        let sel = optimal_betas(&table, 4).expect("beta selection");
+        let nq = NestedLatticeQuantizer::with_codec(
+            codec,
+            sel.betas.clone(),
+            Strategy::OptBeta,
+        );
+        // effective rate: log2 q + H(β)/8 (entropy-coded side info, §5.1)
+        let usage_counts: Vec<u64> = sel
+            .usage
+            .iter()
+            .map(|&p| (p * 1e6) as u64)
+            .collect();
+        let rate = nq.effective_rate(&usage_counts);
+        let rmse = matmul_rmse(&|r, _| nq.roundtrip(r), 1000 + q as u64);
+        let bound = bounds::matmul_rmse_lower_bound(n, rate);
+        rows.push(vec![rate, rmse, f64::NAN, bound]);
+        println!("  nestquant q={q}: rate={rate:.3} rmse={rmse:.4} (bound {bound:.4})");
+    }
+    // uniform (cubic shaping) frontier
+    for bits in [2u32, 3, 4, 5, 6] {
+        let uq = UniformQuantizer::new(bits);
+        let rmse = matmul_rmse(&|r, _| uq.roundtrip(r), 2000 + bits as u64);
+        let bound = bounds::matmul_rmse_lower_bound(n, bits as f64);
+        rows.push(vec![bits as f64, f64::NAN, rmse, bound]);
+        println!("  uniform {bits}b: rmse={rmse:.4} (bound {bound:.4})");
+    }
+    doc.series(
+        "fig3",
+        &["bits_per_entry", "nestquant_rmse", "uniform_rmse", "gamma_bound"],
+        &rows,
+    );
+    doc.para(
+        "Shape check (paper Fig. 3): NestQuant tracks the Γ(R) bound within a \
+         small factor and clearly beats uniform/cubic at equal rate.",
+    );
+    doc.write()
+}
+
+/// Fig. 5: complement Gaussian mass of cube / E8-Voronoi / ball at equal
+/// volume in 8-D.
+pub fn fig5_gaussian_mass(results: &Path) -> Result<()> {
+    let mut doc = ResultsDoc::new(results, "fig5", "Gaussian mass of shaping bodies (8-D)");
+    let mut rows = Vec::new();
+    for i in 0..20 {
+        let scale = 1.0 + 0.1 * i as f64; // region volume = scale^8
+        let r_ball = scale * bounds::r_eff_unit_volume(8);
+        let ball = 1.0 - bounds::gaussian_mass_ball(8, r_ball);
+        let cube = 1.0 - bounds::gaussian_mass_cube(8, scale * 0.5);
+        let voronoi = 1.0 - bounds::gaussian_mass_e8_voronoi(scale, 60_000, 500 + i);
+        rows.push(vec![scale, cube, voronoi, ball]);
+    }
+    doc.series(
+        "fig5",
+        &["scale", "cube_complement", "e8_voronoi_complement", "ball_complement"],
+        &rows,
+    );
+    doc.para(
+        "Paper Fig. 5: μ(rV_E8) hugs μ(rB); the cube needs a much larger \
+         volume for the same coverage (the cubic-shaping loss).",
+    );
+    doc.write()
+}
+
+/// Fig. 6: QA-LDLQ tradeoff on a synthetic high-amplification layer.
+pub fn fig6_qaldlq_tradeoff(results: &Path) -> Result<()> {
+    use crate::quant::qaldlq::*;
+    let (w, x) = synthetic_high_amplification_layer(32, 64, 16, 40.0, 600);
+    let h = crate::quant::ldlq::hessian_from_activations(&x, 1e-4);
+    let base = amplification_ratio(&w, &x, 1);
+    let mut doc = ResultsDoc::new(results, "fig6", "QA-LDLQ amplification-ratio tradeoff");
+    doc.para(&format!(
+        "Synthetic pathological layer (paper: Llama-3-70B block-0 v_proj, \
+         ratio ≈157; ours: {base:.1}). Sweeping ε² as in Fig. 6."
+    ));
+    let mut rows = Vec::new();
+    for i in 0..12 {
+        let eps2 = 10f32.powf(-5.0 + 0.5 * i as f32);
+        let wt = modified_weight(&w, &h, eps2);
+        let ratio = amplification_ratio(&wt, &x, 1);
+        let r2 = one_minus_r2(&w, &wt, &x);
+        rows.push(vec![eps2 as f64, r2, ratio]);
+    }
+    doc.series("fig6", &["eps2", "one_minus_r2", "amplification_ratio"], &rows);
+    doc.para("Paper Fig. 6 shape: a small 1−R² price buys a large ratio drop.");
+    doc.write()
+}
+
+/// Fig. 7: granular vs overload error vs β at q=16.
+pub fn fig7_granular_overload(results: &Path) -> Result<()> {
+    let codec = VoronoiCodec::new(16);
+    let blocks = gaussian_blocks(20_000, 700);
+    let mut doc = ResultsDoc::new(results, "fig7", "granular and overload error vs β (q=16)");
+    let mut rows = Vec::new();
+    for i in 1..=40 {
+        let beta = 0.02 * i as f32;
+        let mut granular = stats::Welford::new();
+        let mut overload = stats::Welford::new();
+        let mut p_overload = 0f64;
+        for b in &blocks {
+            let mut xs = [0f32; D];
+            for j in 0..D {
+                xs[j] = b[j] / beta;
+            }
+            let (r, ov) = codec.encode_decode(&xs);
+            let mut err = 0f64;
+            for j in 0..D {
+                let d = (r[j] * beta - b[j]) as f64;
+                err += d * d;
+            }
+            if ov {
+                overload.push(err);
+                p_overload += 1.0;
+            } else {
+                granular.push(err);
+            }
+        }
+        p_overload /= blocks.len() as f64;
+        rows.push(vec![
+            beta as f64,
+            granular.mean(),
+            if overload.count() > 0 { overload.mean() } else { f64::NAN },
+            p_overload,
+        ]);
+    }
+    doc.series(
+        "fig7",
+        &["beta", "granular_mse", "overload_mse", "p_overload"],
+        &rows,
+    );
+    doc.para(
+        "Paper Fig. 7: granular error grows ∝β², overload error shrinks as β \
+         grows — the tension the multi-β union resolves.",
+    );
+    doc.write()
+}
+
+/// Table 5: Opt-β vs First-β RMSE for k ∈ {2,4,6,8,10}, q=16,
+/// βs uniform on [0, 10].
+pub fn tab5_opt_vs_first_beta(results: &Path) -> Result<()> {
+    let blocks = gaussian_blocks(30_000, 800);
+    let mut doc = ResultsDoc::new(results, "tab5", "Opt-β vs First-β (q=16)");
+    let mut t = MdTable::new(&["k", "Opt-β RMSE", "First-β RMSE"]);
+    for k in [2usize, 4, 6, 8, 10] {
+        let betas: Vec<f32> = (1..=k).map(|i| 10.0 * i as f32 / k as f32 / 16.0).collect();
+        // paper: βs "uniform on [0,10]" in lattice-scaled units (β·q)
+        let opt = NestedLatticeQuantizer::with_codec(
+            VoronoiCodec::new(16),
+            betas.clone(),
+            Strategy::OptBeta,
+        );
+        let first = NestedLatticeQuantizer::with_codec(
+            VoronoiCodec::new(16),
+            betas,
+            Strategy::FirstBeta,
+        );
+        let eval = |nq: &NestedLatticeQuantizer| -> f64 {
+            let mut err = 0f64;
+            for b in &blocks {
+                let (_, _, recon, _) = nq.quantize_block(b);
+                for j in 0..D {
+                    err += ((recon[j] - b[j]) as f64).powi(2);
+                }
+            }
+            (err / (blocks.len() * D) as f64).sqrt()
+        };
+        t.row(&[k.to_string(), fmt(eval(&opt)), fmt(eval(&first))]);
+    }
+    doc.table(&t);
+    doc.para("Paper Table 5: the two strategies are within a few percent (≈0.071 at k=6).");
+    doc.write()
+}
+
+/// Table 4: GEMV runtime — fp32 vs NestQuantM packed (4.25b) vs int4
+/// uniform, on an n×n matrix.
+pub fn tab4_gemv_runtime(results: &Path) -> Result<()> {
+    let n = 4096; // paper: 8192 on A100; scaled (out-of-cache → memory-bound regime)
+    let mut rng = Rng::new(900);
+    let w = Mat::from_vec(n, n, rng.gauss_vec(n * n));
+    let x = rng.gauss_vec(n);
+    let budget = Duration::from_millis(1500);
+
+    let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+    let packed = PackedNestMatrix::quantize(&w, &nq);
+    let int4 = PackedInt4Matrix::quantize(&w);
+    let wt = w.transpose();
+
+    let mut y = vec![0f32; n];
+    let r_fp = bench("fp32 GEMV", budget, || {
+        // y = W·x with the same row-major access pattern
+        for r in 0..n {
+            let mut acc = 0f32;
+            let row = &w.data[r * n..(r + 1) * n];
+            for i in 0..n {
+                acc += row[i] * x[i];
+            }
+            y[r] = acc;
+        }
+        y[0]
+    });
+    let _ = &wt;
+    let mut y2 = vec![0f32; n];
+    let r_nest = bench("NestQuantM GEMV (4.25b packed)", budget, || {
+        packed.gemv_into(&x, &mut y2);
+        y2[0]
+    });
+    let r_int4 = bench("int4 uniform GEMV", budget, || int4.gemv(&x)[0]);
+
+    let mut doc = ResultsDoc::new(results, "tab4", "GEMV runtime (n=4096, 1 CPU core)");
+    let mut t = MdTable::new(&["Method", "bits/entry", "time (µs)", "payload MiB", "vs fp32"]);
+    let fp_us = r_fp.median_us();
+    t.row(&[
+        "Baseline (fp32)".into(),
+        "32".into(),
+        fmt(fp_us),
+        fmt((n * n * 4) as f64 / (1 << 20) as f64),
+        "1.00×".into(),
+    ]);
+    t.row(&[
+        "NestQuantM (ours)".into(),
+        fmt(packed.bits_per_entry()),
+        fmt(r_nest.median_us()),
+        fmt(packed.payload_bytes() as f64 / (1 << 20) as f64),
+        format!("{:.2}×", fp_us / r_nest.median_us()),
+    ]);
+    t.row(&[
+        "int4 uniform".into(),
+        "4".into(),
+        fmt(r_int4.median_us()),
+        fmt(int4.payload_bytes() as f64 / (1 << 20) as f64),
+        format!("{:.2}×", fp_us / r_int4.median_us()),
+    ]);
+    doc.table(&t);
+    doc.para(
+        "Paper Table 4 (8192², A100): fp16 97µs / NestQuantM 60µs / int4 31µs. \
+         Reproduced quantity: the ordering int4 < NestQuantM < fp and the \
+         memory-traffic ratios; absolute µs differ (CPU vs A100).",
+    );
+    println!("{}", r_fp.report());
+    println!("{}", r_nest.report());
+    println!("{}", r_int4.report());
+    doc.write()
+}

@@ -1,0 +1,10 @@
+//! I/O: the `.nqt` tensor container (python ↔ rust interchange), zstd /
+//! entropy coding of β side information (the Tables 1/3 "Bits" columns),
+//! and the markdown results writer used by the experiment harness.
+
+pub mod results;
+pub mod sideinfo;
+pub mod tensorfile;
+
+pub use sideinfo::{beta_bits_entropy, beta_bits_packed, beta_bits_zstd};
+pub use tensorfile::{read_tensors, write_tensors, Tensor};

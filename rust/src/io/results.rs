@@ -1,0 +1,150 @@
+//! Markdown results writer: every experiment regenerating a paper
+//! table/figure emits its rows to `results/<id>.md` through this module,
+//! so `EXPERIMENTS.md` can reference stable artifacts.
+
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A markdown table under construction.
+pub struct MdTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        MdTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            s,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+}
+
+/// A results document (one per experiment id).
+pub struct ResultsDoc {
+    path: PathBuf,
+    body: String,
+}
+
+impl ResultsDoc {
+    pub fn new(results_dir: &Path, id: &str, title: &str) -> Self {
+        let mut body = String::new();
+        let _ = writeln!(body, "# {id}: {title}\n");
+        ResultsDoc {
+            path: results_dir.join(format!("{id}.md")),
+            body,
+        }
+    }
+
+    pub fn para(&mut self, text: &str) -> &mut Self {
+        let _ = writeln!(self.body, "{text}\n");
+        self
+    }
+
+    pub fn table(&mut self, t: &MdTable) -> &mut Self {
+        let _ = writeln!(self.body, "{}", t.render());
+        self
+    }
+
+    /// TSV series block for figure-like outputs (plottable).
+    pub fn series(&mut self, name: &str, header: &[&str], rows: &[Vec<f64>]) -> &mut Self {
+        let _ = writeln!(self.body, "```tsv {name}");
+        let _ = writeln!(self.body, "{}", header.join("\t"));
+        for r in rows {
+            let cells: Vec<String> = r.iter().map(|v| format!("{v:.6}")).collect();
+            let _ = writeln!(self.body, "{}", cells.join("\t"));
+        }
+        let _ = writeln!(self.body, "```\n");
+        self
+    }
+
+    pub fn write(&self) -> Result<()> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&self.path, &self.body)?;
+        println!("wrote {}", self.path.display());
+        Ok(())
+    }
+
+    pub fn body(&self) -> &str {
+        &self.body
+    }
+}
+
+/// Format a float with a sensible width for tables.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| a | b |"));
+        assert!(s.contains("|---|---|"));
+        assert!(s.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn doc_writes_to_disk() {
+        let dir = std::env::temp_dir().join("nqt_results_test");
+        let mut doc = ResultsDoc::new(&dir, "test", "Test doc");
+        doc.para("hello");
+        doc.series("s", &["x", "y"], &[vec![1.0, 2.0]]);
+        doc.write().unwrap();
+        let back = std::fs::read_to_string(dir.join("test.md")).unwrap();
+        assert!(back.contains("hello"));
+        assert!(back.contains("1.000000\t2.000000"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fmt_widths() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(1234.5), "1234.5");
+        assert_eq!(fmt(3.14159), "3.142");
+        assert_eq!(fmt(0.01234), "0.0123");
+    }
+}

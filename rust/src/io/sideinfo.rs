@@ -1,0 +1,119 @@
+//! β side-information accounting (paper Tables 1/3): the per-block β
+//! indices are compressed three ways —
+//!
+//! * `beta_bits_packed`  — raw ⌈log2 k⌉-bit packing ("Bits (no zstd)")
+//! * `beta_bits_zstd`    — actual zstd-compressed size ("Bits"; the paper
+//!   uses zstd/nvcomp for exactly this stream)
+//! * `beta_bits_entropy` — the H(β) information-theoretic floor (§5.1)
+
+/// Bits for raw fixed-width packing of β indices (k values).
+pub fn beta_bits_packed(beta_idx: &[u8], k: usize) -> f64 {
+    let bits = (k as f64).log2().ceil().max(1.0);
+    beta_idx.len() as f64 * bits
+}
+
+/// Bits after zstd compression of the β index byte stream (level 19 —
+/// offline weight compression; decode cost is irrelevant at load time).
+pub fn beta_bits_zstd(beta_idx: &[u8]) -> f64 {
+    if beta_idx.is_empty() {
+        return 0.0;
+    }
+    // Pack 4 indices/byte first (k ≤ 4): zstd then squeezes the packed
+    // stream further, matching the paper's pipeline.
+    let mut packed = vec![0u8; beta_idx.len().div_ceil(4)];
+    for (i, &b) in beta_idx.iter().enumerate() {
+        packed[i / 4] |= (b & 0x3) << (2 * (i % 4));
+    }
+    let compressed = zstd::bulk::compress(&packed, 19).expect("zstd compress");
+    (compressed.len() as f64 * 8.0).min(beta_idx.len() as f64 * 2.0)
+}
+
+/// Empirical-entropy bits of the β index stream.
+pub fn beta_bits_entropy(beta_idx: &[u8]) -> f64 {
+    if beta_idx.is_empty() {
+        return 0.0;
+    }
+    let mut counts = [0u64; 256];
+    for &b in beta_idx {
+        counts[b as usize] += 1;
+    }
+    let h = crate::util::stats::entropy_bits(&counts);
+    h * beta_idx.len() as f64
+}
+
+/// Effective bits/entry for a quantized matrix: code bits + β bits / 8
+/// entries per block (+ per-row scale amortized).
+pub fn bits_per_entry(
+    q: u32,
+    n_entries: usize,
+    beta_bits: f64,
+    n_scales: usize,
+) -> f64 {
+    let code_bits = (q as f64).log2() * n_entries as f64;
+    (code_bits + beta_bits + 32.0 * n_scales as f64) / n_entries as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn packed_is_2_bits_for_k4() {
+        let idx = vec![0u8, 1, 2, 3, 0, 1];
+        assert_eq!(beta_bits_packed(&idx, 4), 12.0);
+    }
+
+    #[test]
+    fn zstd_beats_packed_on_skewed_stream() {
+        // Heavily skewed β usage (the real-world case: most blocks use the
+        // smallest β) compresses well below 2 bits/block.
+        let mut rng = Rng::new(1501);
+        let idx: Vec<u8> = (0..20_000)
+            .map(|_| {
+                let r = rng.f64();
+                if r < 0.85 {
+                    0
+                } else if r < 0.95 {
+                    1
+                } else if r < 0.99 {
+                    2
+                } else {
+                    3
+                }
+            })
+            .collect();
+        let packed = beta_bits_packed(&idx, 4);
+        let z = beta_bits_zstd(&idx);
+        let ent = beta_bits_entropy(&idx);
+        assert!(z < packed, "zstd {z} not below packed {packed}");
+        // zstd should approach the entropy floor within ~30%
+        assert!(z < ent * 1.4, "zstd {z} too far above entropy {ent}");
+        assert!(ent < packed);
+    }
+
+    #[test]
+    fn zstd_never_reported_above_packed() {
+        // Uniform (incompressible) stream: reported bits capped at packed.
+        let mut rng = Rng::new(1502);
+        let idx: Vec<u8> = (0..4096).map(|_| rng.below(4) as u8).collect();
+        let z = beta_bits_zstd(&idx);
+        assert!(z <= beta_bits_packed(&idx, 4) + 1e-9);
+    }
+
+    #[test]
+    fn bits_per_entry_accounting() {
+        // q=14, 1024 entries, 128 blocks × 2 bits, 1 scale
+        let b = bits_per_entry(14, 1024, 256.0, 1);
+        let expect = (14f64.log2() * 1024.0 + 256.0 + 32.0) / 1024.0;
+        assert!((b - expect).abs() < 1e-12);
+        // ≈ 3.81 + 0.25 + 0.03 ≈ 4.09
+        assert!(b > 4.0 && b < 4.2);
+    }
+
+    #[test]
+    fn empty_streams() {
+        assert_eq!(beta_bits_zstd(&[]), 0.0);
+        assert_eq!(beta_bits_entropy(&[]), 0.0);
+    }
+}

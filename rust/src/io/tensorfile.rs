@@ -1,0 +1,216 @@
+//! `.nqt` — a minimal self-describing tensor container shared between the
+//! python build layer (numpy) and the rust runtime. Little-endian:
+//!
+//! ```text
+//! magic  b"NQT1"
+//! u32    tensor count
+//! per tensor:
+//!   u16      name length, then name bytes (utf-8)
+//!   u8       dtype (0 = f32, 1 = u8, 2 = i32)
+//!   u8       ndim
+//!   u64×ndim dims
+//!   bytes    row-major data
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(name: &str, dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor {
+            name: name.to_string(),
+            dims,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor {} is not f32", self.name),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U8(v) => Ok(v),
+            _ => bail!("tensor {} is not u8", self.name),
+        }
+    }
+}
+
+pub fn write_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    f.write_all(b"NQT1")?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        let name = t.name.as_bytes();
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name)?;
+        let (dtype, nbytes) = match &t.data {
+            TensorData::F32(v) => (0u8, v.len() * 4),
+            TensorData::U8(v) => (1u8, v.len()),
+            TensorData::I32(v) => (2u8, v.len() * 4),
+        };
+        let _ = nbytes;
+        f.write_all(&[dtype, t.dims.len() as u8])?;
+        for &d in &t.dims {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::U8(v) => f.write_all(v)?,
+            TensorData::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn read_tensors(path: &Path) -> Result<Vec<Tensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"NQT1" {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let mut buf4 = [0u8; 4];
+    f.read_exact(&mut buf4)?;
+    let count = u32::from_le_bytes(buf4) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut buf2 = [0u8; 2];
+        f.read_exact(&mut buf2)?;
+        let name_len = u16::from_le_bytes(buf2) as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf-8")?;
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        let mut buf8 = [0u8; 8];
+        for _ in 0..ndim {
+            f.read_exact(&mut buf8)?;
+            dims.push(u64::from_le_bytes(buf8) as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let data = match dtype {
+            0 => {
+                let mut bytes = vec![0u8; numel * 4];
+                f.read_exact(&mut bytes)?;
+                TensorData::F32(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect(),
+                )
+            }
+            1 => {
+                let mut bytes = vec![0u8; numel];
+                f.read_exact(&mut bytes)?;
+                TensorData::U8(bytes)
+            }
+            2 => {
+                let mut bytes = vec![0u8; numel * 4];
+                f.read_exact(&mut bytes)?;
+                TensorData::I32(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect(),
+                )
+            }
+            d => bail!("unknown dtype {d}"),
+        };
+        out.push(Tensor { name, dims, data });
+    }
+    Ok(out)
+}
+
+/// Find a tensor by name.
+pub fn find<'a>(tensors: &'a [Tensor], name: &str) -> Result<&'a Tensor> {
+    tensors
+        .iter()
+        .find(|t| t.name == name)
+        .with_context(|| format!("tensor '{name}' not found"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let mut rng = Rng::new(1401);
+        let tensors = vec![
+            Tensor::f32("weights/w0", vec![4, 8], rng.gauss_vec(32)),
+            Tensor {
+                name: "codes".into(),
+                dims: vec![16],
+                data: TensorData::U8((0..16u8).collect()),
+            },
+            Tensor {
+                name: "meta/config".into(),
+                dims: vec![3],
+                data: TensorData::I32(vec![-1, 0, 42]),
+            },
+        ];
+        let dir = std::env::temp_dir().join("nqt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.nqt");
+        write_tensors(&path, &tensors).unwrap();
+        let back = read_tensors(&path).unwrap();
+        assert_eq!(tensors, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("nqt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.nqt");
+        std::fs::write(&path, b"XXXX\0\0\0\0").unwrap();
+        assert!(read_tensors(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn find_by_name() {
+        let t = vec![Tensor::f32("a", vec![1], vec![1.0])];
+        assert!(find(&t, "a").is_ok());
+        assert!(find(&t, "b").is_err());
+    }
+}

@@ -1,0 +1,361 @@
+//! Dynamic programming for the optimal set of scaling coefficients β
+//! (paper §4.4, Algorithm 6, Appendix F).
+//!
+//! Given samples of 8-vectors from the distribution to be quantized, a
+//! universe of candidate βs, and a budget k, choose the subset of size k
+//! minimizing total reconstruction MSE under the First-β strategy (use the
+//! smallest non-overloading β). The largest chosen β must overload on no
+//! sample (plus a safety margin for unseen data, Appendix G).
+
+use super::e8::D;
+use super::voronoi::VoronoiCodec;
+
+/// Per-sample, per-β quantization outcome table.
+pub struct BetaTable {
+    /// mse[i][j] = reconstruction MSE of sample i at β_j
+    pub mse: Vec<Vec<f64>>,
+    /// overload[i][j]
+    pub overload: Vec<Vec<bool>>,
+    pub betas: Vec<f32>,
+}
+
+impl BetaTable {
+    /// Build the table by quantizing every sample at every candidate β.
+    pub fn build(codec: &VoronoiCodec, samples: &[[f32; D]], betas: &[f32]) -> Self {
+        let mut mse = Vec::with_capacity(samples.len());
+        let mut overload = Vec::with_capacity(samples.len());
+        for v in samples {
+            let mut row_mse = Vec::with_capacity(betas.len());
+            let mut row_ov = Vec::with_capacity(betas.len());
+            for &beta in betas {
+                let inv = 1.0 / beta;
+                let mut xs = [0f32; D];
+                for i in 0..D {
+                    xs[i] = v[i] * inv;
+                }
+                let (r, ov) = codec.encode_decode(&xs);
+                let mut err = 0f64;
+                for i in 0..D {
+                    let d = (r[i] * beta - v[i]) as f64;
+                    err += d * d;
+                }
+                row_mse.push(err);
+                row_ov.push(ov);
+            }
+            mse.push(row_mse);
+            overload.push(row_ov);
+        }
+        BetaTable {
+            mse,
+            overload,
+            betas: betas.to_vec(),
+        }
+    }
+}
+
+/// Result of the β-selection DP.
+#[derive(Clone, Debug)]
+pub struct BetaSelection {
+    /// chosen βs, ascending
+    pub betas: Vec<f32>,
+    /// total First-β MSE over the samples
+    pub total_mse: f64,
+    /// fraction of samples assigned to each chosen β (usage probabilities
+    /// for the entropy term of the effective rate)
+    pub usage: Vec<f64>,
+}
+
+/// Paper Algorithm 6. Picks k βs from the candidate universe minimizing
+/// First-β MSE, requiring the largest chosen β to have zero overloads on
+/// the samples. Returns `None` when even the largest candidate overloads.
+pub fn optimal_betas(table: &BetaTable, k: usize) -> Option<BetaSelection> {
+    let m = table.betas.len();
+    let n = table.mse.len();
+    assert!(k >= 1);
+    if n == 0 || m == 0 {
+        return None;
+    }
+
+    // cost[s][i] = Σ_p (overload[p][s] ∧ ¬overload[p][i]) · mse[p][i]
+    // where s = 0 is the sentinel "no smaller β" (overloads everywhere).
+    // We compute cost lazily inside the DP loops; to keep the complexity
+    // at O(m²·(n/64)·k) we precompute per-β overload bitsets.
+    let words = n.div_ceil(64);
+    let mut ov_bits = vec![vec![0u64; words]; m + 1];
+    ov_bits[0] = vec![!0u64; words]; // sentinel: everything overloads
+    if n % 64 != 0 {
+        ov_bits[0][words - 1] = (1u64 << (n % 64)) - 1;
+    }
+    for j in 0..m {
+        for p in 0..n {
+            if table.overload[p][j] {
+                ov_bits[j + 1][p / 64] |= 1 << (p % 64);
+            }
+        }
+    }
+
+    let inf = f64::INFINITY;
+    // dp[i][j]: min MSE covering all samples that do NOT overload at β_i
+    // (1-based i), using β_i plus j-1 smaller βs. from[i][j] for traceback.
+    let mut dp = vec![vec![inf; k + 1]; m + 1];
+    let mut from = vec![vec![usize::MAX; k + 1]; m + 1];
+    dp[0][0] = 0.0;
+
+    for i in 1..=m {
+        for j in 1..=k.min(i) {
+            for s in 0..i {
+                if dp[s][j - 1] == inf {
+                    continue;
+                }
+                // samples that overload at β_s but not at β_i get β_i
+                let mut cost = 0.0;
+                for w in 0..words {
+                    let mut bits = ov_bits[s][w] & !ov_bits[i][w];
+                    while bits != 0 {
+                        let p = w * 64 + bits.trailing_zeros() as usize;
+                        cost += table.mse[p][i - 1];
+                        bits &= bits - 1;
+                    }
+                }
+                let cand = dp[s][j - 1] + cost;
+                if cand < dp[i][j] {
+                    dp[i][j] = cand;
+                    from[i][j] = s;
+                }
+            }
+        }
+    }
+
+    // The answer: best dp[i][j] (j ≤ k) over βs with no overloads at all.
+    let mut best: Option<(usize, usize)> = None;
+    for i in 1..=m {
+        let clean = ov_bits[i].iter().all(|&w| w == 0);
+        if !clean {
+            continue;
+        }
+        for j in 1..=k.min(i) {
+            if dp[i][j] < inf {
+                match best {
+                    Some((bi, bj)) if dp[bi][bj] <= dp[i][j] => {}
+                    _ => best = Some((i, j)),
+                }
+            }
+        }
+    }
+    let (mut i, mut j) = best?;
+    let total_mse = dp[i][j];
+
+    let mut chosen = Vec::new();
+    while i != 0 {
+        chosen.push(i - 1);
+        let s = from[i][j];
+        i = s;
+        j -= 1;
+    }
+    chosen.reverse();
+    let betas: Vec<f32> = chosen.iter().map(|&c| table.betas[c]).collect();
+
+    // First-β usage probabilities over the samples.
+    let mut usage = vec![0f64; betas.len()];
+    for p in 0..n {
+        for (t, &c) in chosen.iter().enumerate() {
+            if !table.overload[p][c] {
+                usage[t] += 1.0;
+                break;
+            }
+        }
+    }
+    for u in usage.iter_mut() {
+        *u /= n as f64;
+    }
+
+    Some(BetaSelection {
+        betas,
+        total_mse,
+        usage,
+    })
+}
+
+/// Convenience wrapper: sample 8-blocks from `data`, run the DP over a
+/// default β universe (paper App. G: values 1..40 scaled by 1/q with
+/// variable spacing), apply the overload safety margin, return chosen βs.
+pub fn select_betas_for_data(
+    codec: &VoronoiCodec,
+    blocks: &[[f32; D]],
+    k: usize,
+    margin: f32,
+) -> Vec<f32> {
+    let q = codec.q as f32;
+    let universe = default_beta_universe(q);
+    let table = BetaTable::build(codec, blocks, &universe);
+    match optimal_betas(&table, k) {
+        Some(mut sel) => {
+            // Appendix G: add a margin to the largest β to absorb unseen
+            // outliers (margin is e.g. 3/q for weights, 4/q for activations).
+            if let Some(last) = sel.betas.last_mut() {
+                *last += margin;
+            }
+            sel.betas
+        }
+        None => {
+            // Even the largest candidate overloads: fall back to a scaled
+            // default ladder that always covers (relative to max norm).
+            let max_norm = blocks
+                .iter()
+                .map(|b| b.iter().map(|&x| x * x).sum::<f32>().sqrt())
+                .fold(0.0f32, f32::max);
+            let top = max_norm / q + margin;
+            (1..=k).map(|t| top * t as f32 / k as f32).collect()
+        }
+    }
+}
+
+/// Paper App. G universe: "values from 1 to 40 with spacing ranging from
+/// 0.25 to 2", divided by q.
+pub fn default_beta_universe(q: f32) -> Vec<f32> {
+    let mut v = Vec::new();
+    let mut x = 1.0f32;
+    while x <= 40.0 {
+        v.push(x / q);
+        let step = if x < 8.0 {
+            0.25
+        } else if x < 16.0 {
+            0.5
+        } else if x < 24.0 {
+            1.0
+        } else {
+            2.0
+        };
+        x += step;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gaussian_blocks(n: usize, seed: u64) -> Vec<[f32; D]> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut b = [0f32; D];
+                rng.fill_gauss(&mut b);
+                b
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dp_picks_cover_with_no_overload() {
+        let codec = VoronoiCodec::new(16);
+        let blocks = gaussian_blocks(400, 401);
+        let universe = default_beta_universe(16.0);
+        let table = BetaTable::build(&codec, &blocks, &universe);
+        let sel = optimal_betas(&table, 4).expect("selection exists");
+        assert_eq!(sel.betas.len().min(4), sel.betas.len());
+        assert!(!sel.betas.is_empty() && sel.betas.len() <= 4);
+        // Largest β must not overload on any sample.
+        let last = *sel.betas.last().unwrap();
+        for b in &blocks {
+            let mut xs = [0f32; D];
+            for i in 0..D {
+                xs[i] = b[i] / last;
+            }
+            let (_, ov) = codec.encode_decode(&xs);
+            assert!(!ov, "chosen max β overloads");
+        }
+        // Usage sums to 1.
+        let s: f64 = sel.usage.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_betas_never_hurt() {
+        let codec = VoronoiCodec::new(16);
+        let blocks = gaussian_blocks(300, 402);
+        let universe = default_beta_universe(16.0);
+        let table = BetaTable::build(&codec, &blocks, &universe);
+        let mut last = f64::INFINITY;
+        for k in [1usize, 2, 4, 8] {
+            let sel = optimal_betas(&table, k).unwrap();
+            assert!(
+                sel.total_mse <= last + 1e-9,
+                "k={k}: {} > {}",
+                sel.total_mse,
+                last
+            );
+            last = sel.total_mse;
+        }
+    }
+
+    #[test]
+    fn dp_is_optimal_vs_exhaustive_small() {
+        // Small universe: compare DP against brute-force subset search.
+        let codec = VoronoiCodec::new(8);
+        let blocks = gaussian_blocks(80, 403);
+        let universe: Vec<f32> = (2..10).map(|i| i as f32 / 8.0).collect();
+        let table = BetaTable::build(&codec, &blocks, &universe);
+        let k = 3;
+        let dp_sel = optimal_betas(&table, k);
+
+        // brute force over subsets of size ≤ k whose max β never overloads
+        let m = universe.len();
+        let n = blocks.len();
+        let mut best: Option<(f64, Vec<usize>)> = None;
+        for mask in 1u32..(1 << m) {
+            if mask.count_ones() as usize > k {
+                continue;
+            }
+            let subset: Vec<usize> = (0..m).filter(|&j| mask >> j & 1 == 1).collect();
+            let max_j = *subset.last().unwrap();
+            if (0..n).any(|p| table.overload[p][max_j]) {
+                continue;
+            }
+            let mut total = 0.0;
+            for p in 0..n {
+                let j = subset
+                    .iter()
+                    .copied()
+                    .find(|&j| !table.overload[p][j])
+                    .unwrap();
+                total += table.mse[p][j];
+            }
+            if best.as_ref().map_or(true, |(b, _)| total < *b) {
+                best = Some((total, subset));
+            }
+        }
+        match (dp_sel, best) {
+            (Some(dp), Some((bf, _))) => {
+                assert!(
+                    (dp.total_mse - bf).abs() < 1e-9,
+                    "dp {} vs brute force {bf}",
+                    dp.total_mse
+                );
+            }
+            (None, None) => {}
+            (a, b) => panic!("dp={:?} bf={:?} disagree on feasibility", a.is_some(), b.is_some()),
+        }
+    }
+
+    #[test]
+    fn select_betas_margin_applied() {
+        let codec = VoronoiCodec::new(14);
+        let blocks = gaussian_blocks(200, 404);
+        let margin = 3.0 / 14.0;
+        let with_margin = select_betas_for_data(&codec, &blocks, 4, margin);
+        let without = select_betas_for_data(&codec, &blocks, 4, 0.0);
+        assert_eq!(with_margin.len(), without.len());
+        let d = with_margin.last().unwrap() - without.last().unwrap();
+        assert!((d - margin).abs() < 1e-6, "margin not applied: {d}");
+    }
+
+    #[test]
+    fn universe_shape() {
+        let u = default_beta_universe(14.0);
+        assert!(u.len() > 30 && u.len() < 80, "len={}", u.len());
+        assert!(u.windows(2).all(|w| w[0] < w[1]));
+        assert!((u[0] - 1.0 / 14.0).abs() < 1e-6);
+    }
+}

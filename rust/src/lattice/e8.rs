@@ -1,0 +1,341 @@
+//! Closest-point oracles for the Gosset lattice E8.
+//!
+//! E8 = D8 ∪ (D8 + ½·1), where D8 = { v ∈ Z^8 : Σv_i even }. The classic
+//! Conway–Sloane procedure (paper Appendix C, Algorithm 5): round to each
+//! coset's grid, fix parity by flipping the cheapest coordinate, keep the
+//! closer candidate. All arithmetic is exact in f32 (values are multiples
+//! of ½).
+//!
+//! The NestQuantM variant (Appendix D) replaces the argmin/argmax flip
+//! position with a fixed position 0 — cheaper in hardware — and is used on
+//! the *decode* side only. It satisfies f(x + v) = f(x) + v for v ∈ E8
+//! (Lemma D.1), which keeps Voronoi decoding consistent; the effective
+//! shaping region changes slightly.
+
+/// Block dimension of the Gosset lattice.
+pub const D: usize = 8;
+
+/// Round half *up* (systematic tie-break). Chosen over `f32::round`
+/// (half away from zero) so the float oracle and the integer fast-decode
+/// path in `quant::qgemm` agree exactly, including on tie points.
+#[inline]
+fn round_sys(x: f32) -> f32 {
+    (x + 0.5).floor()
+}
+
+/// Nearest point in D8 (integer vectors with even coordinate sum).
+///
+/// `forced_flip`: when the parity of the rounded vector is odd, flip the
+/// rounding of this coordinate instead of the cheapest one (NestQuantM).
+#[inline]
+pub fn nearest_d8(x: &[f32; D], forced_flip: Option<usize>) -> [f32; D] {
+    let mut r = [0f32; D];
+    let mut parity = 0i64;
+    for i in 0..D {
+        r[i] = round_sys(x[i]);
+        parity += r[i] as i64;
+    }
+    if parity & 1 != 0 {
+        // Flipping coordinate i to its second-nearest integer costs
+        // (1-a)^2 - a^2 = 1 - 2a where a = |x_i - r_i|; minimize cost by
+        // maximizing a (unless the flip position is forced).
+        let pos = match forced_flip {
+            Some(p) => p,
+            None => {
+                let mut best = 0usize;
+                let mut best_a = -1f32;
+                for i in 0..D {
+                    let a = (x[i] - r[i]).abs();
+                    if a > best_a {
+                        best_a = a;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        // Move toward x's side of the rounded value (tie -> +1).
+        r[pos] += if x[pos] >= r[pos] { 1.0 } else { -1.0 };
+    }
+    r
+}
+
+#[inline]
+fn dist_sq(x: &[f32; D], y: &[f32; D]) -> f32 {
+    let mut s = 0f32;
+    for i in 0..D {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+#[inline]
+fn nearest_e8_impl(x: &[f32; D], forced_flip: Option<usize>) -> [f32; D] {
+    // Candidate in D8.
+    let c1 = nearest_d8(x, forced_flip);
+    // Candidate in D8 + 1/2: shift, round in D8, shift back.
+    let mut xs = [0f32; D];
+    for i in 0..D {
+        xs[i] = x[i] - 0.5;
+    }
+    let mut c2 = nearest_d8(&xs, forced_flip);
+    for v in c2.iter_mut() {
+        *v += 0.5;
+    }
+    // Systematic tie-break: prefer the D8 candidate.
+    if dist_sq(x, &c1) <= dist_sq(x, &c2) {
+        c1
+    } else {
+        c2
+    }
+}
+
+/// Exact nearest point in E8 (Conway–Sloane; paper Algorithm 5).
+#[inline]
+pub fn nearest_e8(x: &[f32; D]) -> [f32; D] {
+    nearest_e8_impl(x, None)
+}
+
+/// NestQuantM oracle `f` (Appendix D): parity flips always use coordinate 0.
+/// Not an exact closest-point map, but E8-shift-equivariant (Lemma D.1).
+#[inline]
+pub fn nearest_e8_m(x: &[f32; D]) -> [f32; D] {
+    nearest_e8_impl(x, Some(0))
+}
+
+/// Is `v` a point of E8? (all-integer with even sum, or all-half-integer
+/// with `v - ½·1` in D8).
+pub fn e8_contains(v: &[f32; D]) -> bool {
+    let all_int = v.iter().all(|&x| x.fract() == 0.0);
+    if all_int {
+        let s: i64 = v.iter().map(|&x| x as i64).sum();
+        return s & 1 == 0;
+    }
+    let all_half = v.iter().all(|&x| (x - 0.5).fract() == 0.0);
+    if all_half {
+        let s: i64 = v.iter().map(|&x| (x - 0.5) as i64).sum();
+        return s & 1 == 0;
+    }
+    false
+}
+
+/// Normalized second moment of E8, ≈ 0.0716821 (Agrell & Allen 2023).
+/// Used as a reference value in tests and the bounds module.
+pub const E8_NSM: f64 = 0.071_682_1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Rng};
+
+    fn rand_e8_point(rng: &mut Rng) -> [f32; D] {
+        // Random small E8 point: D8 part + optional half shift.
+        let mut v = [0f32; D];
+        let mut sum = 0i64;
+        for x in v.iter_mut().take(D - 1) {
+            let z = rng.below(9) as i64 - 4;
+            *x = z as f32;
+            sum += z;
+        }
+        // fix parity with last coordinate
+        let mut last = rng.below(9) as i64 - 4;
+        if (sum + last) & 1 != 0 {
+            last += 1;
+        }
+        v[D - 1] = last as f32;
+        if rng.next_u64() & 1 == 0 {
+            for x in v.iter_mut() {
+                *x += 0.5;
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn returns_lattice_points() {
+        propcheck::check("e8-membership", 500, 101, |rng| {
+            let mut x = [0f32; D];
+            for v in x.iter_mut() {
+                *v = rng.gauss_f32() * 3.0;
+            }
+            let p = nearest_e8(&x);
+            if e8_contains(&p) {
+                Ok(())
+            } else {
+                Err(format!("{p:?} not in E8 (input {x:?})"))
+            }
+        });
+    }
+
+    #[test]
+    fn m_variant_returns_lattice_points() {
+        propcheck::check("e8m-membership", 500, 102, |rng| {
+            let mut x = [0f32; D];
+            for v in x.iter_mut() {
+                *v = rng.gauss_f32() * 3.0;
+            }
+            let p = nearest_e8_m(&x);
+            if e8_contains(&p) {
+                Ok(())
+            } else {
+                Err(format!("{p:?} not in E8 (input {x:?})"))
+            }
+        });
+    }
+
+    #[test]
+    fn idempotent_on_lattice_points() {
+        propcheck::check("e8-idempotent", 300, 103, |rng| {
+            let v = rand_e8_point(rng);
+            let p = nearest_e8(&v);
+            if p == v {
+                Ok(())
+            } else {
+                Err(format!("Q({v:?}) = {p:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn shift_equivariance_exact_oracle() {
+        propcheck::check("e8-equivariance", 300, 104, |rng| {
+            let mut x = [0f32; D];
+            for v in x.iter_mut() {
+                *v = rng.gauss_f32();
+            }
+            let shift = rand_e8_point(rng);
+            let mut xs = x;
+            for i in 0..D {
+                xs[i] += shift[i];
+            }
+            let a = nearest_e8(&xs);
+            let mut b = nearest_e8(&x);
+            for i in 0..D {
+                b[i] += shift[i];
+            }
+            // Ties may break differently after a shift; accept equal distance.
+            let da = dist_sq(&xs, &a);
+            let db = dist_sq(&xs, &b);
+            if (da - db).abs() < 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("|x+v - Q(x+v)|²={da} vs |x+v - (Q(x)+v)|²={db}"))
+            }
+        });
+    }
+
+    #[test]
+    fn m_variant_shift_equivariance_lemma_d1() {
+        // Lemma D.1: f(x+v) = f(x)+v exactly (no tie caveat: the flip
+        // position is fixed, so the decision is translation covariant).
+        propcheck::check("e8m-equivariance", 300, 105, |rng| {
+            let mut x = [0f32; D];
+            for v in x.iter_mut() {
+                // keep away from tie boundaries
+                *v = rng.gauss_f32() * 1.7 + 0.123;
+            }
+            let shift = rand_e8_point(rng);
+            let mut xs = x;
+            for i in 0..D {
+                xs[i] += shift[i];
+            }
+            let a = nearest_e8_m(&xs);
+            let mut b = nearest_e8_m(&x);
+            for i in 0..D {
+                b[i] += shift[i];
+            }
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("f(x+v)={a:?} != f(x)+v={b:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn beats_or_matches_brute_force_neighbors() {
+        // The returned point must be at least as close as any point in a
+        // local enumeration of E8 around x.
+        propcheck::check("e8-local-optimality", 40, 106, |rng| {
+            let mut x = [0f32; D];
+            for v in x.iter_mut() {
+                *v = rng.gauss_f32() * 1.5;
+            }
+            let p = nearest_e8(&x);
+            let dp = dist_sq(&x, &p);
+            // Enumerate all E8 points with coordinates in round(x_i) ± 1.5
+            // (covering radius of E8 is 1, so the true nearest point lies
+            // in this box).
+            let mut best = f32::INFINITY;
+            // integer grid
+            let base: Vec<i64> = x.iter().map(|&v| v.round() as i64).collect();
+            let mut cand = [0f32; D];
+            for mask in 0..3usize.pow(8) {
+                let mut m = mask;
+                let mut sum = 0i64;
+                for i in 0..D {
+                    let off = (m % 3) as i64 - 1;
+                    m /= 3;
+                    let c = base[i] + off;
+                    cand[i] = c as f32;
+                    sum += c;
+                }
+                if sum & 1 == 0 {
+                    best = best.min(dist_sq(&x, &cand));
+                }
+                // half-integer grid: shift the same enumeration by +0.5
+                let mut m = mask;
+                let mut sumh = 0i64;
+                for i in 0..D {
+                    let off = (m % 3) as i64 - 1;
+                    m /= 3;
+                    // nearest half-integer below x_i is floor(x_i-0.5)+0.5
+                    let c = (x[i] - 0.5).round() as i64 + off;
+                    cand[i] = c as f32 + 0.5;
+                    sumh += c;
+                }
+                if sumh & 1 == 0 {
+                    best = best.min(dist_sq(&x, &cand));
+                }
+            }
+            if dp <= best + 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("oracle dist² {dp} > brute-force {best} at {x:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn nsm_statistical_estimate() {
+        // Quantize x ~ N(0, σ²I) with σ large (pure granular regime) and
+        // check E||x-Q(x)||²/8 ≈ NSM (covol 1 → per-dim MSE = NSM).
+        let mut rng = Rng::new(2024);
+        let mut acc = 0f64;
+        const N: usize = 60_000;
+        for _ in 0..N {
+            let mut x = [0f32; D];
+            for v in x.iter_mut() {
+                *v = rng.gauss_f32() * 8.0;
+            }
+            let p = nearest_e8(&x);
+            acc += dist_sq(&x, &p) as f64;
+        }
+        let mse_per_dim = acc / (N * D) as f64;
+        let rel = (mse_per_dim - E8_NSM).abs() / E8_NSM;
+        assert!(
+            rel < 0.03,
+            "measured NSM {mse_per_dim} vs expected {E8_NSM} (rel err {rel})"
+        );
+    }
+
+    #[test]
+    fn gosset_beats_scalar_quantizer_nsm() {
+        // The shaping/granular gain of §3: G(Z)=1/12 vs G(E8)≈0.0717.
+        assert!(E8_NSM < 1.0 / 12.0);
+        // paper: E8 achieves a 1.16x gain over Z per-dimension
+        let gain = (1.0 / 12.0) / E8_NSM;
+        assert!((gain - 1.16).abs() < 0.01, "gain={gain}");
+    }
+}

@@ -1,0 +1,24 @@
+//! The Gosset-lattice (E8) engine at the core of NestQuant.
+//!
+//! * [`e8`] — closest-point oracles for E8 = D8 ∪ (D8 + ½) (paper Alg. 5),
+//!   including the simplified NestQuantM decode oracle (Appendix D).
+//! * [`voronoi`] — Voronoi codes (Conway & Sloane): Encode (Alg. 1) /
+//!   Decode (Alg. 2) against the integer generator matrix of 2·E8 used by
+//!   the paper's CUDA kernel (Appendix E).
+//! * [`nested`] — the multi-β union-of-Voronoi-codebooks quantizer
+//!   (Alg. 3), Opt-β / First-β strategies, and quantized dot products
+//!   (Alg. 4).
+//! * [`beta_dp`] — the dynamic program selecting the optimal β subset
+//!   (Alg. 6, Appendix F).
+//! * [`hex`] — a 2-D hexagonal (A2) nested-lattice demo used to regenerate
+//!   Fig. 2's shaping-waste comparison.
+
+pub mod beta_dp;
+pub mod e8;
+pub mod hex;
+pub mod nested;
+pub mod voronoi;
+
+pub use e8::{e8_contains, nearest_e8, nearest_e8_m, D};
+pub use nested::{NestedLatticeQuantizer, QuantizedVector, Strategy};
+pub use voronoi::VoronoiCodec;

@@ -1,0 +1,406 @@
+//! The NestQuant vector quantizer (paper Algorithm 3) and quantized dot
+//! products (Algorithm 4).
+//!
+//! A vector of length n = 8·b is L2-normalized (×√n/s, s = ‖A‖₂), split
+//! into 8-blocks, and each block is quantized to the best member of a
+//! *union of scaled Voronoi codebooks* ⋃_t β_t · (Λ ∩ qV_Λ). The per-block
+//! side information is the chosen β index (2 bits for k=4, zstd- or
+//! entropy-compressible); the per-vector side information is the scale s.
+//!
+//! Effective rate: log2(q) + H(β)/8 bits per entry (§3, §5.1).
+
+use super::e8::D;
+use super::voronoi::VoronoiCodec;
+
+/// β selection strategy (Appendix F).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Try every β, keep the one with smallest reconstruction MSE.
+    OptBeta,
+    /// Use the smallest β that does not overload (falls back to the
+    /// largest β if all overload). Used by the β-selection DP.
+    FirstBeta,
+}
+
+/// A quantized vector: packed coset codes + per-block β indices + scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedVector {
+    /// n coset code entries in [0, q)
+    pub codes: Vec<u8>,
+    /// b = n/8 β indices in [0, k)
+    pub beta_idx: Vec<u8>,
+    /// original L2 norm s = ‖A‖₂
+    pub scale: f32,
+    /// logical length n
+    pub n: usize,
+}
+
+impl QuantizedVector {
+    /// Stored payload size in bits at rate log2(q) + 2 bits/block for β
+    /// (uncompressed; k ≤ 4 assumed for the 2-bit packing).
+    pub fn payload_bits(&self, q: u32) -> usize {
+        let code_bits = (self.n as f64 * (q as f64).log2()).ceil() as usize;
+        code_bits + 2 * self.beta_idx.len() + 32 // + f32 scale
+    }
+}
+
+/// The multi-β nested-lattice quantizer of §4 (Algorithm 3).
+#[derive(Clone, Debug)]
+pub struct NestedLatticeQuantizer {
+    pub codec: VoronoiCodec,
+    /// scaling coefficients β_1 < … < β_k
+    pub betas: Vec<f32>,
+    pub strategy: Strategy,
+}
+
+impl NestedLatticeQuantizer {
+    pub fn new(q: u32, betas: Vec<f32>) -> Self {
+        Self::with_codec(VoronoiCodec::new(q), betas, Strategy::OptBeta)
+    }
+
+    /// NestQuantM variant (simplified decode oracle, Appendix D).
+    pub fn new_m(q: u32, betas: Vec<f32>) -> Self {
+        Self::with_codec(VoronoiCodec::new_m(q), betas, Strategy::OptBeta)
+    }
+
+    pub fn with_codec(codec: VoronoiCodec, mut betas: Vec<f32>, strategy: Strategy) -> Self {
+        assert!(!betas.is_empty(), "need at least one β");
+        assert!(betas.len() <= 255);
+        assert!(betas.iter().all(|&b| b > 0.0), "β must be positive");
+        betas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        NestedLatticeQuantizer {
+            codec,
+            betas,
+            strategy,
+        }
+    }
+
+    pub fn q(&self) -> u32 {
+        self.codec.q as u32
+    }
+
+    pub fn k(&self) -> usize {
+        self.betas.len()
+    }
+
+    /// Quantize one 8-block (already normalized). Returns
+    /// (codes, β index, reconstruction, overloaded-at-chosen-β).
+    #[inline]
+    pub fn quantize_block(&self, v: &[f32; D]) -> ([u8; D], u8, [f32; D], bool) {
+        let mut best_err = f32::INFINITY;
+        let mut best: Option<([u8; D], u8, [f32; D], bool)> = None;
+        for (t, &beta) in self.betas.iter().enumerate() {
+            let inv = 1.0 / beta;
+            let mut xs = [0f32; D];
+            for i in 0..D {
+                xs[i] = v[i] * inv;
+            }
+            let p = self.codec.nearest(&xs);
+            let c = self.codec.encode_point(&p);
+            let r = self.codec.decode(&c);
+            let overload = r != p;
+            let mut err = 0f32;
+            for i in 0..D {
+                let d = r[i] * beta - v[i];
+                err += d * d;
+            }
+            match self.strategy {
+                Strategy::OptBeta => {
+                    if err < best_err {
+                        best_err = err;
+                        let mut recon = [0f32; D];
+                        for i in 0..D {
+                            recon[i] = r[i] * beta;
+                        }
+                        best = Some((c, t as u8, recon, overload));
+                    }
+                }
+                Strategy::FirstBeta => {
+                    let mut recon = [0f32; D];
+                    for i in 0..D {
+                        recon[i] = r[i] * beta;
+                    }
+                    if !overload {
+                        return (c, t as u8, recon, false);
+                    }
+                    // remember the largest β as fallback
+                    best = Some((c, t as u8, recon, true));
+                }
+            }
+        }
+        best.expect("betas nonempty")
+    }
+
+    /// Decode one 8-block given codes and β index.
+    #[inline]
+    pub fn decode_block(&self, codes: &[u8; D], beta_idx: u8) -> [f32; D] {
+        let beta = self.betas[beta_idx as usize];
+        let mut r = self.codec.decode(codes);
+        for v in r.iter_mut() {
+            *v *= beta;
+        }
+        r
+    }
+
+    /// Paper Algorithm 3: quantize a full vector (length divisible by 8).
+    pub fn quantize(&self, a: &[f32]) -> QuantizedVector {
+        assert_eq!(a.len() % D, 0, "vector length must be divisible by 8");
+        let n = a.len();
+        let s = crate::util::stats::norm2(a) as f32;
+        let mut codes = vec![0u8; n];
+        let mut beta_idx = vec![0u8; n / D];
+        if s == 0.0 {
+            return QuantizedVector {
+                codes,
+                beta_idx,
+                scale: 0.0,
+                n,
+            };
+        }
+        let norm = (n as f32).sqrt() / s;
+        let mut block = [0f32; D];
+        for (j, chunk) in a.chunks_exact(D).enumerate() {
+            for i in 0..D {
+                block[i] = chunk[i] * norm;
+            }
+            let (c, t, _, _) = self.quantize_block(&block);
+            codes[j * D..(j + 1) * D].copy_from_slice(&c);
+            beta_idx[j] = t;
+        }
+        QuantizedVector {
+            codes,
+            beta_idx,
+            scale: s,
+            n,
+        }
+    }
+
+    /// Dequantize a full vector back to f32.
+    pub fn dequantize(&self, qv: &QuantizedVector) -> Vec<f32> {
+        let mut out = vec![0f32; qv.n];
+        if qv.scale == 0.0 {
+            return out;
+        }
+        let denorm = qv.scale / (qv.n as f32).sqrt();
+        for j in 0..qv.n / D {
+            let mut c = [0u8; D];
+            c.copy_from_slice(&qv.codes[j * D..(j + 1) * D]);
+            let r = self.decode_block(&c, qv.beta_idx[j]);
+            for i in 0..D {
+                out[j * D + i] = r[i] * denorm;
+            }
+        }
+        out
+    }
+
+    /// One-shot quantize→dequantize ("fake quant"); bit-exact with
+    /// dequantize(quantize(a)).
+    pub fn roundtrip(&self, a: &[f32]) -> Vec<f32> {
+        self.dequantize(&self.quantize(a))
+    }
+
+    /// Paper Algorithm 4: inner product of two quantized vectors without
+    /// full dequantization. β scales are applied per block-pair; the
+    /// normalization s1·s2/n is applied once.
+    pub fn dot(&self, a: &QuantizedVector, b: &QuantizedVector) -> f32 {
+        assert_eq!(a.n, b.n);
+        if a.scale == 0.0 || b.scale == 0.0 {
+            return 0.0;
+        }
+        let mut acc = 0f64;
+        let mut ca = [0u8; D];
+        let mut cb = [0u8; D];
+        for j in 0..a.n / D {
+            ca.copy_from_slice(&a.codes[j * D..(j + 1) * D]);
+            cb.copy_from_slice(&b.codes[j * D..(j + 1) * D]);
+            let pa = self.codec.decode(&ca);
+            let pb = self.codec.decode(&cb);
+            let mut d = 0f32;
+            for i in 0..D {
+                d += pa[i] * pb[i];
+            }
+            acc += (d * self.betas[a.beta_idx[j] as usize] * self.betas[b.beta_idx[j] as usize])
+                as f64;
+        }
+        (acc * a.scale as f64 * b.scale as f64 / a.n as f64) as f32
+    }
+
+    /// Histogram of β usage over a sample of vectors — used for the
+    /// effective-rate computation (§5.1) and Tables 1/3 bits columns.
+    pub fn beta_histogram(&self, vectors: &[Vec<f32>]) -> Vec<u64> {
+        let mut counts = vec![0u64; self.k()];
+        for v in vectors {
+            let qv = self.quantize(v);
+            for &t in &qv.beta_idx {
+                counts[t as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Effective rate in bits/entry: log2(q) + H(β)/8 (entropy coding of
+    /// the β side info; §5.1).
+    pub fn effective_rate(&self, beta_counts: &[u64]) -> f64 {
+        self.codec.rate() + crate::util::stats::entropy_bits(beta_counts) / D as f64
+    }
+
+    /// Raw rate with 2-bit β packing (the "no zstd" column; requires k ≤ 4).
+    pub fn raw_rate(&self) -> f64 {
+        let beta_bits = (self.k() as f64).log2().ceil().max(1.0);
+        self.codec.rate() + beta_bits / D as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, stats, Rng};
+
+    fn quantizer(q: u32) -> NestedLatticeQuantizer {
+        // βs tuned for N(0,1) blocks at q=14-ish rates (paper App. G shape)
+        NestedLatticeQuantizer::new(q, vec![0.25, 0.32, 0.45, 1.0])
+    }
+
+    #[test]
+    fn roundtrip_close_for_gaussian() {
+        let mut rng = Rng::new(301);
+        let nq = quantizer(14);
+        let a = rng.gauss_vec(256);
+        let r = nq.roundtrip(&a);
+        let rmse = stats::rmse(&a, &r);
+        // ~4 bits/entry on normalized Gaussian: expect distortion well
+        // under 0.1 RMSE (D(4) = 2^-8 ≈ 0.0039 MSE → 0.06 RMSE).
+        assert!(rmse < 0.1, "rmse={rmse}");
+    }
+
+    #[test]
+    fn dot_matches_dequantized_dot() {
+        propcheck::check("alg4-dot-consistency", 50, 302, |rng| {
+            let nq = quantizer(12);
+            let a = rng.gauss_vec(64);
+            let b = rng.gauss_vec(64);
+            let qa = nq.quantize(&a);
+            let qb = nq.quantize(&b);
+            let fast = nq.dot(&qa, &qb) as f64;
+            let da = nq.dequantize(&qa);
+            let db = nq.dequantize(&qb);
+            let slow = stats::dot(&da, &db);
+            if (fast - slow).abs() < 1e-3 * (1.0 + slow.abs()) {
+                Ok(())
+            } else {
+                Err(format!("alg4 dot {fast} vs dequantized dot {slow}"))
+            }
+        });
+    }
+
+    #[test]
+    fn dot_approximates_true_inner_product() {
+        let mut rng = Rng::new(303);
+        let nq = quantizer(14);
+        let n = 512;
+        let mut err = stats::Welford::new();
+        for _ in 0..50 {
+            let a = rng.gauss_vec(n);
+            let b = rng.gauss_vec(n);
+            let qa = nq.quantize(&a);
+            let qb = nq.quantize(&b);
+            let approx = nq.dot(&qa, &qb) as f64;
+            let exact = stats::dot(&a, &b);
+            err.push(approx - exact);
+        }
+        // E(X·Y − approx)² should be ≈ n·Γ-ish; loose sanity: std ≪ √n·1
+        assert!(err.std() < 0.5 * (n as f64).sqrt(), "std={}", err.std());
+    }
+
+    #[test]
+    fn scale_invariance_of_normalization() {
+        // Quantizing c·a reconstructs ≈ c·reconstruction(a): normalization
+        // divides by ‖A‖₂ so block shapes are identical.
+        let mut rng = Rng::new(304);
+        let nq = quantizer(10);
+        let a = rng.gauss_vec(128);
+        let scaled: Vec<f32> = a.iter().map(|&x| 3.7 * x).collect();
+        let ra = nq.roundtrip(&a);
+        let rs = nq.roundtrip(&scaled);
+        for (x, y) in ra.iter().zip(&rs) {
+            assert!((3.7 * x - y).abs() < 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn zero_vector_roundtrip() {
+        let nq = quantizer(8);
+        let a = vec![0f32; 64];
+        let r = nq.roundtrip(&a);
+        assert_eq!(r, a);
+        let qa = nq.quantize(&a);
+        let qb = nq.quantize(&a);
+        assert_eq!(nq.dot(&qa, &qb), 0.0);
+    }
+
+    #[test]
+    fn first_beta_matches_opt_beta_closely() {
+        // Table 5: First-β is only slightly worse than Opt-β.
+        let mut rng = Rng::new(305);
+        let betas = vec![0.22, 0.28, 0.38, 0.6, 1.2];
+        let opt = NestedLatticeQuantizer::with_codec(
+            VoronoiCodec::new(16),
+            betas.clone(),
+            Strategy::OptBeta,
+        );
+        let first = NestedLatticeQuantizer::with_codec(
+            VoronoiCodec::new(16),
+            betas,
+            Strategy::FirstBeta,
+        );
+        let mut mse_opt = 0.0;
+        let mut mse_first = 0.0;
+        for _ in 0..200 {
+            let a = rng.gauss_vec(64);
+            mse_opt += stats::mse(&a, &opt.roundtrip(&a));
+            mse_first += stats::mse(&a, &first.roundtrip(&a));
+        }
+        assert!(mse_opt <= mse_first + 1e-9);
+        assert!(
+            mse_first < mse_opt * 1.35,
+            "first-β {mse_first} ≫ opt-β {mse_opt}"
+        );
+    }
+
+    #[test]
+    fn larger_q_reduces_error() {
+        let mut rng = Rng::new(306);
+        let a = rng.gauss_vec(512);
+        let mut last = f64::INFINITY;
+        for q in [4u32, 8, 16] {
+            let nq = quantizer(q);
+            let m = stats::mse(&a, &nq.roundtrip(&a));
+            assert!(m < last, "q={q}: mse {m} not < {last}");
+            last = m;
+        }
+    }
+
+    #[test]
+    fn payload_accounting() {
+        let nq = quantizer(16);
+        let mut rng = Rng::new(307);
+        let a = rng.gauss_vec(64);
+        let qv = nq.quantize(&a);
+        // 64 entries × 4 bits + 8 blocks × 2 bits + 32-bit scale
+        assert_eq!(qv.payload_bits(16), 64 * 4 + 8 * 2 + 32);
+        assert_eq!(qv.codes.len(), 64);
+        assert_eq!(qv.beta_idx.len(), 8);
+        // effective rate ≤ raw rate
+        let counts = nq.beta_histogram(std::slice::from_ref(&a));
+        assert!(nq.effective_rate(&counts) <= nq.raw_rate() + 1e-12);
+    }
+
+    #[test]
+    fn m_variant_quantizes_sanely() {
+        let mut rng = Rng::new(308);
+        let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+        let a = rng.gauss_vec(256);
+        let rmse = stats::rmse(&a, &nq.roundtrip(&a));
+        assert!(rmse < 0.12, "NestQuantM rmse={rmse}");
+    }
+}

@@ -1,0 +1,463 @@
+//! Voronoi codes (Conway & Sloane 1983) over the Gosset lattice.
+//!
+//! Codebook C = Λ ∩ q·V_Λ ≅ Λ/qΛ, |C| = q^8 → rate R = log2(q) bits/entry.
+//! Encode (paper Alg. 1): x → coordinates of Q_Λ(x) mod q.
+//! Decode (paper Alg. 2): c → Gc − q·Q_Λ(Gc/q), the minimum-energy coset
+//! representative.
+//!
+//! Arithmetic runs in the doubled lattice 2·E8, whose generator matrix G
+//! (the paper's Appendix-E matrix) is integer, so coordinates and coset
+//! arithmetic are exact in i64. Real-valued lattice points are recovered by
+//! halving.
+
+use super::e8::{nearest_e8, D};
+
+/// Generator matrix of 2·E8 as printed in Appendix E (row-major). Columns
+/// are the generators: Λ = { G·c : c ∈ Z^8 }. |det G| = 2^8 · covol(E8) = 256.
+pub const G2E8: [[i64; D]; D] = [
+    [1, 0, 0, 0, 0, 0, 0, 0],
+    [1, 0, 2, 0, 0, 0, 0, 0],
+    [1, 0, 0, 0, 2, 0, 0, 0],
+    [1, 0, 0, 0, 0, 0, 2, 0],
+    [1, 4, 2, 2, 2, 2, 2, 2],
+    [1, 0, 0, 2, 0, 0, 0, 0],
+    [1, 0, 0, 0, 0, 2, 0, 0],
+    [1, 0, 0, 0, 0, 0, 0, 2],
+];
+
+/// det(G2E8) and the adjugate, computed once (exactly) at codec build time.
+fn det_and_adjugate(g: &[[i64; D]; D]) -> (i64, [[i64; D]; D]) {
+    // Fraction-free determinant via i128 Bareiss elimination.
+    let mut a: Vec<Vec<i128>> = g
+        .iter()
+        .map(|row| row.iter().map(|&x| x as i128).collect())
+        .collect();
+    let mut det_sign = 1i128;
+    let mut prev = 1i128;
+    for k in 0..D - 1 {
+        if a[k][k] == 0 {
+            let swap = (k + 1..D).find(|&i| a[i][k] != 0).expect("singular G");
+            a.swap(k, swap);
+            det_sign = -det_sign;
+        }
+        for i in k + 1..D {
+            for j in k + 1..D {
+                a[i][j] = (a[k][k] * a[i][j] - a[i][k] * a[k][j]) / prev;
+            }
+            a[i][k] = 0;
+        }
+        prev = a[k][k];
+    }
+    let det = (det_sign * a[D - 1][D - 1]) as i64;
+
+    // Adjugate via cofactors (8×8, one-time cost).
+    let minor_det = |g: &[[i64; D]; D], skip_r: usize, skip_c: usize| -> i128 {
+        let mut m: Vec<Vec<i128>> = Vec::with_capacity(D - 1);
+        for (r, row) in g.iter().enumerate() {
+            if r == skip_r {
+                continue;
+            }
+            m.push(
+                row.iter()
+                    .enumerate()
+                    .filter(|&(c, _)| c != skip_c)
+                    .map(|(_, &x)| x as i128)
+                    .collect(),
+            );
+        }
+        // Bareiss on the 7×7 minor.
+        let n = D - 1;
+        let mut sign = 1i128;
+        let mut prev = 1i128;
+        for k in 0..n - 1 {
+            if m[k][k] == 0 {
+                let Some(swap) = (k + 1..n).find(|&i| m[i][k] != 0) else {
+                    return 0;
+                };
+                m.swap(k, swap);
+                sign = -sign;
+            }
+            for i in k + 1..n {
+                for j in k + 1..n {
+                    m[i][j] = (m[k][k] * m[i][j] - m[i][k] * m[k][j]) / prev;
+                }
+                m[i][k] = 0;
+            }
+            prev = m[k][k];
+        }
+        sign * m[n - 1][n - 1]
+    };
+
+    let mut adj = [[0i64; D]; D];
+    for r in 0..D {
+        for c in 0..D {
+            let cof = minor_det(g, r, c);
+            let sign = if (r + c) % 2 == 0 { 1 } else { -1 };
+            // adjugate = transpose of cofactor matrix
+            adj[c][r] = (sign as i128 * cof) as i64;
+        }
+    }
+    (det, adj)
+}
+
+/// A Voronoi codec for E8 at nesting ratio `q` (rate log2(q) bits/entry).
+#[derive(Clone, Debug)]
+pub struct VoronoiCodec {
+    /// nesting ratio; codebook size q^8
+    pub q: i64,
+    /// use the simplified NestQuantM oracle on the decode side (App. D)
+    pub m_variant: bool,
+    det: i64,
+    adj: [[i64; D]; D],
+}
+
+impl VoronoiCodec {
+    pub fn new(q: u32) -> Self {
+        Self::with_variant(q, false)
+    }
+
+    /// NestQuantM codec: full oracle for encoding, fixed-flip oracle for
+    /// decoding (Appendix D).
+    pub fn new_m(q: u32) -> Self {
+        Self::with_variant(q, true)
+    }
+
+    fn with_variant(q: u32, m_variant: bool) -> Self {
+        assert!(q >= 2 && q <= 255, "q must be in [2, 255], got {q}");
+        let (det, adj) = det_and_adjugate(&G2E8);
+        debug_assert_eq!(det.abs(), 256);
+        VoronoiCodec {
+            q: q as i64,
+            m_variant,
+            det,
+            adj,
+        }
+    }
+
+    /// Rate in bits per entry: log2(q).
+    pub fn rate(&self) -> f64 {
+        (self.q as f64).log2()
+    }
+
+    /// Nearest E8 point of `x` (the encoder-side oracle is always exact).
+    #[inline]
+    pub fn nearest(&self, x: &[f32; D]) -> [f32; D] {
+        nearest_e8(x)
+    }
+
+    /// Paper Algorithm 1: quantize x to the coset code of its nearest
+    /// lattice point. Returns codes in [0, q)^8.
+    #[inline]
+    pub fn encode(&self, x: &[f32; D]) -> [u8; D] {
+        let p = nearest_e8(x);
+        self.encode_point(&p)
+    }
+
+    /// Coset code of a lattice point p ∈ E8.
+    #[inline]
+    pub fn encode_point(&self, p: &[f32; D]) -> [u8; D] {
+        // t = 2p is an integer vector in 2E8; coordinates v = G⁻¹ t = adj·t/det.
+        let mut t = [0i64; D];
+        for i in 0..D {
+            t[i] = (2.0 * p[i]).round() as i64;
+            debug_assert_eq!(t[i] as f32, 2.0 * p[i], "p not in ½Z^8");
+        }
+        let mut c = [0u8; D];
+        for i in 0..D {
+            let mut acc = 0i128;
+            for j in 0..D {
+                acc += self.adj[i][j] as i128 * t[j] as i128;
+            }
+            debug_assert_eq!(acc % self.det as i128, 0, "2p not in 2E8");
+            let v = (acc / self.det as i128) as i64;
+            c[i] = v.rem_euclid(self.q) as u8;
+        }
+        c
+    }
+
+    /// Paper Algorithm 2: reconstruct the minimum-energy representative of
+    /// the coset (exactly Q_Λ(x) when the encoder was not in overload).
+    ///
+    /// Runs entirely in integer arithmetic (see `decode_halfunits`), so
+    /// coset ties break deterministically and identically across the
+    /// float and packed (`quant::qgemm`) paths.
+    #[inline]
+    pub fn decode(&self, c: &[u8; D]) -> [f32; D] {
+        let e = self.decode_halfunits(c);
+        let mut out = [0f32; D];
+        for i in 0..D {
+            out[i] = e[i] as f32 * 0.5;
+        }
+        out
+    }
+
+    /// Integer decode: returns the decoded point in *half units* (decoded
+    /// value = e/2 — always exact, the paper's int-multiplier observation).
+    ///
+    /// t = G·c ≥ 0 is twice the coset point; with m = 2q the two E8 coset
+    /// candidates reduce to residuals
+    ///   e1_i = t_i − m·round(t_i/m)       (D8: integer grid)
+    ///   e2_i = t_i − q − m·floor(t_i/m)   (D8+½: half-integer grid)
+    /// with a parity flip on the cheapest coordinate (or coordinate 0 for
+    /// the NestQuantM variant, Appendix D); the smaller-cost candidate is
+    /// the min-energy representative.
+    #[inline]
+    pub fn decode_halfunits(&self, c: &[u8; D]) -> [i32; D] {
+        let mut t = [0i32; D];
+        for i in 0..D {
+            let mut acc = 0i32;
+            for j in 0..D {
+                acc += G2E8[i][j] as i32 * c[j] as i32;
+            }
+            t[i] = acc;
+        }
+        decode_t_halfunits(&t, self.q as i32, self.m_variant)
+    }
+
+    /// Encode and report (reconstruction, overload?). Overload ⇔ the
+    /// decoded point differs from the true nearest point (Q_Λ(x) ∉ qV_Λ).
+    // (kept below `decode` so the doc order mirrors Alg. 1/2)
+    #[inline]
+    pub fn encode_decode(&self, x: &[f32; D]) -> ([f32; D], bool) {
+        let p = nearest_e8(x);
+        let c = self.encode_point(&p);
+        let r = self.decode(&c);
+        (r, r != p)
+    }
+}
+
+/// Core integer decode shared by `VoronoiCodec::decode` and the packed
+/// GEMV fast path (`quant::qgemm`). `t = G·c ≥ 0`, result in half units.
+#[inline(always)]
+pub fn decode_t_halfunits(t: &[i32; D], q: i32, m_variant: bool) -> [i32; D] {
+    let m = 2 * q;
+    let mut e1 = [0i32; D];
+    let mut e2 = [0i32; D];
+    let mut par1 = 0i32;
+    let mut par2 = 0i32;
+    for i in 0..D {
+        debug_assert!(t[i] >= 0);
+        // D8 candidate: round-half-up(t/m) (t ≥ 0 ⇒ plain division).
+        let r1 = (t[i] + q) / m;
+        e1[i] = t[i] - m * r1;
+        par1 += r1;
+        // D8+½ candidate: round-half-up((t−q)/m) = floor(t/m).
+        let r2 = t[i] / m;
+        e2[i] = t[i] - q - m * r2;
+        par2 += r2;
+    }
+    // Parity fixes: move the flip coordinate to its second-nearest grid
+    // point, toward the input's side (e ≥ 0 → +1 ⇒ e −= m).
+    if par1 & 1 != 0 {
+        let pos = if m_variant { 0 } else { argmax_abs(&e1) };
+        let dir = if e1[pos] >= 0 { 1 } else { -1 };
+        e1[pos] -= m * dir;
+    }
+    if par2 & 1 != 0 {
+        let pos = if m_variant { 0 } else { argmax_abs(&e2) };
+        let dir = if e2[pos] >= 0 { 1 } else { -1 };
+        e2[pos] -= m * dir;
+    }
+    let cost1: i64 = e1.iter().map(|&v| (v as i64) * (v as i64)).sum();
+    let cost2: i64 = e2.iter().map(|&v| (v as i64) * (v as i64)).sum();
+    if cost1 <= cost2 {
+        e1
+    } else {
+        e2
+    }
+}
+
+/// First index of maximal |e_i| — matches the float oracle's strict-`>`
+/// argmax over flip costs.
+#[inline(always)]
+fn argmax_abs(e: &[i32; D]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = -1i32;
+    for (i, &v) in e.iter().enumerate() {
+        let a = v.abs();
+        if a > best_v {
+            best_v = a;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Rng};
+
+    #[test]
+    fn g_columns_are_in_2e8() {
+        use super::super::e8::e8_contains;
+        for j in 0..D {
+            let mut col = [0f32; D];
+            for i in 0..D {
+                col[i] = G2E8[i][j] as f32 / 2.0; // halved → must be in E8
+            }
+            assert!(e8_contains(&col), "column {j} not in 2E8: {col:?}");
+        }
+    }
+
+    #[test]
+    fn determinant_is_256() {
+        let (det, adj) = det_and_adjugate(&G2E8);
+        assert_eq!(det.abs(), 256);
+        // G · adj = det · I (adjugate identity), exactly in i64.
+        for i in 0..D {
+            for j in 0..D {
+                let mut acc = 0i128;
+                for k in 0..D {
+                    acc += G2E8[i][k] as i128 * adj[k][j] as i128;
+                }
+                let expect = if i == j { det as i128 } else { 0 };
+                assert_eq!(acc, expect, "G·adj mismatch at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_without_overload_is_exact() {
+        // For x well inside q·V_Λ, decode(encode(x)) == Q_Λ(x).
+        propcheck::check("voronoi-roundtrip", 400, 201, |rng| {
+            let codec = VoronoiCodec::new(16);
+            let mut x = [0f32; D];
+            for v in x.iter_mut() {
+                *v = rng.gauss_f32(); // σ=1 ≪ q/2 ⇒ overload ~never
+            }
+            let p = nearest_e8(&x);
+            let c = codec.encode(&x);
+            let r = codec.decode(&c);
+            if r == p {
+                Ok(())
+            } else {
+                Err(format!("decode {r:?} != nearest {p:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn decode_is_in_lattice() {
+        use super::super::e8::e8_contains;
+        propcheck::check("voronoi-decode-lattice", 300, 202, |rng| {
+            let codec = VoronoiCodec::new(5);
+            let mut c = [0u8; D];
+            for v in c.iter_mut() {
+                *v = rng.below(5) as u8;
+            }
+            let r = codec.decode(&c);
+            if e8_contains(&r) {
+                Ok(())
+            } else {
+                Err(format!("decode({c:?}) = {r:?} not in E8"))
+            }
+        });
+    }
+
+    #[test]
+    fn decode_encode_is_identity_on_codes() {
+        // decode → encode_point must return the original coset code
+        // (decode picks a coset representative; its coordinates mod q are
+        // the code).
+        propcheck::check("voronoi-code-roundtrip", 300, 203, |rng| {
+            for &q in &[3u32, 4, 8, 14, 16] {
+                let codec = VoronoiCodec::new(q);
+                let mut c = [0u8; D];
+                for v in c.iter_mut() {
+                    *v = rng.below(q as usize) as u8;
+                }
+                let r = codec.decode(&c);
+                let c2 = codec.encode_point(&r);
+                if c2 != c {
+                    return Err(format!("q={q}: code {c:?} → {r:?} → {c2:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn codebook_size_is_q_pow_8_for_small_q() {
+        // q=2: enumerate all q^8 = 256 codes; all decode to distinct points.
+        let codec = VoronoiCodec::new(2);
+        let mut pts = std::collections::HashSet::new();
+        for code_id in 0..256u32 {
+            let mut c = [0u8; D];
+            for (i, v) in c.iter_mut().enumerate() {
+                *v = ((code_id >> i) & 1) as u8;
+            }
+            let r = codec.decode(&c);
+            let key: Vec<i64> = r.iter().map(|&x| (2.0 * x) as i64).collect();
+            pts.insert(key);
+        }
+        assert_eq!(pts.len(), 256);
+    }
+
+    #[test]
+    fn decoded_points_are_min_energy_representatives() {
+        // Each decoded point must have norm ≤ any shifted coset member
+        // p + q·g for generator columns g (local minimality check).
+        let codec = VoronoiCodec::new(4);
+        let mut rng = Rng::new(204);
+        for _ in 0..200 {
+            let mut c = [0u8; D];
+            for v in c.iter_mut() {
+                *v = rng.below(4) as u8;
+            }
+            let r = codec.decode(&c);
+            let n0: f32 = r.iter().map(|&x| x * x).sum();
+            for j in 0..D {
+                for sgn in [-1f32, 1.0] {
+                    let mut shifted = r;
+                    for i in 0..D {
+                        shifted[i] += sgn * codec.q as f32 * G2E8[i][j] as f32 / 2.0;
+                    }
+                    let n1: f32 = shifted.iter().map(|&x| x * x).sum();
+                    assert!(
+                        n0 <= n1 + 1e-3,
+                        "decode not min-energy: |r|²={n0} vs shifted |r'|²={n1}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overload_detection() {
+        let codec = VoronoiCodec::new(4);
+        // A huge vector is certainly outside q·V_Λ → overload.
+        let x = [100f32; D];
+        let (_, overload) = codec.encode_decode(&x);
+        assert!(overload);
+        // A tiny vector is inside → no overload.
+        let x = [0.1f32; D];
+        let (r, overload) = codec.encode_decode(&x);
+        assert!(!overload);
+        assert_eq!(r, nearest_e8(&x));
+    }
+
+    #[test]
+    fn m_variant_roundtrip_consistency() {
+        // NestQuantM: encode with exact oracle, decode with f. For
+        // non-overload points (w.r.t. the f-shaping region) the roundtrip
+        // must still be the identity (Appendix D argument).
+        propcheck::check("voronoi-m-roundtrip", 300, 205, |rng| {
+            let codec = VoronoiCodec::new_m(16);
+            let mut x = [0f32; D];
+            for v in x.iter_mut() {
+                *v = rng.gauss_f32();
+            }
+            let p = nearest_e8(&x);
+            let c = codec.encode(&x);
+            let r = codec.decode(&c);
+            // σ=1, q=16: f's shaping region still contains these typical
+            // points; identity must hold.
+            if r == p {
+                Ok(())
+            } else {
+                Err(format!("M-decode {r:?} != nearest {p:?}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,40 @@
+//! # NestQuant — nested lattice quantization for matrix products and LLMs
+//!
+//! Full-system reproduction of *NestQuant: nested lattice quantization for
+//! matrix products and LLMs* (Savkin, Porat, Ordentlich, Polyanskiy; ICML
+//! 2025).
+//!
+//! The crate is organised as the Layer-3 (rust) part of a three-layer stack:
+//!
+//! * [`lattice`] — the Gosset (E8) lattice engine: closest-point oracle
+//!   (paper Alg. 5), Voronoi-code encode/decode (Alg. 1/2), the multi-β
+//!   union-of-codebooks quantizer (Alg. 3), quantized dot products (Alg. 4)
+//!   and the dynamic program for optimal β selection (Alg. 6 / Appendix F).
+//! * [`rotation`] — randomized Hadamard / Kronecker rotations (Section 4.3).
+//! * [`quant`] — matrix/vector quantization on top of the lattice engine,
+//!   quantized GEMV/GEMM, the uniform scalar baseline (SpinQuant-style),
+//!   LDLQ and QA-LDLQ weight quantization (Section 4.5 / Appendix B).
+//! * [`bounds`] — information-theoretic limits: the rate–distortion function
+//!   `D(R)` and the matrix-multiplication lower bound `Γ(R)` of eq. (1)-(2).
+//! * [`model`] — a small GPT-style transformer (config, tensors, forward
+//!   pass) used as the end-to-end evaluation target.
+//! * [`kvcache`] — the quantized KV-cache manager.
+//! * [`runtime`] — PJRT (xla crate) wrapper loading AOT-compiled HLO
+//!   artifacts produced by the Layer-2 JAX model.
+//! * [`coordinator`] — serving coordinator: request router, dynamic
+//!   batcher, prefill/decode scheduler, metrics.
+//! * [`io`] — tensor file format + zstd/entropy coding of β side-information.
+//! * [`util`] — RNG, statistics, a small property-testing and benching
+//!   harness (criterion/proptest are unavailable offline).
+
+pub mod bounds;
+pub mod coordinator;
+pub mod experiments;
+pub mod io;
+pub mod kvcache;
+pub mod lattice;
+pub mod model;
+pub mod quant;
+pub mod rotation;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,187 @@
+//! `nestquant` — CLI for the NestQuant reproduction.
+//!
+//! ```text
+//! nestquant exp <id|all> [--artifacts DIR] [--results DIR]
+//!     regenerate paper tables/figures (see DESIGN.md §4)
+//! nestquant ppl <model> [--regime fp|w|wkv|wkva] [--q Q] [--method M]
+//!     evaluate perplexity of a quantized model
+//! nestquant serve <model> [--requests N] [--batch B]
+//!     run the serving coordinator demo (quantized KV cache)
+//! nestquant generate <model> <prompt> [--tokens N]
+//!     generate text with the quantized engine
+//! ```
+//!
+//! (clap is unavailable offline; arguments are parsed by hand.)
+
+use anyhow::{bail, Context, Result};
+use nestquant::coordinator::generator::GenSession;
+use nestquant::model::engine::{Engine, EngineOptions, Method, Regime};
+use nestquant::model::weights::{artifact_path, ModelWeights};
+use std::path::PathBuf;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s {
+        "rtn" => Method::Rtn,
+        "uniform" => Method::UniformRot,
+        "uniform-ldlq" => Method::UniformRotLdlq,
+        "nestquant" => Method::NestQuant,
+        "nestquantm" => Method::NestQuantM,
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn parse_regime(s: &str) -> Result<Regime> {
+    Ok(match s {
+        "fp" => Regime::Fp,
+        "w" => Regime::W,
+        "wkv" => Regime::WKv,
+        "wkva" => Regime::WKvA,
+        other => bail!("unknown regime '{other}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let artifacts = PathBuf::from(
+        flag(&args, "--artifacts").unwrap_or_else(|| "artifacts".into()),
+    );
+    let results = PathBuf::from(flag(&args, "--results").unwrap_or_else(|| "results".into()));
+
+    match cmd {
+        "exp" => {
+            let id = args.get(1).context("usage: nestquant exp <id|all>")?;
+            nestquant::experiments::run(id, &artifacts, &results)?;
+        }
+        "ppl" => {
+            let model = args.get(1).context("usage: nestquant ppl <model>")?;
+            let w = ModelWeights::load(&artifact_path(&artifacts, model))?;
+            let regime = parse_regime(&flag(&args, "--regime").unwrap_or_else(|| "wkva".into()))?;
+            let method =
+                parse_method(&flag(&args, "--method").unwrap_or_else(|| "nestquant".into()))?;
+            let q: u32 = flag(&args, "--q").unwrap_or_else(|| "14".into()).parse()?;
+            let windows: usize = flag(&args, "--windows")
+                .unwrap_or_else(|| "8".into())
+                .parse()?;
+            if regime == Regime::Fp {
+                let ppl = nestquant::model::forward::eval_ppl(&w, &w.val_tokens, windows);
+                println!("fp32 ppl = {ppl:.4}");
+            } else {
+                let eng = Engine::build(
+                    &w,
+                    EngineOptions {
+                        method,
+                        regime,
+                        q,
+                        ..Default::default()
+                    },
+                );
+                let ppl = eng.eval_ppl(&w.val_tokens, windows);
+                println!(
+                    "{} {} q={q}: ppl = {ppl:.4} (bits {:.2} zstd / {:.2} packed)",
+                    method.label(),
+                    regime.label(),
+                    eng.weight_bits_zstd,
+                    eng.weight_bits_packed
+                );
+            }
+        }
+        "serve" => {
+            let model = args.get(1).context("usage: nestquant serve <model>")?;
+            let n_req: usize = flag(&args, "--requests")
+                .unwrap_or_else(|| "8".into())
+                .parse()?;
+            let batch: usize = flag(&args, "--batch").unwrap_or_else(|| "4".into()).parse()?;
+            let w = ModelWeights::load(&artifact_path(&artifacts, model))?;
+            let eng = std::sync::Arc::new(Engine::build(
+                &w,
+                EngineOptions {
+                    regime: Regime::WKv,
+                    calib_windows: 2,
+                    ..Default::default()
+                },
+            ));
+            let (srv, rx) = nestquant::coordinator::Server::start(
+                eng,
+                nestquant::coordinator::ServerConfig {
+                    policy: nestquant::coordinator::BatchPolicy {
+                        max_batch: batch,
+                        ..Default::default()
+                    },
+                },
+            );
+            let t0 = std::time::Instant::now();
+            for i in 0..n_req {
+                let start = (i * 37) % (w.val_tokens.len() - 32);
+                srv.submit(nestquant::coordinator::Request::Generate {
+                    id: i as u64,
+                    prompt: w.val_tokens[start..start + 16].to_vec(),
+                    n_new: 32,
+                });
+            }
+            for _ in 0..n_req {
+                let r = rx.recv()?;
+                println!(
+                    "request {} done: {} tokens, {:.1} ms",
+                    r.id,
+                    r.tokens.len(),
+                    r.latency_ms
+                );
+            }
+            println!("wall: {:.2}s", t0.elapsed().as_secs_f64());
+            println!("{}", srv.metrics.report());
+            srv.shutdown();
+        }
+        "generate" => {
+            let model = args
+                .get(1)
+                .context("usage: nestquant generate <model> <prompt>")?;
+            let prompt_str = args.get(2).context("missing prompt")?;
+            let n: usize = flag(&args, "--tokens")
+                .unwrap_or_else(|| "64".into())
+                .parse()?;
+            let w = ModelWeights::load(&artifact_path(&artifacts, model))?;
+            let eng = Engine::build(
+                &w,
+                EngineOptions {
+                    regime: Regime::WKv,
+                    calib_windows: 2,
+                    ..Default::default()
+                },
+            );
+            const VOCAB: &str = "abcdefghijklmnopqrstuvwxyz0123456789 .,;=+-()[]{}<>\n";
+            let prompt: Vec<i32> = prompt_str
+                .chars()
+                .filter_map(|c| VOCAB.find(c).map(|i| i as i32))
+                .collect();
+            let mut sess = GenSession::new(&eng);
+            let out = sess.generate(&prompt, n);
+            let text: String = out
+                .iter()
+                .map(|&t| VOCAB.chars().nth(t as usize).unwrap_or('?'))
+                .collect();
+            println!("{prompt_str}{text}");
+            println!(
+                "\n[kv cache: {} bytes for {} positions]",
+                sess.kv_bytes(),
+                sess.position()
+            );
+        }
+        _ => {
+            println!(
+                "nestquant — NestQuant (ICML 2025) reproduction\n\
+                 usage:\n  nestquant exp <id|all>\n  nestquant ppl <model> \
+                 [--regime fp|w|wkv|wkva] [--method rtn|uniform|uniform-ldlq|nestquant|nestquantm] [--q Q]\n  \
+                 nestquant serve <model> [--requests N] [--batch B]\n  \
+                 nestquant generate <model> <prompt> [--tokens N]"
+            );
+        }
+    }
+    Ok(())
+}

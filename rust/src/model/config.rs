@@ -1,0 +1,69 @@
+//! Model hyperparameters, serialized as the `config` i32 tensor in the
+//! `.nqt` container (order fixed by python/compile/train.py).
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub ctx: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    pub fn from_tensor(cfg: &[i32]) -> Result<Self> {
+        if cfg.len() != 6 {
+            bail!("config tensor must have 6 entries, got {}", cfg.len());
+        }
+        let c = ModelConfig {
+            vocab: cfg[0] as usize,
+            ctx: cfg[1] as usize,
+            d_model: cfg[2] as usize,
+            n_layer: cfg[3] as usize,
+            n_head: cfg[4] as usize,
+            d_ff: cfg[5] as usize,
+        };
+        if c.d_model % c.n_head != 0 {
+            bail!("d_model {} not divisible by n_head {}", c.d_model, c.n_head);
+        }
+        if c.d_model % 8 != 0 || c.d_ff % 8 != 0 {
+            bail!("dimensions must be divisible by the lattice dimension 8");
+        }
+        Ok(c)
+    }
+
+    /// Total parameter count (matches python `count_params`).
+    pub fn n_params(&self) -> usize {
+        let emb = self.vocab * self.d_model * 2 + self.ctx * self.d_model + self.d_model;
+        let per_layer =
+            2 * self.d_model + 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff;
+        emb + self.n_layer * per_layer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_counts() {
+        let c = ModelConfig::from_tensor(&[52, 128, 192, 4, 4, 512]).unwrap();
+        assert_eq!(c.d_head(), 48);
+        // python reported 1,422,528 for base
+        assert_eq!(c.n_params(), 1_422_528);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        assert!(ModelConfig::from_tensor(&[52, 128]).is_err());
+        assert!(ModelConfig::from_tensor(&[52, 128, 190, 4, 4, 512]).is_err());
+        assert!(ModelConfig::from_tensor(&[52, 128, 192, 4, 5, 512]).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! The evaluation model: a GPT-style causal char-LM whose forward pass is
+//! implemented natively in rust (bit-compatible with the JAX Layer-2
+//! definition in `python/compile/model.py` — parity is asserted against
+//! the PJRT-executed HLO artifact in `rust/tests/`).
+//!
+//! * [`config`]  — model hyperparameters (read from the `.nqt` container)
+//! * [`weights`] — fp32 weight store loaded from `artifacts/model_*.nqt`
+//! * [`forward`] — native forward pass (full-window scoring + incremental
+//!   generation with a pluggable KV cache)
+//! * [`engine`]  — the quantized inference engine: applies NestQuant /
+//!   uniform / rotated baselines to weights, activations and KV cache in
+//!   the paper's three regimes (W, W+KV, W+KV+A), with calibration-driven
+//!   β selection and (QA-)LDLQ weight quantization
+
+pub mod config;
+pub mod engine;
+pub mod forward;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use engine::{Engine, EngineOptions, Method, Regime, RotKind};
+pub use weights::ModelWeights;

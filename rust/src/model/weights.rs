@@ -1,0 +1,153 @@
+//! fp32 weight store: loads `artifacts/model_<name>.nqt` (written by the
+//! python training layer) plus the token splits used for evaluation and
+//! calibration.
+
+use crate::io::tensorfile::{find, read_tensors, Tensor};
+use crate::model::config::ModelConfig;
+use crate::util::linalg::Mat;
+use anyhow::Result;
+use std::path::Path;
+
+/// One transformer block's weights (all matrices (out, in) row-major).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub w_up: Mat,
+    pub w_down: Mat,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub tok_emb: Mat,
+    pub pos_emb: Mat,
+    pub head: Mat,
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    /// held-out validation tokens
+    pub val_tokens: Vec<i32>,
+    /// calibration tokens (train-split slice)
+    pub calib_tokens: Vec<i32>,
+}
+
+fn mat_of(tensors: &[Tensor], name: &str) -> Result<Mat> {
+    let t = find(tensors, name)?;
+    let data = t.as_f32()?.to_vec();
+    let (rows, cols) = match t.dims.len() {
+        2 => (t.dims[0], t.dims[1]),
+        1 => (1, t.dims[0]),
+        _ => anyhow::bail!("{name}: expected 1- or 2-D tensor"),
+    };
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn vec_of(tensors: &[Tensor], name: &str) -> Result<Vec<f32>> {
+    Ok(find(tensors, name)?.as_f32()?.to_vec())
+}
+
+impl ModelWeights {
+    pub fn load(path: &Path) -> Result<Self> {
+        let tensors = read_tensors(path)?;
+        let cfg_t = find(&tensors, "config")?;
+        let cfg_i32: Vec<i32> = match &cfg_t.data {
+            crate::io::tensorfile::TensorData::I32(v) => v.clone(),
+            _ => anyhow::bail!("config tensor must be i32"),
+        };
+        let cfg = ModelConfig::from_tensor(&cfg_i32)?;
+
+        let grab_i32 = |name: &str| -> Result<Vec<i32>> {
+            match &find(&tensors, name)?.data {
+                crate::io::tensorfile::TensorData::I32(v) => Ok(v.clone()),
+                _ => anyhow::bail!("{name} must be i32"),
+            }
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layer);
+        for i in 0..cfg.n_layer {
+            layers.push(LayerWeights {
+                ln1: vec_of(&tensors, &format!("w/layers.{i}.ln1"))?,
+                ln2: vec_of(&tensors, &format!("w/layers.{i}.ln2"))?,
+                wq: mat_of(&tensors, &format!("w/layers.{i}.wq"))?,
+                wk: mat_of(&tensors, &format!("w/layers.{i}.wk"))?,
+                wv: mat_of(&tensors, &format!("w/layers.{i}.wv"))?,
+                wo: mat_of(&tensors, &format!("w/layers.{i}.wo"))?,
+                w_up: mat_of(&tensors, &format!("w/layers.{i}.w_up"))?,
+                w_down: mat_of(&tensors, &format!("w/layers.{i}.w_down"))?,
+            });
+        }
+        Ok(ModelWeights {
+            cfg,
+            tok_emb: mat_of(&tensors, "w/tok_emb")?,
+            pos_emb: mat_of(&tensors, "w/pos_emb")?,
+            head: mat_of(&tensors, "w/head")?,
+            final_norm: vec_of(&tensors, "w/final_norm")?,
+            layers,
+            val_tokens: grab_i32("tokens/val")?,
+            calib_tokens: grab_i32("tokens/calib")?,
+        })
+    }
+
+    /// The deterministic flat parameter order of the AOT artifact
+    /// (python `flatten_names`): tok_emb, pos_emb, head, final_norm, then
+    /// per layer ln1, ln2, wq, wk, wv, wo, w_up, w_down.
+    pub fn flat_params(&self) -> Vec<(&'static str, Vec<usize>, Vec<f32>)> {
+        let d = self.cfg.d_model;
+        let mut out: Vec<(&'static str, Vec<usize>, Vec<f32>)> = vec![
+            (
+                "tok_emb",
+                vec![self.cfg.vocab, d],
+                self.tok_emb.data.clone(),
+            ),
+            ("pos_emb", vec![self.cfg.ctx, d], self.pos_emb.data.clone()),
+            ("head", vec![self.cfg.vocab, d], self.head.data.clone()),
+            ("final_norm", vec![d], self.final_norm.clone()),
+        ];
+        for l in &self.layers {
+            out.push(("ln1", vec![d], l.ln1.clone()));
+            out.push(("ln2", vec![d], l.ln2.clone()));
+            out.push(("wq", vec![d, d], l.wq.data.clone()));
+            out.push(("wk", vec![d, d], l.wk.data.clone()));
+            out.push(("wv", vec![d, d], l.wv.data.clone()));
+            out.push(("wo", vec![d, d], l.wo.data.clone()));
+            out.push(("w_up", vec![self.cfg.d_ff, d], l.w_up.data.clone()));
+            out.push(("w_down", vec![d, self.cfg.d_ff], l.w_down.data.clone()));
+        }
+        out
+    }
+}
+
+/// Default artifact path for a model size name.
+pub fn artifact_path(dir: &Path, name: &str) -> std::path::PathBuf {
+    dir.join(format!("model_{name}.nqt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_trained_model() {
+        let path = artifact_path(&artifacts_dir(), "tiny");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let w = ModelWeights::load(&path).unwrap();
+        assert_eq!(w.cfg.vocab, 52);
+        assert_eq!(w.layers.len(), w.cfg.n_layer);
+        assert_eq!(w.tok_emb.rows, w.cfg.vocab);
+        assert!(!w.val_tokens.is_empty());
+        assert!(w.val_tokens.iter().all(|&t| (t as usize) < w.cfg.vocab));
+        // flat params arity matches the AOT manifest: 4 + 8·n_layer
+        assert_eq!(w.flat_params().len(), 4 + 8 * w.cfg.n_layer);
+    }
+}

@@ -1,0 +1,270 @@
+//! NestQuant matrix quantization (paper §4.2): each row is L2-normalized
+//! and quantized blockwise with the multi-β nested-lattice codebook
+//! (Algorithm 3). Storage keeps the coset codes + β indices + per-row
+//! scales, supporting both full dequantization and quantized dot products.
+
+use crate::lattice::e8::D;
+use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector};
+use crate::util::linalg::Mat;
+
+/// A matrix quantized row-wise with NestQuant.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// coset codes, row-major, one byte per entry (values < q)
+    pub codes: Vec<u8>,
+    /// β indices, one per 8-block, row-major (rows × cols/8)
+    pub beta_idx: Vec<u8>,
+    /// per-row L2 norms s_r
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedMatrix {
+    /// Quantize a dense matrix (cols must be divisible by 8).
+    pub fn quantize(m: &Mat, nq: &NestedLatticeQuantizer) -> Self {
+        assert_eq!(m.cols % D, 0, "cols must be divisible by 8");
+        let mut codes = vec![0u8; m.rows * m.cols];
+        let mut beta_idx = vec![0u8; m.rows * m.cols / D];
+        let mut scales = vec![0f32; m.rows];
+        let bpr = m.cols / D;
+        for r in 0..m.rows {
+            let qv = nq.quantize(m.row(r));
+            codes[r * m.cols..(r + 1) * m.cols].copy_from_slice(&qv.codes);
+            beta_idx[r * bpr..(r + 1) * bpr].copy_from_slice(&qv.beta_idx);
+            scales[r] = qv.scale;
+        }
+        QuantizedMatrix {
+            rows: m.rows,
+            cols: m.cols,
+            codes,
+            beta_idx,
+            scales,
+        }
+    }
+
+    /// View row r as a `QuantizedVector` (clones the row's storage).
+    pub fn row_qv(&self, r: usize) -> QuantizedVector {
+        let bpr = self.cols / D;
+        QuantizedVector {
+            codes: self.codes[r * self.cols..(r + 1) * self.cols].to_vec(),
+            beta_idx: self.beta_idx[r * bpr..(r + 1) * bpr].to_vec(),
+            scale: self.scales[r],
+            n: self.cols,
+        }
+    }
+
+    /// Full dequantization back to a dense matrix.
+    pub fn dequantize(&self, nq: &NestedLatticeQuantizer) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let bpr = self.cols / D;
+        for r in 0..self.rows {
+            if self.scales[r] == 0.0 {
+                continue;
+            }
+            let denorm = self.scales[r] / (self.cols as f32).sqrt();
+            let mut c = [0u8; D];
+            for j in 0..bpr {
+                let off = r * self.cols + j * D;
+                c.copy_from_slice(&self.codes[off..off + D]);
+                let rec = nq.decode_block(&c, self.beta_idx[r * bpr + j]);
+                for i in 0..D {
+                    out[(r, j * D + i)] = rec[i] * denorm;
+                }
+            }
+        }
+        out
+    }
+
+    /// y = W·x with decode-on-the-fly (x in fp32). The memory traffic is
+    /// the quantized payload, not fp32 weights — the paper's memory-bound
+    /// GEMV case.
+    pub fn qgemv(&self, nq: &NestedLatticeQuantizer, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0f32; self.rows];
+        let bpr = self.cols / D;
+        let mut c = [0u8; D];
+        for r in 0..self.rows {
+            if self.scales[r] == 0.0 {
+                continue;
+            }
+            let denorm = self.scales[r] / (self.cols as f32).sqrt();
+            let mut acc = 0f64;
+            for j in 0..bpr {
+                let off = r * self.cols + j * D;
+                c.copy_from_slice(&self.codes[off..off + D]);
+                let rec = nq.decode_block(&c, self.beta_idx[r * bpr + j]);
+                let xb = &x[j * D..(j + 1) * D];
+                let mut d = 0f32;
+                for i in 0..D {
+                    d += rec[i] * xb[i];
+                }
+                acc += d as f64;
+            }
+            y[r] = (acc * denorm as f64) as f32;
+        }
+        y
+    }
+
+    /// y = W·x̂ where x̂ is a quantized activation — Algorithm 4 per row
+    /// (both operands stay in coded form; β products applied per block).
+    pub fn qgemv_quantized(
+        &self,
+        nq: &NestedLatticeQuantizer,
+        x: &QuantizedVector,
+    ) -> Vec<f32> {
+        assert_eq!(x.n, self.cols);
+        let mut y = vec![0f32; self.rows];
+        let bpr = self.cols / D;
+        let mut cw = [0u8; D];
+        let mut cx = [0u8; D];
+        for r in 0..self.rows {
+            if self.scales[r] == 0.0 || x.scale == 0.0 {
+                continue;
+            }
+            let mut acc = 0f64;
+            for j in 0..bpr {
+                let off = r * self.cols + j * D;
+                cw.copy_from_slice(&self.codes[off..off + D]);
+                cx.copy_from_slice(&x.codes[j * D..(j + 1) * D]);
+                let pw = nq.codec.decode(&cw);
+                let px = nq.codec.decode(&cx);
+                let mut d = 0f32;
+                for i in 0..D {
+                    d += pw[i] * px[i];
+                }
+                acc += (d
+                    * nq.betas[self.beta_idx[r * bpr + j] as usize]
+                    * nq.betas[x.beta_idx[j] as usize]) as f64;
+            }
+            y[r] = (acc * self.scales[r] as f64 * x.scale as f64 / self.cols as f64) as f32;
+        }
+        y
+    }
+
+    /// Relative Frobenius reconstruction error vs the original matrix.
+    pub fn rel_error(&self, nq: &NestedLatticeQuantizer, original: &Mat) -> f64 {
+        let deq = self.dequantize(nq);
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (a, b) in original.data.iter().zip(&deq.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*a as f64).powi(2);
+        }
+        (num / den.max(1e-30)).sqrt()
+    }
+
+    /// Stored payload in bytes with 2-bit β packing and ⌈log2 q⌉-bit codes.
+    pub fn payload_bytes(&self, q: u32) -> usize {
+        let code_bits = (q as f64).log2().ceil() as usize;
+        (self.codes.len() * code_bits).div_ceil(8)
+            + (self.beta_idx.len() * 2).div_ceil(8)
+            + self.scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::nested::NestedLatticeQuantizer;
+    use crate::util::{propcheck, stats, Rng};
+
+    fn nq() -> NestedLatticeQuantizer {
+        NestedLatticeQuantizer::new(14, vec![0.25, 0.32, 0.45, 1.0])
+    }
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(rows, cols, rng.gauss_vec(rows * cols))
+    }
+
+    #[test]
+    fn roundtrip_is_fakequant() {
+        // dequantize(quantize(W)) row r == nq.roundtrip(row r): matrix
+        // quantization is exactly per-row Algorithm 3 (DESIGN.md §5.2).
+        let nq = nq();
+        let w = random_mat(6, 64, 901);
+        let qm = QuantizedMatrix::quantize(&w, &nq);
+        let deq = qm.dequantize(&nq);
+        for r in 0..w.rows {
+            let row_rt = nq.roundtrip(w.row(r));
+            propcheck::assert_close(deq.row(r), &row_rt, 1e-6, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn quantization_error_small_for_gaussian() {
+        let nq = nq();
+        let w = random_mat(16, 128, 902);
+        let qm = QuantizedMatrix::quantize(&w, &nq);
+        let rel = qm.rel_error(&nq, &w);
+        assert!(rel < 0.1, "relative error {rel}");
+    }
+
+    #[test]
+    fn qgemv_matches_dequantized_gemv() {
+        propcheck::check("qgemv-consistency", 20, 903, |rng| {
+            let nq = nq();
+            let w = Mat::from_vec(8, 64, rng.gauss_vec(8 * 64));
+            let x = rng.gauss_vec(64);
+            let qm = QuantizedMatrix::quantize(&w, &nq);
+            let fast = qm.qgemv(&nq, &x);
+            let slow = qm.dequantize(&nq).matvec(&x);
+            propcheck::assert_close(&fast, &slow, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn qgemv_quantized_matches_alg4() {
+        propcheck::check("qgemv-quantized", 15, 904, |rng| {
+            let nq = nq();
+            let w = Mat::from_vec(8, 64, rng.gauss_vec(8 * 64));
+            let x = rng.gauss_vec(64);
+            let qm = QuantizedMatrix::quantize(&w, &nq);
+            let qx = nq.quantize(&x);
+            let y = qm.qgemv_quantized(&nq, &qx);
+            for r in 0..8 {
+                let expect = nq.dot(&qm.row_qv(r), &qx);
+                if (y[r] - expect).abs() > 1e-4 * (1.0 + expect.abs()) {
+                    return Err(format!("row {r}: {} vs {}", y[r], expect));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qgemv_approximates_true_gemv() {
+        let nq = nq();
+        let w = random_mat(32, 256, 905);
+        let mut rng = Rng::new(906);
+        let x = rng.gauss_vec(256);
+        let qm = QuantizedMatrix::quantize(&w, &nq);
+        let approx = qm.qgemv(&nq, &x);
+        let exact = w.matvec(&x);
+        let rel = stats::rmse(&approx, &exact) / (stats::norm2(&exact) / (32f64).sqrt());
+        assert!(rel < 0.12, "relative gemv error {rel}");
+    }
+
+    #[test]
+    fn payload_is_about_4_bits_per_entry() {
+        let nq = nq();
+        let w = random_mat(16, 128, 907);
+        let qm = QuantizedMatrix::quantize(&w, &nq);
+        let bits_per_entry = qm.payload_bytes(14) as f64 * 8.0 / (16.0 * 128.0);
+        // log2(14) ≈ 3.81 stored as 4 bits + 0.25 β + scales
+        assert!(bits_per_entry < 4.6, "bits/entry {bits_per_entry}");
+    }
+
+    #[test]
+    fn zero_rows_handled() {
+        let nq = nq();
+        let mut w = random_mat(4, 32, 908);
+        w.row_mut(2).fill(0.0);
+        let qm = QuantizedMatrix::quantize(&w, &nq);
+        let deq = qm.dequantize(&nq);
+        assert!(deq.row(2).iter().all(|&v| v == 0.0));
+        let y = qm.qgemv(&nq, &vec![1.0; 32]);
+        assert_eq!(y[2], 0.0);
+    }
+}

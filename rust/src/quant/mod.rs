@@ -1,0 +1,21 @@
+//! Matrix/vector quantization built on the lattice engine.
+//!
+//! * [`matrix`] — NestQuant matrix quantization (§4.2): per-row L2
+//!   normalization + blockwise multi-β Voronoi coding.
+//! * [`qgemm`] — quantized GEMV/GEMM: decode-on-the-fly dot products,
+//!   packed 4-bit storage, and the integer-accumulation path (§3
+//!   "Using int8-multipliers", Appendix E).
+//! * [`uniform`] — the uniform scalar baseline with L∞ scaling (cubic
+//!   shaping; what SpinQuant/QuaRot use) and packed int4 GEMV.
+//! * [`ldlq`] — LDLQ feedback weight quantization (§4.5, Appendix B).
+//! * [`qaldlq`] — QA-LDLQ for quantized activations (Lemma 4.2) and the
+//!   amplification-ratio diagnostics of Appendix B.
+
+pub mod ldlq;
+pub mod matrix;
+pub mod qaldlq;
+pub mod qgemm;
+pub mod uniform;
+
+pub use matrix::QuantizedMatrix;
+pub use uniform::UniformQuantizer;

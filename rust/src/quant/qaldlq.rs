@@ -1,0 +1,259 @@
+//! QA-LDLQ — LDLQ corrected for *quantized activations* (paper §4.5,
+//! Lemma 4.2, Appendix B).
+//!
+//! With activation quantization noise Z (E[Z]=0, J = E[ZZᵀ]) independent of
+//! X (H = E[XXᵀ]), the output error δ(U) = WX − U(X+Z) is minimized by
+//! running LDLQ on the *modified* weight W̃ = W·H·(H+J)⁻¹ with Hessian
+//! H+J. The modification shrinks W along directions where quantization
+//! noise would be amplified — the "amplification ratio" diagnostic below
+//! (paper Fig. 6).
+
+use crate::lattice::nested::NestedLatticeQuantizer;
+use crate::quant::ldlq::ldlq_quantize;
+use crate::quant::matrix::QuantizedMatrix;
+use crate::util::linalg::{invert_spd, Mat};
+use crate::util::Rng;
+
+/// W̃ = W·H·(H+J)⁻¹ with isotropic noise J = ε²·I (Appendix B models the
+/// activation-quantizer noise as isotropic at the chosen rate).
+pub fn modified_weight(w: &Mat, h: &Mat, eps2: f32) -> Mat {
+    assert_eq!(w.cols, h.rows);
+    let mut hj = h.clone();
+    hj.add_diag(eps2);
+    let inv = invert_spd(&hj);
+    w.matmul(h).matmul(&inv)
+}
+
+/// QA-LDLQ (Lemma 4.2): quantize W̃ with Hessian H + ε²I.
+pub fn qa_ldlq_quantize(
+    w: &Mat,
+    h: &Mat,
+    eps2: f32,
+    nq: &NestedLatticeQuantizer,
+) -> QuantizedMatrix {
+    let wt = modified_weight(w, h, eps2);
+    let mut hj = h.clone();
+    hj.add_diag(eps2);
+    ldlq_quantize(&wt, &hj, nq)
+}
+
+/// Amplification α(W, X) = E‖WX‖ / E‖X‖ over activation samples (rows of
+/// `x`). Appendix B.
+pub fn amplification(w: &Mat, x: &Mat) -> f64 {
+    assert_eq!(w.cols, x.cols);
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for r in 0..x.rows {
+        let y = w.matvec(x.row(r));
+        num += crate::util::stats::norm2(&y);
+        den += crate::util::stats::norm2(x.row(r));
+    }
+    num / den.max(1e-30)
+}
+
+/// Amplification ratio α(W, Z)/α(W, X) with Z iid Gaussian — how much
+/// harder quantization noise hits this layer than its own activations
+/// (paper: value projection of Llama-3-70B block 0 reaches ≈157).
+pub fn amplification_ratio(w: &Mat, x: &Mat, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut z = Mat::zeros(x.rows.max(64), w.cols);
+    rng.fill_gauss(&mut z.data);
+    amplification(w, &z) / amplification(w, x)
+}
+
+/// The Fig. 6 x-axis: 1 − R² = E‖WX − W̃X‖² / Var(WX).
+pub fn one_minus_r2(w: &Mat, wt: &Mat, x: &Mat) -> f64 {
+    let mut num = 0f64;
+    let mut var = 0f64;
+    // mean of WX for variance
+    let mut mean = vec![0f64; w.rows];
+    let mut outs = Vec::with_capacity(x.rows);
+    for r in 0..x.rows {
+        let y = w.matvec(x.row(r));
+        for (m, &v) in mean.iter_mut().zip(&y) {
+            *m += v as f64;
+        }
+        outs.push(y);
+    }
+    for m in mean.iter_mut() {
+        *m /= x.rows as f64;
+    }
+    for (r, y) in outs.iter().enumerate() {
+        let yt = wt.matvec(x.row(r));
+        for i in 0..w.rows {
+            num += ((y[i] - yt[i]) as f64).powi(2);
+            var += (y[i] as f64 - mean[i]).powi(2);
+        }
+    }
+    num / var.max(1e-30)
+}
+
+/// Construct a synthetic "hard" layer with a prescribed amplification
+/// ratio: W acts with gain `g_perp` on the orthogonal complement of the
+/// activation subspace and gain ~1 on it. Stands in for the Llama-3-70B
+/// v_proj pathology (ratio ≈157) that motivates QA-LDLQ.
+pub fn synthetic_high_amplification_layer(
+    out_dim: usize,
+    in_dim: usize,
+    act_rank: usize,
+    g_perp: f32,
+    seed: u64,
+) -> (Mat, Mat) {
+    assert!(act_rank < in_dim);
+    let mut rng = Rng::new(seed);
+    let basis = crate::rotation::hadamard::random_orthogonal(in_dim, &mut rng);
+    // activations live in the span of the first act_rank basis columns
+    let samples = 4 * in_dim;
+    let mut x = Mat::zeros(samples, in_dim);
+    for r in 0..samples {
+        for k in 0..act_rank {
+            let c = rng.gauss_f32();
+            for i in 0..in_dim {
+                x[(r, i)] += c * basis[(i, k)];
+            }
+        }
+    }
+    // W = A·P_span + g_perp·B·P_perp  (A, B random row mixers)
+    let mut w = Mat::zeros(out_dim, in_dim);
+    for r in 0..out_dim {
+        for k in 0..in_dim {
+            let gain = if k < act_rank { 1.0 } else { g_perp };
+            let c = rng.gauss_f32() * gain / (in_dim as f32).sqrt();
+            for i in 0..in_dim {
+                w[(r, i)] += c * basis[(i, k)];
+            }
+        }
+    }
+    (w, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ldlq::hessian_from_activations;
+
+    fn nq() -> NestedLatticeQuantizer {
+        NestedLatticeQuantizer::new(14, vec![0.25, 0.32, 0.45, 1.0])
+    }
+
+    #[test]
+    fn lemma_4_2_identity() {
+        // E‖δ(U)‖² = tr[(W̃−U)(H+J)(W̃−U)ᵀ] + C: verify the first term's
+        // minimizer property by checking the algebraic identity
+        // (W−U)H(W−U)ᵀ + UJUᵀ = (W̃−U)(H+J)(W̃−U)ᵀ + C on traces for
+        // random U.
+        let mut rng = Rng::new(1301);
+        let n = 24;
+        let a = 6;
+        let w = Mat::from_vec(a, n, rng.gauss_vec(a * n));
+        let x = Mat::from_vec(128, n, rng.gauss_vec(128 * n));
+        let h = hessian_from_activations(&x, 0.02);
+        let eps2 = 0.3f32;
+        let wt = modified_weight(&w, &h, eps2);
+        let mut hj = h.clone();
+        hj.add_diag(eps2);
+
+        // C = W(H − H(H+J)⁻¹H)Wᵀ = W·H·Wᵀ − W̃·(H+J)·W̃ᵀ (trace)
+        let tr = |m: &Mat| -> f64 {
+            (0..m.rows).map(|i| m[(i, i)] as f64).sum()
+        };
+        let c = tr(&w.matmul(&h).matmul(&w.transpose()))
+            - tr(&wt.matmul(&hj).matmul(&wt.transpose()));
+
+        for trial in 0..5 {
+            let u = Mat::from_vec(a, n, rng.gauss_vec(a * n));
+            // lhs = tr[(W−U)H(W−U)ᵀ] + tr[U·(ε²I)·Uᵀ]
+            let mut wu = w.clone();
+            for (p, q) in wu.data.iter_mut().zip(&u.data) {
+                *p -= q;
+            }
+            let lhs = tr(&wu.matmul(&h).matmul(&wu.transpose()))
+                + eps2 as f64 * u.data.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+            // rhs = tr[(W̃−U)(H+J)(W̃−U)ᵀ] + C
+            let mut wtu = wt.clone();
+            for (p, q) in wtu.data.iter_mut().zip(&u.data) {
+                *p -= q;
+            }
+            let rhs = tr(&wtu.matmul(&hj).matmul(&wtu.transpose())) + c;
+            assert!(
+                (lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0),
+                "trial {trial}: Lemma 4.2 identity violated: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn modified_weight_reduces_amplification_ratio() {
+        // Fig. 6: increasing ε² decreases the amplification ratio at a
+        // small 1−R² cost.
+        let (w, x) = synthetic_high_amplification_layer(16, 32, 8, 30.0, 1302);
+        let h = hessian_from_activations(&x, 1e-4);
+        let base_ratio = amplification_ratio(&w, &x, 1);
+        assert!(base_ratio > 5.0, "synthetic layer not pathological: {base_ratio}");
+
+        let mut last_ratio = base_ratio;
+        let mut last_r2 = 0.0;
+        for eps2 in [1e-3f32, 1e-2, 1e-1] {
+            let wt = modified_weight(&w, &h, eps2);
+            let ratio = amplification_ratio(&wt, &x, 1);
+            let r2 = one_minus_r2(&w, &wt, &x);
+            assert!(ratio <= last_ratio * 1.05, "ratio not decreasing at ε²={eps2}");
+            assert!(r2 >= last_r2 - 1e-9, "1−R² not increasing at ε²={eps2}");
+            last_ratio = ratio;
+            last_r2 = r2;
+        }
+        assert!(
+            last_ratio < base_ratio * 0.5,
+            "modification too weak: {base_ratio} → {last_ratio}"
+        );
+    }
+
+    #[test]
+    fn qa_ldlq_beats_plain_ldlq_under_activation_noise() {
+        // The end-metric: E‖WX − U(X+Z)‖² with Z ~ N(0, ε²I).
+        let (w, x) = synthetic_high_amplification_layer(16, 32, 8, 30.0, 1303);
+        let h = hessian_from_activations(&x, 1e-4);
+        let nq = nq();
+        let eps2 = 0.05f32;
+
+        let u_ldlq = crate::quant::ldlq::ldlq_quantize(&w, &h, &nq).dequantize(&nq);
+        let u_qa = qa_ldlq_quantize(&w, &h, eps2, &nq).dequantize(&nq);
+
+        let mut rng = Rng::new(1304);
+        let mut eval = |u: &Mat| -> f64 {
+            let mut total = 0f64;
+            for r in 0..x.rows {
+                let xr = x.row(r);
+                let wx = w.matvec(xr);
+                let mut xn: Vec<f32> = xr.to_vec();
+                for v in xn.iter_mut() {
+                    *v += rng.gauss_f32() * eps2.sqrt();
+                }
+                let ux = u.matvec(&xn);
+                for i in 0..w.rows {
+                    total += ((wx[i] - ux[i]) as f64).powi(2);
+                }
+            }
+            total
+        };
+        let loss_ldlq = eval(&u_ldlq);
+        let loss_qa = eval(&u_qa);
+        assert!(
+            loss_qa < loss_ldlq,
+            "QA-LDLQ {loss_qa} not below LDLQ {loss_ldlq}"
+        );
+    }
+
+    #[test]
+    fn eps2_zero_recovers_ldlq() {
+        let mut rng = Rng::new(1305);
+        let w = Mat::from_vec(4, 32, rng.gauss_vec(128));
+        let x = Mat::from_vec(64, 32, rng.gauss_vec(64 * 32));
+        let h = hessian_from_activations(&x, 0.02);
+        let nq = nq();
+        let a = qa_ldlq_quantize(&w, &h, 0.0, &nq);
+        let b = crate::quant::ldlq::ldlq_quantize(&w, &h, &nq);
+        // W̃ = W·H·H⁻¹ = W numerically (within inversion error): codes match
+        assert_eq!(a.codes, b.codes, "ε²=0 should reduce to plain LDLQ");
+    }
+}

@@ -1,0 +1,412 @@
+//! The performance hot path: packed NestQuant(M) storage and quantized
+//! GEMV with decode-on-the-fly, mirroring the paper's CUDA kernel
+//! (Appendix E) in CPU-friendly integer arithmetic.
+//!
+//! Key identity (all-integer decode): with the 2·E8 generator G of
+//! Appendix E, t = G·c is an integer vector equal to twice the coset
+//! point. Writing m = 2q, the minimum-energy representative works out to
+//!
+//!   decoded (in half-units)  =  chosen residual e, where
+//!   e1_i = t_i − m·round(t_i/m)   (D8 candidate, parity-fixed)
+//!   e2_i = t_i − q − m·floor(t_i/m)  (D8+½ candidate, parity-fixed)
+//!
+//! so the decoded block is *exactly* a small integer vector — the paper's
+//! "int8-multipliers" observation (§3). Both GEMV accumulation and
+//! quantized·quantized dot products run on i32 integers, with β/scale
+//! applied per block/row.
+//!
+//! The parity-fix position is fixed to coordinate 0 (NestQuantM decode,
+//! Appendix D) and matches `lattice::e8::nearest_e8_m` bit-for-bit.
+
+use crate::lattice::e8::D;
+use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector};
+use crate::util::linalg::Mat;
+
+/// t = G·c for the Appendix-E generator, exploiting its sparsity:
+/// t0=c0, t1=c0+2c2, t2=c0+2c4, t3=c0+2c6, t4=c0+4c1+2Σ_{j≥2}c_j,
+/// t5=c0+2c3, t6=c0+2c5, t7=c0+2c7.
+#[inline(always)]
+pub fn gmul(c: &[u8; D]) -> [i32; D] {
+    let c0 = c[0] as i32;
+    let s = (c[2] as i32 + c[3] as i32 + c[4] as i32 + c[5] as i32)
+        + (c[6] as i32 + c[7] as i32);
+    [
+        c0,
+        c0 + 2 * c[2] as i32,
+        c0 + 2 * c[4] as i32,
+        c0 + 2 * c[6] as i32,
+        c0 + 4 * c[1] as i32 + 2 * s,
+        c0 + 2 * c[3] as i32,
+        c0 + 2 * c[5] as i32,
+        c0 + 2 * c[7] as i32,
+    ]
+}
+
+/// Integer NestQuantM decode: coset code → decoded block in *half units*
+/// (decoded value = e/2). Matches `VoronoiCodec::new_m(q).decode` exactly
+/// (both call `decode_t_halfunits`); kept as a separate entry point with
+/// the sparse `gmul` for the GEMV inner loop.
+#[inline(always)]
+pub fn decode_block_i32(c: &[u8; D], q: i32) -> [i32; D] {
+    let t = gmul(c);
+    crate::lattice::voronoi::decode_t_halfunits(&t, q, true)
+}
+
+/// Precomputed constants for the branch-free GEMV decode: division by
+/// m = 2q is replaced by a magic-number multiply (t < 2048 always holds:
+/// t ≤ c0 + 4·15 + 2·6·15 < 256 for q ≤ 16), exact over the full range
+/// (verified by `magic_division_exact`).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeConsts {
+    pub q: i32,
+    m: i32,
+    /// floor(x/m) = (x+BIAS)·magic >> 21 − BIAS/m trick avoided: t ≥ 0 here,
+    /// so floor(t/m) = (t·magic) >> 21 with magic = ⌈2^21/m⌉.
+    magic: u32,
+}
+
+impl DecodeConsts {
+    pub fn new(q: i32) -> Self {
+        let m = 2 * q;
+        DecodeConsts {
+            q,
+            m,
+            magic: (1u32 << 21).div_ceil(m as u32),
+        }
+    }
+
+    #[inline(always)]
+    fn div_m(self, x: i32) -> i32 {
+        debug_assert!(x >= 0);
+        ((x as u32 * self.magic) >> 21) as i32
+    }
+
+    /// Branch-free NestQuantM decode (flip position 0), identical output
+    /// to `decode_block_i32` — the GEMV hot path.
+    #[inline(always)]
+    pub fn decode(self, c: &[u8; D], out: &mut [i32; D]) {
+        let t = gmul(c);
+        let (q, m) = (self.q, self.m);
+        let mut e1 = [0i32; D];
+        let mut e2 = [0i32; D];
+        let mut par1 = 0i32;
+        let mut par2 = 0i32;
+        for i in 0..D {
+            let r1 = self.div_m(t[i] + q);
+            e1[i] = t[i] - m * r1;
+            par1 += r1;
+            let r2 = self.div_m(t[i]);
+            e2[i] = t[i] - q - m * r2;
+            par2 += r2;
+        }
+        // branch-free parity fix on coordinate 0:
+        // dir = +1 if e ≥ 0 else −1; e0 −= m·dir·(par&1)
+        let dir1 = 1 | (e1[0] >> 31); // sign: e≥0 → +1, e<0 → −1
+        e1[0] -= m * dir1 * (par1 & 1);
+        let dir2 = 1 | (e2[0] >> 31);
+        e2[0] -= m * dir2 * (par2 & 1);
+        let mut cost1 = 0i32;
+        let mut cost2 = 0i32;
+        for i in 0..D {
+            cost1 += e1[i] * e1[i];
+            cost2 += e2[i] * e2[i];
+        }
+        let pick1 = cost1 <= cost2;
+        for i in 0..D {
+            out[i] = if pick1 { e1[i] } else { e2[i] };
+        }
+    }
+}
+
+/// NestQuant(M) matrix in packed storage: 4-bit codes (q ≤ 16), 2-bit β
+/// indices (k ≤ 4), per-row f32 scales. This is the Table 4 memory layout:
+/// ~4.25 bits/entry.
+pub struct PackedNestMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub q: i32,
+    /// β dictionary (k ≤ 4), pre-halved: beta_half[t] = β_t/2 — folds the
+    /// half-unit decode scale into the dictionary.
+    pub beta_half: [f32; 4],
+    /// 4-bit codes, two per byte, row-major
+    pub codes: Vec<u8>,
+    /// 2-bit β indices, four per byte, row-major
+    pub beta_idx: Vec<u8>,
+    /// per-row s_r/√n denormalization factors
+    pub row_scale: Vec<f32>,
+}
+
+impl PackedNestMatrix {
+    /// Quantize `m` with the given quantizer (q ≤ 16, k ≤ 4 required).
+    pub fn quantize(m: &Mat, nq: &NestedLatticeQuantizer) -> Self {
+        assert!(nq.q() <= 16, "packed storage requires q ≤ 16");
+        assert!(nq.k() <= 4, "packed storage requires k ≤ 4");
+        assert!(
+            nq.codec.m_variant,
+            "packed GEMV decodes with the NestQuantM oracle; quantize with \
+             NestedLatticeQuantizer::new_m so overload checks match"
+        );
+        assert_eq!(m.cols % D, 0, "cols must be divisible by 8");
+        let qm = super::matrix::QuantizedMatrix::quantize(m, nq);
+        let mut codes = vec![0u8; m.rows * m.cols / 2];
+        for (i, pair) in qm.codes.chunks_exact(2).enumerate() {
+            codes[i] = pair[0] | (pair[1] << 4);
+        }
+        let blocks = m.rows * m.cols / D;
+        let mut beta_idx = vec![0u8; blocks.div_ceil(4)];
+        for (i, &b) in qm.beta_idx.iter().enumerate() {
+            beta_idx[i / 4] |= b << (2 * (i % 4));
+        }
+        let mut beta_half = [0f32; 4];
+        for (t, &b) in nq.betas.iter().enumerate() {
+            beta_half[t] = b * 0.5;
+        }
+        let row_scale = qm
+            .scales
+            .iter()
+            .map(|&s| s / (m.cols as f32).sqrt())
+            .collect();
+        PackedNestMatrix {
+            rows: m.rows,
+            cols: m.cols,
+            q: nq.q() as i32,
+            beta_half,
+            codes,
+            beta_idx,
+            row_scale,
+        }
+    }
+
+    /// y = W·x with integer decode-on-the-fly (the Table 4 NestQuantM GEMV).
+    pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0f32; self.rows];
+        self.gemv_into(x, &mut y);
+        y
+    }
+
+    /// `gemv` into a caller-provided buffer (allocation-free hot path).
+    ///
+    /// Perf notes (EXPERIMENTS.md §Perf): division-by-m is strength-
+    /// reduced to a magic multiply and the parity fix is branch-free
+    /// (`DecodeConsts::decode`) — the two top hotspots of the naive
+    /// decode (16 idiv + 2 unpredictable branches per 8-block).
+    pub fn gemv_into(&self, x: &[f32], y: &mut [f32]) {
+        let bpr = self.cols / D; // blocks per row
+        let code_bytes_per_row = self.cols / 2;
+        let consts = DecodeConsts::new(self.q);
+        let mut cbuf = [0u8; D];
+        let mut e = [0i32; D];
+        for r in 0..self.rows {
+            let crow = &self.codes[r * code_bytes_per_row..(r + 1) * code_bytes_per_row];
+            let mut acc = 0f32;
+            for j in 0..bpr {
+                for b in 0..4 {
+                    let byte = crow[j * 4 + b];
+                    cbuf[2 * b] = byte & 0x0F;
+                    cbuf[2 * b + 1] = byte >> 4;
+                }
+                consts.decode(&cbuf, &mut e);
+                let xb = &x[j * D..(j + 1) * D];
+                let mut d = 0f32;
+                for i in 0..D {
+                    d += e[i] as f32 * xb[i];
+                }
+                let bidx = r * bpr + j;
+                let beta = self.beta_half
+                    [((self.beta_idx[bidx / 4] >> (2 * (bidx % 4))) & 0x3) as usize];
+                acc += d * beta;
+            }
+            y[r] = acc * self.row_scale[r];
+        }
+    }
+
+    /// Payload bytes actually touched per GEMV (the memory-bound metric).
+    pub fn payload_bytes(&self) -> usize {
+        self.codes.len() + self.beta_idx.len() + self.row_scale.len() * 4
+    }
+
+    /// Bits per entry of the packed representation.
+    pub fn bits_per_entry(&self) -> f64 {
+        self.payload_bytes() as f64 * 8.0 / (self.rows * self.cols) as f64
+    }
+}
+
+/// Integer-path inner product of two quantized vectors (Algorithm 4 with
+/// i32 accumulation): both decodes stay integer, the per-block product is
+/// exact in i64, and β/scales are applied at the end. Requires both
+/// vectors quantized with the same (M-variant) quantizer.
+pub fn qdot_int(nq: &NestedLatticeQuantizer, a: &QuantizedVector, b: &QuantizedVector) -> f32 {
+    assert_eq!(a.n, b.n);
+    if a.scale == 0.0 || b.scale == 0.0 {
+        return 0.0;
+    }
+    let q = nq.q() as i32;
+    let mut acc = 0f64;
+    let mut ca = [0u8; D];
+    let mut cb = [0u8; D];
+    for j in 0..a.n / D {
+        ca.copy_from_slice(&a.codes[j * D..(j + 1) * D]);
+        cb.copy_from_slice(&b.codes[j * D..(j + 1) * D]);
+        let ea = decode_block_i32(&ca, q);
+        let eb = decode_block_i32(&cb, q);
+        let mut d = 0i64;
+        for i in 0..D {
+            d += ea[i] as i64 * eb[i] as i64;
+        }
+        acc += d as f64
+            * 0.25
+            * nq.betas[a.beta_idx[j] as usize] as f64
+            * nq.betas[b.beta_idx[j] as usize] as f64;
+    }
+    (acc * a.scale as f64 * b.scale as f64 / a.n as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::voronoi::VoronoiCodec;
+    use crate::util::{propcheck, Rng};
+
+    #[test]
+    fn gmul_matches_generator_matrix() {
+        use crate::lattice::voronoi::G2E8;
+        let mut rng = Rng::new(1101);
+        for _ in 0..200 {
+            let mut c = [0u8; D];
+            for v in c.iter_mut() {
+                *v = rng.below(16) as u8;
+            }
+            let fast = gmul(&c);
+            for i in 0..D {
+                let mut acc = 0i32;
+                for j in 0..D {
+                    acc += G2E8[i][j] as i32 * c[j] as i32;
+                }
+                assert_eq!(fast[i], acc, "gmul mismatch at {i} for {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn integer_decode_matches_float_m_decode() {
+        propcheck::check("int-decode-vs-float", 500, 1102, |rng| {
+            for &q in &[3u32, 8, 14, 16] {
+                let codec = VoronoiCodec::new_m(q);
+                let mut c = [0u8; D];
+                for v in c.iter_mut() {
+                    *v = rng.below(q as usize) as u8;
+                }
+                let slow = codec.decode(&c);
+                let fast = decode_block_i32(&c, q as i32);
+                for i in 0..D {
+                    if (fast[i] as f32) * 0.5 != slow[i] {
+                        return Err(format!(
+                            "q={q} code {c:?}: fast {:?} (half-units) vs slow {:?}",
+                            fast, slow
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_gemv_matches_dequantized_reference() {
+        propcheck::check("packed-gemv", 10, 1103, |rng| {
+            let nq =
+                NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+            let m = Mat::from_vec(8, 64, rng.gauss_vec(512));
+            let x = rng.gauss_vec(64);
+            let packed = PackedNestMatrix::quantize(&m, &nq);
+            let fast = packed.gemv(&x);
+            // reference: unpacked QuantizedMatrix qgemv (float decode path)
+            let qm = super::super::matrix::QuantizedMatrix::quantize(&m, &nq);
+            let slow = qm.qgemv(&nq, &x);
+            propcheck::assert_close(&fast, &slow, 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn qdot_int_matches_float_dot() {
+        propcheck::check("qdot-int", 30, 1104, |rng| {
+            let nq =
+                NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+            let a = rng.gauss_vec(64);
+            let b = rng.gauss_vec(64);
+            let qa = nq.quantize(&a);
+            let qb = nq.quantize(&b);
+            let int = qdot_int(&nq, &qa, &qb);
+            let float = nq.dot(&qa, &qb);
+            if (int - float).abs() < 1e-3 * (1.0 + float.abs()) {
+                Ok(())
+            } else {
+                Err(format!("int {int} vs float {float}"))
+            }
+        });
+    }
+
+    #[test]
+    fn packed_bits_per_entry_about_4_25() {
+        let mut rng = Rng::new(1105);
+        let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+        let m = Mat::from_vec(64, 256, rng.gauss_vec(64 * 256));
+        let packed = PackedNestMatrix::quantize(&m, &nq);
+        let bits = packed.bits_per_entry();
+        // 4 (codes) + 0.25 (β) + 32/256 (scale) = 4.375
+        assert!(bits > 4.2 && bits < 4.5, "bits/entry {bits}");
+    }
+
+    #[test]
+    fn magic_division_exact() {
+        // floor(t/m) via magic multiply must be exact over the full t range
+        // (t = G·c < 256 for codes < 16; we verify far beyond).
+        for q in 2..=16i32 {
+            let c = DecodeConsts::new(q);
+            for t in 0..4096i32 {
+                assert_eq!(
+                    ((t as u32 * ((1u32 << 21).div_ceil(2 * q as u32))) >> 21) as i32,
+                    t / (2 * q),
+                    "q={q} t={t}"
+                );
+                let _ = c;
+            }
+        }
+    }
+
+    #[test]
+    fn fast_decode_matches_reference() {
+        let mut rng = Rng::new(1107);
+        for &q in &[3i32, 8, 14, 16] {
+            let consts = DecodeConsts::new(q);
+            let mut out = [0i32; D];
+            for _ in 0..2000 {
+                let mut c = [0u8; D];
+                for v in c.iter_mut() {
+                    *v = rng.below(q as usize) as u8;
+                }
+                consts.decode(&c, &mut out);
+                assert_eq!(out, decode_block_i32(&c, q), "q={q} c={c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_values_fit_i16() {
+        // |e| ≤ m·(1 + covering radius slack); verify empirically over all
+        // q=16 random codes: needed for a future i16 SIMD path.
+        let mut rng = Rng::new(1106);
+        for _ in 0..2000 {
+            let mut c = [0u8; D];
+            for v in c.iter_mut() {
+                *v = rng.below(16) as u8;
+            }
+            let e = decode_block_i32(&c, 16);
+            for &v in &e {
+                assert!(v.abs() <= 3 * 32, "|e|={v} too large");
+                assert!(i16::try_from(v).is_ok());
+            }
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Uniform scalar quantization with L∞ scaling — the cubic-shaping
+//! baseline used by SpinQuant / QuaRot / LLM.int8-style pipelines (paper
+//! §3, Fig. 2/3). Round-to-nearest onto a symmetric 2^R-level grid scaled
+//! by the vector's max magnitude. Also provides the packed-int4 GEMV used
+//! as the Table 4 runtime comparator.
+
+use crate::util::linalg::Mat;
+
+/// Symmetric uniform quantizer at `bits` bits per entry.
+#[derive(Clone, Copy, Debug)]
+pub struct UniformQuantizer {
+    pub bits: u32,
+}
+
+impl UniformQuantizer {
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=8).contains(&bits));
+        UniformQuantizer { bits }
+    }
+
+    #[inline]
+    fn levels(&self) -> i32 {
+        1 << (self.bits - 1) // codes in [-levels, levels-1]
+    }
+
+    /// Quantize a vector: L∞ scale + round-to-nearest. Returns (codes, Δ).
+    pub fn quantize(&self, x: &[f32]) -> (Vec<i8>, f32) {
+        let maxabs = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        if maxabs == 0.0 {
+            return (vec![0i8; x.len()], 0.0);
+        }
+        let l = self.levels();
+        let delta = maxabs / l as f32;
+        let codes = x
+            .iter()
+            .map(|&v| ((v / delta).round() as i32).clamp(-l, l - 1) as i8)
+            .collect();
+        (codes, delta)
+    }
+
+    pub fn dequantize(&self, codes: &[i8], delta: f32) -> Vec<f32> {
+        codes.iter().map(|&c| c as f32 * delta).collect()
+    }
+
+    /// Quantize→dequantize ("fake quant").
+    pub fn roundtrip(&self, x: &[f32]) -> Vec<f32> {
+        let (c, d) = self.quantize(x);
+        self.dequantize(&c, d)
+    }
+
+    /// Row-wise fake quantization of a matrix (per-row Δ), as used by the
+    /// uniform baselines when quantizing weights.
+    pub fn roundtrip_rows(&self, m: &Mat) -> Mat {
+        let mut out = Mat::zeros(m.rows, m.cols);
+        for r in 0..m.rows {
+            let rt = self.roundtrip(m.row(r));
+            out.row_mut(r).copy_from_slice(&rt);
+        }
+        out
+    }
+
+    /// Effective rate: R bits/entry (+ one f32 scale per vector, reported
+    /// separately like NestQuant's s).
+    pub fn rate(&self) -> f64 {
+        self.bits as f64
+    }
+}
+
+/// Weights quantized to packed int4 with per-row scales — the Table 4
+/// "int4 uniform" GEMV comparator (2 entries per byte).
+pub struct PackedInt4Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// two 4-bit codes per byte (code = nibble − 8 ∈ [−8, 7])
+    pub packed: Vec<u8>,
+    pub deltas: Vec<f32>,
+}
+
+impl PackedInt4Matrix {
+    pub fn quantize(m: &Mat) -> Self {
+        assert_eq!(m.cols % 2, 0);
+        let uq = UniformQuantizer::new(4);
+        let mut packed = vec![0u8; m.rows * m.cols / 2];
+        let mut deltas = vec![0f32; m.rows];
+        for r in 0..m.rows {
+            let (codes, delta) = uq.quantize(m.row(r));
+            deltas[r] = delta;
+            for (i, pair) in codes.chunks_exact(2).enumerate() {
+                let lo = (pair[0] as i32 + 8) as u8;
+                let hi = (pair[1] as i32 + 8) as u8;
+                packed[r * m.cols / 2 + i] = lo | (hi << 4);
+            }
+        }
+        PackedInt4Matrix {
+            rows: m.rows,
+            cols: m.cols,
+            packed,
+            deltas,
+        }
+    }
+
+    /// y = W·x, unpacking nibbles on the fly (memory-bound fast path).
+    pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let half = self.cols / 2;
+        let mut y = vec![0f32; self.rows];
+        for r in 0..self.rows {
+            let row = &self.packed[r * half..(r + 1) * half];
+            let mut acc = 0f32;
+            for (i, &b) in row.iter().enumerate() {
+                let lo = (b & 0x0F) as i32 - 8;
+                let hi = (b >> 4) as i32 - 8;
+                acc += lo as f32 * x[2 * i] + hi as f32 * x[2 * i + 1];
+            }
+            y[r] = acc * self.deltas[r];
+        }
+        y
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.packed.len() + self.deltas.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, stats, Rng};
+
+    #[test]
+    fn roundtrip_bounded_error() {
+        let mut rng = Rng::new(1001);
+        let uq = UniformQuantizer::new(4);
+        let x = rng.gauss_vec(256);
+        let r = uq.roundtrip(&x);
+        let maxabs = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let delta = maxabs / 8.0;
+        for (a, b) in x.iter().zip(&r) {
+            // δ/2 in the interior; up to δ at +maxabs (symmetric grid has
+            // no +2^{R-1} level — the clamp costs one extra half-step).
+            assert!((a - b).abs() <= delta + 1e-6);
+        }
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Rng::new(1002);
+        for bits in [2u32, 3, 4, 8] {
+            let uq = UniformQuantizer::new(bits);
+            let x = rng.gauss_vec(128);
+            let (codes, _) = uq.quantize(&x);
+            let l = 1i32 << (bits - 1);
+            for &c in &codes {
+                assert!((c as i32) >= -l && (c as i32) < l);
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(1003);
+        let x = rng.gauss_vec(512);
+        let mut last = f64::INFINITY;
+        for bits in [2u32, 4, 8] {
+            let uq = UniformQuantizer::new(bits);
+            let m = stats::mse(&x, &uq.roundtrip(&x));
+            assert!(m < last);
+            last = m;
+        }
+    }
+
+    #[test]
+    fn nestquant_beats_uniform_at_equal_rate() {
+        // The headline shaping-gain claim (Fig. 3) at the vector level:
+        // NestQuant q=16 (4 bits + β overhead) vs uniform 4-bit should
+        // show materially lower MSE on iid Gaussian input.
+        use crate::lattice::nested::NestedLatticeQuantizer;
+        let mut rng = Rng::new(1004);
+        let nq = NestedLatticeQuantizer::new(16, vec![0.22, 0.28, 0.38, 0.9]);
+        let uq = UniformQuantizer::new(4);
+        let mut mse_nq = 0.0;
+        let mut mse_uq = 0.0;
+        for _ in 0..100 {
+            let x = rng.gauss_vec(256);
+            mse_nq += stats::mse(&x, &nq.roundtrip(&x));
+            mse_uq += stats::mse(&x, &uq.roundtrip(&x));
+        }
+        assert!(
+            mse_nq < 0.75 * mse_uq,
+            "NestQuant {mse_nq} not clearly better than uniform {mse_uq}"
+        );
+    }
+
+    #[test]
+    fn zero_vector() {
+        let uq = UniformQuantizer::new(4);
+        let x = vec![0f32; 16];
+        assert_eq!(uq.roundtrip(&x), x);
+    }
+
+    #[test]
+    fn packed_int4_matches_unpacked() {
+        propcheck::check("int4-pack", 20, 1005, |rng| {
+            let m = crate::util::linalg::Mat::from_vec(4, 32, rng.gauss_vec(128));
+            let x = rng.gauss_vec(32);
+            let packed = PackedInt4Matrix::quantize(&m);
+            let y = packed.gemv(&x);
+            // reference: fake-quant rows then dense matvec
+            let uq = UniformQuantizer::new(4);
+            let deq = uq.roundtrip_rows(&m);
+            let expect = deq.matvec(&x);
+            propcheck::assert_close(&y, &expect, 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn packed_payload_is_half_byte_per_entry() {
+        let mut rng = Rng::new(1006);
+        let m = crate::util::linalg::Mat::from_vec(8, 64, rng.gauss_vec(512));
+        let p = PackedInt4Matrix::quantize(&m);
+        assert_eq!(p.payload_bytes(), 8 * 64 / 2 + 8 * 4);
+    }
+}

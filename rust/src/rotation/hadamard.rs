@@ -1,0 +1,441 @@
+//! Fast orthogonal transforms: Sylvester/Walsh–Hadamard, Paley Hadamard
+//! matrices for non-power-of-two factors, Kronecker compositions, random
+//! sign randomization, and the Fourier/S⊗H ablation variants of Table 7.
+
+use crate::util::linalg::Mat;
+use crate::util::Rng;
+
+/// In-place fast Walsh–Hadamard transform, orthonormalized (×1/√n).
+/// `x.len()` must be a power of two. Involution: applying twice = identity.
+pub fn fwht_normalized(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT needs a power-of-two length");
+    let mut h = 1;
+    while h < n {
+        for chunk in x.chunks_exact_mut(2 * h) {
+            let (a, b) = chunk.split_at_mut(h);
+            for i in 0..h {
+                let (u, v) = (a[i], b[i]);
+                a[i] = u + v;
+                b[i] = u - v;
+            }
+        }
+        h *= 2;
+    }
+    let s = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Paley-construction Hadamard matrix of size p+1 for a prime p ≡ 3 mod 4
+/// (entries ±1). Supports the paper's "hardcoded" H₁ factors (12, 20, …).
+pub fn paley_hadamard(n: usize) -> Mat {
+    let p = n - 1;
+    assert!(p >= 3 && p % 4 == 3, "Paley I needs prime p ≡ 3 (mod 4)");
+    assert!((2..p).all(|d| d * d > p || p % d != 0), "{p} not prime");
+    // quadratic residues mod p
+    let mut is_qr = vec![false; p];
+    for x in 1..p {
+        is_qr[(x * x) % p] = true;
+    }
+    let chi = |x: usize| -> f32 {
+        if x == 0 {
+            0.0
+        } else if is_qr[x] {
+            1.0
+        } else {
+            -1.0
+        }
+    };
+    // H = [[1, 1ᵀ], [-1, Q + I]] variant; build then fix signs so that
+    // H·Hᵀ = n·I (standard Paley I: borders of +1, core Q_{ij}=χ(j−i) − I).
+    let mut h = Mat::zeros(n, n);
+    for j in 0..n {
+        h[(0, j)] = 1.0;
+    }
+    for i in 1..n {
+        h[(i, 0)] = -1.0;
+        for j in 1..n {
+            let q = chi((j + p - i) % p);
+            h[(i, j)] = if i == j { 1.0 } else { q };
+        }
+    }
+    h
+}
+
+/// A fast orthogonal rotation U applied as x ↦ U x. All variants are exact
+/// orthogonal maps (tested: ‖Ux‖ = ‖x‖, U applied twice via transpose =
+/// identity).
+#[derive(Clone, Debug)]
+pub enum Rotation {
+    /// Identity (no rotation) — baseline.
+    Identity { n: usize },
+    /// Randomized Sylvester Hadamard: D then FWHT. n must be 2^k.
+    Hadamard { signs: Vec<f32> },
+    /// Kronecker M ⊗ H: view x as (m × 2^k), FWHT along rows, M along
+    /// columns. Covers the paper's H₁⊗H₂ (M = Paley Hadamard / √m) and the
+    /// Table-7 S⊗H (M = random orthogonal).
+    Kronecker { m: Mat, signs: Vec<f32> },
+    /// Orthogonal real-Fourier rotation (Table 7 "Fourier"): the real DFT
+    /// basis (cos/sin pairs), applied densely. O(n²) — ablation only.
+    Fourier { f: Mat },
+}
+
+impl Rotation {
+    pub fn identity(n: usize) -> Self {
+        Rotation::Identity { n }
+    }
+
+    /// Randomized Hadamard for power-of-two n.
+    pub fn random_hadamard(n: usize, rng: &mut Rng) -> Self {
+        assert!(n.is_power_of_two());
+        Rotation::Hadamard {
+            signs: rng.sign_vec(n),
+        }
+    }
+
+    /// Deterministic Sylvester Hadamard (no sign randomization) — used
+    /// when the rotation is folded into weights and must be replayed.
+    pub fn plain_hadamard(n: usize) -> Self {
+        assert!(n.is_power_of_two());
+        Rotation::Hadamard { signs: vec![1.0; n] }
+    }
+
+    /// Paper §4.3 general case: n = m·2^k with a (Paley) Hadamard H₁ of
+    /// size m; U = (H₁/√m) ⊗ H₂.
+    pub fn kron_hadamard(n: usize, m: usize, rng: &mut Rng) -> Self {
+        assert_eq!(n % m, 0);
+        assert!((n / m).is_power_of_two());
+        let mut h1 = paley_hadamard(m);
+        h1.scale(1.0 / (m as f32).sqrt());
+        Rotation::Kronecker {
+            m: h1,
+            signs: rng.sign_vec(n),
+        }
+    }
+
+    /// Table 7 "S ⊗ H": S random orthogonal (QR of Gaussian), H Sylvester.
+    pub fn random_orth_kron(n: usize, m: usize, rng: &mut Rng) -> Self {
+        assert_eq!(n % m, 0);
+        assert!((n / m).is_power_of_two());
+        Rotation::Kronecker {
+            m: random_orthogonal(m, rng),
+            signs: rng.sign_vec(n),
+        }
+    }
+
+    /// Table 7 "Fourier": orthogonal real DFT basis.
+    pub fn fourier(n: usize) -> Self {
+        let mut f = Mat::zeros(n, n);
+        let norm = (2.0 / n as f64).sqrt();
+        for k in 0..n {
+            for t in 0..n {
+                let ang = std::f64::consts::TAU * (k * t) as f64 / n as f64;
+                f[(k, t)] = if k == 0 {
+                    (1.0 / n as f64).sqrt() as f32
+                } else if 2 * k < n {
+                    (norm * ang.cos()) as f32
+                } else if 2 * k == n {
+                    ((1.0 / n as f64).sqrt() * if t % 2 == 0 { 1.0 } else { -1.0 }) as f32
+                } else {
+                    (norm * ang.sin()) as f32
+                };
+            }
+        }
+        Rotation::Fourier { f }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Rotation::Identity { n } => *n,
+            Rotation::Hadamard { signs } => signs.len(),
+            Rotation::Kronecker { m, signs } => {
+                debug_assert_eq!(signs.len() % m.rows, 0);
+                signs.len()
+            }
+            Rotation::Fourier { f } => f.rows,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Apply U in place.
+    pub fn apply(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.len());
+        match self {
+            Rotation::Identity { .. } => {}
+            Rotation::Hadamard { signs } => {
+                for (v, s) in x.iter_mut().zip(signs) {
+                    *v *= s;
+                }
+                fwht_normalized(x);
+            }
+            Rotation::Kronecker { m, signs } => {
+                for (v, s) in x.iter_mut().zip(signs) {
+                    *v *= s;
+                }
+                let mm = m.rows;
+                let cols = x.len() / mm;
+                // FWHT along each contiguous row of the (m × 2^k) view
+                for r in 0..mm {
+                    fwht_normalized(&mut x[r * cols..(r + 1) * cols]);
+                }
+                // M along columns
+                let mut col = vec![0f32; mm];
+                for c in 0..cols {
+                    for r in 0..mm {
+                        col[r] = x[r * cols + c];
+                    }
+                    let out = m.matvec(&col);
+                    for r in 0..mm {
+                        x[r * cols + c] = out[r];
+                    }
+                }
+            }
+            Rotation::Fourier { f } => {
+                let out = f.matvec(x);
+                x.copy_from_slice(&out);
+            }
+        }
+    }
+
+    /// Apply Uᵀ in place (the inverse, since U is orthogonal).
+    pub fn apply_t(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.len());
+        match self {
+            Rotation::Identity { .. } => {}
+            Rotation::Hadamard { signs } => {
+                // (DH)ᵀ = Hᵀ D = H D applied in reverse order
+                fwht_normalized(x);
+                for (v, s) in x.iter_mut().zip(signs) {
+                    *v *= s;
+                }
+            }
+            Rotation::Kronecker { m, signs } => {
+                let mm = m.rows;
+                let cols = x.len() / mm;
+                let mt = m.transpose();
+                let mut col = vec![0f32; mm];
+                for c in 0..cols {
+                    for r in 0..mm {
+                        col[r] = x[r * cols + c];
+                    }
+                    let out = mt.matvec(&col);
+                    for r in 0..mm {
+                        x[r * cols + c] = out[r];
+                    }
+                }
+                for r in 0..mm {
+                    fwht_normalized(&mut x[r * cols..(r + 1) * cols]);
+                }
+                for (v, s) in x.iter_mut().zip(signs) {
+                    *v *= s;
+                }
+            }
+            Rotation::Fourier { f } => {
+                let out = f.transpose().matvec(x);
+                x.copy_from_slice(&out);
+            }
+        }
+    }
+
+    /// Apply U to every row of a row-major matrix (rows of length n).
+    pub fn apply_rows(&self, data: &mut [f32]) {
+        let n = self.len();
+        assert_eq!(data.len() % n, 0);
+        for row in data.chunks_exact_mut(n) {
+            self.apply(row);
+        }
+    }
+
+    /// Apply Uᵀ to every row.
+    pub fn apply_t_rows(&self, data: &mut [f32]) {
+        let n = self.len();
+        assert_eq!(data.len() % n, 0);
+        for row in data.chunks_exact_mut(n) {
+            self.apply_t(row);
+        }
+    }
+
+    /// Materialize U as a dense matrix (tests / folding into weights).
+    pub fn to_mat(&self) -> Mat {
+        let n = self.len();
+        let mut u = Mat::zeros(n, n);
+        let mut e = vec![0f32; n];
+        for c in 0..n {
+            e.fill(0.0);
+            e[c] = 1.0;
+            self.apply(&mut e);
+            for r in 0..n {
+                u[(r, c)] = e[r];
+            }
+        }
+        u
+    }
+}
+
+/// Random orthogonal matrix via Gram–Schmidt QR of a Gaussian matrix.
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Mat {
+    let mut q = Mat::zeros(n, n);
+    for c in 0..n {
+        // fresh Gaussian column, orthogonalized against previous columns
+        let mut v = rng.gauss_vec(n);
+        for prev in 0..c {
+            let mut dot = 0f64;
+            for r in 0..n {
+                dot += q[(r, prev)] as f64 * v[r] as f64;
+            }
+            for r in 0..n {
+                v[r] -= (dot as f32) * q[(r, prev)];
+            }
+        }
+        let norm = crate::util::stats::norm2(&v) as f32;
+        assert!(norm > 1e-6, "degenerate Gaussian column");
+        for r in 0..n {
+            q[(r, c)] = v[r] / norm;
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, stats, Rng};
+
+    fn check_orthogonal(rot: &Rotation, seed: u64) {
+        let n = rot.len();
+        let mut rng = Rng::new(seed);
+        // norm preservation
+        let x = rng.gauss_vec(n);
+        let mut y = x.clone();
+        rot.apply(&mut y);
+        assert!(
+            (stats::norm2(&x) - stats::norm2(&y)).abs() < 1e-3 * stats::norm2(&x),
+            "norm not preserved"
+        );
+        // Uᵀ U = I
+        rot.apply_t(&mut y);
+        propcheck::assert_close(&x, &y, 1e-4, 1e-4).expect("UᵀU != I");
+    }
+
+    #[test]
+    fn fwht_is_involution() {
+        let mut rng = Rng::new(701);
+        let x = rng.gauss_vec(64);
+        let mut y = x.clone();
+        fwht_normalized(&mut y);
+        fwht_normalized(&mut y);
+        propcheck::assert_close(&x, &y, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn fwht_matches_dense_hadamard() {
+        // n=4 Sylvester: H4 known entries
+        let mut x = vec![1.0f32, 0.0, 0.0, 0.0];
+        fwht_normalized(&mut x);
+        for v in &x {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rotations_are_orthogonal() {
+        let mut rng = Rng::new(702);
+        check_orthogonal(&Rotation::identity(32), 1);
+        check_orthogonal(&Rotation::random_hadamard(64, &mut rng), 2);
+        check_orthogonal(&Rotation::plain_hadamard(128), 3);
+        check_orthogonal(&Rotation::kron_hadamard(96, 12, &mut rng), 4);
+        check_orthogonal(&Rotation::random_orth_kron(48, 12, &mut rng), 5);
+        check_orthogonal(&Rotation::fourier(48), 6);
+    }
+
+    #[test]
+    fn paley_hadamard_is_hadamard() {
+        for n in [4usize, 12, 20] {
+            let h = paley_hadamard(n);
+            // entries ±1
+            for &v in &h.data {
+                assert!(v == 1.0 || v == -1.0, "non ±1 entry {v} in H{n}");
+            }
+            // H Hᵀ = n I
+            let prod = h.matmul(&h.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    let expect = if i == j { n as f32 } else { 0.0 };
+                    assert_eq!(prod[(i, j)], expect, "H{n}·Hᵀ at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Rng::new(703);
+        let q = random_orthogonal(16, &mut rng);
+        let prod = q.transpose().matmul(&q);
+        for i in 0..16 {
+            for j in 0..16 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_gaussianizes_outliers() {
+        // A one-hot (max-outlier) vector becomes flat after rotation:
+        // kurtosis drops to ~flat, L∞/L2 shrinks by ~√n.
+        let n = 256;
+        let mut rng = Rng::new(704);
+        let rot = Rotation::random_hadamard(n, &mut rng);
+        let mut x = vec![0f32; n];
+        x[17] = 10.0;
+        let before_ratio = 10.0 / stats::norm2(&x) as f32;
+        rot.apply(&mut x);
+        let linf = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let after_ratio = linf / stats::norm2(&x) as f32;
+        assert!(
+            after_ratio < before_ratio / ((n as f32).sqrt() * 0.9),
+            "rotation did not spread the outlier: {after_ratio} vs {before_ratio}"
+        );
+    }
+
+    #[test]
+    fn rotation_preserves_inner_products() {
+        // (Ux)·(Uy) = x·y — the identity that lets rotations be folded
+        // into weight/activation pairs without changing layer outputs.
+        propcheck::check("rotation-ip", 30, 705, |rng| {
+            let n = 64;
+            let rot = Rotation::random_hadamard(n, rng);
+            let x = rng.gauss_vec(n);
+            let y = rng.gauss_vec(n);
+            let ip0 = stats::dot(&x, &y);
+            let mut xr = x.clone();
+            let mut yr = y.clone();
+            rot.apply(&mut xr);
+            rot.apply(&mut yr);
+            let ip1 = stats::dot(&xr, &yr);
+            if (ip0 - ip1).abs() < 1e-3 * (1.0 + ip0.abs()) {
+                Ok(())
+            } else {
+                Err(format!("{ip0} vs {ip1}"))
+            }
+        });
+    }
+
+    #[test]
+    fn to_mat_matches_apply() {
+        let mut rng = Rng::new(706);
+        let rot = Rotation::kron_hadamard(24, 12, &mut rng);
+        let u = rot.to_mat();
+        let x = rng.gauss_vec(24);
+        let dense = u.matvec(&x);
+        let mut fast = x.clone();
+        rot.apply(&mut fast);
+        propcheck::assert_close(&dense, &fast, 1e-5, 1e-4).unwrap();
+    }
+}

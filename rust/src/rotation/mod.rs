@@ -1,0 +1,14 @@
+//! Coordinate rotations that "Gaussianize" quantizer inputs (paper §4.3).
+//!
+//! The workhorse is the randomized Hadamard transform: x ↦ (1/√n)·H·D·x
+//! with H a Sylvester Hadamard matrix and D a random ±1 diagonal. For
+//! n = 2^k·m the paper composes a hardcoded Hadamard H₁ (size m) with a
+//! Sylvester H₂ (size 2^k) via the Kronecker product. Applying H costs
+//! O(n log n + n·m) — negligible next to the matmuls it protects.
+//!
+//! Also provided for the Table 7 ablation: an orthogonal real-Fourier
+//! rotation and an S ⊗ H rotation with S a random orthogonal matrix.
+
+pub mod hadamard;
+
+pub use hadamard::{fwht_normalized, paley_hadamard, Rotation};

@@ -1,0 +1,152 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced by the
+//! Layer-2 `python/compile/aot.py`) and executes them on the CPU PJRT
+//! client. Python is never on this path — the artifacts are compiled once
+//! at load time and the executables are reused per request.
+//!
+//! Arguments are passed as cached `Literal`s: the xla-0.1.6
+//! `buffer_from_host_literal` + `execute_b` path trips a fatal
+//! `literal.size_bytes() == b->size()` check for non-register-aligned
+//! shapes on the CPU plugin, while the Literal execute path round-trips
+//! cleanly (see /opt/xla-example/load_hlo).
+
+use crate::model::weights::ModelWeights;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled HLO artifact.
+pub struct HloExecutable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one client, many executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<HloExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        Ok(HloExecutable {
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+
+    /// Build an f32 literal of the given shape.
+    pub fn lit_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+    }
+
+    /// Build an i32 literal of the given shape.
+    pub fn lit_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+    }
+}
+
+impl HloExecutable {
+    /// Execute with literal arguments; returns the first tuple output's
+    /// f32 data (artifacts are lowered with return_tuple=True).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(&self, args: &[L]) -> Result<Vec<f32>> {
+        let outs = self.exe.execute::<L>(args)?;
+        let lit = outs[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// A model forward executable with cached weight literals: the serving
+/// scoring path (tokens → logits) with zero python on the request path.
+pub struct ModelRunner {
+    pub batch: usize,
+    pub ctx: usize,
+    pub vocab: usize,
+    exe: HloExecutable,
+    weight_lits: Vec<xla::Literal>,
+    rt: Runtime,
+}
+
+impl ModelRunner {
+    /// Load `model_fwd_<name>_b<batch>.hlo.txt` and cache `weights`
+    /// (fp32 or fake-quantized — the artifact takes weights as arguments,
+    /// so any quantization regime can be served through the same HLO).
+    pub fn load(
+        artifacts_dir: &Path,
+        name: &str,
+        batch: usize,
+        weights: &ModelWeights,
+    ) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let exe =
+            rt.load_hlo(&artifacts_dir.join(format!("model_fwd_{name}_b{batch}.hlo.txt")))?;
+        let mut weight_lits = Vec::new();
+        for (_nm, dims, data) in weights.flat_params() {
+            weight_lits.push(rt.lit_f32(&data, &dims)?);
+        }
+        Ok(ModelRunner {
+            batch,
+            ctx: weights.cfg.ctx,
+            vocab: weights.cfg.vocab,
+            exe,
+            weight_lits,
+            rt,
+        })
+    }
+
+    /// Score a token batch: tokens (batch·ctx) → flat logits
+    /// (batch·ctx·vocab).
+    pub fn forward(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == self.batch * self.ctx, "bad token shape");
+        let tok_lit = self.rt.lit_i32(tokens, &[self.batch, self.ctx])?;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weight_lits.len());
+        refs.push(&tok_lit);
+        for l in &self.weight_lits {
+            refs.push(l);
+        }
+        self.exe.run(&refs)
+    }
+
+    /// Mean next-token NLL per window of a scored batch.
+    pub fn batch_nll(&self, tokens_in: &[i32], targets: &[i32], logits: &[f32]) -> Vec<f64> {
+        let v = self.vocab;
+        let s = self.ctx;
+        let mut out = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            let mut nll = 0f64;
+            for t in 0..s {
+                let row = &logits[(b * s + t) * v..(b * s + t + 1) * v];
+                let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                let logsum: f64 = (row.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>())
+                    .ln()
+                    + max as f64;
+                nll += logsum - row[targets[b * s + t] as usize] as f64;
+            }
+            out.push(nll / s as f64);
+        }
+        let _ = tokens_in;
+        out
+    }
+}

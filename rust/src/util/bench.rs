@@ -1,0 +1,111 @@
+//! Tiny micro-benchmark harness (criterion is unavailable in the offline
+//! vendor set). Provides warmup, repeated timing, and median/MAD reporting,
+//! which is what the paper-table benchmarks need.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// median wall time per iteration
+    pub median: Duration,
+    /// median absolute deviation
+    pub mad: Duration,
+    /// number of timed iterations
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn median_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12.2} µs/iter (±{:.2}, n={})",
+            self.name,
+            self.median_us(),
+            self.mad.as_secs_f64() * 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark `f`, autoscaling iteration count to fill ~`budget`.
+/// `f` should perform one unit of work and return something observable
+/// (returned value is black-boxed to prevent dead-code elimination).
+pub fn bench<T, F: FnMut() -> T>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration: run until 10% of the budget is consumed.
+    let calib_start = Instant::now();
+    let mut calib_iters = 0usize;
+    while calib_start.elapsed() < budget / 10 {
+        black_box(f());
+        calib_iters += 1;
+        if calib_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = calib_start.elapsed() / calib_iters.max(1) as u32;
+
+    // Aim for ~30 samples of batched iterations within the budget.
+    let samples = 30usize;
+    let batch = ((budget.as_secs_f64() / samples as f64 / per_iter.as_secs_f64().max(1e-9))
+        .ceil() as usize)
+        .max(1);
+
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    let mut total_iters = 0usize;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            black_box(f());
+        }
+        times.push(t0.elapsed().as_secs_f64() / batch as f64);
+        total_iters += batch;
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+
+    BenchResult {
+        name: name.to_string(),
+        median: Duration::from_secs_f64(median),
+        mad: Duration::from_secs_f64(mad),
+        iters: total_iters,
+    }
+}
+
+/// Prevent the optimizer from eliding a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let data: Vec<f64> = (0..20_000).map(|i| i as f64).collect();
+        let r = bench("sum-20k", Duration::from_millis(50), || {
+            data.iter().map(|&x| x.sqrt()).sum::<f64>()
+        });
+        assert!(r.iters > 0);
+        assert!(r.median > Duration::ZERO);
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            median: Duration::from_micros(12),
+            mad: Duration::from_micros(1),
+            iters: 10,
+        };
+        assert!(r.report().contains("µs/iter"));
+    }
+}

@@ -1,0 +1,474 @@
+//! Dense linear algebra used by the quantization pipeline and the native
+//! model forward: row-major f32 matrices with f64 accumulation where
+//! numerical robustness matters (Cholesky/LDL for LDLQ Hessians).
+
+/// Row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// self · other, blocked over k for cache friendliness.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        matmul_into(
+            &self.data,
+            &other.data,
+            &mut out.data,
+            self.rows,
+            self.cols,
+            other.cols,
+        );
+        out
+    }
+
+    /// self · v for a vector v.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        let mut out = vec![0f32; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0f32;
+            for (a, b) in row.iter().zip(v) {
+                acc += a * b;
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    pub fn scale(&mut self, c: f32) {
+        for x in self.data.iter_mut() {
+            *x *= c;
+        }
+    }
+
+    pub fn add_diag(&mut self, c: f32) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += c;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// C (m×n) = A (m×k) · B (k×n), row-major, ikj loop order (streams B rows).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// LDL^T decomposition of a symmetric positive-definite matrix (f64
+/// accumulation). Returns (L unit-lower-triangular, d diagonal).
+pub fn ldl(h: &Mat) -> (Mat, Vec<f64>) {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    let mut l = Mat::eye(n);
+    let mut d = vec![0f64; n];
+    // working copy in f64
+    let mut lw = vec![0f64; n * n];
+    for j in 0..n {
+        let mut dj = h[(j, j)] as f64;
+        for k in 0..j {
+            dj -= lw[j * n + k] * lw[j * n + k] * d[k];
+        }
+        d[j] = dj;
+        assert!(dj > 0.0, "matrix not positive definite at {j} (d={dj})");
+        for i in j + 1..n {
+            let mut v = h[(i, j)] as f64;
+            for k in 0..j {
+                v -= lw[i * n + k] * lw[j * n + k] * d[k];
+            }
+            lw[i * n + j] = v / dj;
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            l[(i, j)] = lw[i * n + j] as f32;
+        }
+    }
+    (l, d)
+}
+
+/// Block LDLᵀ decomposition with block size `b`: H = L·D·Lᵀ where L is
+/// block-unit-lower-triangular (identity b×b diagonal blocks) and D is
+/// block diagonal (SPD b×b blocks). With b = 1 this reduces to scalar
+/// [`ldl`]. Used by block-LDLQ: quantizing b-blocks jointly requires the
+/// within-block coupling to live in D, not in the feedback L — otherwise
+/// the error recursion diverges under strongly correlated Hessians.
+/// Returns (L, D-blocks in block-row order).
+pub fn block_ldl(h: &Mat, b: usize) -> (Mat, Vec<Vec<f64>>) {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    assert_eq!(n % b, 0);
+    let nb = n / b;
+    // working Schur complement in f64
+    let mut s: Vec<f64> = h.data.iter().map(|&x| x as f64).collect();
+    let mut l = Mat::eye(n);
+    let mut d_blocks: Vec<Vec<f64>> = Vec::with_capacity(nb);
+
+    // invert an SPD b×b block (Gauss-Jordan, f64)
+    let inv_block = |m: &[f64]| -> Vec<f64> {
+        let mut a = m.to_vec();
+        let mut inv = vec![0f64; b * b];
+        for i in 0..b {
+            inv[i * b + i] = 1.0;
+        }
+        for col in 0..b {
+            // partial pivot within SPD block (diagonal is positive)
+            let piv = a[col * b + col];
+            assert!(piv.abs() > 1e-12, "singular diagonal block");
+            let inv_piv = 1.0 / piv;
+            for j in 0..b {
+                a[col * b + j] *= inv_piv;
+                inv[col * b + j] *= inv_piv;
+            }
+            for row in 0..b {
+                if row == col {
+                    continue;
+                }
+                let f = a[row * b + col];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in 0..b {
+                    a[row * b + j] -= f * a[col * b + j];
+                    inv[row * b + j] -= f * inv[col * b + j];
+                }
+            }
+        }
+        inv
+    };
+
+    for jb in 0..nb {
+        let j0 = jb * b;
+        // D_J = current Schur diagonal block
+        let mut dj = vec![0f64; b * b];
+        for r in 0..b {
+            for c in 0..b {
+                dj[r * b + c] = s[(j0 + r) * n + (j0 + c)];
+            }
+        }
+        let dj_inv = inv_block(&dj);
+        d_blocks.push(dj.clone());
+        // L_{I,J} = S_{I,J} · D_J⁻¹ for I > J, then update Schur complement
+        for ib in jb + 1..nb {
+            let i0 = ib * b;
+            let mut lij = vec![0f64; b * b];
+            for r in 0..b {
+                for c in 0..b {
+                    let mut acc = 0f64;
+                    for k in 0..b {
+                        acc += s[(i0 + r) * n + (j0 + k)] * dj_inv[k * b + c];
+                    }
+                    lij[r * b + c] = acc;
+                }
+            }
+            for r in 0..b {
+                for c in 0..b {
+                    l[(i0 + r, j0 + c)] = lij[r * b + c] as f32;
+                }
+            }
+        }
+        // S_{I,K} -= L_{I,J} · S_{J,K} for I,K > J (row update form)
+        for ib in jb + 1..nb {
+            let i0 = ib * b;
+            for r in 0..b {
+                for k in j0 + b..n {
+                    let mut acc = 0f64;
+                    for c in 0..b {
+                        acc += l[(i0 + r, j0 + c)] as f64 * s[(j0 + c) * n + k];
+                    }
+                    s[(i0 + r) * n + k] -= acc;
+                }
+            }
+        }
+    }
+    (l, d_blocks)
+}
+
+/// Cholesky factor (lower) of an SPD matrix, f64 accumulation.
+pub fn cholesky(h: &Mat) -> Mat {
+    let (l, d) = ldl(h);
+    let n = h.rows;
+    let mut c = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            c[(i, j)] = l[(i, j)] * (d[j].sqrt() as f32);
+        }
+    }
+    c
+}
+
+/// Solve L x = b with L lower triangular (diagonal non-unit).
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0f32; n];
+    for i in 0..n {
+        let mut acc = b[i] as f64;
+        for j in 0..i {
+            acc -= l[(i, j)] as f64 * x[j] as f64;
+        }
+        x[i] = (acc / l[(i, i)] as f64) as f32;
+    }
+    x
+}
+
+/// Solve Lᵀ x = b with L lower triangular.
+pub fn solve_lower_t(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0f32; n];
+    for i in (0..n).rev() {
+        let mut acc = b[i] as f64;
+        for j in i + 1..n {
+            acc -= l[(j, i)] as f64 * x[j] as f64;
+        }
+        x[i] = (acc / l[(i, i)] as f64) as f32;
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky (column-by-column solves).
+pub fn invert_spd(h: &Mat) -> Mat {
+    let n = h.rows;
+    let l = cholesky(h);
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0f32; n];
+    for c in 0..n {
+        e.fill(0.0);
+        e[c] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for r in 0..n {
+            inv[(r, c)] = x[r];
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for x in a.data.iter_mut() {
+            *x = rng.gauss_f32();
+        }
+        let mut h = a.transpose().matmul(&a);
+        h.add_diag(0.5 + n as f32 * 0.01);
+        h
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(601);
+        let a = Mat::from_vec(3, 5, rng.gauss_vec(15));
+        let i5 = Mat::eye(5);
+        assert_eq!(a.matmul(&i5).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.matmul(&b).data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn ldl_reconstructs() {
+        let h = random_spd(12, 602);
+        let (l, d) = ldl(&h);
+        // L D Lᵀ = H
+        let n = h.rows;
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for k in 0..n {
+                    acc += l[(i, k)] as f64 * d[k] * l[(j, k)] as f64;
+                }
+                assert!(
+                    (acc - h[(i, j)] as f64).abs() < 1e-3,
+                    "LDL mismatch at ({i},{j}): {acc} vs {}",
+                    h[(i, j)]
+                );
+            }
+        }
+        // L unit lower triangular
+        for i in 0..n {
+            assert_eq!(l[(i, i)], 1.0);
+            for j in i + 1..n {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn block_ldl_b1_equals_scalar_ldl() {
+        let h = random_spd(12, 606);
+        let (l1, d1) = ldl(&h);
+        let (lb, db) = block_ldl(&h, 1);
+        for i in 0..12 {
+            assert!((db[i][0] - d1[i]).abs() < 1e-6);
+            for j in 0..12 {
+                assert!((l1[(i, j)] - lb[(i, j)]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn block_ldl_reconstructs() {
+        let n = 16;
+        let b = 4;
+        let h = random_spd(n, 607);
+        let (l, d) = block_ldl(&h, b);
+        // assemble D as a dense matrix
+        let mut dm = Mat::zeros(n, n);
+        for (jb, blk) in d.iter().enumerate() {
+            for r in 0..b {
+                for c in 0..b {
+                    dm[(jb * b + r, jb * b + c)] = blk[r * b + c] as f32;
+                }
+            }
+        }
+        let rec = l.matmul(&dm).matmul(&l.transpose());
+        for i in 0..n {
+            for j in 0..n {
+                assert!(
+                    (rec[(i, j)] - h[(i, j)]).abs() < 1e-2,
+                    "block LDL mismatch at ({i},{j}): {} vs {}",
+                    rec[(i, j)],
+                    h[(i, j)]
+                );
+            }
+        }
+        // diagonal blocks of L are identity; upper blocks zero
+        for i in 0..n {
+            for j in 0..n {
+                let (ib, jb) = (i / b, j / b);
+                if ib == jb {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    assert_eq!(l[(i, j)], expect);
+                } else if jb > ib {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn invert_spd_is_inverse() {
+        let h = random_spd(16, 603);
+        let inv = invert_spd(&h);
+        let prod = h.matmul(&inv);
+        for i in 0..16 {
+            for j in 0..16 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod[(i, j)] - expect).abs() < 1e-2,
+                    "H·H⁻¹ at ({i},{j}) = {}",
+                    prod[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let h = random_spd(10, 604);
+        let l = cholesky(&h);
+        let mut rng = Rng::new(605);
+        let b = rng.gauss_vec(10);
+        let y = solve_lower(&l, &b);
+        // L y = b
+        let ly = l.matvec(&y);
+        for (u, v) in ly.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-4);
+        }
+        let x = solve_lower_t(&l, &b);
+        let ltx = l.transpose().matvec(&x);
+        for (u, v) in ltx.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Utilities shared across the crate: deterministic RNG, Gaussian sampling,
+//! streaming statistics, a micro-benchmark harness and a small seeded
+//! property-testing helper (criterion / proptest are unavailable in the
+//! offline vendor set — see DESIGN.md §2).
+
+pub mod bench;
+pub mod linalg;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Welford;

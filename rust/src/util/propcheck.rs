@@ -1,0 +1,71 @@
+//! Minimal seeded property-testing helper (proptest is unavailable in the
+//! offline vendor set). Runs a property over `n` randomized cases derived
+//! from a base seed; on failure reports the failing case seed so the case
+//! can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop` over `n` randomized cases. `prop` receives a per-case RNG and
+/// returns `Err(msg)` on property violation. Panics with the case seed on
+/// the first failure.
+pub fn check<F>(name: &str, n: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..n {
+        let case_seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{n} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", 50, 1, |rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check("always-fails", 5, 2, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0001], 1e-3, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 0.0).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 0.0).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Deterministic, fast pseudo-random generation: xoshiro256++ seeded via
+//! SplitMix64, plus Gaussian and other samplers used by the experiment
+//! harness. All experiments in `results/` are reproducible from seeds.
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Deterministic, 2^256-1 period,
+/// passes BigCrush; plenty for Monte-Carlo experiment workloads.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Gaussian from Box-Muller
+    gauss_spare: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 top bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free enough for non-crypto use.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard Gaussian via Box–Muller (with spare caching).
+    #[inline]
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // u in (0,1] to avoid ln(0)
+        let u = 1.0 - self.f64();
+        let v = self.f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * v).sin_cos();
+        self.gauss_spare = Some(r * s);
+        r * c
+    }
+
+    /// Standard Gaussian as f32.
+    #[inline]
+    pub fn gauss_f32(&mut self) -> f32 {
+        self.gauss() as f32
+    }
+
+    /// Fill a slice with iid N(0,1) f32s.
+    pub fn fill_gauss(&mut self, out: &mut [f32]) {
+        for x in out.iter_mut() {
+            *x = self.gauss_f32();
+        }
+    }
+
+    /// A fresh vector of n iid N(0,1) f32s.
+    pub fn gauss_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        self.fill_gauss(&mut v);
+        v
+    }
+
+    /// Random ±1 signs.
+    pub fn sign_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(7);
+        let mut sum = 0.0;
+        const N: usize = 100_000;
+        for _ in 0..N {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / N as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(3);
+        const N: usize = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..N {
+            let z = r.gauss();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= N as f64;
+        m2 /= N as f64;
+        assert!(m1.abs() < 0.02, "mean={m1}");
+        assert!((m2 - 1.0).abs() < 0.02, "var={m2}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(9);
+        for n in [1usize, 2, 7, 100] {
+            for _ in 0..1000 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}
