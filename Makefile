@@ -1,0 +1,31 @@
+# NestQuant reproduction — top-level entry points.
+#
+#   make build   release build of the rust crate
+#   make test    tier-1 test suite (cargo test -q)
+#   make bench   perf suite -> bench_output.txt + BENCH_gemm.json
+#   make clean   remove build artifacts
+#
+# The python layer (training + AOT lowering, `make artifacts`) is only
+# needed for the artifact-gated integration tests; the rust suite skips
+# those gracefully when artifacts/ is absent.
+
+.PHONY: build test bench artifacts clean
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+# no pipefail in POSIX sh: redirect, propagate the bench exit status,
+# then show the log — a crashed bench must not leave a "fresh" log
+bench:
+	cd rust && cargo bench --bench bench_main > ../bench_output.txt 2>&1 || { cat ../bench_output.txt; exit 1; }
+	@cat bench_output.txt
+
+artifacts:
+	cd python && python -m compile.train && python -m compile.aot
+
+clean:
+	cd rust && cargo clean
+	rm -f bench_output.txt

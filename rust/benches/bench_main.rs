@@ -2,17 +2,22 @@
 //! util::bench's warmup+median harness). Covers:
 //!
 //! * the Table 4 GEMV comparison (fp32 / NestQuantM packed / int4)
+//! * the decode-amortized GEMM sweep: batch {1, 8, 32, 128} × threads
+//!   {1, all cores}, against the per-column GEMV baseline
 //! * lattice primitive micro-benches (encode / decode / Alg. 4 dot)
 //! * rotation and KV-cache hot paths
 //!
-//! Output is also captured by `make bench` into bench_output.txt.
+//! Output is captured by `make bench` into bench_output.txt; the
+//! GEMV/GEMM suite is additionally serialized to BENCH_gemm.json at the
+//! repo root for cross-PR perf tracking (schema: EXPERIMENTS.md §Perf).
 
 use nestquant::lattice::nested::NestedLatticeQuantizer;
 use nestquant::lattice::voronoi::VoronoiCodec;
+use nestquant::quant::gemm::GemmScratch;
 use nestquant::quant::qgemm::{decode_block_i32, qdot_int, PackedNestMatrix};
 use nestquant::quant::uniform::PackedInt4Matrix;
 use nestquant::rotation::Rotation;
-use nestquant::util::bench::{bench, black_box};
+use nestquant::util::bench::{bench, black_box, BenchSuite};
 use nestquant::util::linalg::Mat;
 use nestquant::util::Rng;
 use std::time::Duration;
@@ -108,13 +113,110 @@ fn main() {
         y2[0]
     });
     println!("{}", r_nest.report());
-    let r_i4 = bench("int4 uniform GEMV", budget, || int4.gemv(&x)[0]);
+    let mut y3 = vec![0f32; n];
+    let r_i4 = bench("int4 uniform GEMV", budget, || {
+        // allocation-free comparator: a per-call Vec would skew the
+        // NestQuantM-vs-int4 runtime comparison
+        int4.gemv_into(&x, &mut y3);
+        y3[0]
+    });
     println!("{}", r_i4.report());
     println!(
         "  speedup vs fp32: NestQuantM {:.2}x, int4 {:.2}x",
         r_fp.median_us() / r_nest.median_us(),
         r_fp.median_us() / r_i4.median_us()
     );
+
+    let mut suite = BenchSuite::new("table4_gemv_gemm_n2048");
+    suite.push(&r_fp, &[("batch", 1.0), ("threads", 1.0), ("per_col_us", r_fp.median_us())]);
+    suite.push(&r_nest, &[("batch", 1.0), ("threads", 1.0), ("per_col_us", r_nest.median_us())]);
+    suite.push(&r_i4, &[("batch", 1.0), ("threads", 1.0), ("per_col_us", r_i4.median_us())]);
+
+    // --- decode-amortized GEMM sweep (the tentpole claim: amortizing the
+    //     8-block decode over a batch beats per-column GEMV ≥ 3× at
+    //     batch ≥ 32, before threading even enters) ---
+    println!("\n## decode-amortized GEMM (n=2048): batch × threads sweep");
+    let n_threads = std::thread::available_parallelism().map_or(1, |v| v.get());
+    let sweep_budget = Duration::from_millis(400);
+    let mut scratch = GemmScratch::new();
+    let mut amortization_checked = false;
+    let mut amortization_ok = true;
+    for &batch in &[1usize, 8, 32, 128] {
+        let xt = Mat::from_vec(batch, n, rng.gauss_vec(batch * n));
+        let r_loop = bench(&format!("gemv ×{batch} (per-column)"), sweep_budget, || {
+            for c in 0..batch {
+                packed.gemv_into(xt.row(c), &mut y2);
+            }
+            y2[0]
+        });
+        println!("{}  [{:.2} µs/col]", r_loop.report(), r_loop.median_us() / batch as f64);
+        suite.push(
+            &r_loop,
+            &[
+                ("batch", batch as f64),
+                ("threads", 1.0),
+                ("per_col_us", r_loop.median_us() / batch as f64),
+            ],
+        );
+        let mut thread_opts = vec![1usize];
+        if n_threads > 1 {
+            thread_opts.push(n_threads);
+        }
+        let mut yt = Mat::zeros(batch, n);
+        for &threads in &thread_opts {
+            let r = bench(&format!("gemm_into b={batch} t={threads}"), sweep_budget, || {
+                packed.gemm_into(&xt, &mut yt, threads, &mut scratch);
+                yt.data[0]
+            });
+            println!("{}  [{:.2} µs/col]", r.report(), r.median_us() / batch as f64);
+            if threads == 1 && batch >= 8 {
+                let ratio = r_loop.median_us() / r.median_us();
+                println!("    decode amortization vs per-column gemv: {ratio:.2}x");
+                if batch >= 32 {
+                    amortization_checked = true;
+                    amortization_ok &= ratio >= 3.0;
+                }
+            }
+            suite.push(
+                &r,
+                &[
+                    ("batch", batch as f64),
+                    ("threads", threads as f64),
+                    ("per_col_us", r.median_us() / batch as f64),
+                ],
+            );
+        }
+        let mut yt4 = Mat::zeros(batch, n);
+        let r4 = bench(&format!("int4 gemm_into b={batch} t=1"), sweep_budget, || {
+            int4.gemm_into(&xt, &mut yt4, 1, &mut scratch);
+            yt4.data[0]
+        });
+        println!("{}  [{:.2} µs/col]", r4.report(), r4.median_us() / batch as f64);
+        suite.push(
+            &r4,
+            &[
+                ("batch", batch as f64),
+                ("threads", 1.0),
+                ("per_col_us", r4.median_us() / batch as f64),
+            ],
+        );
+    }
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_gemm.json");
+    println!(
+        "\namortization acceptance (gemm_into ≥ 3x per-column gemv at batch ≥ 32, 1 thread): {}",
+        if amortization_checked && amortization_ok {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+    match suite.write_json(&json_path) {
+        Ok(()) => println!("wrote {} ({} records)", json_path.display(), suite.len()),
+        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+    }
 
     // --- rotations ---
     println!("\n## rotations");

@@ -8,6 +8,7 @@
 //! per block), so the bytes touched per token scale with the quantized
 //! payload.
 
+use crate::lattice::e8::D;
 use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector};
 
 /// Per-(layer, head) append-only quantized vector store.
@@ -130,7 +131,12 @@ impl KvCache {
 
     /// Attention scores q·k_t for every cached position (pre-softmax,
     /// unscaled). For the Nest variant the key decode runs on the coded
-    /// form — the memory-bound path the paper optimizes.
+    /// form — the memory-bound path the paper optimizes — streaming
+    /// block-by-block through fixed stack scratch instead of
+    /// materializing a dequantized `Vec<f32>` per key per token. With an
+    /// M-variant codec the per-block decode is all-integer
+    /// (`quant::qgemm::decode_block_i32`), so the bytes *and* the
+    /// arithmetic touched per cached key stay on the quantized payload.
     pub fn scores(&self, layer: usize, head: usize, qvec: &[f32], out: &mut Vec<f32>) {
         out.clear();
         match self {
@@ -140,9 +146,46 @@ impl KvCache {
                 }
             }
             KvCache::Nest { k_nq, keys, .. } => {
-                for i in 0..keys[layer][head].len() {
-                    let k = k_nq.dequantize(keys[layer][head].get(i));
-                    out.push(crate::util::stats::dot(qvec, &k) as f32);
+                let store = &keys[layer][head];
+                let q = k_nq.q() as i32;
+                // strength-reduced branch-free decode (magic-multiply
+                // division) — the same hot-path decoder as the packed
+                // GEMV; exact for q ≤ 16 (`magic_division_exact`)
+                let use_int = k_nq.codec.m_variant && q <= 16;
+                let consts = crate::quant::qgemm::DecodeConsts::new(q);
+                let mut c = [0u8; D];
+                let mut e = [0i32; D];
+                for i in 0..store.len() {
+                    let kv = store.get(i);
+                    if kv.scale == 0.0 {
+                        out.push(0.0);
+                        continue;
+                    }
+                    debug_assert_eq!(kv.n, qvec.len());
+                    let denorm = (kv.scale / (kv.n as f32).sqrt()) as f64;
+                    let mut acc = 0f64;
+                    for j in 0..kv.n / D {
+                        c.copy_from_slice(&kv.codes[j * D..(j + 1) * D]);
+                        let xb = &qvec[j * D..(j + 1) * D];
+                        if use_int {
+                            // integer decode in half units; β/2 applied
+                            // per block, matching PackedNestMatrix
+                            consts.decode(&c, &mut e);
+                            let mut d = 0f32;
+                            for ii in 0..D {
+                                d += e[ii] as f32 * xb[ii];
+                            }
+                            acc += (d * 0.5 * k_nq.betas[kv.beta_idx[j] as usize]) as f64;
+                        } else {
+                            let rec = k_nq.decode_block(&c, kv.beta_idx[j]);
+                            let mut d = 0f32;
+                            for ii in 0..D {
+                                d += rec[ii] * xb[ii];
+                            }
+                            acc += d as f64;
+                        }
+                    }
+                    out.push((acc * denorm) as f32);
                 }
             }
         }
@@ -209,6 +252,44 @@ mod tests {
                 (s - exact).abs() < 0.35 * (1.0 + exact.abs()),
                 "score {i}: {s} vs {exact}"
             );
+        }
+    }
+
+    #[test]
+    fn streaming_scores_match_dequantized_reference() {
+        // the block-streaming score path (integer decode for M-variant,
+        // float for plain) must agree with dequantize-then-dot on the
+        // same coded entries to float tolerance.
+        let mut rng = Rng::new(1704);
+        for m_variant in [false, true] {
+            let betas = vec![0.25, 0.32, 0.45, 1.0];
+            let nq = if m_variant {
+                NestedLatticeQuantizer::new_m(14, betas)
+            } else {
+                NestedLatticeQuantizer::new(14, betas)
+            };
+            let mut cache = KvCache::new_nest(1, 1, nq.clone(), nq.clone());
+            let dh = 32;
+            for _ in 0..12 {
+                let k = rng.gauss_vec(dh);
+                let v = rng.gauss_vec(dh);
+                cache.append(0, 0, &k, &v);
+            }
+            let qv = rng.gauss_vec(dh);
+            let mut scores = Vec::new();
+            cache.scores(0, 0, &qv, &mut scores);
+            assert_eq!(scores.len(), 12);
+            let KvCache::Nest { k_nq, keys, .. } = &cache else {
+                unreachable!()
+            };
+            for (i, &s) in scores.iter().enumerate() {
+                let dec = k_nq.dequantize(keys[0][0].get(i));
+                let expect = stats::dot(&qv, &dec) as f32;
+                assert!(
+                    (s - expect).abs() < 1e-4 * (1.0 + expect.abs()),
+                    "m_variant={m_variant} pos {i}: streaming {s} vs reference {expect}"
+                );
+            }
         }
     }
 

@@ -20,7 +20,9 @@
 //!   pass) used as the end-to-end evaluation target.
 //! * [`kvcache`] — the quantized KV-cache manager.
 //! * [`runtime`] — PJRT (xla crate) wrapper loading AOT-compiled HLO
-//!   artifacts produced by the Layer-2 JAX model.
+//!   artifacts produced by the Layer-2 JAX model. Gated behind the `xla`
+//!   cargo feature: the xla crate + PJRT CPU plugin are only present on
+//!   hosts provisioned with the AOT toolchain.
 //! * [`coordinator`] — serving coordinator: request router, dynamic
 //!   batcher, prefill/decode scheduler, metrics.
 //! * [`io`] — tensor file format + zstd/entropy coding of β side-information.
@@ -36,5 +38,6 @@ pub mod lattice;
 pub mod model;
 pub mod quant;
 pub mod rotation;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod util;

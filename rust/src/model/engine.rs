@@ -20,8 +20,10 @@ use crate::lattice::nested::{NestedLatticeQuantizer, Strategy};
 use crate::lattice::voronoi::VoronoiCodec;
 use crate::model::forward::{gelu, rmsnorm, softmax_inplace, window_nll};
 use crate::model::weights::ModelWeights;
+use crate::quant::gemm::GemmScratch;
 use crate::quant::ldlq::hessian_from_activations;
 use crate::quant::matrix::QuantizedMatrix;
+use crate::quant::qgemm::PackedNestMatrix;
 use crate::quant::uniform::UniformQuantizer;
 use crate::rotation::Rotation;
 use crate::util::linalg::{matmul_into, Mat};
@@ -124,6 +126,10 @@ pub struct EngineOptions {
     pub rot_kind: RotKind,
     /// calibration windows used for Hessians / β DP
     pub calib_windows: usize,
+    /// serve M-variant nested linears through the packed integer GEMM
+    /// backend (`quant::qgemm::PackedNestMatrix::gemm_into`, decode
+    /// amortized over the sequence) instead of dequantized fp32 matmul
+    pub int_gemm: bool,
     pub seed: u64,
 }
 
@@ -141,17 +147,29 @@ impl Default for EngineOptions {
             auto_eps2: true,
             rot_kind: RotKind::Hadamard,
             calib_windows: 3,
+            int_gemm: true,
             seed: 0xC0FFEE,
         }
     }
 }
 
-/// One quantized linear layer: fake-quant dequantized weight (transposed
-/// for row-major GEMM), the rotation applied to its inputs at runtime, an
-/// optional activation quantizer, and storage accounting.
+/// One quantized linear layer: either the packed integer-decode backend
+/// (M-variant nested regimes) or a fake-quant dequantized weight
+/// (transposed for row-major GEMM), plus the rotation applied to its
+/// inputs at runtime, an optional activation quantizer, and storage
+/// accounting.
 pub struct QLinear {
-    /// dequantized (fake-quant) Wᵀ, (in, out) — the eval fast path
-    pub wt_deq: Mat,
+    /// output features (rows of W)
+    pub out_features: usize,
+    /// dequantized (fake-quant) Wᵀ, (in, out) — the fp fallback path.
+    /// `None` when the packed integer backend serves this site: keeping
+    /// the fp32 matrix resident alongside the ~4.25-bit codes would
+    /// forfeit the weight-memory win on the serving path.
+    pub wt_deq: Option<Mat>,
+    /// packed integer-decode backend (M-variant nested regimes): serves
+    /// `forward` through the decode-amortized GEMM instead of fp32
+    /// matmul over the dequantized weight
+    pub packed: Option<PackedNestMatrix>,
     /// input rotation (already folded into the stored weight)
     pub rot: Option<Rotation>,
     /// activation quantizer for this site (W+KV+A regime)
@@ -165,7 +183,10 @@ pub struct QLinear {
 
 impl QLinear {
     /// y = (x·R)·W̃ᵀ with optional activation quantization after rotation.
-    /// x (seq, in) → y (seq, out).
+    /// x (seq, in) → y (seq, out). When the packed integer backend is
+    /// present the product runs on coset codes end-to-end: single rows
+    /// (decode steps) through the integer GEMV, multi-row prefill
+    /// windows through the decode-amortized multithreaded GEMM.
     pub fn forward(&self, x: &Mat, quantize_acts: bool, uniform_act: Option<u32>) -> Mat {
         let mut xr = x.clone();
         if let Some(rot) = &self.rot {
@@ -185,15 +206,30 @@ impl QLinear {
                 }
             }
         }
-        let mut y = Mat::zeros(xr.rows, self.wt_deq.cols);
-        matmul_into(
-            &xr.data,
-            &self.wt_deq.data,
-            &mut y.data,
-            xr.rows,
-            xr.cols,
-            self.wt_deq.cols,
-        );
+        let mut y = Mat::zeros(xr.rows, self.out_features);
+        if let Some(packed) = &self.packed {
+            if xr.rows == 1 {
+                packed.gemv_into(xr.row(0), y.row_mut(0));
+            } else {
+                // spawning workers is only worth it for real prefill panels
+                let threads = if xr.rows >= 16 { 0 } else { 1 };
+                // per-thread scratch: prefill reuses the panel/staging
+                // buffers instead of reallocating them every linear
+                thread_local! {
+                    static SCRATCH: std::cell::RefCell<GemmScratch> =
+                        std::cell::RefCell::new(GemmScratch::new());
+                }
+                SCRATCH.with(|s| {
+                    packed.gemm_into(&xr, &mut y, threads, &mut s.borrow_mut())
+                });
+            }
+        } else {
+            let wt = self
+                .wt_deq
+                .as_ref()
+                .expect("QLinear without the integer backend must keep wt_deq");
+            matmul_into(&xr.data, &wt.data, &mut y.data, xr.rows, xr.cols, wt.cols);
+        }
         y
     }
 }
@@ -397,7 +433,9 @@ impl Engine {
 
         if !opts.regime.quantizes_weights() {
             return QLinear {
-                wt_deq: wrot.transpose(),
+                out_features: wrot.rows,
+                wt_deq: Some(wrot.transpose()),
+                packed: None,
                 rot: rot.clone(),
                 act_nq: None,
                 coded: None,
@@ -413,7 +451,9 @@ impl Engine {
                 let uq = UniformQuantizer::new(opts.uniform_bits);
                 let deq = uq.roundtrip_rows(&wrot);
                 QLinear {
-                    wt_deq: deq.transpose(),
+                    out_features: deq.rows,
+                    wt_deq: Some(deq.transpose()),
+                    packed: None,
                     rot: rot.clone(),
                     act_nq,
                     coded: None,
@@ -426,7 +466,9 @@ impl Engine {
                 let h = hessian_from_activations(&stats.acts, 0.01);
                 let deq = Self::uniform_ldlq(&wrot, &h, opts.uniform_bits);
                 QLinear {
-                    wt_deq: deq.transpose(),
+                    out_features: deq.rows,
+                    wt_deq: Some(deq.transpose()),
+                    packed: None,
                     rot: rot.clone(),
                     act_nq,
                     coded: None,
@@ -483,7 +525,17 @@ impl Engine {
                     );
                     (QuantizedMatrix::quantize(&wrot, &nq), nq)
                 };
-                let deq = qm.dequantize(&nq);
+                // integer GEMM backend: pack the LDLQ-chosen codes as-is
+                // (no re-quantization) whenever the M-variant decode
+                // oracle applies — forward then never touches fp32
+                // weights (the Table 4 runtime claim, wired end-to-end)
+                let packed = (opts.int_gemm && PackedNestMatrix::supports(&nq, qm.cols))
+                    .then(|| PackedNestMatrix::from_quantized(&qm, &nq));
+                // fp32 fallback only materialized when the integer
+                // backend doesn't serve this site
+                let wt_deq = packed
+                    .is_none()
+                    .then(|| qm.dequantize(&nq).transpose());
                 // bits accounting (Tables 1/3 columns)
                 let n_entries = qm.rows * qm.cols;
                 let bz = crate::io::sideinfo::bits_per_entry(
@@ -499,7 +551,9 @@ impl Engine {
                     qm.scales.len(),
                 );
                 QLinear {
-                    wt_deq: deq.transpose(),
+                    out_features: qm.rows,
+                    wt_deq,
+                    packed,
                     rot: rot.clone(),
                     act_nq,
                     coded: Some((qm, nq)),
@@ -1030,6 +1084,145 @@ mod tests {
         assert!(
             nest < rtn,
             "NestQuant {nest} should beat plain RTN {rtn} at 4 bits"
+        );
+    }
+
+    /// A synthetic random tiny model, so the integer-backend tests run
+    /// without the trained artifact (which the `load_tiny` tests skip on).
+    fn synth_weights() -> ModelWeights {
+        use crate::model::weights::LayerWeights;
+        let cfg = crate::model::ModelConfig {
+            vocab: 48,
+            ctx: 16,
+            d_model: 32,
+            n_layer: 1,
+            n_head: 2,
+            d_ff: 64,
+        };
+        let mut rng = crate::util::Rng::new(0xBEEF);
+        fn mat(rng: &mut crate::util::Rng, r: usize, c: usize, s: f32) -> Mat {
+            let mut m = Mat::from_vec(r, c, rng.gauss_vec(r * c));
+            m.scale(s);
+            m
+        }
+        let layers = vec![LayerWeights {
+            ln1: vec![1.0; cfg.d_model],
+            ln2: vec![1.0; cfg.d_model],
+            wq: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
+            wk: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
+            wv: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
+            wo: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
+            w_up: mat(&mut rng, cfg.d_ff, cfg.d_model, 0.25),
+            w_down: mat(&mut rng, cfg.d_model, cfg.d_ff, 0.25),
+        }];
+        let tok_emb = mat(&mut rng, cfg.vocab, cfg.d_model, 0.5);
+        let pos_emb = mat(&mut rng, cfg.ctx, cfg.d_model, 0.1);
+        let head = mat(&mut rng, cfg.vocab, cfg.d_model, 0.25);
+        let toks = |rng: &mut crate::util::Rng, n: usize| -> Vec<i32> {
+            (0..n).map(|_| rng.below(cfg.vocab) as i32).collect()
+        };
+        let val_tokens = toks(&mut rng, 3 * (cfg.ctx + 1));
+        let calib_tokens = toks(&mut rng, 3 * (cfg.ctx + 1));
+        ModelWeights {
+            cfg,
+            tok_emb,
+            pos_emb,
+            head,
+            final_norm: vec![1.0; cfg.d_model],
+            layers,
+            val_tokens,
+            calib_tokens,
+        }
+    }
+
+    #[test]
+    fn m_variant_engine_runs_integer_gemm_path() {
+        // end-to-end: a NestQuantM engine must carry the packed integer
+        // backend on every nested linear, and its prefill forward (which
+        // routes through PackedNestMatrix::gemm_into) must agree with the
+        // fake-quant fp32 path on the identical codes.
+        let w = synth_weights();
+        let base = EngineOptions {
+            method: Method::NestQuantM,
+            regime: Regime::W,
+            calib_windows: 1,
+            ..Default::default()
+        };
+        let int_eng = Engine::build(&w, base.clone());
+        for l in &int_eng.layers {
+            for lin in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_up, &l.w_down] {
+                assert!(lin.packed.is_some(), "integer backend missing on a linear");
+            }
+        }
+        assert!(int_eng.head.packed.is_some(), "integer backend missing on head");
+        let fake_eng = Engine::build(
+            &w,
+            EngineOptions {
+                int_gemm: false,
+                ..base
+            },
+        );
+        assert!(fake_eng.layers[0].wq.packed.is_none());
+        let toks: Vec<i32> = w.val_tokens[..12].to_vec();
+        let a = int_eng.forward_window(&toks);
+        let b = fake_eng.forward_window(&toks);
+        assert_eq!(a.data.len(), b.data.len());
+        for i in 0..a.data.len() {
+            assert!(
+                (a.data[i] - b.data[i]).abs() < 1e-2 * (1.0 + b.data[i].abs()),
+                "integer vs fake-quant logits diverge at {i}: {} vs {}",
+                a.data[i],
+                b.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn non_m_methods_do_not_get_integer_backend() {
+        // the packed decode oracle is NestQuantM-specific; plain NestQuant
+        // and the uniform baselines must stay on the fp32 path.
+        let w = synth_weights();
+        for method in [Method::NestQuant, Method::Rtn] {
+            let eng = Engine::build(
+                &w,
+                EngineOptions {
+                    method,
+                    regime: Regime::W,
+                    calib_windows: 1,
+                    ..Default::default()
+                },
+            );
+            assert!(
+                eng.layers[0].wq.packed.is_none(),
+                "{:?} must not use the M-variant integer backend",
+                method
+            );
+        }
+    }
+
+    #[test]
+    fn integer_backend_ppl_matches_fake_quant_on_tiny() {
+        // same codes, two execution backends: perplexities must agree to
+        // float-accumulation tolerance on the trained tiny artifact.
+        let Some(w) = load_tiny() else { return };
+        let base = EngineOptions {
+            method: Method::NestQuantM,
+            regime: Regime::W,
+            calib_windows: 2,
+            ..Default::default()
+        };
+        let int_ppl = Engine::build(&w, base.clone()).eval_ppl(&w.val_tokens, 4);
+        let fake_ppl = Engine::build(
+            &w,
+            EngineOptions {
+                int_gemm: false,
+                ..base
+            },
+        )
+        .eval_ppl(&w.val_tokens, 4);
+        assert!(
+            (int_ppl / fake_ppl - 1.0).abs() < 0.02,
+            "integer-backend ppl {int_ppl} vs fake-quant ppl {fake_ppl}"
         );
     }
 

@@ -5,12 +5,16 @@
 //! * [`qgemm`] — quantized GEMV/GEMM: decode-on-the-fly dot products,
 //!   packed 4-bit storage, and the integer-accumulation path (§3
 //!   "Using int8-multipliers", Appendix E).
+//! * [`gemm`] — the decode-amortized GEMM kernel core shared by the
+//!   packed formats: activation-panel packing, the 8×NC microkernel, and
+//!   the row-partitioned `std::thread::scope` driver.
 //! * [`uniform`] — the uniform scalar baseline with L∞ scaling (cubic
 //!   shaping; what SpinQuant/QuaRot use) and packed int4 GEMV.
 //! * [`ldlq`] — LDLQ feedback weight quantization (§4.5, Appendix B).
 //! * [`qaldlq`] — QA-LDLQ for quantized activations (Lemma 4.2) and the
 //!   amplification-ratio diagnostics of Appendix B.
 
+pub mod gemm;
 pub mod ldlq;
 pub mod matrix;
 pub mod qaldlq;

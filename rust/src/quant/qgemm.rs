@@ -18,6 +18,8 @@
 //! The parity-fix position is fixed to coordinate 0 (NestQuantM decode,
 //! Appendix D) and matches `lattice::e8::nearest_e8_m` bit-for-bit.
 
+use super::gemm::{self, GemmScratch};
+use super::matrix::QuantizedMatrix;
 use crate::lattice::e8::D;
 use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector};
 use crate::util::linalg::Mat;
@@ -137,8 +139,23 @@ pub struct PackedNestMatrix {
 }
 
 impl PackedNestMatrix {
+    /// Whether a quantizer/shape pair is representable in packed 4-bit
+    /// storage (the engine's eligibility check for the integer backend).
+    pub fn supports(nq: &NestedLatticeQuantizer, cols: usize) -> bool {
+        nq.q() <= 16 && nq.k() <= 4 && nq.codec.m_variant && cols % D == 0 && cols > 0
+    }
+
     /// Quantize `m` with the given quantizer (q ≤ 16, k ≤ 4 required).
     pub fn quantize(m: &Mat, nq: &NestedLatticeQuantizer) -> Self {
+        let qm = QuantizedMatrix::quantize(m, nq);
+        Self::from_quantized(&qm, nq)
+    }
+
+    /// Pack an already-quantized matrix without re-quantizing: the
+    /// engine's (QA-)LDLQ path chooses the codes, so packing must keep
+    /// them bit-for-bit (re-running Algorithm 3 would discard the
+    /// feedback corrections).
+    pub fn from_quantized(qm: &QuantizedMatrix, nq: &NestedLatticeQuantizer) -> Self {
         assert!(nq.q() <= 16, "packed storage requires q ≤ 16");
         assert!(nq.k() <= 4, "packed storage requires k ≤ 4");
         assert!(
@@ -146,13 +163,12 @@ impl PackedNestMatrix {
             "packed GEMV decodes with the NestQuantM oracle; quantize with \
              NestedLatticeQuantizer::new_m so overload checks match"
         );
-        assert_eq!(m.cols % D, 0, "cols must be divisible by 8");
-        let qm = super::matrix::QuantizedMatrix::quantize(m, nq);
-        let mut codes = vec![0u8; m.rows * m.cols / 2];
+        assert_eq!(qm.cols % D, 0, "cols must be divisible by 8");
+        let mut codes = vec![0u8; qm.rows * qm.cols / 2];
         for (i, pair) in qm.codes.chunks_exact(2).enumerate() {
             codes[i] = pair[0] | (pair[1] << 4);
         }
-        let blocks = m.rows * m.cols / D;
+        let blocks = qm.rows * qm.cols / D;
         let mut beta_idx = vec![0u8; blocks.div_ceil(4)];
         for (i, &b) in qm.beta_idx.iter().enumerate() {
             beta_idx[i / 4] |= b << (2 * (i % 4));
@@ -164,11 +180,11 @@ impl PackedNestMatrix {
         let row_scale = qm
             .scales
             .iter()
-            .map(|&s| s / (m.cols as f32).sqrt())
+            .map(|&s| s / (qm.cols as f32).sqrt())
             .collect();
         PackedNestMatrix {
-            rows: m.rows,
-            cols: m.cols,
+            rows: qm.rows,
+            cols: qm.cols,
             q: nq.q() as i32,
             beta_half,
             codes,
@@ -219,6 +235,63 @@ impl PackedNestMatrix {
             }
             y[r] = acc * self.row_scale[r];
         }
+    }
+
+    /// Decode weight row `r` into half-unit integers (`ebuf`, `cols`
+    /// entries) and the per-block β_t/2 multipliers (`bscale`, cols/8
+    /// entries) — one decode per 8-block, shared by every activation
+    /// column of a GEMM panel.
+    fn decode_row(&self, r: usize, consts: DecodeConsts, ebuf: &mut [i16], bscale: &mut [f32]) {
+        let bpr = self.cols / D;
+        let code_bytes_per_row = self.cols / 2;
+        let crow = &self.codes[r * code_bytes_per_row..(r + 1) * code_bytes_per_row];
+        let mut cbuf = [0u8; D];
+        let mut e = [0i32; D];
+        for j in 0..bpr {
+            for b in 0..4 {
+                let byte = crow[j * 4 + b];
+                cbuf[2 * b] = byte & 0x0F;
+                cbuf[2 * b + 1] = byte >> 4;
+            }
+            consts.decode(&cbuf, &mut e);
+            for i in 0..D {
+                ebuf[j * D + i] = e[i] as i16;
+            }
+            let bidx = r * bpr + j;
+            bscale[j] = self.beta_half
+                [((self.beta_idx[bidx / 4] >> (2 * (bidx % 4))) & 0x3) as usize];
+        }
+    }
+
+    /// Batched GEMM, Y = X·Wᵀ: `xt` is (batch, cols) row-major — one
+    /// activation vector per row, the engine's (seq, d) layout — and `yt`
+    /// is (batch, rows). Each packed 8-block is decoded **once** per call
+    /// into an i16 row buffer and multiplied against the whole activation
+    /// panel (decode-amortized; EXPERIMENTS.md §Perf), with weight rows
+    /// partitioned across `std::thread::scope` workers (`threads == 0`
+    /// uses all available cores). Results are bit-for-bit identical to
+    /// calling [`Self::gemv_into`] once per batch row.
+    pub fn gemm_into(&self, xt: &Mat, yt: &mut Mat, threads: usize, scratch: &mut GemmScratch) {
+        let consts = DecodeConsts::new(self.q);
+        gemm::gemm_driver(
+            self.rows,
+            self.cols,
+            xt,
+            yt,
+            threads,
+            scratch,
+            |r, ebuf, bscale| {
+                self.decode_row(r, consts, ebuf, bscale);
+                self.row_scale[r]
+            },
+        );
+    }
+
+    /// Allocating convenience wrapper over [`Self::gemm_into`].
+    pub fn gemm(&self, xt: &Mat, threads: usize) -> Mat {
+        let mut yt = Mat::zeros(xt.rows, self.rows);
+        self.gemm_into(xt, &mut yt, threads, &mut GemmScratch::new());
+        yt
     }
 
     /// Payload bytes actually touched per GEMV (the memory-bound metric).
@@ -360,17 +433,13 @@ mod tests {
 
     #[test]
     fn magic_division_exact() {
-        // floor(t/m) via magic multiply must be exact over the full t range
-        // (t = G·c < 256 for codes < 16; we verify far beyond).
+        // floor(t/m) via the magic multiply must be exact over the full t
+        // range (t = G·c < 256 for codes < 16; we verify far beyond),
+        // asserted through the actual hot-path entry point.
         for q in 2..=16i32 {
             let c = DecodeConsts::new(q);
             for t in 0..4096i32 {
-                assert_eq!(
-                    ((t as u32 * ((1u32 << 21).div_ceil(2 * q as u32))) >> 21) as i32,
-                    t / (2 * q),
-                    "q={q} t={t}"
-                );
-                let _ = c;
+                assert_eq!(c.div_m(t), t / (2 * q), "q={q} t={t}");
             }
         }
     }
@@ -390,6 +459,101 @@ mod tests {
                 assert_eq!(out, decode_block_i32(&c, q), "q={q} c={c:?}");
             }
         }
+    }
+
+    #[test]
+    fn gemm_matches_per_column_gemv_bitexact() {
+        // The decode-amortized GEMM must be a pure reassociation-free
+        // batching of the scalar GEMV: identical f32 operation sequence
+        // per output element, hence bit-for-bit equal results across
+        // shapes (incl. rows not divisible by the worker count), batch
+        // sizes (incl. non-multiples of the panel width), and threads.
+        propcheck::check("gemm-vs-gemv-bitexact", 5, 1108, |rng| {
+            let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+            for &(rows, cols) in &[(3usize, 16usize), (8, 64), (17, 40)] {
+                let m = Mat::from_vec(rows, cols, rng.gauss_vec(rows * cols));
+                let packed = PackedNestMatrix::quantize(&m, &nq);
+                for &batch in &[1usize, 5, 16, 33] {
+                    let xt = Mat::from_vec(batch, cols, rng.gauss_vec(batch * cols));
+                    for &threads in &[1usize, 3] {
+                        let yt = packed.gemm(&xt, threads);
+                        let mut y = vec![0f32; rows];
+                        for c in 0..batch {
+                            packed.gemv_into(xt.row(c), &mut y);
+                            for r in 0..rows {
+                                if yt[(c, r)].to_bits() != y[r].to_bits() {
+                                    return Err(format!(
+                                        "({rows}x{cols}) batch={batch} threads={threads} \
+                                         col {c} row {r}: gemm {} vs gemv {}",
+                                        yt[(c, r)],
+                                        y[r]
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_scratch_reuse_across_shapes() {
+        // scratch buffers are resized per call; stale contents from a
+        // larger previous shape must not leak into smaller results.
+        let mut rng = Rng::new(1109);
+        let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+        let mut scratch = GemmScratch::new();
+        for &(rows, cols, batch) in &[(12usize, 64usize, 40usize), (5, 24, 3), (9, 48, 17)] {
+            let m = Mat::from_vec(rows, cols, rng.gauss_vec(rows * cols));
+            let packed = PackedNestMatrix::quantize(&m, &nq);
+            let xt = Mat::from_vec(batch, cols, rng.gauss_vec(batch * cols));
+            let mut yt = Mat::zeros(batch, rows);
+            packed.gemm_into(&xt, &mut yt, 2, &mut scratch);
+            let mut y = vec![0f32; rows];
+            for c in 0..batch {
+                packed.gemv_into(xt.row(c), &mut y);
+                for r in 0..rows {
+                    assert_eq!(
+                        yt[(c, r)].to_bits(),
+                        y[r].to_bits(),
+                        "({rows}x{cols}) b={batch} c={c} r={r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_empty_batch_is_noop() {
+        let mut rng = Rng::new(1110);
+        let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+        let m = Mat::from_vec(8, 16, rng.gauss_vec(128));
+        let packed = PackedNestMatrix::quantize(&m, &nq);
+        let xt = Mat::zeros(0, 16);
+        let yt = packed.gemm(&xt, 4);
+        assert_eq!(yt.rows, 0);
+        assert!(yt.data.is_empty());
+    }
+
+    #[test]
+    fn from_quantized_preserves_ldlq_codes() {
+        // the engine path: LDLQ picks the codes, packing must not
+        // re-quantize — the packed GEMV must match the dequantized
+        // LDLQ matrix, not Algorithm 3 re-applied to it.
+        let mut rng = Rng::new(1111);
+        let w = Mat::from_vec(16, 32, rng.gauss_vec(512));
+        let acts = Mat::from_vec(64, 32, rng.gauss_vec(64 * 32));
+        let h = crate::quant::ldlq::hessian_from_activations(&acts, 0.01);
+        let (qm, nq) =
+            crate::quant::ldlq::ldlq_quantize_adaptive(&w, &h, 14, 4, 3.0 / 14.0, true);
+        let packed = PackedNestMatrix::from_quantized(&qm, &nq);
+        let deq = qm.dequantize(&nq);
+        let x = rng.gauss_vec(32);
+        let fast = packed.gemv(&x);
+        let slow = deq.matvec(&x);
+        propcheck::assert_close(&fast, &slow, 1e-4, 1e-3).unwrap();
     }
 
     #[test]

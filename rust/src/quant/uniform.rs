@@ -4,6 +4,7 @@
 //! by the vector's max magnitude. Also provides the packed-int4 GEMV used
 //! as the Table 4 runtime comparator.
 
+use super::gemm::{self, GemmScratch};
 use crate::util::linalg::Mat;
 
 /// Symmetric uniform quantizer at `bits` bits per entry.
@@ -101,9 +102,18 @@ impl PackedInt4Matrix {
 
     /// y = W·x, unpacking nibbles on the fly (memory-bound fast path).
     pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.cols);
-        let half = self.cols / 2;
         let mut y = vec![0f32; self.rows];
+        self.gemv_into(x, &mut y);
+        y
+    }
+
+    /// [`Self::gemv`] into a caller-provided buffer — the Table 4
+    /// comparator must not pay a per-call allocation, or the runtime
+    /// comparison against the NestQuant path is skewed.
+    pub fn gemv_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let half = self.cols / 2;
         for r in 0..self.rows {
             let row = &self.packed[r * half..(r + 1) * half];
             let mut acc = 0f32;
@@ -114,7 +124,39 @@ impl PackedInt4Matrix {
             }
             y[r] = acc * self.deltas[r];
         }
-        y
+    }
+
+    /// Decode-amortized batched GEMM over the same panel kernel as the
+    /// NestQuant path (`quant::gemm`): each weight row's nibbles are
+    /// unpacked once and multiplied against the whole activation panel.
+    /// `xt` is (batch, cols) row-major, `yt` (batch, rows); requires
+    /// cols divisible by 8. `threads == 0` uses all available cores.
+    pub fn gemm_into(&self, xt: &Mat, yt: &mut Mat, threads: usize, scratch: &mut GemmScratch) {
+        let half = self.cols / 2;
+        gemm::gemm_driver(
+            self.rows,
+            self.cols,
+            xt,
+            yt,
+            threads,
+            scratch,
+            |r, ebuf, bscale| {
+                let row = &self.packed[r * half..(r + 1) * half];
+                for (i, &b) in row.iter().enumerate() {
+                    ebuf[2 * i] = (b & 0x0F) as i16 - 8;
+                    ebuf[2 * i + 1] = (b >> 4) as i16 - 8;
+                }
+                bscale.fill(1.0);
+                self.deltas[r]
+            },
+        );
+    }
+
+    /// Allocating convenience wrapper over [`Self::gemm_into`].
+    pub fn gemm(&self, xt: &Mat, threads: usize) -> Mat {
+        let mut yt = Mat::zeros(xt.rows, self.rows);
+        self.gemm_into(xt, &mut yt, threads, &mut GemmScratch::new());
+        yt
     }
 
     pub fn payload_bytes(&self) -> usize {
@@ -210,6 +252,39 @@ mod tests {
             let deq = uq.roundtrip_rows(&m);
             let expect = deq.matvec(&x);
             propcheck::assert_close(&y, &expect, 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn int4_gemv_into_matches_gemv() {
+        let mut rng = Rng::new(1007);
+        let m = crate::util::linalg::Mat::from_vec(6, 40, rng.gauss_vec(240));
+        let packed = PackedInt4Matrix::quantize(&m);
+        let x = rng.gauss_vec(40);
+        let a = packed.gemv(&x);
+        let mut b = vec![0f32; 6];
+        packed.gemv_into(&x, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn int4_gemm_matches_per_column_gemv() {
+        propcheck::check("int4-gemm-vs-gemv", 8, 1008, |rng| {
+            let m = crate::util::linalg::Mat::from_vec(9, 48, rng.gauss_vec(9 * 48));
+            let packed = PackedInt4Matrix::quantize(&m);
+            for &batch in &[1usize, 4, 19] {
+                let xt =
+                    crate::util::linalg::Mat::from_vec(batch, 48, rng.gauss_vec(batch * 48));
+                for &threads in &[1usize, 2] {
+                    let yt = packed.gemm(&xt, threads);
+                    let mut y = vec![0f32; 9];
+                    for c in 0..batch {
+                        packed.gemv_into(xt.row(c), &mut y);
+                        propcheck::assert_close(yt.row(c), &y, 1e-4, 1e-3)?;
+                    }
+                }
+            }
+            Ok(())
         });
     }
 

@@ -84,6 +84,92 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Machine-readable bench output: a named suite of [`BenchResult`]s with
+/// numeric tags (batch size, thread count, derived per-column costs…),
+/// serialized as JSON so the perf trajectory is trackable across PRs
+/// (`bench_main` writes the GEMV/GEMM suite to `BENCH_gemm.json`).
+/// Hand-rolled writer — serde is unavailable in the offline vendor set.
+pub struct BenchSuite {
+    pub name: String,
+    records: Vec<(BenchResult, Vec<(String, f64)>)>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        BenchSuite {
+            name: name.to_string(),
+            records: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Record one result with numeric tags attached.
+    pub fn push(&mut self, r: &BenchResult, tags: &[(&str, f64)]) {
+        self.records.push((
+            r.clone(),
+            tags.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        ));
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(&self.name)));
+        s.push_str("  \"results\": [\n");
+        for (i, (r, tags)) in self.records.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_us\": {}, \"mad_us\": {}, \"iters\": {}",
+                json_escape(&r.name),
+                json_num(r.median_us()),
+                json_num(r.mad.as_secs_f64() * 1e6),
+                r.iters
+            ));
+            for (k, v) in tags {
+                s.push_str(&format!(", \"{}\": {}", json_escape(k), json_num(*v)));
+            }
+            s.push('}');
+            if i + 1 < self.records.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +193,33 @@ mod tests {
             iters: 10,
         };
         assert!(r.report().contains("µs/iter"));
+    }
+
+    #[test]
+    fn suite_serializes_json() {
+        let r = BenchResult {
+            name: "gemm \"fast\"".into(),
+            median: Duration::from_micros(100),
+            mad: Duration::from_micros(2),
+            iters: 30,
+        };
+        let mut suite = BenchSuite::new("gemm");
+        suite.push(&r, &[("batch", 32.0), ("threads", 2.0)]);
+        suite.push(&r, &[("batch", 1.0)]);
+        assert_eq!(suite.len(), 2);
+        let j = suite.to_json();
+        assert!(j.contains("\"suite\": \"gemm\""));
+        assert!(j.contains("\\\"fast\\\""), "quotes must be escaped: {j}");
+        assert!(j.contains("\"median_us\": 100.000000"));
+        assert!(j.contains("\"batch\": 32.000000"));
+        assert!(j.contains("\"threads\": 2.000000"));
+        // balanced braces/brackets as a cheap well-formedness proxy
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        // round-trip to disk
+        let p = std::env::temp_dir().join("nqt_bench_suite_test.json");
+        suite.write_json(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), j);
+        std::fs::remove_file(&p).ok();
     }
 }
