@@ -1,15 +1,18 @@
 # NestQuant reproduction — top-level entry points.
 #
-#   make build   release build of the rust crate
-#   make test    tier-1 test suite (cargo test -q)
-#   make bench   perf suite -> bench_output.txt + BENCH_gemm.json
-#   make clean   remove build artifacts
+#   make build        release build of the rust crate
+#   make test         tier-1 test suite (cargo test -q)
+#   make bench        full perf suite -> bench_output.txt + BENCH_gemm.json
+#                     + BENCH_serve.json
+#   make bench-serve  multi-session serving sweep only -> BENCH_serve.json
+#   make ci           fmt-check + build + test (what a CI job runs)
+#   make clean        remove build artifacts
 #
 # The python layer (training + AOT lowering, `make artifacts`) is only
 # needed for the artifact-gated integration tests; the rust suite skips
 # those gracefully when artifacts/ is absent.
 
-.PHONY: build test bench artifacts clean
+.PHONY: build test bench bench-serve fmt-check ci artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -17,15 +20,24 @@ build:
 test:
 	cd rust && cargo test -q
 
+fmt-check:
+	cd rust && cargo fmt --check
+
+ci: fmt-check build test
+
 # no pipefail in POSIX sh: redirect, propagate the bench exit status,
 # then show the log — a crashed bench must not leave a "fresh" log
 bench:
 	cd rust && cargo bench --bench bench_main > ../bench_output.txt 2>&1 || { cat ../bench_output.txt; exit 1; }
 	@cat bench_output.txt
 
+bench-serve:
+	cd rust && cargo bench --bench bench_main -- serve > ../bench_serve_output.txt 2>&1 || { cat ../bench_serve_output.txt; exit 1; }
+	@cat bench_serve_output.txt
+
 artifacts:
 	cd python && python -m compile.train && python -m compile.aot
 
 clean:
 	cd rust && cargo clean
-	rm -f bench_output.txt
+	rm -f bench_output.txt bench_serve_output.txt

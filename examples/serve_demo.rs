@@ -37,6 +37,7 @@ fn main() -> Result<()> {
                 max_batch: 4,
                 max_wait: std::time::Duration::from_millis(3),
             },
+            ..Default::default()
         },
     );
 
@@ -66,6 +67,14 @@ fn main() -> Result<()> {
     }
     println!("completed {total} requests in {:.2}s", t0.elapsed().as_secs_f64());
     println!("{}", srv.metrics.report());
+    if let Some(p) = srv.metrics.pool_stats() {
+        println!(
+            "kv pool: {} pages live, {} cached for prefix reuse, hit rate {:.1}%",
+            p.pages_in_use,
+            p.cached_pages,
+            100.0 * p.prefix_hit_rate()
+        );
+    }
     if !nlls.is_empty() {
         let mean = nlls.iter().sum::<f64>() / nlls.len() as f64;
         println!("scored windows: mean nll {mean:.4} (ppl {:.3})", mean.exp());

@@ -6,10 +6,16 @@
 //!   {1, all cores}, against the per-column GEMV baseline
 //! * lattice primitive micro-benches (encode / decode / Alg. 4 dot)
 //! * rotation and KV-cache hot paths
+//! * the multi-session serving sweep over the paged KV pool: sessions
+//!   {1, 8, 32} × shared-prefix {0%, 50%, 90%}, reporting tokens/s,
+//!   pool bytes and prefix hit rate
 //!
-//! Output is captured by `make bench` into bench_output.txt; the
-//! GEMV/GEMM suite is additionally serialized to BENCH_gemm.json at the
-//! repo root for cross-PR perf tracking (schema: EXPERIMENTS.md §Perf).
+//! Sections are selectable by argument (`-- core` / `-- serve`; no
+//! argument runs everything): `make bench` captures the full output into
+//! bench_output.txt, `make bench-serve` runs only the serving sweep.
+//! The GEMV/GEMM suite is serialized to BENCH_gemm.json and the serving
+//! sweep to BENCH_serve.json at the repo root for cross-PR perf
+//! tracking (schema: EXPERIMENTS.md §Perf / §Serving).
 
 use nestquant::lattice::nested::NestedLatticeQuantizer;
 use nestquant::lattice::voronoi::VoronoiCodec;
@@ -23,6 +29,25 @@ use nestquant::util::Rng;
 use std::time::Duration;
 
 fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    const SECTIONS: [&str; 2] = ["core", "serve"];
+    if let Some(bad) = args.iter().find(|a| !SECTIONS.contains(&a.as_str())) {
+        eprintln!("unknown bench section '{bad}' (available: {SECTIONS:?})");
+        std::process::exit(2);
+    }
+    let run = |name: &str| args.is_empty() || args.iter().any(|a| a == name);
+    if run("core") {
+        core_benches();
+    }
+    if run("serve") {
+        serve_benches();
+    }
+}
+
+fn core_benches() {
     let budget = Duration::from_millis(800);
     let mut rng = Rng::new(42);
     println!("# nestquant benches (1 CPU core)\n");
@@ -243,5 +268,116 @@ fn main() {
         scores[0]
     });
     println!("{}", r.report());
+    let probs = vec![1.0 / 128.0; 128];
+    let mut wsum = vec![0f32; 64];
+    let r = bench("KV weighted value sum, 128 pos × 64 dim", budget, || {
+        cache.weighted_value_sum(0, 0, &probs, &mut wsum);
+        wsum[0]
+    });
+    println!("{}", r.report());
     black_box(&scores);
+}
+
+/// Multi-session serving over the shared paged KV pool: sessions
+/// {1, 8, 32} × shared-prefix {0%, 50%, 90%} on a synthetic NestQuantM
+/// W+KV engine. Each iteration serves the whole session set against a
+/// fresh pool, so prefix hits are exactly the within-set sharing (the
+/// first session misses, later ones map the common pages). Reports
+/// tokens/s, the pool's post-serve byte footprint, and the prefix hit
+/// rate; serialized to BENCH_serve.json.
+fn serve_benches() {
+    use nestquant::coordinator::generator::GenSession;
+    use nestquant::kvpool::{PoolConfig, PoolStats};
+    use nestquant::model::engine::{Engine, EngineOptions, Method, Regime};
+    use nestquant::model::weights::ModelWeights;
+
+    println!("\n## multi-session serving: paged KV pool sweep");
+    let cfg = nestquant::model::ModelConfig {
+        vocab: 64,
+        ctx: 96,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+    };
+    let w = ModelWeights::synthetic(cfg, 0x5E12E);
+    let eng = Engine::build(
+        &w,
+        EngineOptions {
+            method: Method::NestQuantM,
+            regime: Regime::WKv,
+            calib_windows: 1,
+            ..Default::default()
+        },
+    );
+    let mut suite = BenchSuite::new("serve_multisession_pool");
+    let budget = Duration::from_millis(600);
+    let prompt_len = 40usize;
+    let n_new = 8usize;
+    for &sessions in &[1usize, 8, 32] {
+        for &share in &[0.0f64, 0.5, 0.9] {
+            let shared = (prompt_len as f64 * share).round() as usize;
+            // prompts: a common `shared`-token prefix + distinct tails
+            let prompts: Vec<Vec<i32>> = (0..sessions)
+                .map(|s| {
+                    let mut p: Vec<i32> =
+                        (0..shared as i32).map(|i| (i * 3 + 1) % 64).collect();
+                    p.extend(
+                        (shared..prompt_len)
+                            .map(|i| (i as i32 * 7 + 11 * (s as i32 + 1)) % 64),
+                    );
+                    p
+                })
+                .collect();
+            let last_stats = std::cell::Cell::new(PoolStats::default());
+            let r = bench(
+                &format!("serve s={sessions} share={:.0}%", share * 100.0),
+                budget,
+                || {
+                    let pool = eng.kv_pool(PoolConfig::default()).expect("pooled engine");
+                    let mut total = 0usize;
+                    for p in &prompts {
+                        let mut sess = GenSession::new_in_pool(&eng, &pool);
+                        let mut logits = sess.prefill(p);
+                        for _ in 0..n_new {
+                            let next = GenSession::greedy(&logits);
+                            logits = sess.step(next);
+                        }
+                        total += p.len() + n_new;
+                    }
+                    last_stats.set(pool.stats());
+                    total
+                },
+            );
+            let st = last_stats.get();
+            let toks = sessions * (prompt_len + n_new);
+            let tok_s = toks as f64 / r.median.as_secs_f64();
+            println!(
+                "{}  [{:.0} tok/s, pool {:.1} KiB, prefix hit rate {:.2}]",
+                r.report(),
+                tok_s,
+                st.bytes_in_use as f64 / 1024.0,
+                st.prefix_hit_rate()
+            );
+            suite.push(
+                &r,
+                &[
+                    ("sessions", sessions as f64),
+                    ("share", share),
+                    ("tok_s", tok_s),
+                    ("pool_bytes", st.bytes_in_use as f64),
+                    ("pages_in_use", st.pages_in_use as f64),
+                    ("hit_rate", st.prefix_hit_rate()),
+                ],
+            );
+        }
+    }
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_serve.json");
+    match suite.write_json(&json_path) {
+        Ok(()) => println!("wrote {} ({} records)", json_path.display(), suite.len()),
+        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+    }
 }

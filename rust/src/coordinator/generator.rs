@@ -1,13 +1,20 @@
 //! Incremental generation session over a quantized [`Engine`]: one token
-//! per step, KV entries quantized on insertion (coded storage via
-//! [`KvCache`]), attention scored against decoded keys — the paper's
-//! memory-bound generation path.
+//! per step, KV entries quantized on insertion into a paged pool
+//! ([`crate::kvpool`] via [`KvCache`]), attention scored against the
+//! coded keys — the paper's memory-bound generation path.
+//!
+//! Sessions can share an `Arc<KvPool>` ([`GenSession::new_in_pool`]):
+//! prefill then maps any cached token prefix straight from the pool
+//! (zero forward/quantization work for matched positions) and decode
+//! steps publish completed pages back to the pool's prefix index.
 
 use crate::kvcache::KvCache;
+use crate::kvpool::{KvPool, PoolConfig};
 use crate::model::engine::Engine;
 use crate::model::forward::{gelu, rmsnorm, softmax_inplace};
 use crate::util::linalg::Mat;
 use crate::util::Rng;
+use std::sync::Arc;
 
 /// A single-stream generation session.
 pub struct GenSession<'a> {
@@ -17,22 +24,25 @@ pub struct GenSession<'a> {
 }
 
 impl<'a> GenSession<'a> {
+    /// A session with a private KV store (fp32, or a single-owner pool
+    /// with the engine's per-layer calibrated quantizers).
     pub fn new(eng: &'a Engine) -> Self {
-        let cfg = &eng.cfg;
-        let cache = if eng.opts.regime.quantizes_kv() {
-            // per-layer quantizers exist; the cache API takes one pair —
-            // use layer 0's calibrated quantizers as the shared dictionary
-            // (per-layer dictionaries differ marginally; layer-indexed
-            // caches would use `eng.layers[l].k_nq` directly).
-            let l0 = &eng.layers[0];
-            match (&l0.k_nq, &l0.v_nq) {
-                (Some(k), Some(v)) => KvCache::new_nest(cfg.n_layer, cfg.n_head, k.clone(), v.clone()),
-                _ => KvCache::new_fp(cfg.n_layer, cfg.n_head),
-            }
-        } else {
-            KvCache::new_fp(cfg.n_layer, cfg.n_head)
+        let cache = match eng.kv_pool(PoolConfig::default()) {
+            Some(pool) => KvCache::in_pool(&pool),
+            None => KvCache::new_fp(eng.cfg.n_layer, eng.cfg.n_head),
         };
         GenSession { eng, cache, pos: 0 }
+    }
+
+    /// A session drawing its KV pages from a shared pool — the
+    /// multi-session serving path (prefix sharing, byte budget, LRU
+    /// eviction all happen in the pool).
+    pub fn new_in_pool(eng: &'a Engine, pool: &Arc<KvPool>) -> Self {
+        GenSession {
+            eng,
+            cache: KvCache::in_pool(pool),
+            pos: 0,
+        }
     }
 
     pub fn position(&self) -> usize {
@@ -85,17 +95,13 @@ impl<'a> GenSession<'a> {
                     *s *= scale;
                 }
                 softmax_inplace(&mut scores);
-                let mut oh = vec![0f32; dh];
-                for (t, &p) in scores.iter().enumerate() {
-                    let vt = self.cache.value(li, h, t);
-                    for i in 0..dh {
-                        oh[i] += p * vt[i];
-                    }
-                }
+                // streaming value-weighted sum off the coded values —
+                // no per-position dequantize buffer on the decode path
+                let oh = &mut att_out[h * dh..(h + 1) * dh];
+                self.cache.weighted_value_sum(li, h, &scores, oh);
                 if let Some(r) = &l.head_rot {
-                    r.apply_t(&mut oh);
+                    r.apply_t(oh);
                 }
-                att_out[h * dh..(h + 1) * dh].copy_from_slice(&oh);
             }
             let att = l
                 .wo
@@ -115,12 +121,30 @@ impl<'a> GenSession<'a> {
                 x[i] += down.row(0)[i];
             }
         }
+        // the position is complete on every (layer, head) lane: publish
+        // it (freezes + registers pages at page boundaries)
+        self.cache.note_token(token);
         rmsnorm(&x, &eng.final_norm, &mut normed);
         let logits = eng
             .head
             .forward(&Mat::from_vec(1, d, normed.clone()), qa, ub);
         self.pos += 1;
         logits.data
+    }
+
+    /// Prefill a prompt: map the longest pool-cached prefix (at most
+    /// `prompt.len()-1` positions — the final token is always recomputed
+    /// so its logits exist), then step the remainder. Returns the logits
+    /// after the last prompt token (zeros for an empty prompt).
+    pub fn prefill(&mut self, prompt: &[i32]) -> Vec<f32> {
+        assert_eq!(self.pos, 0, "prefill on a fresh session only");
+        let matched = self.cache.match_prefix(prompt);
+        self.pos = matched;
+        let mut logits = vec![0f32; self.eng.cfg.vocab];
+        for &t in &prompt[matched..] {
+            logits = self.step(t);
+        }
+        logits
     }
 
     /// Greedy argmax sampling.
@@ -152,13 +176,26 @@ impl<'a> GenSession<'a> {
         probs.len() as i32 - 1
     }
 
-    /// Prefill a prompt, then generate `n_new` tokens greedily. Returns
-    /// the generated tokens.
+    /// Prefill a prompt (prefix-served from the pool when shared), then
+    /// generate `n_new` tokens greedily. Returns the generated tokens.
+    ///
+    /// On a session that has already consumed tokens, `prompt` extends
+    /// the stream; with an empty `prompt` the first greedy pick seeds
+    /// from zero logits (token 0) since the previous step's logits are
+    /// owned by the caller — pass them through [`Self::step`] yourself
+    /// for logits-continuous continuation.
     pub fn generate(&mut self, prompt: &[i32], n_new: usize) -> Vec<i32> {
-        let mut logits = vec![0f32; self.eng.cfg.vocab];
-        for &t in prompt {
-            logits = self.step(t);
-        }
+        let mut logits = if self.pos == 0 {
+            self.prefill(prompt)
+        } else {
+            // continuing an existing stream: prefix mapping only applies
+            // to fresh sessions, so step any extra prompt tokens directly
+            let mut logits = vec![0f32; self.eng.cfg.vocab];
+            for &t in prompt {
+                logits = self.step(t);
+            }
+            logits
+        };
         let mut out = Vec::with_capacity(n_new);
         for _ in 0..n_new {
             if self.pos >= self.eng.cfg.ctx {
@@ -175,7 +212,7 @@ impl<'a> GenSession<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::engine::{EngineOptions, Regime};
+    use crate::model::engine::{EngineOptions, Method, Regime};
     use crate::model::weights::{artifact_path, ModelWeights};
 
     fn load_tiny() -> Option<ModelWeights> {
@@ -232,5 +269,112 @@ mod tests {
         let fp_bytes = 2 * sess.position() * w.cfg.d_model * 4 * w.cfg.n_layer / w.cfg.n_head
             * w.cfg.n_head;
         assert!(bytes < fp_bytes / 3, "kv {bytes} vs fp {fp_bytes}");
+    }
+
+    #[test]
+    fn pooled_prefill_matches_cold_session_bitwise() {
+        // Two sessions sharing a ≥64-token prompt through one pool: the
+        // second must (a) map shared pages instead of re-quantizing,
+        // (b) produce bit-identical logits to the cold path, (c) use
+        // strictly less than 2× one session's pool bytes.
+        let cfg = crate::model::ModelConfig {
+            vocab: 48,
+            ctx: 96,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 64,
+        };
+        let w = ModelWeights::synthetic(cfg, 0xBEEF);
+        let eng = Engine::build(
+            &w,
+            EngineOptions {
+                method: Method::NestQuantM,
+                regime: Regime::WKv,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        );
+        let pool = eng.kv_pool(PoolConfig::default()).expect("W+KV engine must pool");
+        let vocab = cfg.vocab as i32;
+        let prompt: Vec<i32> = (0..64).map(|i| (i * 7 % vocab + i) % vocab).collect();
+
+        let mut a = GenSession::new_in_pool(&eng, &pool);
+        let la = a.prefill(&prompt);
+        let bytes_one = pool.stats().bytes_in_use;
+        assert!(pool.stats().prefix_hit_tokens == 0);
+
+        let mut b = GenSession::new_in_pool(&eng, &pool);
+        let lb = b.prefill(&prompt);
+        assert_eq!(b.position(), prompt.len());
+        let st = pool.stats();
+        assert!(
+            st.prefix_hit_tokens >= 48,
+            "expected ≥3 shared pages, stats {st:?}"
+        );
+        assert!(
+            st.bytes_in_use < 2 * bytes_one,
+            "sharing saved nothing: {} vs 2×{}",
+            st.bytes_in_use,
+            bytes_one
+        );
+        assert_eq!(la.len(), lb.len());
+        for (i, (x, y)) in la.iter().zip(&lb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "logit {i} diverges between shared and cold prefill: {x} vs {y}"
+            );
+        }
+        // and greedy decode stays bitwise-identical step by step (each
+        // step reads the caches — shared pages vs privately quantized)
+        let (mut ga, mut gb) = (la, lb);
+        for s in 0..8 {
+            let (ta, tb) = (GenSession::greedy(&ga), GenSession::greedy(&gb));
+            assert_eq!(ta, tb, "greedy token diverges at step {s}");
+            ga = a.step(ta);
+            gb = b.step(tb);
+            for (i, (x, y)) in ga.iter().zip(&gb).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "step {s} logit {i} diverges");
+            }
+        }
+    }
+
+    #[test]
+    fn per_layer_kv_quantizers_are_used() {
+        // the engine calibrates a quantizer pair per layer; the pool
+        // must carry each layer's own pair, not layer 0's for all
+        let cfg = crate::model::ModelConfig {
+            vocab: 48,
+            ctx: 32,
+            d_model: 32,
+            n_layer: 3,
+            n_head: 2,
+            d_ff: 64,
+        };
+        let w = ModelWeights::synthetic(cfg, 0xA11);
+        let eng = Engine::build(
+            &w,
+            EngineOptions {
+                method: Method::NestQuantM,
+                regime: Regime::WKv,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        );
+        let pool = eng.kv_pool(PoolConfig::default()).unwrap();
+        for (li, l) in eng.layers.iter().enumerate() {
+            let lq = pool.layer_quant(li);
+            assert_eq!(
+                lq.k.betas,
+                l.k_nq.as_ref().unwrap().betas,
+                "layer {li} key quantizer mismatch"
+            );
+            assert_eq!(
+                lq.v.betas,
+                l.v_nq.as_ref().unwrap().betas,
+                "layer {li} value quantizer mismatch"
+            );
+        }
     }
 }

@@ -1,7 +1,9 @@
 //! Serving metrics: request latency quantiles, token throughput, batch
-//! occupancy, and KV-cache memory — the numbers the serve_demo example
+//! occupancy, KV-cache memory, and the paged-pool gauges (pages/bytes in
+//! use, prefix hit rate, evictions) — the numbers the serve_demo example
 //! reports.
 
+use crate::kvpool::PoolStats;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -14,6 +16,8 @@ struct Inner {
     batch_slots: u64,
     wall_ms: f64,
     kv_bytes: usize,
+    /// latest paged-pool snapshot (None until a pooled engine serves)
+    pool: Option<PoolStats>,
 }
 
 /// Thread-safe metrics sink.
@@ -50,6 +54,18 @@ impl Metrics {
         g.kv_bytes = g.kv_bytes.max(bytes);
     }
 
+    /// Store the latest pool snapshot (pages/bytes in use, prefix
+    /// hits/misses, evictions). Counters inside the snapshot are
+    /// cumulative pool-side; the gauge is replaced, not accumulated.
+    pub fn record_pool(&self, stats: PoolStats) {
+        self.inner.lock().unwrap().pool = Some(stats);
+    }
+
+    /// Latest paged-pool snapshot, if a pooled engine is serving.
+    pub fn pool_stats(&self) -> Option<PoolStats> {
+        self.inner.lock().unwrap().pool
+    }
+
     pub fn report(&self) -> String {
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_ms.clone();
@@ -71,7 +87,7 @@ impl Metrics {
         } else {
             0.0
         };
-        format!(
+        let mut s = format!(
             "requests={} tokens={} throughput={:.1} tok/s p50={:.1}ms p95={:.1}ms \
              mean_batch={:.2} kv_peak={:.1} KiB",
             g.requests,
@@ -81,7 +97,20 @@ impl Metrics {
             p95,
             occupancy,
             g.kv_bytes as f64 / 1024.0
-        )
+        );
+        if let Some(p) = &g.pool {
+            s.push_str(&format!(
+                " | pool: pages={} cached={} bytes={:.1} KiB hit_rate={:.2} \
+                 evictions={} overruns={}",
+                p.pages_in_use,
+                p.cached_pages,
+                p.bytes_in_use as f64 / 1024.0,
+                p.prefix_hit_rate(),
+                p.evicted_pages,
+                p.budget_overruns
+            ));
+        }
+        s
     }
 
     pub fn throughput_tok_s(&self) -> f64 {
@@ -110,6 +139,29 @@ mod tests {
         assert!(r.contains("requests=2"));
         assert!(r.contains("tokens=12"));
         assert!(r.contains("kv_peak=2.0 KiB"));
+        assert!(!r.contains("pool:"), "no pool gauges before a snapshot");
         assert!(m.throughput_tok_s() > 0.0);
+    }
+
+    #[test]
+    fn pool_gauges_surface_in_report() {
+        let m = Metrics::new();
+        assert!(m.pool_stats().is_none());
+        m.record_pool(PoolStats {
+            pages_in_use: 7,
+            cached_pages: 3,
+            bytes_in_use: 4096,
+            prefix_hit_tokens: 90,
+            prefix_miss_tokens: 10,
+            evicted_pages: 2,
+            budget_overruns: 0,
+            ..Default::default()
+        });
+        let r = m.report();
+        assert!(r.contains("pages=7"), "{r}");
+        assert!(r.contains("cached=3"), "{r}");
+        assert!(r.contains("hit_rate=0.90"), "{r}");
+        assert!(r.contains("evictions=2"), "{r}");
+        assert_eq!(m.pool_stats().unwrap().pages_in_use, 7);
     }
 }

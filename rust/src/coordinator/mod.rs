@@ -3,9 +3,14 @@
 //! the offline vendor set; the concurrency pattern is identical).
 //!
 //! The coordinator demonstrates NestQuant's motivating serving wins:
-//! generation keeps the KV cache in coded form (`kvcache`), and batched
-//! scoring goes through the PJRT HLO artifact (`runtime::ModelRunner`) —
-//! python never appears on the request path.
+//! generation keeps the KV cache in coded form, with every worker
+//! session drawing pages from one shared `kvpool::KvPool` — common
+//! prompt prefixes are served from cached coded pages (refcount bump,
+//! no re-quantization), total KV memory is capped by the pool's byte
+//! budget with LRU eviction, and the pool gauges (pages, bytes, prefix
+//! hit rate, evictions) flow through [`Metrics`]. Batched scoring goes
+//! through the PJRT HLO artifact (`runtime::ModelRunner`) — python
+//! never appears on the request path.
 
 pub mod batcher;
 pub mod generator;

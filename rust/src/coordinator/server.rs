@@ -1,11 +1,17 @@
 //! The serving front-end: a router thread fans requests out to a
-//! generation worker (continuous batching over `GenSession`s, quantized
-//! KV cache) and a scoring worker (batched full-window forward through
-//! the AOT HLO artifact when available, native engine otherwise).
+//! generation worker (continuous batching over `GenSession`s, all
+//! drawing quantized KV pages from one shared
+//! [`KvPool`](crate::kvpool::KvPool)) and a scoring
+//! worker (batched full-window forward through the AOT HLO artifact when
+//! available, native engine otherwise). Sessions with common prompt
+//! prefixes — within a batch or across batches — share coded pages
+//! through the pool's prefix index instead of re-quantizing them, and
+//! the pool's byte budget caps total KV memory under load.
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::generator::GenSession;
 use crate::coordinator::metrics::Metrics;
+use crate::kvpool::PoolConfig;
 use crate::model::engine::Engine;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
@@ -43,12 +49,28 @@ pub struct Response {
 #[derive(Clone, Copy)]
 pub struct ServerConfig {
     pub policy: BatchPolicy,
+    /// shared KV-pool sizing (page size, byte budget) for pooled engines.
+    /// The server's pool outlives every session, so unlike the
+    /// per-session default it ships with a byte budget: without one, the
+    /// prefix index would retain every finished session's frozen pages
+    /// forever and sustained traffic would grow memory without bound.
+    pub pool: PoolConfig,
+}
+
+impl ServerConfig {
+    /// Default KV-pool byte budget (logical coded payload): 64 MiB ≈
+    /// 128M fp32-equivalent KV entries at the ~8× coded density.
+    pub const DEFAULT_POOL_BUDGET: usize = 64 << 20;
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             policy: BatchPolicy::default(),
+            pool: PoolConfig {
+                budget_bytes: Some(Self::DEFAULT_POOL_BUDGET),
+                ..PoolConfig::default()
+            },
         }
     }
 }
@@ -73,6 +95,9 @@ impl Server {
         let m = metrics.clone();
 
         let worker = std::thread::spawn(move || {
+            // one shared paged pool for every session this worker runs:
+            // prefix reuse and the byte budget span the server's lifetime
+            let pool = engine.kv_pool(cfg.pool);
             let batcher = Batcher::new(rx, cfg.policy);
             while let Some(batch) = batcher.next_batch() {
                 m.record_batch(batch.len(), cfg.policy.max_batch);
@@ -94,10 +119,14 @@ impl Server {
                 for (req, t0) in batch {
                     match req {
                         Request::Generate { id, prompt, n_new } => {
+                            let sess = match &pool {
+                                Some(p) => GenSession::new_in_pool(&engine, p),
+                                None => GenSession::new(&engine),
+                            };
                             gen_sessions.push(Active {
                                 id,
                                 t0,
-                                sess: GenSession::new(&engine),
+                                sess,
                                 pending_prompt: prompt,
                                 remaining: n_new,
                                 logits: Vec::new(),
@@ -122,11 +151,10 @@ impl Server {
                         }
                     }
                 }
-                // prefill phase (token-by-token through the cache)
+                // prefill phase: pool-cached prefixes are mapped (zero
+                // quantization work), the remainder steps through the cache
                 for a in gen_sessions.iter_mut() {
-                    for &t in &a.pending_prompt.clone() {
-                        a.logits = a.sess.step(t);
-                    }
+                    a.logits = a.sess.prefill(&a.pending_prompt);
                     total_tokens += a.pending_prompt.len();
                 }
                 // decode phase, round-robin
@@ -154,6 +182,9 @@ impl Server {
                         nll: None,
                         latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
                     });
+                }
+                if let Some(p) = &pool {
+                    m.record_pool(p.stats());
                 }
                 m.record_wall(t_batch.elapsed());
                 let _ = total_tokens;
@@ -244,6 +275,52 @@ mod tests {
         assert_eq!(got[&1].tokens.len(), 4);
         assert_eq!(got[&3].tokens.len(), 2);
         assert!(got[&2].nll.unwrap() > 0.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pooled_serving_shares_prefixes_and_exports_gauges() {
+        // no artifact needed: a synthetic NestQuantM W+KV engine. Three
+        // generate requests with a 32-token common prefix must hit the
+        // shared pool, and the pool gauges must surface in Metrics.
+        let w = crate::model::weights::ModelWeights::synthetic(
+            crate::model::ModelConfig {
+                vocab: 48,
+                ctx: 64,
+                d_model: 32,
+                n_layer: 1,
+                n_head: 2,
+                d_ff: 64,
+            },
+            0x5E11,
+        );
+        let eng = Arc::new(Engine::build(
+            &w,
+            crate::model::engine::EngineOptions {
+                method: crate::model::engine::Method::NestQuantM,
+                regime: Regime::WKv,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        ));
+        let (srv, rx) = Server::start(eng, ServerConfig::default());
+        let common: Vec<i32> = (0..32).map(|i| i % 48).collect();
+        for id in 0..3u64 {
+            let mut prompt = common.clone();
+            prompt.push(40 + id as i32);
+            srv.submit(Request::Generate { id, prompt, n_new: 3 });
+        }
+        for _ in 0..3 {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            assert_eq!(r.tokens.len(), 3);
+        }
+        let stats = srv.metrics.pool_stats().expect("pooled engine must export gauges");
+        assert!(
+            stats.prefix_hit_tokens >= 32,
+            "later sessions should map the shared prefix: {stats:?}"
+        );
+        assert!(stats.pages_in_use > 0);
+        assert!(srv.metrics.report().contains("pool:"));
         srv.shutdown();
     }
 }

@@ -1,62 +1,35 @@
-//! Quantized KV-cache manager — the serving-path store where keys and
+//! Per-session KV-cache view — the serving-path store where keys and
 //! values live in *coded* form (coset codes + β indices + scale), cutting
 //! cache memory ~4× vs fp16 / ~8× vs fp32 (paper §1: the memory-bandwidth
 //! bottleneck of generation).
 //!
-//! Layout: per layer, per head, append-only code arrays. Scoring decodes
-//! keys on the fly (Algorithm 4-style: decode is integer, β/scale applied
-//! per block), so the bytes touched per token scale with the quantized
-//! payload.
+//! Since the paged-pool rework the coded storage lives in
+//! [`crate::kvpool`]: every quantized cache is a [`SessionKv`] view over
+//! a [`KvPool`] — pages of 16 positions × all (layer, head) lanes,
+//! shared across sessions through the token-prefix index, evicted LRU
+//! under a byte budget, with **per-layer** calibrated quantizer pairs
+//! (§4.6 step 4). [`KvCache::new_nest`] keeps the old single-owner
+//! constructor as a thin adapter: it builds a private single-session
+//! pool, so tests and benches of the coded path need no pool plumbing.
+//!
+//! Hot paths ([`KvCache::scores`], [`KvCache::weighted_value_sum`])
+//! stream page-by-page over the coded payload through the same
+//! `DecodeConsts` integer decoder as the packed GEMM — per-position
+//! `Vec<f32>` buffers never materialize on the decode path.
 
-use crate::lattice::e8::D;
-use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector};
+use crate::kvpool::{KvLayerQuant, KvPool, PoolConfig, SessionKv};
+use crate::lattice::nested::NestedLatticeQuantizer;
+use std::sync::Arc;
 
-/// Per-(layer, head) append-only quantized vector store.
-#[derive(Default)]
-pub struct QuantStore {
-    entries: Vec<QuantizedVector>,
-}
-
-impl QuantStore {
-    pub fn push(&mut self, qv: QuantizedVector) {
-        self.entries.push(qv);
-    }
-
-    pub fn len(&self) -> usize {
-        self.entries.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
-    }
-
-    pub fn get(&self, i: usize) -> &QuantizedVector {
-        &self.entries[i]
-    }
-
-    pub fn payload_bytes(&self, q: u32) -> usize {
-        self.entries
-            .iter()
-            .map(|e| e.payload_bits(q).div_ceil(8))
-            .sum()
-    }
-}
-
-/// KV cache for one generation stream: quantized (NestQuant) or fp32
-/// (baseline), per layer × head.
+/// KV cache for one generation stream: fp32 (baseline) or a view over a
+/// paged pool of quantized payloads (NestQuant).
 pub enum KvCache {
     Fp {
         /// [layer][head] → (keys, values), each Vec<Vec<f32>> by position
         keys: Vec<Vec<Vec<Vec<f32>>>>,
         values: Vec<Vec<Vec<Vec<f32>>>>,
     },
-    Nest {
-        /// key / value quantizers (calibrated separately, §4.6 step 4)
-        k_nq: NestedLatticeQuantizer,
-        v_nq: NestedLatticeQuantizer,
-        keys: Vec<Vec<QuantStore>>,
-        values: Vec<Vec<QuantStore>>,
-    },
+    Pool(SessionKv),
 }
 
 impl KvCache {
@@ -67,41 +40,59 @@ impl KvCache {
         }
     }
 
+    /// Single-owner adapter: a private, unbudgeted pool with the same
+    /// key/value quantizer pair replicated across layers (the pre-pool
+    /// `Nest` behaviour, for tests/benches of the coded path).
     pub fn new_nest(
         n_layer: usize,
         n_head: usize,
         k_nq: NestedLatticeQuantizer,
         v_nq: NestedLatticeQuantizer,
     ) -> Self {
-        KvCache::Nest {
-            k_nq,
-            v_nq,
-            keys: (0..n_layer)
-                .map(|_| (0..n_head).map(|_| QuantStore::default()).collect())
-                .collect(),
-            values: (0..n_layer)
-                .map(|_| (0..n_head).map(|_| QuantStore::default()).collect())
-                .collect(),
-        }
+        let layers = (0..n_layer)
+            .map(|_| KvLayerQuant {
+                k: k_nq.clone(),
+                v: v_nq.clone(),
+            })
+            .collect();
+        let pool = Arc::new(KvPool::new(n_layer, n_head, layers, PoolConfig::default()));
+        KvCache::Pool(SessionKv::new(pool))
+    }
+
+    /// A session view over a shared pool (the serving path).
+    pub fn in_pool(pool: &Arc<KvPool>) -> Self {
+        KvCache::Pool(SessionKv::new(pool.clone()))
     }
 
     /// Append one position's K and V for (layer, head). Vectors are
-    /// quantized on insertion in the Nest variant.
+    /// quantized on insertion in the pooled variant (with that layer's
+    /// own calibrated quantizers).
     pub fn append(&mut self, layer: usize, head: usize, k: &[f32], v: &[f32]) {
         match self {
             KvCache::Fp { keys, values } => {
                 keys[layer][head].push(k.to_vec());
                 values[layer][head].push(v.to_vec());
             }
-            KvCache::Nest {
-                k_nq,
-                v_nq,
-                keys,
-                values,
-            } => {
-                keys[layer][head].push(k_nq.quantize(k));
-                values[layer][head].push(v_nq.quantize(v));
-            }
+            KvCache::Pool(sess) => sess.append(layer, head, k, v),
+        }
+    }
+
+    /// Record the token that produced the position just appended on all
+    /// lanes — this is what freezes completed pages and publishes them
+    /// to the pool's prefix index. No-op for the fp32 baseline.
+    pub fn note_token(&mut self, token: i32) {
+        if let KvCache::Pool(sess) = self {
+            sess.note_token(token);
+        }
+    }
+
+    /// Map the longest cached prefix of `prompt` from the shared pool
+    /// (zero quantization work for matched positions). Returns the
+    /// number of positions served from shared pages; 0 for fp32.
+    pub fn match_prefix(&mut self, prompt: &[i32]) -> usize {
+        match self {
+            KvCache::Fp { .. } => 0,
+            KvCache::Pool(sess) => sess.match_prefix(prompt),
         }
     }
 
@@ -109,7 +100,7 @@ impl KvCache {
     pub fn seq_len(&self, layer: usize, head: usize) -> usize {
         match self {
             KvCache::Fp { keys, .. } => keys[layer][head].len(),
-            KvCache::Nest { keys, .. } => keys[layer][head].len(),
+            KvCache::Pool(sess) => sess.seq_len(layer, head),
         }
     }
 
@@ -117,7 +108,7 @@ impl KvCache {
     pub fn key(&self, layer: usize, head: usize, pos: usize) -> Vec<f32> {
         match self {
             KvCache::Fp { keys, .. } => keys[layer][head][pos].clone(),
-            KvCache::Nest { k_nq, keys, .. } => k_nq.dequantize(keys[layer][head].get(pos)),
+            KvCache::Pool(sess) => sess.key(layer, head, pos),
         }
     }
 
@@ -125,74 +116,49 @@ impl KvCache {
     pub fn value(&self, layer: usize, head: usize, pos: usize) -> Vec<f32> {
         match self {
             KvCache::Fp { values, .. } => values[layer][head][pos].clone(),
-            KvCache::Nest { v_nq, values, .. } => v_nq.dequantize(values[layer][head].get(pos)),
+            KvCache::Pool(sess) => sess.value(layer, head, pos),
         }
     }
 
     /// Attention scores q·k_t for every cached position (pre-softmax,
-    /// unscaled). For the Nest variant the key decode runs on the coded
-    /// form — the memory-bound path the paper optimizes — streaming
-    /// block-by-block through fixed stack scratch instead of
-    /// materializing a dequantized `Vec<f32>` per key per token. With an
-    /// M-variant codec the per-block decode is all-integer
-    /// (`quant::qgemm::decode_block_i32`), so the bytes *and* the
-    /// arithmetic touched per cached key stay on the quantized payload.
+    /// unscaled). The pooled variant streams page-by-page over the coded
+    /// keys — all-integer block decode for M-variant codecs at q ≤ 16 —
+    /// through fixed stack scratch; no per-key dequantization buffer.
     pub fn scores(&self, layer: usize, head: usize, qvec: &[f32], out: &mut Vec<f32>) {
-        out.clear();
         match self {
             KvCache::Fp { keys, .. } => {
+                out.clear();
                 for k in &keys[layer][head] {
                     out.push(crate::util::stats::dot(qvec, k) as f32);
                 }
             }
-            KvCache::Nest { k_nq, keys, .. } => {
-                let store = &keys[layer][head];
-                let q = k_nq.q() as i32;
-                // strength-reduced branch-free decode (magic-multiply
-                // division) — the same hot-path decoder as the packed
-                // GEMV; exact for q ≤ 16 (`magic_division_exact`)
-                let use_int = k_nq.codec.m_variant && q <= 16;
-                let consts = crate::quant::qgemm::DecodeConsts::new(q);
-                let mut c = [0u8; D];
-                let mut e = [0i32; D];
-                for i in 0..store.len() {
-                    let kv = store.get(i);
-                    if kv.scale == 0.0 {
-                        out.push(0.0);
-                        continue;
+            KvCache::Pool(sess) => sess.scores(layer, head, qvec, out),
+        }
+    }
+
+    /// out = Σ_t probs[t]·v_t — the decode-step value path, streamed off
+    /// the coded values with the same integer decoder as [`Self::scores`]
+    /// (no per-position `Vec<f32>`). `out` is overwritten (head dim).
+    pub fn weighted_value_sum(&self, layer: usize, head: usize, probs: &[f32], out: &mut [f32]) {
+        match self {
+            KvCache::Fp { values, .. } => {
+                out.fill(0.0);
+                let vals = &values[layer][head];
+                assert!(probs.len() <= vals.len());
+                for (t, &p) in probs.iter().enumerate() {
+                    let vt = &vals[t];
+                    for i in 0..out.len() {
+                        out[i] += p * vt[i];
                     }
-                    debug_assert_eq!(kv.n, qvec.len());
-                    let denorm = (kv.scale / (kv.n as f32).sqrt()) as f64;
-                    let mut acc = 0f64;
-                    for j in 0..kv.n / D {
-                        c.copy_from_slice(&kv.codes[j * D..(j + 1) * D]);
-                        let xb = &qvec[j * D..(j + 1) * D];
-                        if use_int {
-                            // integer decode in half units; β/2 applied
-                            // per block, matching PackedNestMatrix
-                            consts.decode(&c, &mut e);
-                            let mut d = 0f32;
-                            for ii in 0..D {
-                                d += e[ii] as f32 * xb[ii];
-                            }
-                            acc += (d * 0.5 * k_nq.betas[kv.beta_idx[j] as usize]) as f64;
-                        } else {
-                            let rec = k_nq.decode_block(&c, kv.beta_idx[j]);
-                            let mut d = 0f32;
-                            for ii in 0..D {
-                                d += rec[ii] * xb[ii];
-                            }
-                            acc += d as f64;
-                        }
-                    }
-                    out.push((acc * denorm) as f32);
                 }
             }
+            KvCache::Pool(sess) => sess.weighted_value_sum(layer, head, probs, out),
         }
     }
 
     /// Total cache payload in bytes (the memory the paper's KV
-    /// quantization saves).
+    /// quantization saves). Pooled sessions report their mapped pages'
+    /// full capacity cost — the honest paged-allocator number.
     pub fn payload_bytes(&self) -> usize {
         match self {
             KvCache::Fp { keys, values } => {
@@ -206,15 +172,7 @@ impl KvCache {
                 };
                 count(keys) + count(values)
             }
-            KvCache::Nest {
-                k_nq, keys, values, ..
-            } => {
-                let q = k_nq.q();
-                let count = |store: &Vec<Vec<QuantStore>>| -> usize {
-                    store.iter().flatten().map(|s| s.payload_bytes(q)).sum()
-                };
-                count(keys) + count(values)
-            }
+            KvCache::Pool(sess) => sess.payload_bytes(),
         }
     }
 }
@@ -257,7 +215,7 @@ mod tests {
 
     #[test]
     fn streaming_scores_match_dequantized_reference() {
-        // the block-streaming score path (integer decode for M-variant,
+        // the page-streaming score path (integer decode for M-variant,
         // float for plain) must agree with dequantize-then-dot on the
         // same coded entries to float tolerance.
         let mut rng = Rng::new(1704);
@@ -279,16 +237,62 @@ mod tests {
             let mut scores = Vec::new();
             cache.scores(0, 0, &qv, &mut scores);
             assert_eq!(scores.len(), 12);
-            let KvCache::Nest { k_nq, keys, .. } = &cache else {
-                unreachable!()
-            };
             for (i, &s) in scores.iter().enumerate() {
-                let dec = k_nq.dequantize(keys[0][0].get(i));
+                // cache.key() decodes the stored codes through the same
+                // quantizer — the dequantize-then-dot reference
+                let dec = cache.key(0, 0, i);
                 let expect = stats::dot(&qv, &dec) as f32;
                 assert!(
                     (s - expect).abs() < 1e-4 * (1.0 + expect.abs()),
                     "m_variant={m_variant} pos {i}: streaming {s} vs reference {expect}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_value_sum_matches_per_position_loop() {
+        let mut rng = Rng::new(1705);
+        for m_variant in [false, true] {
+            let betas = vec![0.25, 0.32, 0.45, 1.0];
+            let nq = if m_variant {
+                NestedLatticeQuantizer::new_m(14, betas)
+            } else {
+                NestedLatticeQuantizer::new(14, betas)
+            };
+            let dh = 24;
+            let mut fp = KvCache::new_fp(1, 1);
+            let mut nest = KvCache::new_nest(1, 1, nq.clone(), nq.clone());
+            for _ in 0..19 {
+                let k = rng.gauss_vec(dh);
+                let v = rng.gauss_vec(dh);
+                fp.append(0, 0, &k, &v);
+                nest.append(0, 0, &k, &v);
+            }
+            let mut probs: Vec<f32> = (0..19).map(|_| rng.f32()).collect();
+            let z: f32 = probs.iter().sum();
+            for p in probs.iter_mut() {
+                *p /= z;
+            }
+            for cache in [&fp, &nest] {
+                let mut fast = vec![0f32; dh];
+                cache.weighted_value_sum(0, 0, &probs, &mut fast);
+                // reference: the old per-position decode-into-Vec loop
+                let mut slow = vec![0f32; dh];
+                for (t, &p) in probs.iter().enumerate() {
+                    let vt = cache.value(0, 0, t);
+                    for i in 0..dh {
+                        slow[i] += p * vt[i];
+                    }
+                }
+                for i in 0..dh {
+                    assert!(
+                        (fast[i] - slow[i]).abs() < 1e-5 * (1.0 + slow[i].abs()),
+                        "m={m_variant} i={i}: {} vs {}",
+                        fast[i],
+                        slow[i]
+                    );
+                }
             }
         }
     }
@@ -311,7 +315,8 @@ mod tests {
         }
         let fp_bytes = fp.payload_bytes();
         let nest_bytes = nest.payload_bytes();
-        // fp32 = 32 bits/entry; NestQuant ≈ 4.3 + scale overhead → > 5×
+        // fp32 = 32 bits/entry; NestQuant ≈ 4.3 + scale overhead → > 4×
+        // even with the tail page's unused capacity counted
         assert!(
             (nest_bytes as f64) < fp_bytes as f64 / 4.0,
             "cache compression too weak: {nest_bytes} vs {fp_bytes}"

@@ -1,0 +1,391 @@
+//! Fixed-size page slab for coded KV payloads.
+//!
+//! A [`Page`] holds `page_size` consecutive positions × every
+//! (layer, head) lane × the K and V coded payloads (coset codes, β
+//! indices, per-vector scale) — the paged-attention block, but over
+//! nested-lattice codes instead of fp16, so one page carries ~8× the
+//! tokens of an fp32 page of equal byte cost. [`BlockPool`] is the slab
+//! allocator underneath the pool: freed pages go on a free list and are
+//! recycled buffer-and-all (no per-page reallocation on the serving
+//! path), refcounts track sharers (sessions + the prefix index), and a
+//! byte budget bounds the slab.
+
+use crate::lattice::e8::D;
+
+/// Physical page handle.
+pub type PageId = u32;
+
+/// Geometry of every page in a pool: (layer, head) lane count and
+/// positions per page. The head dimension is fixed lazily by the first
+/// append (the adapter construction paths don't know it up front).
+#[derive(Clone, Copy, Debug)]
+pub struct PageShape {
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub page_size: usize,
+    /// per-head vector length; 0 until the first append fixes it
+    pub d_head: usize,
+}
+
+impl PageShape {
+    pub fn lanes(&self) -> usize {
+        self.n_layer * self.n_head
+    }
+
+    pub fn lane(&self, layer: usize, head: usize) -> usize {
+        debug_assert!(layer < self.n_layer && head < self.n_head);
+        layer * self.n_head + head
+    }
+
+    /// Flat slot index of (lane, local position): lane-major so that one
+    /// (layer, head)'s positions are contiguous — the layout the
+    /// streaming scores / value kernels walk.
+    pub fn slot(&self, lane: usize, local: usize) -> usize {
+        debug_assert!(local < self.page_size);
+        lane * self.page_size + local
+    }
+
+    pub fn slots(&self) -> usize {
+        self.lanes() * self.page_size
+    }
+
+    /// β indices per vector (one per 8-block).
+    pub fn blocks_per_vec(&self) -> usize {
+        self.d_head / D
+    }
+}
+
+/// One physical page: coded K and V payloads for `slots()` vectors.
+/// Buffers are allocated once and recycled through the free list; stale
+/// contents are never read because readers are gated by per-session fill
+/// counts.
+pub struct Page {
+    pub codes_k: Box<[u8]>,
+    pub beta_k: Box<[u8]>,
+    pub scale_k: Box<[f32]>,
+    pub codes_v: Box<[u8]>,
+    pub beta_v: Box<[u8]>,
+    pub scale_v: Box<[f32]>,
+    /// sharers: one per mapping session + one if held by the prefix index
+    refcount: u32,
+    /// full pages are immutable (copy-on-write targets, never appended)
+    pub frozen: bool,
+}
+
+impl Page {
+    fn new(shape: &PageShape) -> Self {
+        let slots = shape.slots();
+        let dh = shape.d_head;
+        let bpv = shape.blocks_per_vec();
+        Page {
+            codes_k: vec![0u8; slots * dh].into_boxed_slice(),
+            beta_k: vec![0u8; slots * bpv].into_boxed_slice(),
+            scale_k: vec![0f32; slots].into_boxed_slice(),
+            codes_v: vec![0u8; slots * dh].into_boxed_slice(),
+            beta_v: vec![0u8; slots * bpv].into_boxed_slice(),
+            scale_v: vec![0f32; slots].into_boxed_slice(),
+            refcount: 1,
+            frozen: false,
+        }
+    }
+}
+
+/// Slab allocator of [`Page`]s with free-list recycling, refcounts and a
+/// global byte budget (logical coded-payload bytes, the same accounting
+/// as `QuantizedVector::payload_bits`).
+pub struct BlockPool {
+    shape: PageShape,
+    pages: Vec<Page>,
+    free: Vec<PageId>,
+    /// logical payload bytes per page (0 until d_head is fixed)
+    bytes_per_page: usize,
+    budget_bytes: Option<usize>,
+    in_use: usize,
+    pub evicted_pages: u64,
+    pub budget_overruns: u64,
+}
+
+impl BlockPool {
+    pub fn new(shape: PageShape, budget_bytes: Option<usize>) -> Self {
+        BlockPool {
+            shape,
+            pages: Vec::new(),
+            free: Vec::new(),
+            bytes_per_page: 0,
+            budget_bytes,
+            in_use: 0,
+            evicted_pages: 0,
+            budget_overruns: 0,
+        }
+    }
+
+    pub fn shape(&self) -> &PageShape {
+        &self.shape
+    }
+
+    /// Fix the head dimension (first append) and derive the per-page
+    /// logical byte cost from the per-layer code rates.
+    pub fn set_d_head(&mut self, d_head: usize, layer_qs: &[(u32, u32)]) {
+        assert_eq!(d_head % D, 0, "d_head must be divisible by 8");
+        if self.shape.d_head != 0 {
+            assert_eq!(self.shape.d_head, d_head, "pool d_head is fixed at first append");
+            return;
+        }
+        assert!(self.pages.is_empty());
+        self.shape.d_head = d_head;
+        // logical payload per coded vector — the same accounting as
+        // QuantizedVector::payload_bits, via the shared helper
+        let vec_bits = |q: u32| -> usize { crate::lattice::nested::payload_bits_for(d_head, q) };
+        let mut page_bits = 0usize;
+        for &(qk, qv) in layer_qs {
+            page_bits += self.shape.n_head * self.shape.page_size * (vec_bits(qk) + vec_bits(qv));
+        }
+        self.bytes_per_page = page_bits.div_ceil(8);
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.shape.d_head
+    }
+
+    pub fn bytes_per_page(&self) -> usize {
+        self.bytes_per_page
+    }
+
+    pub fn budget_bytes(&self) -> Option<usize> {
+        self.budget_bytes
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.in_use * self.bytes_per_page
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// True iff allocating one more page would exceed the byte budget.
+    pub fn at_budget(&self) -> bool {
+        match self.budget_bytes {
+            Some(b) => self.bytes_in_use() + self.bytes_per_page > b,
+            None => false,
+        }
+    }
+
+    /// True iff the slab already exceeds the byte budget (post-release
+    /// trim predicate).
+    pub fn over_budget(&self) -> bool {
+        match self.budget_bytes {
+            Some(b) => self.bytes_in_use() > b,
+            None => false,
+        }
+    }
+
+    /// Allocate a page (refcount 1), recycling from the free list when
+    /// possible. Budget-driven eviction is the caller's job (it owns the
+    /// prefix index that knows which pages are reclaimable).
+    pub fn alloc(&mut self) -> PageId {
+        assert!(self.shape.d_head != 0, "set_d_head before alloc");
+        self.in_use += 1;
+        if let Some(id) = self.free.pop() {
+            let p = &mut self.pages[id as usize];
+            p.refcount = 1;
+            p.frozen = false;
+            id
+        } else {
+            self.pages.push(Page::new(&self.shape));
+            (self.pages.len() - 1) as PageId
+        }
+    }
+
+    pub fn page(&self, id: PageId) -> &Page {
+        &self.pages[id as usize]
+    }
+
+    pub fn page_mut(&mut self, id: PageId) -> &mut Page {
+        &mut self.pages[id as usize]
+    }
+
+    /// Two distinct pages mutably (copy-on-write source/destination).
+    pub fn page_pair_mut(&mut self, a: PageId, b: PageId) -> (&Page, &mut Page) {
+        assert_ne!(a, b);
+        let (a, b) = (a as usize, b as usize);
+        if a < b {
+            let (lo, hi) = self.pages.split_at_mut(b);
+            (&lo[a], &mut hi[0])
+        } else {
+            let (lo, hi) = self.pages.split_at_mut(a);
+            (&hi[0], &mut lo[b])
+        }
+    }
+
+    pub fn refcount(&self, id: PageId) -> u32 {
+        self.pages[id as usize].refcount
+    }
+
+    pub fn incref(&mut self, id: PageId) {
+        let p = &mut self.pages[id as usize];
+        assert!(p.refcount > 0, "incref on freed page {id}");
+        p.refcount += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list when the
+    /// count hits zero. Returns true iff the page was freed.
+    pub fn decref(&mut self, id: PageId) -> bool {
+        let p = &mut self.pages[id as usize];
+        assert!(p.refcount > 0, "double free of page {id}");
+        p.refcount -= 1;
+        if p.refcount == 0 {
+            self.free.push(id);
+            self.in_use -= 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    fn shape() -> PageShape {
+        PageShape {
+            n_layer: 2,
+            n_head: 2,
+            page_size: 4,
+            d_head: 0,
+        }
+    }
+
+    #[test]
+    fn lane_slot_layout_is_lane_major() {
+        let mut s = shape();
+        s.d_head = 16;
+        assert_eq!(s.lanes(), 4);
+        assert_eq!(s.slot(s.lane(1, 0), 3), 2 * 4 + 3);
+        // positions of a fixed lane are contiguous
+        assert_eq!(s.slot(2, 1), s.slot(2, 0) + 1);
+    }
+
+    #[test]
+    fn bytes_per_page_accounting() {
+        let mut bp = BlockPool::new(shape(), None);
+        bp.set_d_head(16, &[(14, 14), (14, 14)]);
+        // per vector: ceil(16·log2 14) + 2·2 + 32 = 61 + 36 = 97 bits
+        let vec_bits = crate::lattice::nested::payload_bits_for(16, 14);
+        assert_eq!(vec_bits, 97);
+        let page_bits = 2 * 2 * 4 * 2 * vec_bits;
+        assert_eq!(bp.bytes_per_page(), page_bits.div_ceil(8));
+        let id = bp.alloc();
+        assert_eq!(bp.bytes_in_use(), bp.bytes_per_page());
+        bp.decref(id);
+        assert_eq!(bp.bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn alloc_free_refcount_invariants() {
+        // propcheck the slab: random alloc / incref / decref traffic must
+        // never leak a page, never double-free, and keep
+        // in_use + free == slab length at every step.
+        propcheck::check("blockpool-invariants", 30, 0xB10C, |rng| {
+            let mut bp = BlockPool::new(shape(), None);
+            bp.set_d_head(8, &[(14, 14), (14, 14)]);
+            let mut live: Vec<(PageId, u32)> = Vec::new(); // model refcounts
+            let mut peak = 0usize;
+            for _ in 0..200 {
+                match rng.below(3) {
+                    0 => {
+                        let id = bp.alloc();
+                        if live.iter().any(|&(l, _)| l == id) {
+                            return Err(format!("alloc returned live page {id}"));
+                        }
+                        live.push((id, 1));
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        bp.incref(live[i].0);
+                        live[i].1 += 1;
+                    }
+                    2 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        live[i].1 -= 1;
+                        let freed = bp.decref(live[i].0);
+                        if freed != (live[i].1 == 0) {
+                            return Err("free / model refcount disagree".into());
+                        }
+                        if live[i].1 == 0 {
+                            live.swap_remove(i);
+                        }
+                    }
+                    _ => {}
+                }
+                peak = peak.max(bp.pages_in_use() + bp.pages_free());
+                if bp.pages_in_use() != live.len() {
+                    return Err(format!(
+                        "in_use {} != model {}",
+                        bp.pages_in_use(),
+                        live.len()
+                    ));
+                }
+                for &(id, rc) in &live {
+                    if bp.refcount(id) != rc {
+                        return Err(format!("page {id}: rc {} != model {rc}", bp.refcount(id)));
+                    }
+                }
+                if bp.bytes_in_use() != live.len() * bp.bytes_per_page() {
+                    return Err("byte accounting drifted".into());
+                }
+            }
+            // drain and verify full recycling
+            for (id, rc) in live.drain(..) {
+                for _ in 0..rc {
+                    bp.decref(id);
+                }
+            }
+            if bp.pages_in_use() != 0 || bp.pages_free() != peak {
+                return Err("pages leaked after drain".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recycled_pages_reset_state() {
+        let mut bp = BlockPool::new(shape(), None);
+        bp.set_d_head(8, &[(14, 14), (14, 14)]);
+        let a = bp.alloc();
+        bp.page_mut(a).frozen = true;
+        bp.incref(a);
+        bp.decref(a);
+        bp.decref(a);
+        let b = bp.alloc();
+        assert_eq!(a, b, "free list must recycle");
+        assert!(!bp.page(b).frozen);
+        assert_eq!(bp.refcount(b), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut bp = BlockPool::new(shape(), None);
+        bp.set_d_head(8, &[(14, 14), (14, 14)]);
+        let id = bp.alloc();
+        bp.decref(id);
+        bp.decref(id);
+    }
+
+    #[test]
+    fn at_budget_tracks_capacity() {
+        let mut bp = BlockPool::new(shape(), Some(1));
+        bp.set_d_head(8, &[(14, 14), (14, 14)]);
+        assert!(bp.at_budget(), "1-byte budget can't fit a page");
+        let mut bp2 = BlockPool::new(shape(), None);
+        bp2.set_d_head(8, &[(14, 14), (14, 14)]);
+        assert!(!bp2.at_budget());
+    }
+}

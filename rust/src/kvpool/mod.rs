@@ -1,0 +1,844 @@
+//! Paged quantized KV pool — a shared, budgeted store for *coded* KV
+//! payloads serving many generation sessions at once (the paper's §1/§4.6
+//! serving motivation compounded with vLLM-style paging).
+//!
+//! Keeping the KV cache in nested-lattice coded form means a page of
+//! fixed byte size holds ~8× the tokens of fp32, so every serving-systems
+//! trick over pages pays ~8× more: more sessions per byte budget, more
+//! prefix reuse per cached page. The pool is built from:
+//!
+//! * [`block::BlockPool`] — slab allocator of fixed-size pages
+//!   (`page_size` positions × every (layer, head) lane × coded K/V) with
+//!   free-list recycling, refcounts and a global byte budget;
+//! * [`page_table::PageTable`] — per-session logical→physical mapping
+//!   with copy-on-write on shared / partial tail pages;
+//! * [`prefix::PrefixIndex`] — a token-ID trie over frozen pages: a new
+//!   session whose prompt shares a prefix with a live or recently
+//!   finished session maps the shared pages (refcount bump, **zero
+//!   quantization work**) instead of re-quantizing them;
+//! * LRU eviction of index-held page runs when the budget is exceeded.
+//!
+//! [`SessionKv`] is the per-session view; its `scores` /
+//! `weighted_value_sum` kernels stream page-by-page straight off the
+//! coded payloads through [`crate::quant::qgemm::DecodeConsts`] (the
+//! same all-integer decoder as the packed GEMM) with fixed stack
+//! scratch — no per-position `Vec<f32>` is ever materialized on the
+//! decode hot path. Quantizers are **per layer** (each layer decodes
+//! with its own calibrated K/V pair — §4.6 step 4).
+
+pub mod block;
+pub mod page_table;
+pub mod prefix;
+
+pub use block::{BlockPool, PageId, PageShape};
+pub use page_table::PageTable;
+pub use prefix::PrefixIndex;
+
+use crate::lattice::e8::D;
+use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector};
+use crate::quant::qgemm::DecodeConsts;
+use std::sync::{Arc, Mutex};
+
+/// Calibrated key/value quantizer pair for one layer.
+#[derive(Clone)]
+pub struct KvLayerQuant {
+    pub k: NestedLatticeQuantizer,
+    pub v: NestedLatticeQuantizer,
+}
+
+/// Pool sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// positions per page (16 ≈ the vLLM default block size)
+    pub page_size: usize,
+    /// global logical-payload byte budget; `None` = unbounded
+    pub budget_bytes: Option<usize>,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            page_size: 16,
+            budget_bytes: None,
+        }
+    }
+}
+
+/// Point-in-time pool gauges (exported through `coordinator::Metrics`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub pages_in_use: usize,
+    pub pages_free: usize,
+    pub bytes_in_use: usize,
+    pub bytes_per_page: usize,
+    pub budget_bytes: Option<usize>,
+    /// trie nodes currently caching a frozen page
+    pub cached_pages: usize,
+    pub prefix_hit_tokens: u64,
+    pub prefix_miss_tokens: u64,
+    pub evicted_pages: u64,
+    /// allocations that had to proceed over budget because every cached
+    /// page was pinned by a live session
+    pub budget_overruns: u64,
+}
+
+impl PoolStats {
+    /// Fraction of prefill tokens served from shared pages.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hit_tokens + self.prefix_miss_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / total as f64
+        }
+    }
+}
+
+struct PoolInner {
+    blocks: BlockPool,
+    index: PrefixIndex,
+    prefix_hit_tokens: u64,
+    prefix_miss_tokens: u64,
+}
+
+/// Evict LRU index-only pages until the budget constraint holds.
+/// `need_headroom` asks for room for one more page (allocation site);
+/// otherwise the predicate is plain `bytes ≤ budget` (release site).
+/// Live sessions are never evicted: if everything cached is pinned, an
+/// allocating caller proceeds over budget and the overrun is counted.
+fn trim_to_budget(blocks: &mut BlockPool, index: &mut PrefixIndex, need_headroom: bool) {
+    loop {
+        let over = if need_headroom {
+            blocks.at_budget()
+        } else {
+            blocks.over_budget()
+        };
+        if !over {
+            return;
+        }
+        match index.evict_lru(|p| blocks.refcount(p) == 1) {
+            Some(p) => {
+                blocks.decref(p);
+                blocks.evicted_pages += 1;
+            }
+            None => {
+                if need_headroom {
+                    blocks.budget_overruns += 1;
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// The shared paged store. Cheap to clone an `Arc<KvPool>` per session;
+/// all mutable state sits behind one mutex (the serving worker holds it
+/// for one page-walk or one append at a time).
+pub struct KvPool {
+    page_size: usize,
+    n_layer: usize,
+    n_head: usize,
+    layers: Vec<KvLayerQuant>,
+    /// (q_k, q_v) per layer, cached for page byte accounting
+    layer_qs: Vec<(u32, u32)>,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvPool {
+    pub fn new(n_layer: usize, n_head: usize, layers: Vec<KvLayerQuant>, cfg: PoolConfig) -> Self {
+        assert_eq!(layers.len(), n_layer, "one quantizer pair per layer");
+        assert!(cfg.page_size >= 1);
+        let layer_qs = layers.iter().map(|l| (l.k.q(), l.v.q())).collect();
+        KvPool {
+            page_size: cfg.page_size,
+            n_layer,
+            n_head,
+            layers,
+            layer_qs,
+            inner: Mutex::new(PoolInner {
+                blocks: BlockPool::new(
+                    PageShape {
+                        n_layer,
+                        n_head,
+                        page_size: cfg.page_size,
+                        d_head: 0,
+                    },
+                    cfg.budget_bytes,
+                ),
+                index: PrefixIndex::new(),
+                prefix_hit_tokens: 0,
+                prefix_miss_tokens: 0,
+            }),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.n_layer
+    }
+
+    pub fn n_head(&self) -> usize {
+        self.n_head
+    }
+
+    /// The calibrated quantizer pair a given layer decodes with.
+    pub fn layer_quant(&self, layer: usize) -> &KvLayerQuant {
+        &self.layers[layer]
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let g = self.inner.lock().unwrap();
+        PoolStats {
+            pages_in_use: g.blocks.pages_in_use(),
+            pages_free: g.blocks.pages_free(),
+            bytes_in_use: g.blocks.bytes_in_use(),
+            bytes_per_page: g.blocks.bytes_per_page(),
+            budget_bytes: g.blocks.budget_bytes(),
+            cached_pages: g.index.len(),
+            prefix_hit_tokens: g.prefix_hit_tokens,
+            prefix_miss_tokens: g.prefix_miss_tokens,
+            evicted_pages: g.blocks.evicted_pages,
+            budget_overruns: g.blocks.budget_overruns,
+        }
+    }
+}
+
+/// Per-session view over a shared [`KvPool`]: owns a [`PageTable`], the
+/// session's token history (for prefix registration) and a trie cursor.
+pub struct SessionKv {
+    pool: Arc<KvPool>,
+    table: PageTable,
+    tokens: Vec<i32>,
+    /// (node, generation) registration cursor into the prefix trie
+    cursor: (usize, u32),
+}
+
+impl SessionKv {
+    pub fn new(pool: Arc<KvPool>) -> Self {
+        let lanes = pool.n_layer * pool.n_head;
+        SessionKv {
+            pool,
+            table: PageTable::new(lanes),
+            tokens: Vec::new(),
+            cursor: (0, 0),
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    fn lane(&self, layer: usize, head: usize) -> usize {
+        debug_assert!(layer < self.pool.n_layer && head < self.pool.n_head);
+        layer * self.pool.n_head + head
+    }
+
+    /// Cached positions for (layer, head).
+    pub fn seq_len(&self, layer: usize, head: usize) -> usize {
+        self.table.fill(self.lane(layer, head))
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.table.n_pages()
+    }
+
+    /// Logical coded-payload bytes of this session's mapped pages
+    /// (capacity-based: a page costs its full size once mapped).
+    pub fn payload_bytes(&self) -> usize {
+        let g = self.pool.inner.lock().unwrap();
+        self.table.n_pages() * g.blocks.bytes_per_page()
+    }
+
+    /// Quantize and append one position's K and V for (layer, head).
+    /// Copy-on-write and budget eviction are applied by the page claim.
+    pub fn append(&mut self, layer: usize, head: usize, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), v.len());
+        let lq = &self.pool.layers[layer];
+        // quantization (the expensive part) runs outside the pool lock
+        let qk = lq.k.quantize(k);
+        let qv = lq.v.quantize(v);
+        let lane = self.lane(layer, head);
+        let mut g = self.pool.inner.lock().unwrap();
+        let inner = &mut *g;
+        if inner.blocks.d_head() == 0 {
+            inner.blocks.set_d_head(k.len(), &self.pool.layer_qs);
+        }
+        assert_eq!(k.len(), inner.blocks.d_head(), "d_head fixed by first append");
+        let index = &mut inner.index;
+        let (pid, local) = self
+            .table
+            .claim_slot(lane, &mut inner.blocks, |b| trim_to_budget(b, index, true));
+        let shape = *inner.blocks.shape();
+        let (dh, bpv) = (shape.d_head, shape.blocks_per_vec());
+        let s = shape.slot(lane, local);
+        let page = inner.blocks.page_mut(pid);
+        page.codes_k[s * dh..(s + 1) * dh].copy_from_slice(&qk.codes);
+        page.beta_k[s * bpv..(s + 1) * bpv].copy_from_slice(&qk.beta_idx);
+        page.scale_k[s] = qk.scale;
+        page.codes_v[s * dh..(s + 1) * dh].copy_from_slice(&qv.codes);
+        page.beta_v[s * bpv..(s + 1) * bpv].copy_from_slice(&qv.beta_idx);
+        page.scale_v[s] = qv.scale;
+    }
+
+    /// Record the token behind the position just appended (all lanes).
+    /// When this completes a page on every lane, the page freezes and is
+    /// registered in the prefix index so later sessions can map it.
+    pub fn note_token(&mut self, token: i32) {
+        self.tokens.push(token);
+        let ps = self.pool.page_size;
+        let n = self.tokens.len();
+        if n % ps != 0 {
+            return;
+        }
+        if (0..self.pool.n_layer * self.pool.n_head).any(|l| self.table.fill(l) != n) {
+            // ragged lanes (adapter usage) — nothing shareable
+            return;
+        }
+        let mut g = self.pool.inner.lock().unwrap();
+        let inner = &mut *g;
+        let pid = self.table.pages()[n / ps - 1];
+        inner.blocks.page_mut(pid).frozen = true;
+        if !inner.index.valid(self.cursor.0, self.cursor.1) {
+            // our registration point was evicted under us; stop
+            // registering rather than grafting onto a recycled node
+            return;
+        }
+        let chunk = &self.tokens[n - ps..n];
+        if let Some(child) = inner.index.lookup_child(self.cursor.0, chunk) {
+            // an identical chunk is already cached (computed earlier by
+            // another session); keep ours private, descend the cursor
+            self.cursor = (child, inner.index.gen(child));
+        } else {
+            inner.blocks.incref(pid); // the index's reference
+            let node = inner.index.insert(self.cursor.0, chunk, pid);
+            self.cursor = (node, inner.index.gen(node));
+        }
+    }
+
+    /// Map the longest cached prefix of `prompt` (full pages, then at
+    /// most one copy-on-write partial tail), capped at `prompt.len()-1`
+    /// so the final prompt token is always recomputed for its logits.
+    /// Returns the number of positions served from shared pages.
+    pub fn match_prefix(&mut self, prompt: &[i32]) -> usize {
+        assert!(
+            self.tokens.is_empty() && self.table.n_pages() == 0,
+            "match_prefix requires a fresh session"
+        );
+        let ps = self.pool.page_size;
+        let cap = prompt.len().saturating_sub(1);
+        let mut g = self.pool.inner.lock().unwrap();
+        let inner = &mut *g;
+        let mut node = inner.index.root();
+        let mut matched = 0usize;
+        if inner.blocks.d_head() != 0 {
+            while matched + ps <= cap {
+                let chunk = &prompt[matched..matched + ps];
+                match inner.index.lookup_child(node, chunk) {
+                    Some(child) => {
+                        let pid = inner.index.page(child);
+                        inner.blocks.incref(pid);
+                        self.table.map_shared(pid, ps, ps);
+                        node = child;
+                        matched += ps;
+                    }
+                    None => break,
+                }
+            }
+            if matched < cap {
+                if let Some((child, m)) = inner.index.partial_child(node, &prompt[matched..cap]) {
+                    let pid = inner.index.page(child);
+                    inner.blocks.incref(pid);
+                    self.table.map_shared(pid, m, ps);
+                    matched += m;
+                    // cursor stays at `node`: the partial page is not on
+                    // our registration path (our tail diverges from it)
+                }
+            }
+        }
+        self.tokens.extend_from_slice(&prompt[..matched]);
+        self.cursor = (node, inner.index.gen(node));
+        inner.prefix_hit_tokens += matched as u64;
+        inner.prefix_miss_tokens += (prompt.len() - matched) as u64;
+        matched
+    }
+
+    /// Attention scores q·k_t for every cached position of (layer, head)
+    /// (pre-softmax, unscaled), streamed page-by-page off the coded
+    /// payload: all-integer block decode via [`DecodeConsts`] for
+    /// M-variant codecs at q ≤ 16, float decode otherwise. Fixed stack
+    /// scratch — no per-position allocation (`out` is reused across
+    /// calls and only grows).
+    pub fn scores(&self, layer: usize, head: usize, qvec: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        let lane = self.lane(layer, head);
+        let total = self.table.fill(lane);
+        if total == 0 {
+            return;
+        }
+        let nq = &self.pool.layers[layer].k;
+        let q = nq.q() as i32;
+        let use_int = nq.codec.m_variant && q <= 16;
+        let consts = DecodeConsts::new(q);
+        let g = self.pool.inner.lock().unwrap();
+        let shape = *g.blocks.shape();
+        let (dh, bpv, ps) = (shape.d_head, shape.blocks_per_vec(), shape.page_size);
+        debug_assert_eq!(qvec.len(), dh);
+        let sqrt_dh = (dh as f32).sqrt();
+        let mut c = [0u8; D];
+        let mut e = [0i32; D];
+        for (pi, &pid) in self.table.pages().iter().enumerate() {
+            if pi * ps >= total {
+                break;
+            }
+            let cnt = (total - pi * ps).min(ps);
+            let page = g.blocks.page(pid);
+            let s0 = shape.slot(lane, 0);
+            for t in 0..cnt {
+                let s = s0 + t;
+                let scale = page.scale_k[s];
+                if scale == 0.0 {
+                    out.push(0.0);
+                    continue;
+                }
+                let denorm = (scale / sqrt_dh) as f64;
+                let codes = &page.codes_k[s * dh..(s + 1) * dh];
+                let bidx = &page.beta_k[s * bpv..(s + 1) * bpv];
+                let mut acc = 0f64;
+                for j in 0..bpv {
+                    c.copy_from_slice(&codes[j * D..(j + 1) * D]);
+                    let xb = &qvec[j * D..(j + 1) * D];
+                    if use_int {
+                        consts.decode(&c, &mut e);
+                        let mut d = 0f32;
+                        for i in 0..D {
+                            d += e[i] as f32 * xb[i];
+                        }
+                        acc += (d * 0.5 * nq.betas[bidx[j] as usize]) as f64;
+                    } else {
+                        let rec = nq.decode_block(&c, bidx[j]);
+                        let mut d = 0f32;
+                        for i in 0..D {
+                            d += rec[i] * xb[i];
+                        }
+                        acc += d as f64;
+                    }
+                }
+                out.push((acc * denorm) as f32);
+            }
+        }
+    }
+
+    /// out = Σ_t probs[t]·v_t for (layer, head): the decode-step value
+    /// path, streamed page-by-page with the same integer decoder as
+    /// [`Self::scores`] — replaces the per-position dequantize-into-Vec
+    /// loop. `out` must be the head dimension; it is overwritten.
+    pub fn weighted_value_sum(&self, layer: usize, head: usize, probs: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        let lane = self.lane(layer, head);
+        let total = self.table.fill(lane).min(probs.len());
+        assert!(
+            probs.len() <= self.table.fill(lane),
+            "probs longer than cached positions"
+        );
+        if total == 0 {
+            return;
+        }
+        let nq = &self.pool.layers[layer].v;
+        let q = nq.q() as i32;
+        let use_int = nq.codec.m_variant && q <= 16;
+        let consts = DecodeConsts::new(q);
+        let g = self.pool.inner.lock().unwrap();
+        let shape = *g.blocks.shape();
+        let (dh, bpv, ps) = (shape.d_head, shape.blocks_per_vec(), shape.page_size);
+        assert_eq!(out.len(), dh);
+        let sqrt_dh = (dh as f32).sqrt();
+        let mut c = [0u8; D];
+        let mut e = [0i32; D];
+        for (pi, &pid) in self.table.pages().iter().enumerate() {
+            if pi * ps >= total {
+                break;
+            }
+            let cnt = (total - pi * ps).min(ps);
+            let page = g.blocks.page(pid);
+            let s0 = shape.slot(lane, 0);
+            for t in 0..cnt {
+                let p = probs[pi * ps + t];
+                let s = s0 + t;
+                let scale = page.scale_v[s];
+                if scale == 0.0 {
+                    continue;
+                }
+                let denorm = scale / sqrt_dh;
+                let codes = &page.codes_v[s * dh..(s + 1) * dh];
+                let bidx = &page.beta_v[s * bpv..(s + 1) * bpv];
+                for j in 0..bpv {
+                    c.copy_from_slice(&codes[j * D..(j + 1) * D]);
+                    let ob = &mut out[j * D..(j + 1) * D];
+                    if use_int {
+                        consts.decode(&c, &mut e);
+                        let beta = nq.betas[bidx[j] as usize];
+                        for i in 0..D {
+                            // (e·0.5)·β·denorm mirrors dequantize's
+                            // (dec·β)·denorm bit-for-bit: e·0.5 is exact
+                            ob[i] += p * (((e[i] as f32 * 0.5) * beta) * denorm);
+                        }
+                    } else {
+                        let rec = nq.decode_block(&c, bidx[j]);
+                        for i in 0..D {
+                            ob[i] += p * (rec[i] * denorm);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn fetch(&self, layer: usize, head: usize, pos: usize, key: bool) -> Vec<f32> {
+        let lane = self.lane(layer, head);
+        assert!(pos < self.table.fill(lane), "position {pos} not cached");
+        let g = self.pool.inner.lock().unwrap();
+        let shape = *g.blocks.shape();
+        let (dh, bpv, ps) = (shape.d_head, shape.blocks_per_vec(), shape.page_size);
+        let page = g.blocks.page(self.table.pages()[pos / ps]);
+        let s = shape.slot(lane, pos % ps);
+        let (codes, beta, scale) = if key {
+            (&page.codes_k, &page.beta_k, page.scale_k[s])
+        } else {
+            (&page.codes_v, &page.beta_v, page.scale_v[s])
+        };
+        let qv = QuantizedVector {
+            codes: codes[s * dh..(s + 1) * dh].to_vec(),
+            beta_idx: beta[s * bpv..(s + 1) * bpv].to_vec(),
+            scale,
+            n: dh,
+        };
+        let lq = &self.pool.layers[layer];
+        if key {
+            lq.k.dequantize(&qv)
+        } else {
+            lq.v.dequantize(&qv)
+        }
+    }
+
+    /// Decode the key at a position (allocating; tests and diagnostics).
+    pub fn key(&self, layer: usize, head: usize, pos: usize) -> Vec<f32> {
+        self.fetch(layer, head, pos, true)
+    }
+
+    /// Decode the value at a position (allocating; tests and diagnostics).
+    pub fn value(&self, layer: usize, head: usize, pos: usize) -> Vec<f32> {
+        self.fetch(layer, head, pos, false)
+    }
+}
+
+impl Drop for SessionKv {
+    fn drop(&mut self) {
+        let mut g = self.pool.inner.lock().unwrap();
+        let inner = &mut *g;
+        self.table.release(&mut inner.blocks);
+        // freshly unpinned cached pages may now exceed the budget
+        trim_to_budget(&mut inner.blocks, &mut inner.index, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, stats, Rng};
+
+    fn pool(n_layer: usize, n_head: usize, cfg: PoolConfig) -> Arc<KvPool> {
+        let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+        let layers = (0..n_layer)
+            .map(|_| KvLayerQuant {
+                k: nq.clone(),
+                v: nq.clone(),
+            })
+            .collect();
+        Arc::new(KvPool::new(n_layer, n_head, layers, cfg))
+    }
+
+    /// Append `n` positions with deterministic per-token vectors to every
+    /// lane and note the token, emulating a generation session.
+    fn run_session(sess: &mut SessionKv, tokens: &[i32], dh: usize) {
+        let p = sess.pool().clone();
+        for (t, &tok) in tokens.iter().enumerate() {
+            for l in 0..p.n_layer() {
+                for h in 0..p.n_head() {
+                    let mut rng = Rng::new(0x5EED ^ tok as u64 ^ ((t as u64) << 32));
+                    let k = rng.gauss_vec(dh);
+                    let v = rng.gauss_vec(dh);
+                    sess.append(l, h, &k, &v);
+                }
+            }
+            sess.note_token(tok);
+        }
+    }
+
+    #[test]
+    fn prefix_hit_shares_pages_and_decodes_identically() {
+        let p = pool(2, 2, PoolConfig { page_size: 4, budget_bytes: None });
+        let dh = 16;
+        let toks: Vec<i32> = (0..17).collect();
+        let mut a = SessionKv::new(p.clone());
+        run_session(&mut a, &toks, dh);
+        let a_pages = a.n_pages();
+        let a_bytes = a.payload_bytes();
+        assert_eq!(a_pages, 5); // 17 positions / 4 per page
+
+        let mut b = SessionKv::new(p.clone());
+        let matched = b.match_prefix(&toks);
+        // cap = 16 → 4 full pages; no partial child of the last node
+        assert_eq!(matched, 16);
+        assert_eq!(b.n_pages(), 4);
+        // shared pages decode bit-identically for both sessions
+        for pos in [0usize, 3, 7, 15] {
+            assert_eq!(a.key(1, 0, pos), b.key(1, 0, pos));
+            assert_eq!(a.value(0, 1, pos), b.value(0, 1, pos));
+        }
+        // pool-wide: the second session added zero pages
+        assert_eq!(p.stats().pages_in_use, 5);
+        assert!(p.stats().bytes_in_use < a_bytes * 2);
+        assert_eq!(p.stats().prefix_hit_tokens, 16);
+        assert_eq!(p.stats().prefix_miss_tokens, 1);
+    }
+
+    #[test]
+    fn partial_tail_match_is_copy_on_write() {
+        let p = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: None });
+        let dh = 16;
+        let toks: Vec<i32> = (0..8).collect();
+        let mut a = SessionKv::new(p.clone());
+        run_session(&mut a, &toks, dh);
+
+        // B shares 6 of A's 8 tokens then diverges
+        let b_toks = vec![0, 1, 2, 3, 4, 5, 99, 98];
+        let mut b = SessionKv::new(p.clone());
+        let matched = b.match_prefix(&b_toks);
+        assert_eq!(matched, 6, "1 full page + 2-token partial tail");
+        let shared_tail = b.table.pages()[1];
+        assert_eq!(shared_tail, a.table.pages()[1]);
+        // diverging append must COW the tail, leaving A's data intact
+        let a_key_before = a.key(0, 0, 6);
+        run_session(&mut b, &b_toks[6..], dh);
+        assert_ne!(b.table.pages()[1], shared_tail, "tail not copied on write");
+        assert_eq!(a.key(0, 0, 6), a_key_before);
+        // shared positions still decode identically; diverged ones differ
+        assert_eq!(a.key(0, 0, 5), b.key(0, 0, 5));
+        assert_ne!(a.key(0, 0, 6), b.key(0, 0, 6));
+    }
+
+    #[test]
+    fn streaming_kernels_match_dequantized_reference() {
+        for m_variant in [false, true] {
+            let betas = vec![0.25, 0.32, 0.45, 1.0];
+            let nq = if m_variant {
+                NestedLatticeQuantizer::new_m(14, betas)
+            } else {
+                NestedLatticeQuantizer::new(14, betas)
+            };
+            let layers = vec![KvLayerQuant { k: nq.clone(), v: nq.clone() }];
+            let cfg = PoolConfig { page_size: 4, budget_bytes: None };
+            let p = Arc::new(KvPool::new(1, 1, layers, cfg));
+            let mut sess = SessionKv::new(p);
+            let dh = 16;
+            let mut rng = Rng::new(1704);
+            for _ in 0..11 {
+                let k = rng.gauss_vec(dh);
+                let v = rng.gauss_vec(dh);
+                sess.append(0, 0, &k, &v);
+            }
+            let qv = rng.gauss_vec(dh);
+            let mut scores = Vec::new();
+            sess.scores(0, 0, &qv, &mut scores);
+            assert_eq!(scores.len(), 11);
+            let probs: Vec<f32> = (0..11).map(|i| 0.05 + 0.01 * i as f32).collect();
+            let mut wsum = vec![0f32; dh];
+            sess.weighted_value_sum(0, 0, &probs, &mut wsum);
+            let mut expect_w = vec![0f32; dh];
+            for t in 0..11 {
+                let kd = sess.key(0, 0, t);
+                let s = stats::dot(&qv, &kd) as f32;
+                assert!(
+                    (scores[t] - s).abs() < 1e-4 * (1.0 + s.abs()),
+                    "m={m_variant} t={t}: streaming {} vs reference {s}",
+                    scores[t]
+                );
+                let vd = sess.value(0, 0, t);
+                for i in 0..dh {
+                    expect_w[i] += probs[t] * vd[i];
+                }
+            }
+            for i in 0..dh {
+                assert!(
+                    (wsum[i] - expect_w[i]).abs() < 1e-5 * (1.0 + expect_w[i].abs()),
+                    "m={m_variant} value sum diverges at {i}: {} vs {}",
+                    wsum[i],
+                    expect_w[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eviction_reclaims_cached_runs_and_respects_live_sessions() {
+        let dh = 16;
+        // budget: 6 pages exactly
+        let probe = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: None });
+        let bpp = {
+            let mut s = SessionKv::new(probe.clone());
+            s.append(0, 0, &vec![0.5; dh], &vec![0.5; dh]);
+            probe.stats().bytes_per_page
+        };
+        let p = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: Some(6 * bpp) });
+
+        let toks_a: Vec<i32> = (0..16).collect();
+        let mut a = SessionKv::new(p.clone());
+        run_session(&mut a, &toks_a, dh);
+        assert_eq!(p.stats().pages_in_use, 4);
+        // A finishes: its 4 frozen pages stay cached in the index
+        drop(a);
+        assert_eq!(p.stats().pages_in_use, 4);
+        assert_eq!(p.stats().cached_pages, 4);
+
+        // B (live, disjoint tokens) needs 4 pages; budget 6 forces LRU
+        // eviction of A's cached run
+        let toks_b: Vec<i32> = (100..116).collect();
+        let mut b = SessionKv::new(p.clone());
+        assert_eq!(b.match_prefix(&toks_b), 0);
+        run_session(&mut b, &toks_b, dh);
+        let st = p.stats();
+        assert!(st.evicted_pages >= 2, "expected LRU evictions, got {st:?}");
+        assert!(st.bytes_in_use <= 6 * bpp, "budget exceeded: {st:?}");
+        assert_eq!(st.budget_overruns, 0);
+
+        // a live session under eviction pressure still scores
+        // bit-identically to an unconstrained pool
+        let unbounded = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: None });
+        let mut c = SessionKv::new(unbounded);
+        run_session(&mut c, &toks_b, dh);
+        let mut b_scores = Vec::new();
+        let mut c_scores = Vec::new();
+        b.scores(0, 0, &vec![0.3; dh], &mut b_scores);
+        c.scores(0, 0, &vec![0.3; dh], &mut c_scores);
+        for (x, y) in b_scores.iter().zip(&c_scores) {
+            assert_eq!(x.to_bits(), y.to_bits(), "eviction changed live scores");
+        }
+        // A's run was evicted bottom-up: the tail is gone, so a rematch
+        // can recover at most the surviving head of the run
+        let mut d = SessionKv::new(p.clone());
+        assert!(
+            d.match_prefix(&toks_a) <= 8,
+            "evicted tail pages must not be matchable"
+        );
+    }
+
+    #[test]
+    fn budget_overrun_counted_when_all_pages_pinned() {
+        let dh = 16;
+        let probe = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: None });
+        let bpp = {
+            let mut s = SessionKv::new(probe.clone());
+            s.append(0, 0, &vec![0.5; dh], &vec![0.5; dh]);
+            probe.stats().bytes_per_page
+        };
+        let p = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: Some(2 * bpp) });
+        let mut a = SessionKv::new(p.clone());
+        run_session(&mut a, &(0..16).collect::<Vec<_>>(), dh);
+        let st = p.stats();
+        assert_eq!(st.pages_in_use, 4, "live traffic is never refused");
+        assert!(st.budget_overruns > 0);
+        drop(a);
+        // once the session ends, the trim brings the cache under budget
+        assert!(p.stats().bytes_in_use <= 2 * bpp);
+    }
+
+    #[test]
+    fn pool_sessions_propcheck_no_leaks_budget_respected() {
+        // random session traffic: spawn / extend / drop sessions against
+        // a budgeted pool; invariants checked at every step: page
+        // accounting consistent, and whenever no session is live the
+        // cached footprint is within budget.
+        propcheck::check("kvpool-session-traffic", 8, 0xF00D_0011, |rng| {
+            let dh = 8;
+            let probe = pool(1, 1, PoolConfig { page_size: 2, budget_bytes: None });
+            let bpp = {
+                let mut s = SessionKv::new(probe.clone());
+                s.append(0, 0, &vec![0.5; dh], &vec![0.5; dh]);
+                probe.stats().bytes_per_page
+            };
+            let p = pool(1, 1, PoolConfig { page_size: 2, budget_bytes: Some(5 * bpp) });
+            let mut live: Vec<SessionKv> = Vec::new();
+            for step in 0..60 {
+                match rng.below(4) {
+                    0 => {
+                        let mut s = SessionKv::new(p.clone());
+                        let start = rng.below(4) as i32;
+                        let toks: Vec<i32> = (start..start + 4).collect();
+                        s.match_prefix(&toks);
+                        let done = s.tokens.len();
+                        let rest: Vec<i32> = toks[done..].to_vec();
+                        run_session(&mut s, &rest, dh);
+                        live.push(s);
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        let tok = rng.below(50) as i32;
+                        run_session(&mut live[i], &[tok], dh);
+                    }
+                    2 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        live.swap_remove(i);
+                    }
+                    _ => {}
+                }
+                let st = p.stats();
+                if live.is_empty() && st.bytes_in_use > 5 * bpp {
+                    return Err(format!("idle pool over budget at step {step}: {st:?}"));
+                }
+                let mapped: usize = live.iter().map(|s| s.n_pages()).sum();
+                if st.pages_in_use > mapped + st.cached_pages {
+                    return Err(format!(
+                        "accounting drift at step {step}: in_use {} > mapped {mapped} + cached {}",
+                        st.pages_in_use, st.cached_pages
+                    ));
+                }
+            }
+            drop(live);
+            let st = p.stats();
+            if st.bytes_in_use > 5 * bpp {
+                return Err(format!("final pool over budget: {st:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn per_layer_quantizers_decode_with_their_own_pair() {
+        // layer 0: fine quantizer (q=14); layer 1: coarse (q=3). The same
+        // vector stored in both layers must come back through the
+        // layer's own codec — coarse decode ≠ fine decode.
+        let fine = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+        let coarse = NestedLatticeQuantizer::new_m(3, vec![0.5, 1.0]);
+        let layers = vec![
+            KvLayerQuant { k: fine.clone(), v: fine.clone() },
+            KvLayerQuant { k: coarse.clone(), v: coarse.clone() },
+        ];
+        let p = Arc::new(KvPool::new(2, 1, layers, PoolConfig::default()));
+        let mut sess = SessionKv::new(p);
+        let mut rng = Rng::new(9);
+        let x = rng.gauss_vec(16);
+        sess.append(0, 0, &x, &x);
+        sess.append(1, 0, &x, &x);
+        let d0 = sess.key(0, 0, 0);
+        let d1 = sess.key(1, 0, 0);
+        assert_eq!(d0, fine.roundtrip(&x), "layer 0 must use its own quantizer");
+        assert_eq!(d1, coarse.roundtrip(&x), "layer 1 must use its own quantizer");
+        assert!(
+            stats::rmse(&x, &d0) < stats::rmse(&x, &d1),
+            "fine layer should reconstruct better"
+        );
+    }
+}

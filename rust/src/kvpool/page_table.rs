@@ -1,0 +1,226 @@
+//! Per-session logical→physical page mapping.
+//!
+//! A [`PageTable`] maps a session's logical page index (position /
+//! page_size) to a physical [`PageId`] and tracks per-(layer, head) fill
+//! counts — lanes may be ragged (the single-owner `KvCache` adapter
+//! appends per head), but pooled serving sessions fill all lanes
+//! uniformly, one position per decode step.
+//!
+//! Writes go through [`PageTable::writable_page`], which enforces
+//! copy-on-write: appending into a page that is shared (mapped by
+//! another session or held by the prefix index) or frozen first copies
+//! the session-visible filled prefix of every lane into a fresh page and
+//! remaps. Shared full pages are therefore immutable, and a partial tail
+//! mapped from the prefix index diverges privately at the first write.
+
+use super::block::{BlockPool, PageId};
+
+pub struct PageTable {
+    /// logical page index → physical page
+    pages: Vec<PageId>,
+    /// per-lane appended-position count (lane = layer·n_head + head)
+    fill: Box<[u32]>,
+}
+
+impl PageTable {
+    pub fn new(lanes: usize) -> Self {
+        PageTable {
+            pages: Vec::new(),
+            fill: vec![0u32; lanes].into_boxed_slice(),
+        }
+    }
+
+    pub fn pages(&self) -> &[PageId] {
+        &self.pages
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn fill(&self, lane: usize) -> usize {
+        self.fill[lane] as usize
+    }
+
+    /// Map an externally owned page (prefix hit) as the next logical
+    /// page, advancing every lane by `positions` (≤ page_size). The
+    /// caller has already bumped the page's refcount.
+    pub fn map_shared(&mut self, page: PageId, positions: usize, page_size: usize) {
+        debug_assert!(positions >= 1 && positions <= page_size);
+        let full = self.pages.len() * page_size;
+        for f in self.fill.iter_mut() {
+            debug_assert_eq!(*f as usize, full, "prefix mapping requires uniform lanes");
+            *f += positions as u32;
+        }
+        self.pages.push(page);
+    }
+
+    /// Number of positions of logical page `pi` visible to this session
+    /// on `lane`.
+    pub fn filled_on(&self, lane: usize, pi: usize, page_size: usize) -> usize {
+        (self.fill(lane)).saturating_sub(pi * page_size).min(page_size)
+    }
+
+    /// Resolve (and if needed allocate or copy-on-write) the physical
+    /// page behind `lane`'s next append slot, advancing the lane's fill.
+    /// Returns (page id, local slot). `on_alloc` runs before every fresh
+    /// allocation so the pool owner can apply budget eviction.
+    pub fn claim_slot<F: FnMut(&mut BlockPool)>(
+        &mut self,
+        lane: usize,
+        blocks: &mut BlockPool,
+        mut on_alloc: F,
+    ) -> (PageId, usize) {
+        let page_size = blocks.shape().page_size;
+        let slot = self.fill(lane);
+        let pi = slot / page_size;
+        let local = slot % page_size;
+        if pi == self.pages.len() {
+            on_alloc(blocks);
+            self.pages.push(blocks.alloc());
+        } else {
+            debug_assert!(pi < self.pages.len(), "lane fill ahead of page table");
+            let cur = self.pages[pi];
+            if blocks.refcount(cur) > 1 || blocks.page(cur).frozen {
+                on_alloc(blocks);
+                let fresh = self.cow(pi, blocks);
+                self.pages[pi] = fresh;
+                blocks.decref(cur);
+            }
+        }
+        self.fill[lane] = (slot + 1) as u32;
+        (self.pages[pi], local)
+    }
+
+    /// Copy the session-visible filled prefix of every lane of logical
+    /// page `pi` into a freshly allocated page.
+    fn cow(&self, pi: usize, blocks: &mut BlockPool) -> PageId {
+        let fresh = blocks.alloc();
+        let shape = *blocks.shape();
+        let (dh, bpv, ps) = (shape.d_head, shape.blocks_per_vec(), shape.page_size);
+        let (src, dst) = blocks.page_pair_mut(self.pages[pi], fresh);
+        for lane in 0..shape.lanes() {
+            let cnt = (self.fill(lane)).saturating_sub(pi * ps).min(ps);
+            if cnt == 0 {
+                continue;
+            }
+            let s0 = shape.slot(lane, 0);
+            dst.codes_k[s0 * dh..(s0 + cnt) * dh]
+                .copy_from_slice(&src.codes_k[s0 * dh..(s0 + cnt) * dh]);
+            dst.beta_k[s0 * bpv..(s0 + cnt) * bpv]
+                .copy_from_slice(&src.beta_k[s0 * bpv..(s0 + cnt) * bpv]);
+            dst.scale_k[s0..s0 + cnt].copy_from_slice(&src.scale_k[s0..s0 + cnt]);
+            dst.codes_v[s0 * dh..(s0 + cnt) * dh]
+                .copy_from_slice(&src.codes_v[s0 * dh..(s0 + cnt) * dh]);
+            dst.beta_v[s0 * bpv..(s0 + cnt) * bpv]
+                .copy_from_slice(&src.beta_v[s0 * bpv..(s0 + cnt) * bpv]);
+            dst.scale_v[s0..s0 + cnt].copy_from_slice(&src.scale_v[s0..s0 + cnt]);
+        }
+        fresh
+    }
+
+    /// Release every mapped page back to `blocks`.
+    pub fn release(&mut self, blocks: &mut BlockPool) {
+        for &p in &self.pages {
+            blocks.decref(p);
+        }
+        self.pages.clear();
+        for f in self.fill.iter_mut() {
+            *f = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::block::PageShape;
+
+    fn pool() -> BlockPool {
+        let mut bp = BlockPool::new(
+            PageShape {
+                n_layer: 1,
+                n_head: 2,
+                page_size: 4,
+                d_head: 0,
+            },
+            None,
+        );
+        bp.set_d_head(8, &[(14, 14)]);
+        bp
+    }
+
+    #[test]
+    fn claim_allocates_page_per_page_size_positions() {
+        let mut bp = pool();
+        let mut t = PageTable::new(2);
+        for i in 0..9 {
+            let (_, local) = t.claim_slot(0, &mut bp, |_| {});
+            assert_eq!(local, i % 4);
+        }
+        assert_eq!(t.n_pages(), 3);
+        assert_eq!(t.fill(0), 9);
+        assert_eq!(t.fill(1), 0, "lanes are independent");
+        // second lane rides the already-mapped pages
+        let before = bp.pages_in_use();
+        t.claim_slot(1, &mut bp, |_| {});
+        assert_eq!(bp.pages_in_use(), before);
+        t.release(&mut bp);
+        assert_eq!(bp.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn cow_triggers_on_shared_page_and_preserves_content() {
+        let mut bp = pool();
+        let mut t = PageTable::new(2);
+        let (p0, s0) = t.claim_slot(0, &mut bp, |_| {});
+        assert_eq!(s0, 0);
+        bp.page_mut(p0).codes_k[0] = 42;
+        bp.page_mut(p0).scale_k[0] = 1.5;
+        // simulate the prefix index holding a reference
+        bp.incref(p0);
+        let (p1, s1) = t.claim_slot(0, &mut bp, |_| {});
+        assert_ne!(p0, p1, "shared page must be copied on write");
+        assert_eq!(s1, 1);
+        assert_eq!(bp.page(p1).codes_k[0], 42, "filled prefix copied");
+        assert_eq!(bp.page(p1).scale_k[0], 1.5);
+        assert_eq!(bp.refcount(p0), 1, "session ref moved off the old page");
+        // subsequent appends stay on the private copy
+        let (p2, _) = t.claim_slot(0, &mut bp, |_| {});
+        assert_eq!(p1, p2);
+        t.release(&mut bp);
+        bp.decref(p0);
+        assert_eq!(bp.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn frozen_private_page_also_copies() {
+        let mut bp = pool();
+        let mut t = PageTable::new(2);
+        let (p0, _) = t.claim_slot(0, &mut bp, |_| {});
+        bp.page_mut(p0).frozen = true;
+        let (p1, _) = t.claim_slot(0, &mut bp, |_| {});
+        assert_ne!(p0, p1);
+        assert_eq!(bp.pages_in_use(), 1, "old private page freed by COW");
+        t.release(&mut bp);
+    }
+
+    #[test]
+    fn map_shared_advances_all_lanes() {
+        let mut bp = pool();
+        let mut t = PageTable::new(2);
+        let ext = bp.alloc();
+        bp.incref(ext); // table's reference
+        t.map_shared(ext, 3, 4);
+        assert_eq!(t.fill(0), 3);
+        assert_eq!(t.fill(1), 3);
+        assert_eq!(t.filled_on(0, 0, 4), 3);
+        // next claim lands on slot 3 of the shared page → COW
+        let (p, local) = t.claim_slot(0, &mut bp, |_| {});
+        assert_eq!(local, 3);
+        assert_ne!(p, ext);
+        t.release(&mut bp);
+        bp.decref(ext);
+        assert_eq!(bp.pages_in_use(), 0);
+    }
+}

@@ -1,0 +1,313 @@
+//! Token-ID prefix trie over frozen pages (RadixAttention-style, at page
+//! granularity with token-granular tails).
+//!
+//! Each node below the root owns one frozen page and is keyed by the
+//! exact `page_size`-token chunk that produced it; a path from the root
+//! spells out a token prefix at page granularity. A new session walks the
+//! trie against its prompt: every full-chunk match maps the node's page
+//! (refcount bump — zero quantization work), and a final *partial* match
+//! against one child's chunk maps that page as a copy-on-write tail.
+//! Exact token keys (not hashes) make false sharing impossible.
+//!
+//! The index holds one reference on every registered page, which is what
+//! keeps a finished session's prefix alive for later sessions; LRU
+//! eviction walks leaf nodes (deepest-first by construction — a child's
+//! page is useless without its ancestors) whose page nobody else
+//! references and releases them until the pool is back under budget.
+
+use super::block::PageId;
+
+const ROOT: usize = 0;
+
+struct TrieNode {
+    /// the page_size-token chunk keying this node under its parent
+    /// (empty for the root)
+    chunk: Box<[i32]>,
+    page: PageId,
+    parent: usize,
+    children: Vec<usize>,
+    /// logical LRU timestamp (index clock at last lookup/registration)
+    last_use: u64,
+    /// free-list marker
+    dead: bool,
+    /// bumped every time the node slot is freed, so stale cursors held
+    /// by long-lived sessions can be detected instead of silently
+    /// registering chunks under a recycled node
+    gen: u32,
+}
+
+/// The prefix index: a trie of frozen-page chunks.
+pub struct PrefixIndex {
+    nodes: Vec<TrieNode>,
+    free: Vec<usize>,
+    clock: u64,
+}
+
+impl Default for PrefixIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        PrefixIndex {
+            nodes: vec![TrieNode {
+                chunk: Box::new([]),
+                page: 0,
+                parent: ROOT,
+                children: Vec::new(),
+                last_use: 0,
+                dead: false,
+                gen: 0,
+            }],
+            free: Vec::new(),
+            clock: 0,
+        }
+    }
+
+    pub fn root(&self) -> usize {
+        ROOT
+    }
+
+    pub fn page(&self, node: usize) -> PageId {
+        debug_assert!(node != ROOT && !self.nodes[node].dead);
+        self.nodes[node].page
+    }
+
+    /// Registered (non-root, live) node count.
+    pub fn len(&self) -> usize {
+        self.nodes.len() - 1 - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Generation of a node slot — capture alongside the node id to form
+    /// a cursor that survives (detectably) across evictions.
+    pub fn gen(&self, node: usize) -> u32 {
+        self.nodes[node].gen
+    }
+
+    /// Is a (node, gen) cursor still pointing at the node it named? The
+    /// root is always valid.
+    pub fn valid(&self, node: usize, gen: u32) -> bool {
+        node == ROOT || (!self.nodes[node].dead && self.nodes[node].gen == gen)
+    }
+
+    /// Exact full-chunk child lookup; touches the LRU clock on hit.
+    pub fn lookup_child(&mut self, node: usize, chunk: &[i32]) -> Option<usize> {
+        let hit = self.nodes[node]
+            .children
+            .iter()
+            .copied()
+            .find(|&c| &*self.nodes[c].chunk == chunk);
+        if let Some(c) = hit {
+            let t = self.tick();
+            self.nodes[c].last_use = t;
+        }
+        hit
+    }
+
+    /// Longest proper-prefix match of `toks` against one child's chunk:
+    /// the copy-on-write tail candidate. Returns (child, matched tokens)
+    /// with 1 ≤ matched < chunk length. `toks` shorter than a chunk is
+    /// the common case (prompt tail); a full-length mismatching chunk can
+    /// still share its head.
+    pub fn partial_child(&mut self, node: usize, toks: &[i32]) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize)> = None;
+        for &c in &self.nodes[node].children {
+            let chunk = &self.nodes[c].chunk;
+            let mut m = 0usize;
+            while m < toks.len() && m < chunk.len() && toks[m] == chunk[m] {
+                m += 1;
+            }
+            if m >= 1 && m < chunk.len() && best.map_or(true, |(_, bm)| m > bm) {
+                best = Some((c, m));
+            }
+        }
+        if let Some((c, _)) = best {
+            let t = self.tick();
+            self.nodes[c].last_use = t;
+        }
+        best
+    }
+
+    /// Register a frozen page under `node`. The caller must have checked
+    /// `lookup_child` first (duplicate chunks are a logic error) and owns
+    /// the index's reference on `page`.
+    pub fn insert(&mut self, node: usize, chunk: &[i32], page: PageId) -> usize {
+        debug_assert!(self
+            .nodes[node]
+            .children
+            .iter()
+            .all(|&c| &*self.nodes[c].chunk != chunk));
+        let t = self.tick();
+        let fresh = TrieNode {
+            chunk: chunk.into(),
+            page,
+            parent: node,
+            children: Vec::new(),
+            last_use: t,
+            dead: false,
+            gen: 0,
+        };
+        let id = if let Some(id) = self.free.pop() {
+            let gen = self.nodes[id].gen;
+            self.nodes[id] = fresh;
+            self.nodes[id].gen = gen;
+            id
+        } else {
+            self.nodes.push(fresh);
+            self.nodes.len() - 1
+        };
+        self.nodes[node].children.push(id);
+        id
+    }
+
+    /// Evict the least-recently-used *leaf* whose page satisfies
+    /// `reclaimable` (i.e. only the index references it). Returns the
+    /// evicted page so the caller can drop the index's reference. Leaves
+    /// first means runs are released bottom-up: a parent becomes a leaf
+    /// once its children are gone, so repeated calls peel whole runs.
+    ///
+    /// Linear scan over the node slab per evicted page: fine at the
+    /// current cached-chunk counts (hundreds) and single serving worker;
+    /// a leaf min-heap on `last_use` is the upgrade path if budgeted
+    /// pools grow to many thousands of cached chunks.
+    pub fn evict_lru<F: Fn(PageId) -> bool>(&mut self, reclaimable: F) -> Option<PageId> {
+        let mut victim: Option<usize> = None;
+        for id in 1..self.nodes.len() {
+            let n = &self.nodes[id];
+            if n.dead || !n.children.is_empty() || !reclaimable(n.page) {
+                continue;
+            }
+            if victim.map_or(true, |v| n.last_use < self.nodes[v].last_use) {
+                victim = Some(id);
+            }
+        }
+        let id = victim?;
+        let parent = self.nodes[id].parent;
+        self.nodes[parent].children.retain(|&c| c != id);
+        self.nodes[id].dead = true;
+        self.nodes[id].gen = self.nodes[id].gen.wrapping_add(1);
+        self.nodes[id].children = Vec::new();
+        self.nodes[id].chunk = Box::new([]);
+        self.free.push(id);
+        Some(self.nodes[id].page)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(base: i32, n: usize) -> Vec<i32> {
+        (0..n as i32).map(|i| base + i).collect()
+    }
+
+    #[test]
+    fn insert_lookup_roundtrip() {
+        let mut idx = PrefixIndex::new();
+        let r = idx.root();
+        let c0 = chunk(0, 4);
+        let n0 = idx.insert(r, &c0, 7);
+        assert_eq!(idx.lookup_child(r, &c0), Some(n0));
+        assert_eq!(idx.page(n0), 7);
+        assert_eq!(idx.lookup_child(r, &chunk(1, 4)), None);
+        // chain a second level
+        let c1 = chunk(100, 4);
+        let n1 = idx.insert(n0, &c1, 9);
+        assert_eq!(idx.lookup_child(n0, &c1), Some(n1));
+        assert_eq!(idx.lookup_child(r, &c1), None, "levels are separate");
+        assert_eq!(idx.len(), 2);
+    }
+
+    #[test]
+    fn partial_match_picks_longest_shared_head() {
+        let mut idx = PrefixIndex::new();
+        let r = idx.root();
+        idx.insert(r, &[1, 2, 3, 4], 1);
+        let nb = idx.insert(r, &[1, 2, 9, 9], 2);
+        // toks share 2 tokens with both children; tie resolves to the
+        // first-found longest (both length 2 — either page is valid)
+        let (_, m) = idx.partial_child(r, &[1, 2]).unwrap();
+        assert_eq!(m, 2);
+        // 3-token overlap with child b only
+        let (c, m) = idx.partial_child(r, &[1, 2, 9, 7]).unwrap();
+        assert_eq!((c, m), (nb, 3));
+        // no shared head at all
+        assert!(idx.partial_child(r, &[5, 5]).is_none());
+        // a full-chunk match is lookup_child's job, never a partial
+        // (m < chunk len): with no sibling sharing a head, none is found
+        let mut solo = PrefixIndex::new();
+        let r2 = solo.root();
+        solo.insert(r2, &[1, 2, 3, 4], 1);
+        assert!(solo.partial_child(r2, &[1, 2, 3, 4]).is_none());
+        assert!(solo.partial_child(r2, &[1, 2]).is_some());
+    }
+
+    #[test]
+    fn lru_evicts_leaves_bottom_up() {
+        let mut idx = PrefixIndex::new();
+        let r = idx.root();
+        let a = idx.insert(r, &chunk(0, 4), 10);
+        let _b = idx.insert(a, &chunk(10, 4), 11);
+        let c = idx.insert(r, &chunk(20, 4), 12);
+        // touch the deep leaf (page 11) so the shallow leaf (12) is LRU
+        idx.lookup_child(a, &chunk(10, 4));
+        assert_eq!(idx.evict_lru(|_| true), Some(12));
+        assert_eq!(idx.lookup_child(r, &chunk(20, 4)), None);
+        // page 10 is an inner node: next eviction must take leaf 11 first
+        assert_eq!(idx.evict_lru(|_| true), Some(11));
+        assert_eq!(idx.evict_lru(|_| true), Some(10));
+        assert_eq!(idx.evict_lru(|_| true), None);
+        assert!(idx.is_empty());
+        let _ = c;
+    }
+
+    #[test]
+    fn eviction_respects_reclaimable_filter() {
+        let mut idx = PrefixIndex::new();
+        let r = idx.root();
+        idx.insert(r, &chunk(0, 4), 1);
+        idx.insert(r, &chunk(10, 4), 2);
+        // page 1 pinned (e.g. a live session still maps it)
+        assert_eq!(idx.evict_lru(|p| p != 1), Some(2));
+        assert_eq!(idx.evict_lru(|p| p != 1), None);
+        assert_eq!(idx.len(), 1);
+    }
+
+    #[test]
+    fn generation_guard_detects_recycled_cursor() {
+        let mut idx = PrefixIndex::new();
+        let r = idx.root();
+        let n = idx.insert(r, &chunk(0, 4), 1);
+        let gen = idx.gen(n);
+        assert!(idx.valid(n, gen));
+        idx.evict_lru(|_| true);
+        assert!(!idx.valid(n, gen), "evicted node must invalidate cursors");
+        let n2 = idx.insert(r, &chunk(10, 4), 2);
+        assert_eq!(n, n2, "slot recycled");
+        assert!(!idx.valid(n, gen), "recycled slot has a new generation");
+        assert!(idx.valid(n2, idx.gen(n2)));
+        assert!(idx.valid(r, 0), "root is always valid");
+    }
+
+    #[test]
+    fn freed_nodes_are_recycled() {
+        let mut idx = PrefixIndex::new();
+        let r = idx.root();
+        idx.insert(r, &chunk(0, 4), 1);
+        idx.evict_lru(|_| true);
+        let n = idx.insert(r, &chunk(10, 4), 2);
+        assert_eq!(idx.lookup_child(r, &chunk(10, 4)), Some(n));
+        assert_eq!(idx.nodes.len(), 2, "node slab must recycle");
+    }
+}

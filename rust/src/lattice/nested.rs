@@ -35,12 +35,21 @@ pub struct QuantizedVector {
     pub n: usize,
 }
 
+/// Stored payload size in bits of an n-entry coded vector at rate
+/// log2(q), plus 2 bits/block for β (uncompressed; k ≤ 4 assumed for the
+/// 2-bit packing) and the f32 scale. Single source of truth for coded
+/// payload accounting — the paged KV pool's page byte costs
+/// (`kvpool::block`) derive from this too.
+pub fn payload_bits_for(n: usize, q: u32) -> usize {
+    let code_bits = (n as f64 * (q as f64).log2()).ceil() as usize;
+    code_bits + 2 * (n / D) + 32 // + f32 scale
+}
+
 impl QuantizedVector {
-    /// Stored payload size in bits at rate log2(q) + 2 bits/block for β
-    /// (uncompressed; k ≤ 4 assumed for the 2-bit packing).
+    /// Stored payload size in bits (see [`payload_bits_for`]).
     pub fn payload_bits(&self, q: u32) -> usize {
-        let code_bits = (self.n as f64 * (q as f64).log2()).ceil() as usize;
-        code_bits + 2 * self.beta_idx.len() + 32 // + f32 scale
+        debug_assert_eq!(self.beta_idx.len(), self.n / D);
+        payload_bits_for(self.n, q)
     }
 }
 

@@ -114,6 +114,7 @@ fn main() -> Result<()> {
                         max_batch: batch,
                         ..Default::default()
                     },
+                    ..Default::default()
                 },
             );
             let t0 = std::time::Instant::now();

@@ -14,6 +14,7 @@
 //! equivalence), while the serving path (`kvcache`, `coordinator`) keeps
 //! KV entries in coded form.
 
+use crate::kvpool::{KvLayerQuant, KvPool, PoolConfig};
 use crate::lattice::beta_dp::select_betas_for_data;
 use crate::lattice::e8::D;
 use crate::lattice::nested::{NestedLatticeQuantizer, Strategy};
@@ -28,6 +29,7 @@ use crate::quant::uniform::UniformQuantizer;
 use crate::rotation::Rotation;
 use crate::util::linalg::{matmul_into, Mat};
 use crate::util::Rng;
+use std::sync::Arc;
 
 /// Quantization regime (paper Tables 1–3 columns).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -395,6 +397,32 @@ impl Engine {
             weight_bits_zstd: if n_lin > 0.0 { bits_z / n_lin } else { 32.0 },
             weight_bits_packed: if n_lin > 0.0 { bits_p / n_lin } else { 32.0 },
         }
+    }
+
+    /// Build a paged KV pool carrying each layer's own calibrated
+    /// key/value quantizer pair (§4.6 step 4 — per-layer dictionaries).
+    /// `None` when this engine doesn't keep a coded KV cache (fp regime,
+    /// or uniform-baseline KV which stays on the fp32 per-session path).
+    pub fn kv_pool(&self, cfg: PoolConfig) -> Option<Arc<KvPool>> {
+        if !self.opts.regime.quantizes_kv() {
+            return None;
+        }
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            match (&l.k_nq, &l.v_nq) {
+                (Some(k), Some(v)) => layers.push(KvLayerQuant {
+                    k: k.clone(),
+                    v: v.clone(),
+                }),
+                _ => return None,
+            }
+        }
+        Some(Arc::new(KvPool::new(
+            self.cfg.n_layer,
+            self.cfg.n_head,
+            layers,
+            cfg,
+        )))
     }
 
     fn kv_quantizer(
@@ -1090,49 +1118,17 @@ mod tests {
     /// A synthetic random tiny model, so the integer-backend tests run
     /// without the trained artifact (which the `load_tiny` tests skip on).
     fn synth_weights() -> ModelWeights {
-        use crate::model::weights::LayerWeights;
-        let cfg = crate::model::ModelConfig {
-            vocab: 48,
-            ctx: 16,
-            d_model: 32,
-            n_layer: 1,
-            n_head: 2,
-            d_ff: 64,
-        };
-        let mut rng = crate::util::Rng::new(0xBEEF);
-        fn mat(rng: &mut crate::util::Rng, r: usize, c: usize, s: f32) -> Mat {
-            let mut m = Mat::from_vec(r, c, rng.gauss_vec(r * c));
-            m.scale(s);
-            m
-        }
-        let layers = vec![LayerWeights {
-            ln1: vec![1.0; cfg.d_model],
-            ln2: vec![1.0; cfg.d_model],
-            wq: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
-            wk: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
-            wv: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
-            wo: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
-            w_up: mat(&mut rng, cfg.d_ff, cfg.d_model, 0.25),
-            w_down: mat(&mut rng, cfg.d_model, cfg.d_ff, 0.25),
-        }];
-        let tok_emb = mat(&mut rng, cfg.vocab, cfg.d_model, 0.5);
-        let pos_emb = mat(&mut rng, cfg.ctx, cfg.d_model, 0.1);
-        let head = mat(&mut rng, cfg.vocab, cfg.d_model, 0.25);
-        let toks = |rng: &mut crate::util::Rng, n: usize| -> Vec<i32> {
-            (0..n).map(|_| rng.below(cfg.vocab) as i32).collect()
-        };
-        let val_tokens = toks(&mut rng, 3 * (cfg.ctx + 1));
-        let calib_tokens = toks(&mut rng, 3 * (cfg.ctx + 1));
-        ModelWeights {
-            cfg,
-            tok_emb,
-            pos_emb,
-            head,
-            final_norm: vec![1.0; cfg.d_model],
-            layers,
-            val_tokens,
-            calib_tokens,
-        }
+        ModelWeights::synthetic(
+            crate::model::ModelConfig {
+                vocab: 48,
+                ctx: 16,
+                d_model: 32,
+                n_layer: 1,
+                n_head: 2,
+                d_ff: 64,
+            },
+            0xBEEF,
+        )
     }
 
     #[test]

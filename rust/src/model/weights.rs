@@ -92,6 +92,49 @@ impl ModelWeights {
         })
     }
 
+    /// A deterministic random model (no trained artifact needed): used
+    /// by the integer-backend / KV-pool tests and the serving bench,
+    /// where end-to-end structure matters but logit quality doesn't.
+    pub fn synthetic(cfg: ModelConfig, seed: u64) -> Self {
+        use crate::util::Rng;
+        let mut rng = Rng::new(seed);
+        fn mat(rng: &mut Rng, r: usize, c: usize, s: f32) -> Mat {
+            let mut m = Mat::from_vec(r, c, rng.gauss_vec(r * c));
+            m.scale(s);
+            m
+        }
+        let layers = (0..cfg.n_layer)
+            .map(|_| LayerWeights {
+                ln1: vec![1.0; cfg.d_model],
+                ln2: vec![1.0; cfg.d_model],
+                wq: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
+                wk: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
+                wv: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
+                wo: mat(&mut rng, cfg.d_model, cfg.d_model, 0.25),
+                w_up: mat(&mut rng, cfg.d_ff, cfg.d_model, 0.25),
+                w_down: mat(&mut rng, cfg.d_model, cfg.d_ff, 0.25),
+            })
+            .collect();
+        let tok_emb = mat(&mut rng, cfg.vocab, cfg.d_model, 0.5);
+        let pos_emb = mat(&mut rng, cfg.ctx, cfg.d_model, 0.1);
+        let head = mat(&mut rng, cfg.vocab, cfg.d_model, 0.25);
+        let mut toks = |n: usize| -> Vec<i32> {
+            (0..n).map(|_| rng.below(cfg.vocab) as i32).collect()
+        };
+        let val_tokens = toks(3 * (cfg.ctx + 1));
+        let calib_tokens = toks(3 * (cfg.ctx + 1));
+        ModelWeights {
+            cfg,
+            tok_emb,
+            pos_emb,
+            head,
+            final_norm: vec![1.0; cfg.d_model],
+            layers,
+            val_tokens,
+            calib_tokens,
+        }
+    }
+
     /// The deterministic flat parameter order of the AOT artifact
     /// (python `flatten_names`): tok_emb, pos_emb, head, final_norm, then
     /// per layer ln1, ln2, wq, wk, wv, wo, w_up, w_down.

@@ -9,6 +9,42 @@ use nestquant::model::weights::{artifact_path, ModelWeights};
 use nestquant::runtime::{ModelRunner, Runtime};
 use std::path::PathBuf;
 
+/// Per-thread allocation counter wrapping the system allocator, so the
+/// zero-allocation guarantees of the KV decode hot paths are *tested*
+/// rather than asserted in comments. Thread-local counting keeps the
+/// test immune to allocations from concurrently running tests.
+mod alloc_counter {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    pub fn thread_allocs() -> u64 {
+        THREAD_ALLOCS.with(|c| c.get())
+    }
+
+    pub struct CountingAlloc;
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+            let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+            System.alloc(l)
+        }
+        unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+            System.dealloc(p, l)
+        }
+        unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+            let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+            System.realloc(p, l, n)
+        }
+    }
+}
+
+#[global_allocator]
+static ALLOC: alloc_counter::CountingAlloc = alloc_counter::CountingAlloc;
+
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
@@ -203,6 +239,116 @@ fn integer_gemm_backend_end_to_end() {
     // and the integer path generates to completion
     let out_int = s_int.generate(&[], 16);
     assert_eq!(out_int.len(), 16);
+}
+
+#[test]
+fn kv_decode_hot_paths_are_allocation_free() {
+    // Acceptance criterion: a decode step performs zero per-position
+    // heap allocation on the scores AND value paths. After one warm-up
+    // call (which sizes the caller-owned score buffer), repeated
+    // streaming score / weighted-value-sum calls over the paged coded
+    // store must not touch the allocator at all.
+    use nestquant::kvcache::KvCache;
+    use nestquant::lattice::nested::NestedLatticeQuantizer;
+    let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+    let mut cache = KvCache::new_nest(2, 2, nq.clone(), nq.clone());
+    let mut rng = nestquant::util::Rng::new(0xA110C);
+    let dh = 32;
+    for _ in 0..40 {
+        let k = rng.gauss_vec(dh);
+        let v = rng.gauss_vec(dh);
+        for l in 0..2 {
+            for h in 0..2 {
+                cache.append(l, h, &k, &v);
+            }
+        }
+    }
+    let q = rng.gauss_vec(dh);
+    let probs = vec![1.0 / 40.0; 40];
+    let mut scores = Vec::new();
+    let mut wsum = vec![0f32; dh];
+    // warm-up: grows `scores` to capacity once
+    cache.scores(0, 1, &q, &mut scores);
+    cache.weighted_value_sum(0, 1, &probs, &mut wsum);
+    let before = alloc_counter::thread_allocs();
+    for _ in 0..5 {
+        cache.scores(0, 1, &q, &mut scores);
+        cache.weighted_value_sum(0, 1, &probs, &mut wsum);
+        cache.scores(1, 0, &q, &mut scores);
+        cache.weighted_value_sum(1, 0, &probs, &mut wsum);
+    }
+    let after = alloc_counter::thread_allocs();
+    assert_eq!(scores.len(), 40);
+    assert_eq!(
+        after, before,
+        "decode hot paths allocated {} time(s)",
+        after - before
+    );
+}
+
+#[test]
+fn budget_constrained_pool_keeps_live_sessions_bit_identical() {
+    // Eviction acceptance: a pool under byte-budget pressure (forced to
+    // evict a finished session's cached prefix run) must produce logits
+    // bit-identical to an unbounded pool for the live session.
+    use nestquant::coordinator::generator::GenSession;
+    use nestquant::kvpool::PoolConfig;
+    let w = ModelWeights::synthetic(
+        nestquant::model::ModelConfig {
+            vocab: 48,
+            ctx: 64,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 64,
+        },
+        0xE71C,
+    );
+    let eng = Engine::build(
+        &w,
+        EngineOptions {
+            method: Method::NestQuantM,
+            regime: Regime::WKv,
+            calib_windows: 1,
+            ..Default::default()
+        },
+    );
+    let prompt_a: Vec<i32> = (0..33).map(|i| i % 48).collect();
+    let prompt_b: Vec<i32> = (0..33).map(|i| (i * 5 + 7) % 48).collect();
+
+    // reference: unbounded pool, session B alone
+    let ref_pool = eng.kv_pool(PoolConfig::default()).unwrap();
+    let ref_logits = GenSession::new_in_pool(&eng, &ref_pool).prefill(&prompt_b);
+
+    // learn the page byte cost, then budget exactly 3 pages
+    let bpp = ref_pool.stats().bytes_per_page;
+    assert!(bpp > 0);
+    let pool = eng
+        .kv_pool(PoolConfig {
+            page_size: 16,
+            budget_bytes: Some(3 * bpp),
+        })
+        .unwrap();
+    {
+        let mut a = GenSession::new_in_pool(&eng, &pool);
+        a.prefill(&prompt_a);
+    } // A finishes; its frozen pages stay cached in the prefix index
+    let mut b = GenSession::new_in_pool(&eng, &pool);
+    let logits = b.prefill(&prompt_b);
+    let st = pool.stats();
+    assert!(st.evicted_pages > 0, "budget must have forced eviction: {st:?}");
+    assert!(
+        st.bytes_in_use <= 3 * bpp,
+        "budget exceeded with reclaimable pages present: {st:?}"
+    );
+    assert_eq!(logits.len(), ref_logits.len());
+    for (i, (x, y)) in logits.iter().zip(&ref_logits).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "eviction changed live-session logits at {i}: {x} vs {y}"
+        );
+    }
 }
 
 #[test]
