@@ -2,17 +2,19 @@
 #
 #   make build        release build of the rust crate
 #   make test         tier-1 test suite (cargo test -q)
+#   make clippy       lint gate (cargo clippy -- -D warnings)
 #   make bench        full perf suite -> bench_output.txt + BENCH_gemm.json
-#                     + BENCH_serve.json
+#                     + BENCH_serve.json + BENCH_plan.json
 #   make bench-serve  multi-session serving sweep only -> BENCH_serve.json
-#   make ci           fmt-check + build + test (what a CI job runs)
+#   make bench-plan   mixed-precision QuantPlan sweep only -> BENCH_plan.json
+#   make ci           fmt-check + clippy + build + test (what a CI job runs)
 #   make clean        remove build artifacts
 #
 # The python layer (training + AOT lowering, `make artifacts`) is only
 # needed for the artifact-gated integration tests; the rust suite skips
 # those gracefully when artifacts/ is absent.
 
-.PHONY: build test bench bench-serve fmt-check ci artifacts clean
+.PHONY: build test clippy bench bench-serve bench-plan fmt-check ci artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -20,10 +22,13 @@ build:
 test:
 	cd rust && cargo test -q
 
+clippy:
+	cd rust && cargo clippy -- -D warnings
+
 fmt-check:
 	cd rust && cargo fmt --check
 
-ci: fmt-check build test
+ci: fmt-check clippy build test
 
 # no pipefail in POSIX sh: redirect, propagate the bench exit status,
 # then show the log — a crashed bench must not leave a "fresh" log
@@ -35,9 +40,13 @@ bench-serve:
 	cd rust && cargo bench --bench bench_main -- serve > ../bench_serve_output.txt 2>&1 || { cat ../bench_serve_output.txt; exit 1; }
 	@cat bench_serve_output.txt
 
+bench-plan:
+	cd rust && cargo bench --bench bench_main -- plan > ../bench_plan_output.txt 2>&1 || { cat ../bench_plan_output.txt; exit 1; }
+	@cat bench_plan_output.txt
+
 artifacts:
 	cd python && python -m compile.train && python -m compile.aot
 
 clean:
 	cd rust && cargo clean
-	rm -f bench_output.txt bench_serve_output.txt
+	rm -f bench_output.txt bench_serve_output.txt bench_plan_output.txt

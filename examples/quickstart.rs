@@ -78,6 +78,7 @@ fn main() -> Result<()> {
     let qm = QuantizedMatrix {
         rows,
         cols,
+        q: 14,
         codes: codes.iter().map(|&c| c as u8).collect(),
         beta_idx: beta_idx.iter().map(|&b| b as u8).collect(),
         scales,

@@ -9,13 +9,16 @@
 //! * the multi-session serving sweep over the paged KV pool: sessions
 //!   {1, 8, 32} × shared-prefix {0%, 50%, 90%}, reporting tokens/s,
 //!   pool bytes and prefix hit rate
+//! * the mixed-precision QuantPlan sweep: per-site rate split
+//!   q∈{12,16} vs uniform q=14 at equal payload bytes
 //!
-//! Sections are selectable by argument (`-- core` / `-- serve`; no
-//! argument runs everything): `make bench` captures the full output into
-//! bench_output.txt, `make bench-serve` runs only the serving sweep.
-//! The GEMV/GEMM suite is serialized to BENCH_gemm.json and the serving
-//! sweep to BENCH_serve.json at the repo root for cross-PR perf
-//! tracking (schema: EXPERIMENTS.md §Perf / §Serving).
+//! Sections are selectable by argument (`-- core` / `-- serve` /
+//! `-- plan`; no argument runs everything): `make bench` captures the
+//! full output into bench_output.txt, `make bench-serve` /
+//! `make bench-plan` run one section. The GEMV/GEMM suite is serialized
+//! to BENCH_gemm.json, the serving sweep to BENCH_serve.json and the
+//! plan sweep to BENCH_plan.json at the repo root for cross-PR perf
+//! tracking (schema: EXPERIMENTS.md §Perf / §Serving / §Mixed-precision).
 
 use nestquant::lattice::nested::NestedLatticeQuantizer;
 use nestquant::lattice::voronoi::VoronoiCodec;
@@ -33,7 +36,7 @@ fn main() {
         .skip(1)
         .filter(|a| !a.starts_with('-'))
         .collect();
-    const SECTIONS: [&str; 2] = ["core", "serve"];
+    const SECTIONS: [&str; 3] = ["core", "serve", "plan"];
     if let Some(bad) = args.iter().find(|a| !SECTIONS.contains(&a.as_str())) {
         eprintln!("unknown bench section '{bad}' (available: {SECTIONS:?})");
         std::process::exit(2);
@@ -44,6 +47,9 @@ fn main() {
     }
     if run("serve") {
         serve_benches();
+    }
+    if run("plan") {
+        plan_benches();
     }
 }
 
@@ -376,6 +382,94 @@ fn serve_benches() {
         .parent()
         .expect("rust/ has a parent")
         .join("BENCH_serve.json");
+    match suite.write_json(&json_path) {
+        Ok(()) => println!("wrote {} ({} records)", json_path.display(), suite.len()),
+        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+    }
+}
+
+/// Mixed-precision QuantPlan sweep (the per-site policy API): a
+/// sensitive-site rate split (q=16 on `down`/`o`, q=12 elsewhere)
+/// against uniform q∈{12,14,16} on a synthetic NestQuantM weights-only
+/// engine. Because coset codes pack at ⌈log2 q⌉ bits, q ∈ {12, 14, 16}
+/// all store 4 bits/entry — the split costs the *same payload bytes* as
+/// uniform q=14 while spending fidelity where the Hessians are worst.
+/// Reports ppl, total weight payload and prefill latency per variant;
+/// serialized to BENCH_plan.json.
+fn plan_benches() {
+    use nestquant::model::engine::{Engine, EngineOptions, Method, Regime};
+    use nestquant::model::weights::ModelWeights;
+    use nestquant::quant::plan::{EngineBuilder, PolicyPatch, QuantPlan, SiteKind};
+
+    println!("\n## mixed-precision QuantPlan sweep (equal-payload rate split)");
+    let cfg = nestquant::model::ModelConfig {
+        vocab: 48,
+        ctx: 32,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+    };
+    let w = ModelWeights::synthetic(cfg, 0x9A17);
+    let base = |q: u32| EngineOptions {
+        method: Method::NestQuantM,
+        regime: Regime::W,
+        q,
+        calib_windows: 2,
+        ..Default::default()
+    };
+    let variants: Vec<(&str, QuantPlan)> = vec![
+        ("uniform_q14", EngineBuilder::from_options(base(14)).plan()),
+        (
+            "split_q12_q16",
+            EngineBuilder::from_options(base(12))
+                .site(SiteKind::Down, PolicyPatch::rate(16))
+                .site(SiteKind::O, PolicyPatch::rate(16))
+                .plan(),
+        ),
+        ("uniform_q12", EngineBuilder::from_options(base(12)).plan()),
+        ("uniform_q16", EngineBuilder::from_options(base(16)).plan()),
+    ];
+    let mut suite = BenchSuite::new("quantplan_rate_split");
+    let budget = Duration::from_millis(400);
+    let toks: Vec<i32> = w.val_tokens[..cfg.ctx].to_vec();
+    let mut payloads = Vec::new();
+    for (vi, (name, plan)) in variants.iter().enumerate() {
+        let eng = Engine::build_plan(&w, plan.clone());
+        let payload: usize = eng.site_payloads().iter().map(|s| s.bytes).sum();
+        let ppl = eng.eval_ppl(&w.val_tokens, 3);
+        let r = bench(&format!("prefill {name}"), budget, || {
+            eng.forward_window(&toks).data[0]
+        });
+        println!(
+            "{}  [ppl {:.4}, weights {:.1} KiB, mean {:.2} b/entry]",
+            r.report(),
+            ppl,
+            payload as f64 / 1024.0,
+            eng.weight_bits_packed
+        );
+        payloads.push(payload);
+        suite.push(
+            &r,
+            &[
+                ("variant", vi as f64),
+                ("ppl", ppl),
+                ("payload_bytes", payload as f64),
+                ("bits_packed", eng.weight_bits_packed),
+            ],
+        );
+    }
+    // acceptance: the split ships the same bytes as uniform q=14
+    let drift =
+        (payloads[1] as f64 - payloads[0] as f64).abs() / payloads[0].max(1) as f64;
+    println!(
+        "\nequal-payload acceptance (split_q12_q16 vs uniform_q14 within 1%): {}",
+        if drift <= 0.01 { "PASS" } else { "FAIL" }
+    );
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_plan.json");
     match suite.write_json(&json_path) {
         Ok(()) => println!("wrote {} ({} records)", json_path.display(), suite.len()),
         Err(e) => eprintln!("could not write {}: {e}", json_path.display()),

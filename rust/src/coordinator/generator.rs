@@ -59,8 +59,6 @@ impl<'a> GenSession<'a> {
         let cfg = &eng.cfg;
         let d = cfg.d_model;
         let dh = cfg.d_head();
-        let qa = eng.opts.regime.quantizes_acts();
-        let ub = (!eng.opts.method.is_nested()).then_some(eng.opts.uniform_bits);
         assert!(self.pos < cfg.ctx, "context overflow");
 
         let mut x = vec![0f32; d];
@@ -75,9 +73,9 @@ impl<'a> GenSession<'a> {
         for (li, l) in eng.layers.iter().enumerate() {
             rmsnorm(&x, &l.ln1, &mut normed);
             let xm = Mat::from_vec(1, d, normed.clone());
-            let q = l.wq.forward(&xm, qa, ub);
-            let k = l.wk.forward(&xm, qa, ub);
-            let v = l.wv.forward(&xm, qa, ub);
+            let q = l.wq.forward(&xm);
+            let k = l.wk.forward(&xm);
+            let v = l.wv.forward(&xm);
             let mut att_out = vec![0f32; d];
             for h in 0..cfg.n_head {
                 let mut kh = k.row(0)[h * dh..(h + 1) * dh].to_vec();
@@ -103,20 +101,16 @@ impl<'a> GenSession<'a> {
                     r.apply_t(oh);
                 }
             }
-            let att = l
-                .wo
-                .forward(&Mat::from_vec(1, d, att_out), qa, ub);
+            let att = l.wo.forward(&Mat::from_vec(1, d, att_out));
             for i in 0..d {
                 x[i] += att.row(0)[i];
             }
             rmsnorm(&x, &l.ln2, &mut normed);
-            let mut h_mid = l
-                .w_up
-                .forward(&Mat::from_vec(1, d, normed.clone()), qa, ub);
+            let mut h_mid = l.w_up.forward(&Mat::from_vec(1, d, normed.clone()));
             for v in h_mid.data.iter_mut() {
                 *v = gelu(*v);
             }
-            let down = l.w_down.forward(&h_mid, qa, ub);
+            let down = l.w_down.forward(&h_mid);
             for i in 0..d {
                 x[i] += down.row(0)[i];
             }
@@ -125,9 +119,7 @@ impl<'a> GenSession<'a> {
         // it (freezes + registers pages at page boundaries)
         self.cache.note_token(token);
         rmsnorm(&x, &eng.final_norm, &mut normed);
-        let logits = eng
-            .head
-            .forward(&Mat::from_vec(1, d, normed.clone()), qa, ub);
+        let logits = eng.head.forward(&Mat::from_vec(1, d, normed.clone()));
         self.pos += 1;
         logits.data
     }
@@ -365,16 +357,12 @@ mod tests {
         let pool = eng.kv_pool(PoolConfig::default()).unwrap();
         for (li, l) in eng.layers.iter().enumerate() {
             let lq = pool.layer_quant(li);
-            assert_eq!(
-                lq.k.betas,
-                l.k_nq.as_ref().unwrap().betas,
-                "layer {li} key quantizer mismatch"
-            );
-            assert_eq!(
-                lq.v.betas,
-                l.v_nq.as_ref().unwrap().betas,
-                "layer {li} value quantizer mismatch"
-            );
+            let (k_nq, v_nq) = match &l.kv {
+                crate::model::engine::KvQuant::Nested { k_nq, v_nq } => (k_nq, v_nq),
+                _ => panic!("layer {li} must carry a nested KV pair"),
+            };
+            assert_eq!(lq.k.betas, k_nq.betas, "layer {li} key quantizer mismatch");
+            assert_eq!(lq.v.betas, v_nq.betas, "layer {li} value quantizer mismatch");
         }
     }
 }

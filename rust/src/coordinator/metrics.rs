@@ -1,9 +1,10 @@
 //! Serving metrics: request latency quantiles, token throughput, batch
-//! occupancy, KV-cache memory, and the paged-pool gauges (pages/bytes in
-//! use, prefix hit rate, evictions) — the numbers the serve_demo example
-//! reports.
+//! occupancy, KV-cache memory, the paged-pool gauges (pages/bytes in
+//! use, prefix hit rate, evictions), and the engine's per-site weight
+//! payload accounting — the numbers the serve_demo example reports.
 
 use crate::kvpool::PoolStats;
+use crate::model::engine::SitePayload;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -18,6 +19,10 @@ struct Inner {
     kv_bytes: usize,
     /// latest paged-pool snapshot (None until a pooled engine serves)
     pool: Option<PoolStats>,
+    /// per-site weight payload (label, bytes), recorded once per engine
+    weight_sites: Vec<(String, usize)>,
+    /// how many of those sites carry a quantized payload
+    weight_sites_quantized: usize,
 }
 
 /// Thread-safe metrics sink.
@@ -66,6 +71,21 @@ impl Metrics {
         self.inner.lock().unwrap().pool
     }
 
+    /// Record the serving engine's per-site weight payload accounting
+    /// (`Engine::site_payloads`): one (site label, bytes) gauge per
+    /// quantized tensor. Replaced, not accumulated.
+    pub fn record_weight_sites(&self, sites: &[SitePayload]) {
+        let mut g = self.inner.lock().unwrap();
+        g.weight_sites = sites.iter().map(|s| (s.site.label(), s.bytes)).collect();
+        g.weight_sites_quantized = sites.iter().filter(|s| s.quantized).count();
+    }
+
+    /// Per-site weight payload gauges (label, bytes); empty until an
+    /// engine has been recorded.
+    pub fn weight_sites(&self) -> Vec<(String, usize)> {
+        self.inner.lock().unwrap().weight_sites.clone()
+    }
+
     pub fn report(&self) -> String {
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_ms.clone();
@@ -108,6 +128,15 @@ impl Metrics {
                 p.prefix_hit_rate(),
                 p.evicted_pages,
                 p.budget_overruns
+            ));
+        }
+        if !g.weight_sites.is_empty() {
+            let total: usize = g.weight_sites.iter().map(|(_, b)| b).sum();
+            s.push_str(&format!(
+                " | weights: sites={} quantized={} payload={:.1} KiB",
+                g.weight_sites.len(),
+                g.weight_sites_quantized,
+                total as f64 / 1024.0
             ));
         }
         s
@@ -163,5 +192,32 @@ mod tests {
         assert!(r.contains("hit_rate=0.90"), "{r}");
         assert!(r.contains("evictions=2"), "{r}");
         assert_eq!(m.pool_stats().unwrap().pages_in_use, 7);
+    }
+
+    #[test]
+    fn weight_site_gauges_surface_in_report() {
+        use crate::quant::plan::{SiteId, SiteKind, SiteRole};
+        let m = Metrics::new();
+        assert!(m.weight_sites().is_empty());
+        assert!(!m.report().contains("weights:"), "no gauges before a record");
+        m.record_weight_sites(&[
+            SitePayload {
+                site: SiteId::weights(0, SiteKind::Down),
+                bytes: 2048,
+                bits_per_entry: 4.25,
+                quantized: true,
+            },
+            SitePayload {
+                site: SiteId::lm_head(SiteRole::Weights),
+                bytes: 4096,
+                bits_per_entry: 32.0,
+                quantized: false,
+            },
+        ]);
+        let r = m.report();
+        assert!(r.contains("weights: sites=2 quantized=1 payload=6.0 KiB"), "{r}");
+        let sites = m.weight_sites();
+        assert_eq!(sites[0], ("L0.down.weights".to_string(), 2048));
+        assert_eq!(sites[1].0, "lm_head.weights");
     }
 }

@@ -98,6 +98,9 @@ impl Server {
             // one shared paged pool for every session this worker runs:
             // prefix reuse and the byte budget span the server's lifetime
             let pool = engine.kv_pool(cfg.pool);
+            // per-site weight payload gauges (mixed-precision plans show
+            // their per-tensor byte split here)
+            m.record_weight_sites(&engine.site_payloads());
             let batcher = Batcher::new(rx, cfg.policy);
             while let Some(batch) = batcher.next_batch() {
                 m.record_batch(batch.len(), cfg.policy.max_batch);
@@ -321,6 +324,12 @@ mod tests {
         );
         assert!(stats.pages_in_use > 0);
         assert!(srv.metrics.report().contains("pool:"));
+        // per-site weight payloads flow through Metrics: 6 linears per
+        // layer + the head
+        let sites = srv.metrics.weight_sites();
+        assert_eq!(sites.len(), 7);
+        assert!(sites.iter().all(|(_, b)| *b > 0));
+        assert!(srv.metrics.report().contains("weights: sites=7"));
         srv.shutdown();
     }
 }

@@ -13,7 +13,9 @@
 //! * [`rotation`] — randomized Hadamard / Kronecker rotations (Section 4.3).
 //! * [`quant`] — matrix/vector quantization on top of the lattice engine,
 //!   quantized GEMV/GEMM, the uniform scalar baseline (SpinQuant-style),
-//!   LDLQ and QA-LDLQ weight quantization (Section 4.5 / Appendix B).
+//!   LDLQ and QA-LDLQ weight quantization (Section 4.5 / Appendix B),
+//!   and the per-site quantization policy API (`quant::plan`: `SiteId →
+//!   SitePolicy` resolution, the `EngineBuilder`, the `.qplan` format).
 //! * [`bounds`] — information-theoretic limits: the rate–distortion function
 //!   `D(R)` and the matrix-multiplication lower bound `Γ(R)` of eq. (1)-(2).
 //! * [`model`] — a small GPT-style transformer (config, tensors, forward

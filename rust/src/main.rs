@@ -3,20 +3,26 @@
 //! ```text
 //! nestquant exp <id|all> [--artifacts DIR] [--results DIR]
 //!     regenerate paper tables/figures (see DESIGN.md §4)
-//! nestquant ppl <model> [--regime fp|w|wkv|wkva] [--q Q] [--method M]
-//!     evaluate perplexity of a quantized model
+//! nestquant ppl <model> [--regime fp|w|wkv|wkva] [--method M] [--q Q]
+//!               [--k K] [--uniform-bits B] [--windows N] [--plan FILE]
+//!     evaluate perplexity of a quantized model. Flag defaults follow
+//!     `EngineOptions::default()`. `--plan` loads a per-site `.qplan`
+//!     policy file (mixed precision; overrides the uniform flags).
 //! nestquant serve <model> [--requests N] [--batch B]
 //!     run the serving coordinator demo (quantized KV cache)
 //! nestquant generate <model> <prompt> [--tokens N]
 //!     generate text with the quantized engine
 //! ```
 //!
-//! (clap is unavailable offline; arguments are parsed by hand.)
+//! (clap is unavailable offline; arguments are parsed by hand. Method
+//! names come from `Method::ALL` — one parse/label pair shared with the
+//! experiment harness and the `.qplan` parser.)
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use nestquant::coordinator::generator::GenSession;
 use nestquant::model::engine::{Engine, EngineOptions, Method, Regime};
 use nestquant::model::weights::{artifact_path, ModelWeights};
+use nestquant::quant::plan::QuantPlan;
 use std::path::PathBuf;
 
 fn flag(args: &[String], name: &str) -> Option<String> {
@@ -25,25 +31,30 @@ fn flag(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+fn method_names() -> String {
+    Method::ALL
+        .iter()
+        .map(|m| m.cli_name())
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+fn regime_names() -> String {
+    Regime::ALL
+        .iter()
+        .map(|r| r.cli_name())
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
 fn parse_method(s: &str) -> Result<Method> {
-    Ok(match s {
-        "rtn" => Method::Rtn,
-        "uniform" => Method::UniformRot,
-        "uniform-ldlq" => Method::UniformRotLdlq,
-        "nestquant" => Method::NestQuant,
-        "nestquantm" => Method::NestQuantM,
-        other => bail!("unknown method '{other}'"),
-    })
+    Method::parse(s)
+        .with_context(|| format!("unknown method '{s}' (available: {})", method_names()))
 }
 
 fn parse_regime(s: &str) -> Result<Regime> {
-    Ok(match s {
-        "fp" => Regime::Fp,
-        "w" => Regime::W,
-        "wkv" => Regime::WKv,
-        "wkva" => Regime::WKvA,
-        other => bail!("unknown regime '{other}'"),
-    })
+    Regime::parse(s)
+        .with_context(|| format!("unknown regime '{s}' (available: {})", regime_names()))
 }
 
 fn main() -> Result<()> {
@@ -62,26 +73,51 @@ fn main() -> Result<()> {
         "ppl" => {
             let model = args.get(1).context("usage: nestquant ppl <model>")?;
             let w = ModelWeights::load(&artifact_path(&artifacts, model))?;
-            let regime = parse_regime(&flag(&args, "--regime").unwrap_or_else(|| "wkva".into()))?;
-            let method =
-                parse_method(&flag(&args, "--method").unwrap_or_else(|| "nestquant".into()))?;
-            let q: u32 = flag(&args, "--q").unwrap_or_else(|| "14".into()).parse()?;
             let windows: usize = flag(&args, "--windows")
                 .unwrap_or_else(|| "8".into())
                 .parse()?;
-            if regime == Regime::Fp {
+            // a .qplan file carries the full per-site policy — it
+            // overrides the uniform knob flags below
+            if let Some(path) = flag(&args, "--plan") {
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("read plan file '{path}'"))?;
+                let plan = QuantPlan::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("parse '{path}': {e}"))?;
+                let eng = Engine::build_plan(&w, plan);
+                let ppl = eng.eval_ppl(&w.val_tokens, windows);
+                let payload: usize = eng.site_payloads().iter().map(|s| s.bytes).sum();
+                println!(
+                    "plan {path}: ppl = {ppl:.4} (bits {:.2} zstd / {:.2} packed, \
+                     weights {:.1} KiB)",
+                    eng.weight_bits_zstd,
+                    eng.weight_bits_packed,
+                    payload as f64 / 1024.0
+                );
+                return Ok(());
+            }
+            // uniform path: every knob defaults to EngineOptions::default()
+            let mut opts = EngineOptions::default();
+            if let Some(s) = flag(&args, "--regime") {
+                opts.regime = parse_regime(&s)?;
+            }
+            if let Some(s) = flag(&args, "--method") {
+                opts.method = parse_method(&s)?;
+            }
+            if let Some(s) = flag(&args, "--q") {
+                opts.q = s.parse().context("--q")?;
+            }
+            if let Some(s) = flag(&args, "--k") {
+                opts.k = s.parse().context("--k")?;
+            }
+            if let Some(s) = flag(&args, "--uniform-bits") {
+                opts.uniform_bits = s.parse().context("--uniform-bits")?;
+            }
+            if opts.regime == Regime::Fp {
                 let ppl = nestquant::model::forward::eval_ppl(&w, &w.val_tokens, windows);
                 println!("fp32 ppl = {ppl:.4}");
             } else {
-                let eng = Engine::build(
-                    &w,
-                    EngineOptions {
-                        method,
-                        regime,
-                        q,
-                        ..Default::default()
-                    },
-                );
+                let (method, regime, q) = (opts.method, opts.regime, opts.q);
+                let eng = Engine::build(&w, opts);
                 let ppl = eng.eval_ppl(&w.val_tokens, windows);
                 println!(
                     "{} {} q={q}: ppl = {ppl:.4} (bits {:.2} zstd / {:.2} packed)",
@@ -178,11 +214,29 @@ fn main() -> Result<()> {
             println!(
                 "nestquant — NestQuant (ICML 2025) reproduction\n\
                  usage:\n  nestquant exp <id|all>\n  nestquant ppl <model> \
-                 [--regime fp|w|wkv|wkva] [--method rtn|uniform|uniform-ldlq|nestquant|nestquantm] [--q Q]\n  \
+                 [--regime {}] [--method {}]\n      [--q Q] [--k K] [--uniform-bits B] \
+                 [--windows N] [--plan FILE]\n  \
                  nestquant serve <model> [--requests N] [--batch B]\n  \
-                 nestquant generate <model> <prompt> [--tokens N]"
+                 nestquant generate <model> <prompt> [--tokens N]",
+                regime_names(),
+                method_names()
             );
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_parsers_share_the_canonical_name_tables() {
+        assert_eq!(parse_method("nestquantm").unwrap(), Method::NestQuantM);
+        assert_eq!(parse_method("uniform-ldlq").unwrap(), Method::UniformRotLdlq);
+        assert!(parse_method("gptq").is_err());
+        assert_eq!(parse_regime("wkva").unwrap(), Regime::WKvA);
+        assert!(parse_regime("full").is_err());
+        assert!(method_names().contains("rtn|uniform|uniform-ldlq"));
+    }
 }

@@ -18,5 +18,7 @@ pub mod forward;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use engine::{Engine, EngineOptions, Method, Regime, RotKind};
+pub use engine::{
+    ActQuant, Engine, EngineOptions, KvQuant, Method, Regime, RotKind, SitePayload,
+};
 pub use weights::ModelWeights;

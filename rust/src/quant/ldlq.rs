@@ -190,6 +190,7 @@ fn ldlq_core(
     QuantizedMatrix {
         rows: w.rows,
         cols: n,
+        q: nq.q(),
         codes,
         beta_idx,
         scales,

@@ -12,6 +12,10 @@ use crate::util::linalg::Mat;
 pub struct QuantizedMatrix {
     pub rows: usize,
     pub cols: usize,
+    /// nesting ratio the codes were produced at. Recorded at quantize
+    /// time so byte accounting can never be called with a different rate
+    /// than the payload actually uses.
+    pub q: u32,
     /// coset codes, row-major, one byte per entry (values < q)
     pub codes: Vec<u8>,
     /// β indices, one per 8-block, row-major (rows × cols/8)
@@ -37,6 +41,7 @@ impl QuantizedMatrix {
         QuantizedMatrix {
             rows: m.rows,
             cols: m.cols,
+            q: nq.q(),
             codes,
             beta_idx,
             scales,
@@ -154,9 +159,12 @@ impl QuantizedMatrix {
         (num / den.max(1e-30)).sqrt()
     }
 
-    /// Stored payload in bytes with 2-bit β packing and ⌈log2 q⌉-bit codes.
-    pub fn payload_bytes(&self, q: u32) -> usize {
-        let code_bits = (q as f64).log2().ceil() as usize;
+    /// Stored payload in bytes with 2-bit β packing and ⌈log2 q⌉-bit
+    /// codes, at the rate the codes were quantized with (recorded in
+    /// `self.q` — callers can no longer pass a mismatched rate and get
+    /// silently wrong byte accounting).
+    pub fn payload_bytes(&self) -> usize {
+        let code_bits = (self.q as f64).log2().ceil() as usize;
         (self.codes.len() * code_bits).div_ceil(8)
             + (self.beta_idx.len() * 2).div_ceil(8)
             + self.scales.len() * 4
@@ -251,9 +259,23 @@ mod tests {
         let nq = nq();
         let w = random_mat(16, 128, 907);
         let qm = QuantizedMatrix::quantize(&w, &nq);
-        let bits_per_entry = qm.payload_bytes(14) as f64 * 8.0 / (16.0 * 128.0);
+        // the rate is recorded at quantize time — byte accounting can't
+        // be fed a different q than the codes were produced with
+        assert_eq!(qm.q, nq.q());
+        let bits_per_entry = qm.payload_bytes() as f64 * 8.0 / (16.0 * 128.0);
         // log2(14) ≈ 3.81 stored as 4 bits + 0.25 β + scales
         assert!(bits_per_entry < 4.6, "bits/entry {bits_per_entry}");
+    }
+
+    #[test]
+    fn payload_bytes_tracks_the_recorded_rate() {
+        // q=7 codes pack at 3 bits/entry, q=14 at 4: same matrix, ~25%
+        // smaller payload — the accounting follows the stored rate
+        let w = random_mat(8, 64, 909);
+        let q14 = QuantizedMatrix::quantize(&w, &NestedLatticeQuantizer::new(14, vec![0.3, 1.0]));
+        let q7 = QuantizedMatrix::quantize(&w, &NestedLatticeQuantizer::new(7, vec![0.3, 1.0]));
+        assert_eq!(q7.q, 7);
+        assert!(q7.payload_bytes() < q14.payload_bytes());
     }
 
     #[test]

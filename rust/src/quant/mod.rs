@@ -13,13 +13,20 @@
 //! * [`ldlq`] — LDLQ feedback weight quantization (§4.5, Appendix B).
 //! * [`qaldlq`] — QA-LDLQ for quantized activations (Lemma 4.2) and the
 //!   amplification-ratio diagnostics of Appendix B.
+//! * [`plan`] — per-site quantization policy: `SiteId → SitePolicy`
+//!   resolution (`QuantPlan`), the fluent `EngineBuilder`, and the
+//!   `.qplan` text format for mixed-precision deployments.
 
 pub mod gemm;
 pub mod ldlq;
 pub mod matrix;
+pub mod plan;
 pub mod qaldlq;
 pub mod qgemm;
 pub mod uniform;
 
 pub use matrix::QuantizedMatrix;
+pub use plan::{
+    EngineBuilder, PolicyPatch, QuantPlan, SiteId, SiteKind, SitePolicy, SiteRole, SiteSelector,
+};
 pub use uniform::UniformQuantizer;

@@ -1,0 +1,1105 @@
+//! Per-site quantization policy — the `QuantPlan` API.
+//!
+//! The paper's Tables 1–3 treat method/rate/regime as one global knob,
+//! and the engine used to mirror that: one `EngineOptions` applied
+//! identically to every linear, every layer and the KV cache. Production
+//! mixed-precision deployments need *per-site* decisions (QuIP#- and
+//! QuantEase-style layer-by-layer policies): sensitive `down`/`o`
+//! projections at a higher rate, an fp `lm_head`, per-layer KV rates.
+//!
+//! This module names every quantized tensor in the stack with a
+//! [`SiteId`] (layer × [`SiteKind`] × [`SiteRole`]), carries the
+//! per-tensor knobs in a [`SitePolicy`], and resolves `SiteId →
+//! SitePolicy` through a [`QuantPlan`]: a global default plus an ordered
+//! list of `(selector, patch)` override rules (global default →
+//! layer-range overrides → per-site overrides; later rules win).
+//! Plans are built fluently with [`EngineBuilder`] or loaded from a
+//! hand-rolled `*.qplan` text format (`key = value` sections, no new
+//! dependencies) via [`QuantPlan::parse`] / [`QuantPlan::render`].
+//!
+//! [`QuantPlan::uniform`] lowers a legacy `EngineOptions` to an
+//! equivalent plan (the regime becomes three per-role quantize gates),
+//! so `Engine::build(w, opts)` remains a thin compat shim that
+//! constructs bit-identical engines.
+//!
+//! Layering note: this module and `model::engine` reference each other
+//! (`QuantPlan::uniform` consumes `EngineOptions`; the engine resolves
+//! plans). The intra-crate cycle is deliberate — the compat contract
+//! puts the lowering on `QuantPlan`, and `Method`/`RotKind` stay in
+//! `model::engine` where every caller already imports them. If `quant`
+//! ever needs to stand alone, the lowering and [`EngineBuilder::build`]
+//! are the two seams to hoist into `model`.
+
+use crate::model::engine::{Engine, EngineOptions, Method, RotKind};
+use crate::model::weights::ModelWeights;
+
+/// What a site stores: weight entries, the activations flowing into a
+/// linear, or KV-cache entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SiteRole {
+    Weights,
+    Acts,
+    Kv,
+}
+
+impl SiteRole {
+    pub const ALL: [SiteRole; 3] = [SiteRole::Weights, SiteRole::Acts, SiteRole::Kv];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SiteRole::Weights => "weights",
+            SiteRole::Acts => "acts",
+            SiteRole::Kv => "kv",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SiteRole> {
+        Self::ALL.into_iter().find(|r| r.name() == s)
+    }
+}
+
+/// The kind of quantized tensor site within a transformer block.
+///
+/// `Gate` is reserved for gated-MLP architectures (this repo's char-LMs
+/// use a plain up/GELU/down MLP) and `Activations` names the residual
+/// activation stream as a site of its own; both are part of the total
+/// `SiteId` space so plans written for larger models resolve cleanly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SiteKind {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+    LmHead,
+    KvCache,
+    Activations,
+}
+
+impl SiteKind {
+    pub const ALL: [SiteKind; 10] = [
+        SiteKind::Q,
+        SiteKind::K,
+        SiteKind::V,
+        SiteKind::O,
+        SiteKind::Gate,
+        SiteKind::Up,
+        SiteKind::Down,
+        SiteKind::LmHead,
+        SiteKind::KvCache,
+        SiteKind::Activations,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SiteKind::Q => "q",
+            SiteKind::K => "k",
+            SiteKind::V => "v",
+            SiteKind::O => "o",
+            SiteKind::Gate => "gate",
+            SiteKind::Up => "up",
+            SiteKind::Down => "down",
+            SiteKind::LmHead => "lm_head",
+            SiteKind::KvCache => "kv_cache",
+            SiteKind::Activations => "activations",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SiteKind> {
+        Self::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// Names one quantized tensor in the stack. The `lm_head` site sits
+/// outside the block stack, so its `layer` is `None` — select it by
+/// kind, not by layer range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SiteId {
+    pub layer: Option<usize>,
+    pub kind: SiteKind,
+    pub role: SiteRole,
+}
+
+impl SiteId {
+    pub fn weights(layer: usize, kind: SiteKind) -> Self {
+        SiteId {
+            layer: Some(layer),
+            kind,
+            role: SiteRole::Weights,
+        }
+    }
+
+    pub fn acts(layer: usize, kind: SiteKind) -> Self {
+        SiteId {
+            layer: Some(layer),
+            kind,
+            role: SiteRole::Acts,
+        }
+    }
+
+    pub fn kv(layer: usize) -> Self {
+        SiteId {
+            layer: Some(layer),
+            kind: SiteKind::KvCache,
+            role: SiteRole::Kv,
+        }
+    }
+
+    pub fn lm_head(role: SiteRole) -> Self {
+        SiteId {
+            layer: None,
+            kind: SiteKind::LmHead,
+            role,
+        }
+    }
+
+    /// Human/metrics label, e.g. `L3.down.weights` or `lm_head.weights`.
+    pub fn label(&self) -> String {
+        match self.layer {
+            Some(l) => format!("L{l}.{}.{}", self.kind.name(), self.role.name()),
+            None => format!("{}.{}", self.kind.name(), self.role.name()),
+        }
+    }
+}
+
+/// Every `SiteId` of an `n_layer`-block stack — the domain the
+/// resolution propcheck quantifies over.
+pub fn enumerate_sites(n_layer: usize) -> Vec<SiteId> {
+    let mut out = Vec::new();
+    for layer in 0..n_layer {
+        for kind in SiteKind::ALL {
+            if kind == SiteKind::LmHead {
+                continue;
+            }
+            for role in SiteRole::ALL {
+                out.push(SiteId {
+                    layer: Some(layer),
+                    kind,
+                    role,
+                });
+            }
+        }
+    }
+    for role in SiteRole::ALL {
+        out.push(SiteId::lm_head(role));
+    }
+    out
+}
+
+/// The per-tensor quantization knobs — what `EngineOptions` used to
+/// carry crate-wide, resolved per site. `quantize = false` keeps the
+/// site in fp32 (the per-site analog of the legacy `Regime` gates).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SitePolicy {
+    pub quantize: bool,
+    pub method: Method,
+    /// nesting ratio (rate = log2 q bits/entry) for nested methods
+    pub q: u32,
+    /// number of scaling coefficients β
+    pub k: usize,
+    /// bits for the uniform baselines
+    pub uniform_bits: u32,
+    /// LDLQ feedback on weights
+    pub ldlq: bool,
+    /// QA-LDLQ correction when this site's activations are quantized
+    pub qa_ldlq: bool,
+    /// isotropic activation-noise variance ε² for QA-LDLQ
+    pub eps2: f32,
+    /// measure ε² from the site's calibrated activation quantizer
+    pub auto_eps2: bool,
+    /// serve M-variant nested linears through the packed integer GEMM
+    pub int_gemm: bool,
+}
+
+impl SitePolicy {
+    /// The per-tensor knobs of an `EngineOptions`, minus the regime
+    /// (which lowers to per-role `quantize` rules — see
+    /// [`QuantPlan::uniform`]).
+    pub fn from_options(opts: &EngineOptions) -> Self {
+        SitePolicy {
+            quantize: true,
+            method: opts.method,
+            q: opts.q,
+            k: opts.k,
+            uniform_bits: opts.uniform_bits,
+            ldlq: opts.ldlq,
+            qa_ldlq: opts.qa_ldlq,
+            eps2: opts.eps2,
+            auto_eps2: opts.auto_eps2,
+            int_gemm: opts.int_gemm,
+        }
+    }
+}
+
+impl Default for SitePolicy {
+    /// Derived from `EngineOptions::default()` — one source of truth, so
+    /// a `.qplan` file omitting a `[default]` key resolves exactly like
+    /// the equivalent CLI invocation.
+    fn default() -> Self {
+        SitePolicy::from_options(&EngineOptions::default())
+    }
+}
+
+/// A partial [`SitePolicy`]: only the set fields override the policy a
+/// rule is applied on top of.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct PolicyPatch {
+    pub quantize: Option<bool>,
+    pub method: Option<Method>,
+    pub q: Option<u32>,
+    pub k: Option<usize>,
+    pub uniform_bits: Option<u32>,
+    pub ldlq: Option<bool>,
+    pub qa_ldlq: Option<bool>,
+    pub eps2: Option<f32>,
+    pub auto_eps2: Option<bool>,
+    pub int_gemm: Option<bool>,
+}
+
+/// Shared range checks — the `.qplan` parser, `QuantPlan::validate` and
+/// the builder conveniences all enforce the same bounds (the codec
+/// accepts q ∈ [2, 255], the uniform quantizer bits ∈ [2, 8]).
+fn check_q(q: u32) -> Result<(), String> {
+    if (2..=255).contains(&q) {
+        Ok(())
+    } else {
+        Err(format!("q must be in [2, 255], got {q}"))
+    }
+}
+
+fn check_k(k: usize) -> Result<(), String> {
+    if k >= 1 {
+        Ok(())
+    } else {
+        Err("k must be at least 1".into())
+    }
+}
+
+fn check_uniform_bits(bits: u32) -> Result<(), String> {
+    if (2..=8).contains(&bits) {
+        Ok(())
+    } else {
+        Err(format!("uniform_bits must be in [2, 8], got {bits}"))
+    }
+}
+
+impl PolicyPatch {
+    /// Convenience: a patch that only pins the nesting ratio.
+    pub fn rate(q: u32) -> Self {
+        check_q(q).unwrap();
+        PolicyPatch {
+            q: Some(q),
+            ..Default::default()
+        }
+    }
+
+    /// Convenience: a patch that keeps the site in fp32.
+    pub fn fp() -> Self {
+        PolicyPatch {
+            quantize: Some(false),
+            ..Default::default()
+        }
+    }
+
+    pub fn apply(&self, p: &mut SitePolicy) {
+        if let Some(v) = self.quantize {
+            p.quantize = v;
+        }
+        if let Some(v) = self.method {
+            p.method = v;
+        }
+        if let Some(v) = self.q {
+            p.q = v;
+        }
+        if let Some(v) = self.k {
+            p.k = v;
+        }
+        if let Some(v) = self.uniform_bits {
+            p.uniform_bits = v;
+        }
+        if let Some(v) = self.ldlq {
+            p.ldlq = v;
+        }
+        if let Some(v) = self.qa_ldlq {
+            p.qa_ldlq = v;
+        }
+        if let Some(v) = self.eps2 {
+            p.eps2 = v;
+        }
+        if let Some(v) = self.auto_eps2 {
+            p.auto_eps2 = v;
+        }
+        if let Some(v) = self.int_gemm {
+            p.int_gemm = v;
+        }
+    }
+
+    /// Set one `key = value` pair from the `.qplan` text format.
+    /// Returns `Ok(false)` when the key is not a policy key (so the rule
+    /// parser can try selector keys next). Numeric knobs are range-
+    /// checked here so a bad plan file fails at parse with a line
+    /// number instead of an assert deep inside engine construction.
+    fn set(&mut self, key: &str, val: &str) -> Result<bool, String> {
+        match key {
+            "quantize" => self.quantize = Some(parse_bool(key, val)?),
+            "method" => {
+                self.method = Some(
+                    Method::parse(val).ok_or_else(|| format!("unknown method '{val}'"))?,
+                )
+            }
+            "q" => {
+                let q: u32 = parse_num(key, val)?;
+                check_q(q)?;
+                self.q = Some(q);
+            }
+            "k" => {
+                let k: usize = parse_num(key, val)?;
+                check_k(k)?;
+                self.k = Some(k);
+            }
+            "uniform_bits" => {
+                let bits: u32 = parse_num(key, val)?;
+                check_uniform_bits(bits)?;
+                self.uniform_bits = Some(bits);
+            }
+            "ldlq" => self.ldlq = Some(parse_bool(key, val)?),
+            "qa_ldlq" => self.qa_ldlq = Some(parse_bool(key, val)?),
+            "eps2" => self.eps2 = Some(parse_num(key, val)?),
+            "auto_eps2" => self.auto_eps2 = Some(parse_bool(key, val)?),
+            "int_gemm" => self.int_gemm = Some(parse_bool(key, val)?),
+            _ => return Ok(false),
+        }
+        Ok(true)
+    }
+
+    /// Render only the set fields, in canonical key order.
+    fn render_into(&self, s: &mut String) {
+        if let Some(v) = self.quantize {
+            s.push_str(&format!("quantize = {v}\n"));
+        }
+        if let Some(v) = self.method {
+            s.push_str(&format!("method = {}\n", v.cli_name()));
+        }
+        if let Some(v) = self.q {
+            s.push_str(&format!("q = {v}\n"));
+        }
+        if let Some(v) = self.k {
+            s.push_str(&format!("k = {v}\n"));
+        }
+        if let Some(v) = self.uniform_bits {
+            s.push_str(&format!("uniform_bits = {v}\n"));
+        }
+        if let Some(v) = self.ldlq {
+            s.push_str(&format!("ldlq = {v}\n"));
+        }
+        if let Some(v) = self.qa_ldlq {
+            s.push_str(&format!("qa_ldlq = {v}\n"));
+        }
+        if let Some(v) = self.eps2 {
+            s.push_str(&format!("eps2 = {v:?}\n"));
+        }
+        if let Some(v) = self.auto_eps2 {
+            s.push_str(&format!("auto_eps2 = {v}\n"));
+        }
+        if let Some(v) = self.int_gemm {
+            s.push_str(&format!("int_gemm = {v}\n"));
+        }
+    }
+
+    fn from_policy(p: &SitePolicy) -> Self {
+        PolicyPatch {
+            quantize: Some(p.quantize),
+            method: Some(p.method),
+            q: Some(p.q),
+            k: Some(p.k),
+            uniform_bits: Some(p.uniform_bits),
+            ldlq: Some(p.ldlq),
+            qa_ldlq: Some(p.qa_ldlq),
+            eps2: Some(p.eps2),
+            auto_eps2: Some(p.auto_eps2),
+            int_gemm: Some(p.int_gemm),
+        }
+    }
+}
+
+fn parse_bool(key: &str, val: &str) -> Result<bool, String> {
+    match val {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        _ => Err(format!("{key}: expected true/false, got '{val}'")),
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T, String> {
+    val.parse()
+        .map_err(|_| format!("{key}: invalid number '{val}'"))
+}
+
+/// Which sites a rule applies to; `None` fields match anything.
+/// `layers` is an inclusive `(lo, hi)` range over block indices with
+/// `lo <= hi` (the builder and the `.qplan` parser both enforce it; an
+/// inverted range hand-built here matches nothing and renders to text
+/// the parser rejects) — it never matches the layer-less `lm_head`
+/// site (select that by kind).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct SiteSelector {
+    pub layers: Option<(usize, usize)>,
+    pub kind: Option<SiteKind>,
+    pub role: Option<SiteRole>,
+}
+
+impl SiteSelector {
+    pub fn matches(&self, site: SiteId) -> bool {
+        if let Some((lo, hi)) = self.layers {
+            match site.layer {
+                Some(l) if l >= lo && l <= hi => {}
+                _ => return false,
+            }
+        }
+        if let Some(k) = self.kind {
+            if site.kind != k {
+                return false;
+            }
+        }
+        if let Some(r) = self.role {
+            if site.role != r {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// A per-site quantization plan: plan-global knobs (rotation flavor,
+/// calibration budget, RNG seed) plus the layered policy rules.
+/// Resolution is **total**: every `SiteId` resolves to the default
+/// policy patched by each matching rule in order (later rules win).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantPlan {
+    pub rot_kind: RotKind,
+    /// calibration windows used for Hessians / β DP
+    pub calib_windows: usize,
+    pub seed: u64,
+    pub default: SitePolicy,
+    pub rules: Vec<(SiteSelector, PolicyPatch)>,
+}
+
+impl Default for QuantPlan {
+    fn default() -> Self {
+        QuantPlan::uniform(EngineOptions::default())
+    }
+}
+
+impl QuantPlan {
+    /// Lower a legacy `EngineOptions` to the equivalent plan: the knobs
+    /// become the default policy everywhere and the regime becomes three
+    /// per-role quantize gates. `Engine::build_plan` on this plan is
+    /// bit-identical to the pre-plan `Engine::build(w, opts)`.
+    pub fn uniform(opts: EngineOptions) -> QuantPlan {
+        let default = SitePolicy::from_options(&opts);
+        let mut rules = Vec::new();
+        for (role, on) in [
+            (SiteRole::Weights, opts.regime.quantizes_weights()),
+            (SiteRole::Acts, opts.regime.quantizes_acts()),
+            (SiteRole::Kv, opts.regime.quantizes_kv()),
+        ] {
+            if !on {
+                rules.push((
+                    SiteSelector {
+                        role: Some(role),
+                        ..Default::default()
+                    },
+                    PolicyPatch::fp(),
+                ));
+            }
+        }
+        QuantPlan {
+            rot_kind: opts.rot_kind,
+            calib_windows: opts.calib_windows,
+            seed: opts.seed,
+            default,
+            rules,
+        }
+    }
+
+    /// Validate the plan's knobs against the same bounds the `.qplan`
+    /// parser enforces — the choke point for plans built by hand or
+    /// through the builder (fields are public, so construction can't be
+    /// made unrepresentable). `Engine::build_plan` calls this, so an
+    /// out-of-range plan fails fast with a named reason instead of an
+    /// assert deep inside codec/quantizer construction.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.calib_windows == 0 {
+            return Err("calib_windows must be at least 1".into());
+        }
+        let check_patch = |ctx: &str, p: &PolicyPatch| -> Result<(), String> {
+            let at = |e: String| format!("{ctx}: {e}");
+            if let Some(q) = p.q {
+                check_q(q).map_err(at)?;
+            }
+            if let Some(k) = p.k {
+                check_k(k).map_err(at)?;
+            }
+            if let Some(b) = p.uniform_bits {
+                check_uniform_bits(b).map_err(at)?;
+            }
+            Ok(())
+        };
+        check_patch("[default]", &PolicyPatch::from_policy(&self.default))?;
+        for (ri, (sel, patch)) in self.rules.iter().enumerate() {
+            let ctx = format!("rule {ri}");
+            if let Some((lo, hi)) = sel.layers {
+                if lo > hi {
+                    return Err(format!("{ctx}: inverted layer range {lo}..{hi}"));
+                }
+            }
+            check_patch(&ctx, patch)?;
+        }
+        Ok(())
+    }
+
+    /// Resolve the policy for one site. Total over every `SiteId`.
+    pub fn resolve(&self, site: SiteId) -> SitePolicy {
+        let mut pol = self.default;
+        for (sel, patch) in &self.rules {
+            if sel.matches(site) {
+                patch.apply(&mut pol);
+            }
+        }
+        pol
+    }
+
+    // ---- the `.qplan` text format ----
+
+    /// Render as `.qplan` text. `parse(render(p)) == p` (property-tested).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# NestQuant per-site quantization plan (see quant::plan)\n");
+        s.push_str("[plan]\n");
+        s.push_str(&format!("rot_kind = {}\n", self.rot_kind.cli_name()));
+        s.push_str(&format!("calib_windows = {}\n", self.calib_windows));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s.push_str("\n[default]\n");
+        PolicyPatch::from_policy(&self.default).render_into(&mut s);
+        for (sel, patch) in &self.rules {
+            s.push_str("\n[rule]\n");
+            if let Some((lo, hi)) = sel.layers {
+                if lo == hi {
+                    s.push_str(&format!("layers = {lo}\n"));
+                } else {
+                    s.push_str(&format!("layers = {lo}..{hi}\n"));
+                }
+            }
+            if let Some(k) = sel.kind {
+                s.push_str(&format!("kind = {}\n", k.name()));
+            }
+            if let Some(r) = sel.role {
+                s.push_str(&format!("role = {}\n", r.name()));
+            }
+            patch.render_into(&mut s);
+        }
+        s
+    }
+
+    /// Parse the `.qplan` text format: `[plan]` / `[default]` /
+    /// repeated `[rule]` sections of `key = value` lines; `#` starts a
+    /// comment; `[default]` keys not given inherit `SitePolicy::default()`.
+    pub fn parse(text: &str) -> Result<QuantPlan, String> {
+        #[derive(PartialEq)]
+        enum Sec {
+            None,
+            Plan,
+            Default,
+            Rule,
+        }
+        let defaults = EngineOptions::default();
+        let mut plan = QuantPlan {
+            rot_kind: defaults.rot_kind,
+            calib_windows: defaults.calib_windows,
+            seed: defaults.seed,
+            default: SitePolicy::default(),
+            rules: Vec::new(),
+        };
+        let mut sec = Sec::None;
+        let mut cur: Option<(SiteSelector, PolicyPatch)> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let n = i + 1;
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            match line {
+                "[plan]" => {
+                    plan.rules.extend(cur.take());
+                    sec = Sec::Plan;
+                    continue;
+                }
+                "[default]" => {
+                    plan.rules.extend(cur.take());
+                    sec = Sec::Default;
+                    continue;
+                }
+                "[rule]" => {
+                    plan.rules.extend(cur.take());
+                    sec = Sec::Rule;
+                    cur = Some(Default::default());
+                    continue;
+                }
+                _ if line.starts_with('[') => {
+                    return Err(format!("line {n}: unknown section '{line}'"));
+                }
+                _ => {}
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {n}: expected 'key = value', got '{line}'"))?;
+            let (key, val) = (key.trim(), val.trim());
+            let ctx = |e: String| format!("line {n}: {e}");
+            match sec {
+                Sec::None => {
+                    return Err(format!("line {n}: '{key}' before any [section] header"));
+                }
+                Sec::Plan => match key {
+                    "rot_kind" => {
+                        plan.rot_kind = RotKind::parse(val)
+                            .ok_or_else(|| format!("line {n}: unknown rot_kind '{val}'"))?;
+                    }
+                    "calib_windows" => {
+                        let cw: usize = parse_num(key, val).map_err(ctx)?;
+                        if cw == 0 {
+                            return Err(format!("line {n}: calib_windows must be at least 1"));
+                        }
+                        plan.calib_windows = cw;
+                    }
+                    "seed" => plan.seed = parse_num(key, val).map_err(ctx)?,
+                    _ => return Err(format!("line {n}: unknown [plan] key '{key}'")),
+                },
+                Sec::Default => {
+                    let mut patch = PolicyPatch::default();
+                    if !patch.set(key, val).map_err(ctx)? {
+                        return Err(format!("line {n}: unknown [default] key '{key}'"));
+                    }
+                    patch.apply(&mut plan.default);
+                }
+                Sec::Rule => {
+                    let (sel, patch) = cur.as_mut().expect("[rule] opened");
+                    match key {
+                        "layers" => sel.layers = Some(parse_layers(val).map_err(ctx)?),
+                        "kind" => {
+                            sel.kind = Some(SiteKind::parse(val).ok_or_else(|| {
+                                format!("line {n}: unknown site kind '{val}'")
+                            })?);
+                        }
+                        "role" => {
+                            sel.role = Some(SiteRole::parse(val).ok_or_else(|| {
+                                format!("line {n}: unknown site role '{val}'")
+                            })?);
+                        }
+                        _ => {
+                            if !patch.set(key, val).map_err(ctx)? {
+                                return Err(format!("line {n}: unknown [rule] key '{key}'"));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        plan.rules.extend(cur.take());
+        Ok(plan)
+    }
+}
+
+/// Inclusive layer range: `3` or `0..3`.
+fn parse_layers(val: &str) -> Result<(usize, usize), String> {
+    if let Some((lo, hi)) = val.split_once("..") {
+        let lo: usize = parse_num("layers", lo.trim())?;
+        let hi: usize = parse_num("layers", hi.trim())?;
+        if lo > hi {
+            return Err(format!("layers: empty range {lo}..{hi}"));
+        }
+        Ok((lo, hi))
+    } else {
+        let l: usize = parse_num("layers", val)?;
+        Ok((l, l))
+    }
+}
+
+/// Fluent constructor for [`QuantPlan`]s (and the engines built from
+/// them). Rules are appended in call order; later rules win.
+///
+/// ```ignore
+/// let eng = EngineBuilder::from_options(opts)      // uniform baseline
+///     .layers(0, 3, PolicyPatch::rate(16))         // early blocks finer
+///     .site(SiteKind::Down, PolicyPatch::rate(16)) // sensitive proj
+///     .site(SiteKind::LmHead, PolicyPatch::fp())   // fp head
+///     .build(&weights);
+/// ```
+#[derive(Clone, Debug)]
+pub struct EngineBuilder {
+    plan: QuantPlan,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::from_options(EngineOptions::default())
+    }
+
+    /// Start from the uniform lowering of a legacy `EngineOptions`.
+    pub fn from_options(opts: EngineOptions) -> Self {
+        EngineBuilder {
+            plan: QuantPlan::uniform(opts),
+        }
+    }
+
+    pub fn from_plan(plan: QuantPlan) -> Self {
+        EngineBuilder { plan }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.plan.seed = seed;
+        self
+    }
+
+    pub fn rot_kind(mut self, kind: RotKind) -> Self {
+        self.plan.rot_kind = kind;
+        self
+    }
+
+    pub fn calib_windows(mut self, n: usize) -> Self {
+        assert!(n >= 1, "calib_windows must be at least 1");
+        self.plan.calib_windows = n;
+        self
+    }
+
+    pub fn default_policy(mut self, p: SitePolicy) -> Self {
+        self.plan.default = p;
+        self
+    }
+
+    /// Append a raw override rule.
+    pub fn rule(mut self, sel: SiteSelector, patch: PolicyPatch) -> Self {
+        self.plan.rules.push((sel, patch));
+        self
+    }
+
+    /// Override every site in an inclusive layer range (`lo <= hi`; an
+    /// inverted range would silently match nothing and render to a
+    /// `.qplan` the parser rejects, so it is refused here).
+    pub fn layers(self, lo: usize, hi: usize, patch: PolicyPatch) -> Self {
+        assert!(lo <= hi, "inverted layer range {lo}..{hi}");
+        self.rule(
+            SiteSelector {
+                layers: Some((lo, hi)),
+                ..Default::default()
+            },
+            patch,
+        )
+    }
+
+    /// Override every site of one kind (any layer, any role).
+    pub fn site(self, kind: SiteKind, patch: PolicyPatch) -> Self {
+        self.rule(
+            SiteSelector {
+                kind: Some(kind),
+                ..Default::default()
+            },
+            patch,
+        )
+    }
+
+    /// Override every site of one role (weights / acts / kv).
+    pub fn role(self, role: SiteRole, patch: PolicyPatch) -> Self {
+        self.rule(
+            SiteSelector {
+                role: Some(role),
+                ..Default::default()
+            },
+            patch,
+        )
+    }
+
+    pub fn plan(self) -> QuantPlan {
+        self.plan
+    }
+
+    pub fn build(self, w: &ModelWeights) -> Engine {
+        Engine::build_plan(w, self.plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::engine::Regime;
+    use crate::util::{propcheck, Rng};
+
+    fn rand_patch(rng: &mut Rng) -> PolicyPatch {
+        let mut p = PolicyPatch::default();
+        if rng.below(2) == 0 {
+            p.quantize = Some(rng.below(2) == 0);
+        }
+        if rng.below(2) == 0 {
+            p.method = Some(Method::ALL[rng.below(Method::ALL.len())]);
+        }
+        if rng.below(2) == 0 {
+            p.q = Some(7 + rng.below(12) as u32);
+        }
+        if rng.below(2) == 0 {
+            p.k = Some(2 + rng.below(6));
+        }
+        if rng.below(2) == 0 {
+            p.uniform_bits = Some(2 + rng.below(6) as u32);
+        }
+        if rng.below(2) == 0 {
+            p.ldlq = Some(rng.below(2) == 0);
+        }
+        if rng.below(2) == 0 {
+            p.qa_ldlq = Some(rng.below(2) == 0);
+        }
+        if rng.below(2) == 0 {
+            p.eps2 = Some(rng.f32());
+        }
+        if rng.below(2) == 0 {
+            p.auto_eps2 = Some(rng.below(2) == 0);
+        }
+        if rng.below(2) == 0 {
+            p.int_gemm = Some(rng.below(2) == 0);
+        }
+        p
+    }
+
+    fn rand_selector(rng: &mut Rng) -> SiteSelector {
+        let mut s = SiteSelector::default();
+        if rng.below(2) == 0 {
+            let lo = rng.below(6);
+            s.layers = Some((lo, lo + rng.below(4)));
+        }
+        if rng.below(2) == 0 {
+            s.kind = Some(SiteKind::ALL[rng.below(SiteKind::ALL.len())]);
+        }
+        if rng.below(2) == 0 {
+            s.role = Some(SiteRole::ALL[rng.below(SiteRole::ALL.len())]);
+        }
+        s
+    }
+
+    fn rand_plan(rng: &mut Rng) -> QuantPlan {
+        let mut default = SitePolicy::default();
+        rand_patch(rng).apply(&mut default);
+        let rules = (0..rng.below(5))
+            .map(|_| (rand_selector(rng), rand_patch(rng)))
+            .collect();
+        QuantPlan {
+            rot_kind: RotKind::ALL[rng.below(RotKind::ALL.len())],
+            calib_windows: 1 + rng.below(4),
+            seed: rng.next_u64(),
+            default,
+            rules,
+        }
+    }
+
+    #[test]
+    fn resolution_is_total_and_deterministic() {
+        propcheck::check("plan-resolution-total", 40, 0x9_1A17, |rng| {
+            let plan = rand_plan(rng);
+            let n_layer = 1 + rng.below(5);
+            for site in enumerate_sites(n_layer) {
+                let a = plan.resolve(site);
+                let b = plan.resolve(site);
+                if a != b {
+                    return Err(format!("non-deterministic resolve at {}", site.label()));
+                }
+                if plan.rules.iter().all(|(sel, _)| !sel.matches(site)) && a != plan.default {
+                    return Err(format!("unmatched site {} left default", site.label()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn later_rules_win_in_order() {
+        let plan = EngineBuilder::new()
+            .role(SiteRole::Weights, PolicyPatch::rate(12))
+            .site(SiteKind::Down, PolicyPatch::rate(16))
+            .plan();
+        assert_eq!(plan.resolve(SiteId::weights(2, SiteKind::Down)).q, 16);
+        assert_eq!(plan.resolve(SiteId::weights(2, SiteKind::Up)).q, 12);
+        // acts role untouched by the weights rule, but Down-kind rule has
+        // no role filter, so Down acts pick up the 16 too
+        assert_eq!(plan.resolve(SiteId::acts(2, SiteKind::Down)).q, 16);
+        assert_eq!(plan.resolve(SiteId::acts(2, SiteKind::Up)).q, 14);
+    }
+
+    #[test]
+    fn layer_ranges_are_inclusive_and_skip_lm_head() {
+        let plan = EngineBuilder::new()
+            .layers(1, 2, PolicyPatch::fp())
+            .plan();
+        assert!(plan.resolve(SiteId::weights(0, SiteKind::Q)).quantize);
+        assert!(!plan.resolve(SiteId::weights(1, SiteKind::Q)).quantize);
+        assert!(!plan.resolve(SiteId::weights(2, SiteKind::Q)).quantize);
+        assert!(plan.resolve(SiteId::weights(3, SiteKind::Q)).quantize);
+        // lm_head has no layer: layer-range rules never match it
+        assert!(plan.resolve(SiteId::lm_head(SiteRole::Weights)).quantize);
+        let plan = EngineBuilder::new()
+            .site(SiteKind::LmHead, PolicyPatch::fp())
+            .plan();
+        assert!(!plan.resolve(SiteId::lm_head(SiteRole::Weights)).quantize);
+    }
+
+    #[test]
+    fn uniform_lowering_gates_roles_like_the_regime() {
+        for (regime, w_on, a_on, kv_on) in [
+            (Regime::Fp, false, false, false),
+            (Regime::W, true, false, false),
+            (Regime::WKv, true, false, true),
+            (Regime::WKvA, true, true, true),
+        ] {
+            let plan = QuantPlan::uniform(EngineOptions {
+                regime,
+                q: 10,
+                ..Default::default()
+            });
+            assert_eq!(plan.resolve(SiteId::weights(0, SiteKind::Q)).quantize, w_on);
+            assert_eq!(plan.resolve(SiteId::acts(0, SiteKind::Q)).quantize, a_on);
+            assert_eq!(plan.resolve(SiteId::kv(0)).quantize, kv_on);
+            assert_eq!(plan.resolve(SiteId::lm_head(SiteRole::Weights)).quantize, w_on);
+            assert_eq!(plan.resolve(SiteId::kv(0)).q, 10);
+        }
+    }
+
+    #[test]
+    fn qplan_text_roundtrips() {
+        propcheck::check("qplan-roundtrip", 60, 0xF0_97AD, |rng| {
+            let plan = rand_plan(rng);
+            let text = plan.render();
+            let back = QuantPlan::parse(&text)
+                .map_err(|e| format!("parse of rendered plan failed: {e}\n{text}"))?;
+            if back != plan {
+                return Err(format!("roundtrip drift:\n{plan:?}\nvs\n{back:?}\n{text}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qplan_parse_accepts_handwritten_input() {
+        let text = "
+            # mixed-precision serving plan
+            [plan]
+            seed = 7   # deterministic rotations
+            [default]
+            method = nestquantm
+            q = 12
+            [rule]
+            kind = down
+            role = weights
+            q = 16
+            [rule]
+            kind = lm_head
+            quantize = false
+        ";
+        let plan = QuantPlan::parse(text).unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.default.method, Method::NestQuantM);
+        assert_eq!(plan.resolve(SiteId::weights(0, SiteKind::Down)).q, 16);
+        assert_eq!(plan.resolve(SiteId::acts(0, SiteKind::Down)).q, 12);
+        assert!(!plan.resolve(SiteId::lm_head(SiteRole::Weights)).quantize);
+        assert!(plan.resolve(SiteId::weights(0, SiteKind::Up)).quantize);
+    }
+
+    #[test]
+    fn qplan_parse_rejects_malformed_input() {
+        for (bad, why) in [
+            ("q = 14", "key before section"),
+            ("[plan]\nbogus = 1", "unknown plan key"),
+            ("[default]\nmethod = float8", "unknown method"),
+            ("[rule]\nkind = attention", "unknown kind"),
+            ("[default]\nq 14", "missing ="),
+            ("[wat]", "unknown section"),
+            ("[rule]\nlayers = 5..2", "empty range"),
+            ("[default]\nq = twelve", "bad number"),
+            ("[default]\nq = 300", "q out of codec range"),
+            ("[default]\nuniform_bits = 16", "uniform bits out of range"),
+            ("[default]\nk = 0", "zero betas"),
+            ("[plan]\ncalib_windows = 0", "no calibration windows"),
+        ] {
+            assert!(QuantPlan::parse(bad).is_err(), "should reject: {why}");
+        }
+    }
+
+    #[test]
+    fn builder_is_fluent_and_ordered() {
+        let plan = EngineBuilder::from_options(EngineOptions {
+            q: 12,
+            ..Default::default()
+        })
+        .seed(99)
+        .calib_windows(2)
+        .rot_kind(RotKind::Fourier)
+        .layers(0, 1, PolicyPatch::rate(10))
+        .site(SiteKind::Down, PolicyPatch::rate(16))
+        .plan();
+        assert_eq!(plan.seed, 99);
+        assert_eq!(plan.calib_windows, 2);
+        assert_eq!(plan.rot_kind, RotKind::Fourier);
+        assert_eq!(plan.resolve(SiteId::weights(0, SiteKind::Up)).q, 10);
+        assert_eq!(plan.resolve(SiteId::weights(0, SiteKind::Down)).q, 16);
+        assert_eq!(plan.resolve(SiteId::weights(2, SiteKind::Up)).q, 12);
+    }
+
+    #[test]
+    fn validate_catches_out_of_range_hand_built_plans() {
+        // fields are public, so hand-built plans bypass the parser's
+        // checks — validate() is the choke point Engine::build_plan uses
+        assert!(QuantPlan::default().validate().is_ok());
+        let mut plan = QuantPlan::default();
+        plan.calib_windows = 0;
+        assert!(plan.validate().unwrap_err().contains("calib_windows"));
+        let mut plan = QuantPlan::default();
+        plan.default.q = 1;
+        assert!(plan.validate().unwrap_err().contains("q must be"));
+        let mut plan = QuantPlan::default();
+        plan.rules.push((
+            SiteSelector {
+                layers: Some((4, 2)),
+                ..Default::default()
+            },
+            PolicyPatch {
+                uniform_bits: Some(16),
+                ..Default::default()
+            },
+        ));
+        assert!(plan.validate().unwrap_err().contains("inverted layer range"));
+    }
+
+    #[test]
+    #[should_panic(expected = "inverted layer range")]
+    fn builder_refuses_inverted_layer_ranges() {
+        // an inverted range would match nothing and render to a .qplan
+        // the parser rejects — fail loudly at construction instead
+        let _ = EngineBuilder::new().layers(3, 1, PolicyPatch::rate(16));
+    }
+
+    #[test]
+    fn enumerate_sites_covers_every_combination() {
+        let sites = enumerate_sites(2);
+        // 2 layers × 9 in-stack kinds × 3 roles + 3 lm_head roles
+        assert_eq!(sites.len(), 2 * 9 * 3 + 3);
+        let mut seen = std::collections::HashSet::new();
+        for s in &sites {
+            assert!(seen.insert(s.label()), "duplicate site {}", s.label());
+        }
+        assert!(sites.contains(&SiteId::kv(1)));
+        assert!(sites.contains(&SiteId::lm_head(SiteRole::Acts)));
+    }
+}

@@ -143,6 +143,7 @@ fn pallas_qmatmul_artifact_matches_rust_decoder() {
     let qm = nestquant::quant::matrix::QuantizedMatrix {
         rows,
         cols,
+        q: 14,
         codes: codes.iter().map(|&c| c as u8).collect(),
         beta_idx: beta_idx.iter().map(|&b| b as u8).collect(),
         scales,
@@ -349,6 +350,65 @@ fn budget_constrained_pool_keeps_live_sessions_bit_identical() {
             "eviction changed live-session logits at {i}: {x} vs {y}"
         );
     }
+}
+
+#[test]
+fn mixed_precision_plan_serves_end_to_end() {
+    // A non-uniform QuantPlan (fp lm_head, q=16 down, q=12 elsewhere,
+    // nested KV) must serve through the full coordinator stack and
+    // surface its per-site payload split in Metrics.
+    use nestquant::quant::plan::{EngineBuilder, PolicyPatch, SiteKind};
+    let w = ModelWeights::synthetic(
+        nestquant::model::ModelConfig {
+            vocab: 48,
+            ctx: 64,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 64,
+        },
+        0x91AC,
+    );
+    let eng = std::sync::Arc::new(
+        EngineBuilder::from_options(EngineOptions {
+            method: Method::NestQuantM,
+            regime: Regime::WKv,
+            q: 12,
+            calib_windows: 1,
+            ..Default::default()
+        })
+        .site(SiteKind::Down, PolicyPatch::rate(16))
+        .site(SiteKind::LmHead, PolicyPatch::fp())
+        .build(&w),
+    );
+    let (srv, rx) = nestquant::coordinator::Server::start(
+        eng,
+        nestquant::coordinator::ServerConfig::default(),
+    );
+    let common: Vec<i32> = (0..24).map(|i| (i * 5 + 3) % 48).collect();
+    for id in 0..2u64 {
+        let mut prompt = common.clone();
+        prompt.push(40 + id as i32);
+        srv.submit(nestquant::coordinator::Request::Generate {
+            id,
+            prompt,
+            n_new: 4,
+        });
+    }
+    for _ in 0..2 {
+        let r = rx
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .unwrap();
+        assert_eq!(r.tokens.len(), 4);
+    }
+    // per-site gauges: 2 layers × 6 linears + the head, fp head included
+    let sites = srv.metrics.weight_sites();
+    assert_eq!(sites.len(), 13);
+    let head = sites.iter().find(|(l, _)| l == "lm_head.weights").unwrap();
+    let down = sites.iter().find(|(l, _)| l == "L0.down.weights").unwrap();
+    assert!(head.1 > down.1, "fp head must dominate coded sites: {sites:?}");
+    assert!(srv.metrics.report().contains("weights: sites=13 quantized=12"));
+    srv.shutdown();
 }
 
 #[test]
