@@ -4,17 +4,19 @@
 #   make test         tier-1 test suite (cargo test -q)
 #   make clippy       lint gate (cargo clippy -- -D warnings)
 #   make bench        full perf suite -> bench_output.txt + BENCH_gemm.json
-#                     + BENCH_serve.json + BENCH_plan.json
+#                     + BENCH_serve.json + BENCH_plan.json + BENCH_kvmix.json
 #   make bench-serve  multi-session serving sweep only -> BENCH_serve.json
 #   make bench-plan   mixed-precision QuantPlan sweep only -> BENCH_plan.json
-#   make ci           fmt-check + clippy + build + test (what a CI job runs)
+#   make bench-kvmix  heterogeneous KV-lane sweep only -> BENCH_kvmix.json
+#   make ci           fmt-check + clippy + build + test + the kvmix smoke
+#                     bench (what a CI job runs)
 #   make clean        remove build artifacts
 #
 # The python layer (training + AOT lowering, `make artifacts`) is only
 # needed for the artifact-gated integration tests; the rust suite skips
 # those gracefully when artifacts/ is absent.
 
-.PHONY: build test clippy bench bench-serve bench-plan fmt-check ci artifacts clean
+.PHONY: build test clippy bench bench-serve bench-plan bench-kvmix fmt-check ci artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -28,7 +30,9 @@ clippy:
 fmt-check:
 	cd rust && cargo fmt --check
 
-ci: fmt-check clippy build test
+# bench-kvmix doubles as the CI smoke run of the mixed-lane serving
+# path (seconds on the synthetic model)
+ci: fmt-check clippy build test bench-kvmix
 
 # no pipefail in POSIX sh: redirect, propagate the bench exit status,
 # then show the log — a crashed bench must not leave a "fresh" log
@@ -44,9 +48,13 @@ bench-plan:
 	cd rust && cargo bench --bench bench_main -- plan > ../bench_plan_output.txt 2>&1 || { cat ../bench_plan_output.txt; exit 1; }
 	@cat bench_plan_output.txt
 
+bench-kvmix:
+	cd rust && cargo bench --bench bench_main -- kvmix > ../bench_kvmix_output.txt 2>&1 || { cat ../bench_kvmix_output.txt; exit 1; }
+	@cat bench_kvmix_output.txt
+
 artifacts:
 	cd python && python -m compile.train && python -m compile.aot
 
 clean:
 	cd rust && cargo clean
-	rm -f bench_output.txt bench_serve_output.txt bench_plan_output.txt
+	rm -f bench_output.txt bench_serve_output.txt bench_plan_output.txt bench_kvmix_output.txt

@@ -6,6 +6,9 @@
 //!    decoder on identical coded inputs.
 //! 3. Load the trained char-LM forward artifact (L2) and check its logits
 //!    against the native rust forward.
+//! 4. Build a mixed-KV `QuantPlan` (fp32 / uniform / nested lanes per
+//!    layer) on a synthetic model and generate through the paged pool —
+//!    the public API covers heterogeneous KV serving end-to-end.
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`).
 
@@ -104,6 +107,63 @@ fn main() -> Result<()> {
     anyhow::ensure!(err < 1e-3, "HLO and native forward disagree");
     println!("  ✓ L2 artifact and the native engine agree");
 
-    println!("\nAll three layers compose. Next: examples/quantize_and_eval.rs");
+    // --- 4. heterogeneous KV lanes: a mixed plan served from one pool ---
+    println!("\n== L4: mixed-KV QuantPlan through the paged pool ==");
+    use nestquant::coordinator::generator::GenSession;
+    use nestquant::kvpool::PoolConfig;
+    use nestquant::model::engine::{Engine, EngineOptions, Method, Regime};
+    use nestquant::quant::plan::{PolicyPatch, QuantPlan, SiteRole, SiteSelector};
+    let synth = ModelWeights::synthetic(
+        nestquant::model::ModelConfig {
+            vocab: 48,
+            ctx: 64,
+            d_model: 32,
+            n_layer: 3,
+            n_head: 2,
+            d_ff: 64,
+        },
+        0x9C0DE,
+    );
+    // layer 0 keeps fp32 KV, layer 1 uniform 4-bit, layer 2 nested —
+    // one plan, one pool, three lane codecs
+    let mut plan = QuantPlan::uniform(EngineOptions {
+        method: Method::NestQuantM,
+        regime: Regime::WKv,
+        calib_windows: 1,
+        ..Default::default()
+    });
+    let kv = |lo: usize, hi: usize| SiteSelector {
+        layers: Some((lo, hi)),
+        role: Some(SiteRole::Kv),
+        ..Default::default()
+    };
+    plan.rules.push((kv(0, 0), PolicyPatch::fp()));
+    plan.rules.push((
+        kv(1, 1),
+        PolicyPatch {
+            method: Some(Method::UniformRot),
+            ..Default::default()
+        },
+    ));
+    let eng = Engine::build_plan(&synth, plan);
+    let pool = eng.kv_pool(PoolConfig::default());
+    let mut sess = GenSession::new_in_pool(&eng, &pool);
+    let out = sess.generate(&[1, 2, 3, 4, 5, 6, 7, 8], 24);
+    anyhow::ensure!(out.len() == 24, "mixed-KV generation fell short");
+    let st = pool.stats();
+    let [fp_b, uni_b, nest_b] = st.bytes_in_use_split();
+    println!(
+        "  generated {} tokens; pool: {} pages, {} B (fp {fp_b} / uni {uni_b} / nest {nest_b})",
+        out.len(),
+        st.pages_in_use,
+        st.bytes_in_use
+    );
+    anyhow::ensure!(
+        fp_b > 0 && uni_b > 0 && nest_b > 0,
+        "every lane codec should hold bytes in a mixed plan"
+    );
+    println!("  ✓ L4 mixed-KV plan serves end-to-end through one paged pool");
+
+    println!("\nAll layers compose. Next: examples/quantize_and_eval.rs");
     Ok(())
 }

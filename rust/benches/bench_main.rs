@@ -11,14 +11,18 @@
 //!   pool bytes and prefix hit rate
 //! * the mixed-precision QuantPlan sweep: per-site rate split
 //!   q∈{12,16} vs uniform q=14 at equal payload bytes
+//! * the heterogeneous KV-lane sweep: all-nested vs fp-edge +
+//!   nested-middle vs all-fp KV plans served through one pool
 //!
 //! Sections are selectable by argument (`-- core` / `-- serve` /
-//! `-- plan`; no argument runs everything): `make bench` captures the
-//! full output into bench_output.txt, `make bench-serve` /
-//! `make bench-plan` run one section. The GEMV/GEMM suite is serialized
-//! to BENCH_gemm.json, the serving sweep to BENCH_serve.json and the
-//! plan sweep to BENCH_plan.json at the repo root for cross-PR perf
-//! tracking (schema: EXPERIMENTS.md §Perf / §Serving / §Mixed-precision).
+//! `-- plan` / `-- kvmix`; no argument runs everything): `make bench`
+//! captures the full output into bench_output.txt, `make bench-serve` /
+//! `make bench-plan` / `make bench-kvmix` run one section. The
+//! GEMV/GEMM suite is serialized to BENCH_gemm.json, the serving sweep
+//! to BENCH_serve.json, the plan sweep to BENCH_plan.json and the lane
+//! sweep to BENCH_kvmix.json at the repo root for cross-PR perf
+//! tracking (schema: EXPERIMENTS.md §Perf / §Serving / §Mixed-precision
+//! / §KV lanes).
 
 use nestquant::lattice::nested::NestedLatticeQuantizer;
 use nestquant::lattice::voronoi::VoronoiCodec;
@@ -36,7 +40,7 @@ fn main() {
         .skip(1)
         .filter(|a| !a.starts_with('-'))
         .collect();
-    const SECTIONS: [&str; 3] = ["core", "serve", "plan"];
+    const SECTIONS: [&str; 4] = ["core", "serve", "plan", "kvmix"];
     if let Some(bad) = args.iter().find(|a| !SECTIONS.contains(&a.as_str())) {
         eprintln!("unknown bench section '{bad}' (available: {SECTIONS:?})");
         std::process::exit(2);
@@ -50,6 +54,9 @@ fn main() {
     }
     if run("plan") {
         plan_benches();
+    }
+    if run("kvmix") {
+        kvmix_benches();
     }
 }
 
@@ -261,7 +268,11 @@ fn core_benches() {
 
     // --- KV cache append+score ---
     println!("\n## kv cache");
-    let mut cache = nestquant::kvcache::KvCache::new_nest(1, 1, nq.clone(), nq.clone());
+    let mut cache = nestquant::kvpool::SessionKv::solo(
+        1,
+        1,
+        nestquant::kvpool::KvLaneCodec::Nested { k: nq.clone(), v: nq.clone() },
+    );
     for _ in 0..128 {
         let k = rng.gauss_vec(64);
         let vv = rng.gauss_vec(64);
@@ -340,7 +351,7 @@ fn serve_benches() {
                 &format!("serve s={sessions} share={:.0}%", share * 100.0),
                 budget,
                 || {
-                    let pool = eng.kv_pool(PoolConfig::default()).expect("pooled engine");
+                    let pool = eng.kv_pool(PoolConfig::default());
                     let mut total = 0usize;
                     for p in &prompts {
                         let mut sess = GenSession::new_in_pool(&eng, &pool);
@@ -470,6 +481,132 @@ fn plan_benches() {
         .parent()
         .expect("rust/ has a parent")
         .join("BENCH_plan.json");
+    match suite.write_json(&json_path) {
+        Ok(()) => println!("wrote {} ({} records)", json_path.display(), suite.len()),
+        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+    }
+}
+
+/// Heterogeneous KV-lane sweep: three KV plans on a 3-layer synthetic
+/// NestQuantM W+KV engine — all-nested lanes, fp32 first/last layers +
+/// nested middle (the "keep the sensitive edges exact" deployment), and
+/// all-fp lanes — each served through one shared pool with 8 sessions
+/// sharing a 50% prompt prefix. Reports tokens/s, the pool's byte
+/// footprint (with the per-class split) and prefix hit rate per
+/// variant; serialized to BENCH_kvmix.json. Cheap enough that `make ci`
+/// runs it as a smoke test of the mixed-lane serving path.
+fn kvmix_benches() {
+    use nestquant::coordinator::generator::GenSession;
+    use nestquant::kvpool::{PoolConfig, PoolStats};
+    use nestquant::model::engine::{Engine, EngineOptions, Method, Regime};
+    use nestquant::model::weights::ModelWeights;
+    use nestquant::quant::plan::{PolicyPatch, QuantPlan, SiteRole, SiteSelector};
+
+    println!("\n## heterogeneous KV lanes: plan-mix sweep");
+    let cfg = nestquant::model::ModelConfig {
+        vocab: 64,
+        ctx: 64,
+        d_model: 32,
+        n_layer: 3,
+        n_head: 2,
+        d_ff: 64,
+    };
+    let w = ModelWeights::synthetic(cfg, 0x5A4E5);
+    let base = QuantPlan::uniform(EngineOptions {
+        method: Method::NestQuantM,
+        regime: Regime::WKv,
+        calib_windows: 1,
+        ..Default::default()
+    });
+    let kv_fp = |lo: usize, hi: usize| {
+        (
+            SiteSelector {
+                layers: Some((lo, hi)),
+                role: Some(SiteRole::Kv),
+                ..Default::default()
+            },
+            PolicyPatch::fp(),
+        )
+    };
+    let mut edges = base.clone();
+    edges.rules.push(kv_fp(0, 0));
+    edges.rules.push(kv_fp(2, 2));
+    let mut all_fp = base.clone();
+    all_fp.rules.push((
+        SiteSelector {
+            role: Some(SiteRole::Kv),
+            ..Default::default()
+        },
+        PolicyPatch::fp(),
+    ));
+    let variants: Vec<(&str, QuantPlan)> = vec![
+        ("all_nested", base),
+        ("fp_edges_nested_middle", edges),
+        ("all_fp_kv", all_fp),
+    ];
+
+    let mut suite = BenchSuite::new("kvmix_lane_sweep");
+    let budget = Duration::from_millis(300);
+    let (sessions, prompt_len, shared, n_new) = (8usize, 32usize, 16usize, 8usize);
+    let prompts: Vec<Vec<i32>> = (0..sessions)
+        .map(|s| {
+            let mut p: Vec<i32> = (0..shared as i32).map(|i| (i * 3 + 1) % 64).collect();
+            p.extend(
+                (shared..prompt_len).map(|i| (i as i32 * 7 + 11 * (s as i32 + 1)) % 64),
+            );
+            p
+        })
+        .collect();
+    for (vi, (name, plan)) in variants.iter().enumerate() {
+        let eng = Engine::build_plan(&w, plan.clone());
+        let last_stats = std::cell::Cell::new(PoolStats::default());
+        let r = bench(&format!("kvmix {name}"), budget, || {
+            let pool = eng.kv_pool(PoolConfig::default());
+            let mut total = 0usize;
+            for p in &prompts {
+                let mut sess = GenSession::new_in_pool(&eng, &pool);
+                let mut logits = sess.prefill(p);
+                for _ in 0..n_new {
+                    let next = GenSession::greedy(&logits);
+                    logits = sess.step(next);
+                }
+                total += p.len() + n_new;
+            }
+            last_stats.set(pool.stats());
+            total
+        });
+        let st = last_stats.get();
+        let toks = sessions * (prompt_len + n_new);
+        let tok_s = toks as f64 / r.median.as_secs_f64();
+        let [fp, uni, nest] = st.bytes_in_use_split();
+        println!(
+            "{}  [{:.0} tok/s, pool {:.1} KiB (fp {:.1} / uni {:.1} / nest {:.1}), \
+             hit rate {:.2}]",
+            r.report(),
+            tok_s,
+            st.bytes_in_use as f64 / 1024.0,
+            fp as f64 / 1024.0,
+            uni as f64 / 1024.0,
+            nest as f64 / 1024.0,
+            st.prefix_hit_rate()
+        );
+        suite.push(
+            &r,
+            &[
+                ("variant", vi as f64),
+                ("tok_s", tok_s),
+                ("pool_bytes", st.bytes_in_use as f64),
+                ("bytes_fp", fp as f64),
+                ("bytes_uniform", uni as f64),
+                ("bytes_nested", nest as f64),
+                ("hit_rate", st.prefix_hit_rate()),
+            ],
+        );
+    }
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_kvmix.json");
     match suite.write_json(&json_path) {
         Ok(()) => println!("wrote {} ({} records)", json_path.display(), suite.len()),
         Err(e) => eprintln!("could not write {}: {e}", json_path.display()),

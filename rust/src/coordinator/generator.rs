@@ -1,15 +1,15 @@
 //! Incremental generation session over a quantized [`Engine`]: one token
-//! per step, KV entries quantized on insertion into a paged pool
-//! ([`crate::kvpool`] via [`KvCache`]), attention scored against the
-//! coded keys — the paper's memory-bound generation path.
+//! per step, KV entries coded on insertion into the paged pool through
+//! each layer's own [`crate::kvpool::KvLaneCodec`] (fp32 / uniform /
+//! nested lanes — the pool is the sole KV backend), attention scored
+//! against the coded keys — the paper's memory-bound generation path.
 //!
 //! Sessions can share an `Arc<KvPool>` ([`GenSession::new_in_pool`]):
 //! prefill then maps any cached token prefix straight from the pool
 //! (zero forward/quantization work for matched positions) and decode
 //! steps publish completed pages back to the pool's prefix index.
 
-use crate::kvcache::KvCache;
-use crate::kvpool::{KvPool, PoolConfig};
+use crate::kvpool::{KvPool, PoolConfig, SessionKv};
 use crate::model::engine::Engine;
 use crate::model::forward::{gelu, rmsnorm, softmax_inplace};
 use crate::util::linalg::Mat;
@@ -19,19 +19,20 @@ use std::sync::Arc;
 /// A single-stream generation session.
 pub struct GenSession<'a> {
     eng: &'a Engine,
-    cache: KvCache,
+    cache: SessionKv,
     pos: usize,
 }
 
 impl<'a> GenSession<'a> {
-    /// A session with a private KV store (fp32, or a single-owner pool
-    /// with the engine's per-layer calibrated quantizers).
+    /// A session with a private single-owner pool carrying the engine's
+    /// per-layer lane codecs (an all-fp model gets an all-`Fp32`-lane
+    /// pool — there is no separate fp cache path).
     pub fn new(eng: &'a Engine) -> Self {
-        let cache = match eng.kv_pool(PoolConfig::default()) {
-            Some(pool) => KvCache::in_pool(&pool),
-            None => KvCache::new_fp(eng.cfg.n_layer, eng.cfg.n_head),
-        };
-        GenSession { eng, cache, pos: 0 }
+        GenSession {
+            eng,
+            cache: SessionKv::new(eng.kv_pool(PoolConfig::default())),
+            pos: 0,
+        }
     }
 
     /// A session drawing its KV pages from a shared pool — the
@@ -40,7 +41,7 @@ impl<'a> GenSession<'a> {
     pub fn new_in_pool(eng: &'a Engine, pool: &Arc<KvPool>) -> Self {
         GenSession {
             eng,
-            cache: KvCache::in_pool(pool),
+            cache: SessionKv::new(pool.clone()),
             pos: 0,
         }
     }
@@ -287,7 +288,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        let pool = eng.kv_pool(PoolConfig::default()).expect("W+KV engine must pool");
+        let pool = eng.kv_pool(PoolConfig::default());
         let vocab = cfg.vocab as i32;
         let prompt: Vec<i32> = (0..64).map(|i| (i * 7 % vocab + i) % vocab).collect();
 
@@ -354,15 +355,19 @@ mod tests {
                 ..Default::default()
             },
         );
-        let pool = eng.kv_pool(PoolConfig::default()).unwrap();
+        let pool = eng.kv_pool(PoolConfig::default());
         for (li, l) in eng.layers.iter().enumerate() {
-            let lq = pool.layer_quant(li);
             let (k_nq, v_nq) = match &l.kv {
-                crate::model::engine::KvQuant::Nested { k_nq, v_nq } => (k_nq, v_nq),
+                crate::model::engine::KvLaneCodec::Nested { k, v } => (k, v),
                 _ => panic!("layer {li} must carry a nested KV pair"),
             };
-            assert_eq!(lq.k.betas, k_nq.betas, "layer {li} key quantizer mismatch");
-            assert_eq!(lq.v.betas, v_nq.betas, "layer {li} value quantizer mismatch");
+            match pool.lane(li) {
+                crate::model::engine::KvLaneCodec::Nested { k, v } => {
+                    assert_eq!(k.betas, k_nq.betas, "layer {li} key quantizer mismatch");
+                    assert_eq!(v.betas, v_nq.betas, "layer {li} value quantizer mismatch");
+                }
+                other => panic!("layer {li} pool lane must be nested, got {other:?}"),
+            }
         }
     }
 }

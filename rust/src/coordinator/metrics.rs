@@ -119,12 +119,17 @@ impl Metrics {
             g.kv_bytes as f64 / 1024.0
         );
         if let Some(p) = &g.pool {
+            let [fp, uni, nest] = p.bytes_in_use_split();
             s.push_str(&format!(
-                " | pool: pages={} cached={} bytes={:.1} KiB hit_rate={:.2} \
+                " | pool: pages={} cached={} bytes={:.1} KiB \
+                 (fp {:.1} / uni {:.1} / nest {:.1}) hit_rate={:.2} \
                  evictions={} overruns={}",
                 p.pages_in_use,
                 p.cached_pages,
                 p.bytes_in_use as f64 / 1024.0,
+                fp as f64 / 1024.0,
+                uni as f64 / 1024.0,
+                nest as f64 / 1024.0,
                 p.prefix_hit_rate(),
                 p.evicted_pages,
                 p.budget_overruns
@@ -180,6 +185,11 @@ mod tests {
             pages_in_use: 7,
             cached_pages: 3,
             bytes_in_use: 4096,
+            // heterogeneous page: 512 B of fp32 lanes, 64 B uniform,
+            // 16 B nested — the report must split by lane codec
+            page_bytes_fp: 512,
+            page_bytes_uniform: 64,
+            page_bytes_nested: 16,
             prefix_hit_tokens: 90,
             prefix_miss_tokens: 10,
             evicted_pages: 2,
@@ -189,9 +199,12 @@ mod tests {
         let r = m.report();
         assert!(r.contains("pages=7"), "{r}");
         assert!(r.contains("cached=3"), "{r}");
+        // per-class split: 7 pages × the per-page class bytes
+        assert!(r.contains("(fp 3.5 / uni 0.4 / nest 0.1)"), "{r}");
         assert!(r.contains("hit_rate=0.90"), "{r}");
         assert!(r.contains("evictions=2"), "{r}");
         assert_eq!(m.pool_stats().unwrap().pages_in_use, 7);
+        assert_eq!(m.pool_stats().unwrap().bytes_in_use_split(), [3584, 448, 112]);
     }
 
     #[test]

@@ -96,7 +96,9 @@ impl Server {
 
         let worker = std::thread::spawn(move || {
             // one shared paged pool for every session this worker runs:
-            // prefix reuse and the byte budget span the server's lifetime
+            // prefix reuse and the byte budget span the server's
+            // lifetime. The pool is total over plans — fp/uniform KV
+            // layers ride their own lanes — so every engine pools.
             let pool = engine.kv_pool(cfg.pool);
             // per-site weight payload gauges (mixed-precision plans show
             // their per-tensor byte split here)
@@ -122,10 +124,7 @@ impl Server {
                 for (req, t0) in batch {
                     match req {
                         Request::Generate { id, prompt, n_new } => {
-                            let sess = match &pool {
-                                Some(p) => GenSession::new_in_pool(&engine, p),
-                                None => GenSession::new(&engine),
-                            };
+                            let sess = GenSession::new_in_pool(&engine, &pool);
                             gen_sessions.push(Active {
                                 id,
                                 t0,
@@ -186,9 +185,7 @@ impl Server {
                         latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
                     });
                 }
-                if let Some(p) = &pool {
-                    m.record_pool(p.stats());
-                }
+                m.record_pool(pool.stats());
                 m.record_wall(t_batch.elapsed());
                 let _ = total_tokens;
             }

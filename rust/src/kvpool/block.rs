@@ -1,19 +1,56 @@
-//! Fixed-size page slab for coded KV payloads.
+//! Fixed-size page slab for coded KV payloads with **heterogeneous
+//! per-layer lanes**.
 //!
 //! A [`Page`] holds `page_size` consecutive positions × every
-//! (layer, head) lane × the K and V coded payloads (coset codes, β
-//! indices, per-vector scale) — the paged-attention block, but over
-//! nested-lattice codes instead of fp16, so one page carries ~8× the
-//! tokens of an fp32 page of equal byte cost. [`BlockPool`] is the slab
-//! allocator underneath the pool: freed pages go on a free list and are
-//! recycled buffer-and-all (no per-page reallocation on the serving
-//! path), refcounts track sharers (sessions + the prefix index), and a
-//! byte budget bounds the slab.
+//! (layer, head) lane × the K and V payloads — the paged-attention
+//! block, except that each *layer* carries its own lane codec: nested
+//! lattice codes (coset codes + β indices + scale), branch-free uniform
+//! codes (one byte per entry + per-vector Δ), or raw fp32 bytes. The
+//! page arena is a single byte slab addressed through per-layer byte
+//! strides ([`PageLayout`]), so one page mixes lane codecs freely while
+//! the byte budget stays exact. [`BlockPool`] is the slab allocator
+//! underneath the pool: freed pages go on a free list and are recycled
+//! buffer-and-all (no per-page reallocation on the serving path),
+//! refcounts track sharers (sessions + the prefix index), and a byte
+//! budget bounds the slab.
 
 use crate::lattice::e8::D;
+use std::ops::Range;
 
 /// Physical page handle.
 pub type PageId = u32;
+
+/// Codec class of a lane — the buckets [`super::PoolStats`] splits page
+/// bytes into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneClass {
+    Fp,
+    Uniform,
+    Nested,
+}
+
+impl LaneClass {
+    /// Bucket index into per-class accounting arrays (`[fp, uniform,
+    /// nested]`).
+    pub fn idx(self) -> usize {
+        match self {
+            LaneClass::Fp => 0,
+            LaneClass::Uniform => 1,
+            LaneClass::Nested => 2,
+        }
+    }
+}
+
+/// Physical and logical per-vector cost of one layer's K (or V) lane.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneSpec {
+    pub class: LaneClass,
+    /// physical bytes per coded vector in the page arena
+    pub stride: usize,
+    /// logical payload bits per vector (budget accounting — the same
+    /// scheme as `QuantizedVector::payload_bits` for nested lanes)
+    pub bits: usize,
+}
 
 /// Geometry of every page in a pool: (layer, head) lane count and
 /// positions per page. The head dimension is fixed lazily by the first
@@ -49,22 +86,126 @@ impl PageShape {
         self.lanes() * self.page_size
     }
 
-    /// β indices per vector (one per 8-block).
+    /// β indices per vector (one per 8-block) — nested lanes only.
     pub fn blocks_per_vec(&self) -> usize {
         self.d_head / D
     }
 }
 
-/// One physical page: coded K and V payloads for `slots()` vectors.
-/// Buffers are allocated once and recycled through the free list; stale
-/// contents are never read because readers are gated by per-session fill
-/// counts.
+/// Byte geometry of the heterogeneous page arena: each layer's K and V
+/// lanes occupy their own region, addressed by a per-layer byte stride.
+/// Within a region, one (head)'s positions are contiguous (the order the
+/// streaming kernels walk), i.e. a vector lives at
+/// `off[layer] + (head · page_size + local) · stride[layer]`.
+pub struct PageLayout {
+    shape: PageShape,
+    /// per layer: (K lane spec, V lane spec)
+    specs: Box<[(LaneSpec, LaneSpec)]>,
+    /// per layer: byte offset of the layer's K / V region in the arena
+    k_off: Box<[usize]>,
+    v_off: Box<[usize]>,
+    arena_bytes: usize,
+    /// logical payload bytes per page (exact: bits summed, then one ⌈/8⌉)
+    bytes_per_page: usize,
+    /// logical payload bytes per page per lane class `[fp, uniform,
+    /// nested]` — each bucket rounded up independently, so the split can
+    /// exceed `bytes_per_page` by at most 2 bytes
+    class_bytes: [usize; 3],
+}
+
+impl PageLayout {
+    fn new(shape: PageShape, specs: &[(LaneSpec, LaneSpec)]) -> Self {
+        assert_eq!(specs.len(), shape.n_layer, "one lane spec pair per layer");
+        let vecs = shape.n_head * shape.page_size;
+        let mut k_off = Vec::with_capacity(shape.n_layer);
+        let mut v_off = Vec::with_capacity(shape.n_layer);
+        let mut off = 0usize;
+        let mut bits = 0usize;
+        let mut class_bits = [0usize; 3];
+        for &(k, v) in specs {
+            k_off.push(off);
+            off += vecs * k.stride;
+            v_off.push(off);
+            off += vecs * v.stride;
+            bits += vecs * (k.bits + v.bits);
+            class_bits[k.class.idx()] += vecs * k.bits;
+            class_bits[v.class.idx()] += vecs * v.bits;
+        }
+        PageLayout {
+            shape,
+            specs: specs.to_vec().into_boxed_slice(),
+            k_off: k_off.into_boxed_slice(),
+            v_off: v_off.into_boxed_slice(),
+            arena_bytes: off,
+            bytes_per_page: bits.div_ceil(8),
+            class_bytes: class_bits.map(|b| b.div_ceil(8)),
+        }
+    }
+
+    pub fn shape(&self) -> &PageShape {
+        &self.shape
+    }
+
+    pub fn spec(&self, layer: usize) -> (LaneSpec, LaneSpec) {
+        self.specs[layer]
+    }
+
+    /// Byte range of (layer, head, local)'s coded K vector in the arena.
+    #[inline]
+    pub fn k_range(&self, layer: usize, head: usize, local: usize) -> Range<usize> {
+        let stride = self.specs[layer].0.stride;
+        let start =
+            self.k_off[layer] + (head * self.shape.page_size + local) * stride;
+        start..start + stride
+    }
+
+    /// Byte range of (layer, head, local)'s coded V vector in the arena.
+    #[inline]
+    pub fn v_range(&self, layer: usize, head: usize, local: usize) -> Range<usize> {
+        let stride = self.specs[layer].1.stride;
+        let start =
+            self.v_off[layer] + (head * self.shape.page_size + local) * stride;
+        start..start + stride
+    }
+
+    /// Contiguous byte run of positions `[0, cnt)` of (layer, head)'s K
+    /// region — the copy-on-write unit.
+    pub fn k_run(&self, layer: usize, head: usize, cnt: usize) -> Range<usize> {
+        let stride = self.specs[layer].0.stride;
+        let start = self.k_off[layer] + head * self.shape.page_size * stride;
+        start..start + cnt * stride
+    }
+
+    /// Contiguous byte run of positions `[0, cnt)` of (layer, head)'s V
+    /// region.
+    pub fn v_run(&self, layer: usize, head: usize, cnt: usize) -> Range<usize> {
+        let stride = self.specs[layer].1.stride;
+        let start = self.v_off[layer] + head * self.shape.page_size * stride;
+        start..start + cnt * stride
+    }
+
+    pub fn arena_bytes(&self) -> usize {
+        self.arena_bytes
+    }
+
+    pub fn bytes_per_page(&self) -> usize {
+        self.bytes_per_page
+    }
+
+    /// Logical page bytes split per lane class `[fp, uniform, nested]`.
+    pub fn class_bytes(&self) -> [usize; 3] {
+        self.class_bytes
+    }
+}
+
+/// One physical page: the heterogeneous byte arena (all layers' coded K
+/// and V payloads at their own strides) plus per-slot scales (nested: s,
+/// uniform: Δ; unused for fp32 lanes). Buffers are allocated once and
+/// recycled through the free list; stale contents are never read because
+/// readers are gated by per-session fill counts.
 pub struct Page {
-    pub codes_k: Box<[u8]>,
-    pub beta_k: Box<[u8]>,
+    pub data: Box<[u8]>,
     pub scale_k: Box<[f32]>,
-    pub codes_v: Box<[u8]>,
-    pub beta_v: Box<[u8]>,
     pub scale_v: Box<[f32]>,
     /// sharers: one per mapping session + one if held by the prefix index
     refcount: u32,
@@ -73,16 +214,11 @@ pub struct Page {
 }
 
 impl Page {
-    fn new(shape: &PageShape) -> Self {
-        let slots = shape.slots();
-        let dh = shape.d_head;
-        let bpv = shape.blocks_per_vec();
+    fn new(layout: &PageLayout) -> Self {
+        let slots = layout.shape.slots();
         Page {
-            codes_k: vec![0u8; slots * dh].into_boxed_slice(),
-            beta_k: vec![0u8; slots * bpv].into_boxed_slice(),
+            data: vec![0u8; layout.arena_bytes].into_boxed_slice(),
             scale_k: vec![0f32; slots].into_boxed_slice(),
-            codes_v: vec![0u8; slots * dh].into_boxed_slice(),
-            beta_v: vec![0u8; slots * bpv].into_boxed_slice(),
             scale_v: vec![0f32; slots].into_boxed_slice(),
             refcount: 1,
             frozen: false,
@@ -91,14 +227,15 @@ impl Page {
 }
 
 /// Slab allocator of [`Page`]s with free-list recycling, refcounts and a
-/// global byte budget (logical coded-payload bytes, the same accounting
-/// as `QuantizedVector::payload_bits`).
+/// global byte budget (logical coded-payload bytes — fp32 lanes cost
+/// their full 32 bits/entry, uniform lanes `bits`/entry + Δ, nested
+/// lanes the same accounting as `QuantizedVector::payload_bits`).
 pub struct BlockPool {
     shape: PageShape,
+    /// built by the first append ([`BlockPool::set_d_head`])
+    layout: Option<PageLayout>,
     pages: Vec<Page>,
     free: Vec<PageId>,
-    /// logical payload bytes per page (0 until d_head is fixed)
-    bytes_per_page: usize,
     budget_bytes: Option<usize>,
     in_use: usize,
     pub evicted_pages: u64,
@@ -109,9 +246,9 @@ impl BlockPool {
     pub fn new(shape: PageShape, budget_bytes: Option<usize>) -> Self {
         BlockPool {
             shape,
+            layout: None,
             pages: Vec::new(),
             free: Vec::new(),
-            bytes_per_page: 0,
             budget_bytes,
             in_use: 0,
             evicted_pages: 0,
@@ -123,32 +260,43 @@ impl BlockPool {
         &self.shape
     }
 
-    /// Fix the head dimension (first append) and derive the per-page
-    /// logical byte cost from the per-layer code rates.
-    pub fn set_d_head(&mut self, d_head: usize, layer_qs: &[(u32, u32)]) {
-        assert_eq!(d_head % D, 0, "d_head must be divisible by 8");
+    /// Fix the head dimension (first append) and derive the page byte
+    /// geometry from the per-layer lane specs. Only nested lanes carry
+    /// the 8-block geometry; fp32/uniform-only pools accept any head
+    /// dimension.
+    pub fn set_d_head(&mut self, d_head: usize, specs: &[(LaneSpec, LaneSpec)]) {
+        let has_nested = specs
+            .iter()
+            .any(|&(k, v)| k.class == LaneClass::Nested || v.class == LaneClass::Nested);
+        assert!(
+            !has_nested || d_head % D == 0,
+            "d_head must be divisible by 8 for nested lanes"
+        );
         if self.shape.d_head != 0 {
             assert_eq!(self.shape.d_head, d_head, "pool d_head is fixed at first append");
             return;
         }
         assert!(self.pages.is_empty());
         self.shape.d_head = d_head;
-        // logical payload per coded vector — the same accounting as
-        // QuantizedVector::payload_bits, via the shared helper
-        let vec_bits = |q: u32| -> usize { crate::lattice::nested::payload_bits_for(d_head, q) };
-        let mut page_bits = 0usize;
-        for &(qk, qv) in layer_qs {
-            page_bits += self.shape.n_head * self.shape.page_size * (vec_bits(qk) + vec_bits(qv));
-        }
-        self.bytes_per_page = page_bits.div_ceil(8);
+        self.layout = Some(PageLayout::new(self.shape, specs));
     }
 
     pub fn d_head(&self) -> usize {
         self.shape.d_head
     }
 
+    /// The page byte geometry; panics before the first append fixes it.
+    pub fn layout(&self) -> &PageLayout {
+        self.layout.as_ref().expect("set_d_head before use")
+    }
+
     pub fn bytes_per_page(&self) -> usize {
-        self.bytes_per_page
+        self.layout.as_ref().map_or(0, |l| l.bytes_per_page)
+    }
+
+    /// Logical page bytes split per lane class `[fp, uniform, nested]`.
+    pub fn class_bytes(&self) -> [usize; 3] {
+        self.layout.as_ref().map_or([0; 3], |l| l.class_bytes)
     }
 
     pub fn budget_bytes(&self) -> Option<usize> {
@@ -156,7 +304,7 @@ impl BlockPool {
     }
 
     pub fn bytes_in_use(&self) -> usize {
-        self.in_use * self.bytes_per_page
+        self.in_use * self.bytes_per_page()
     }
 
     pub fn pages_in_use(&self) -> usize {
@@ -170,7 +318,7 @@ impl BlockPool {
     /// True iff allocating one more page would exceed the byte budget.
     pub fn at_budget(&self) -> bool {
         match self.budget_bytes {
-            Some(b) => self.bytes_in_use() + self.bytes_per_page > b,
+            Some(b) => self.bytes_in_use() + self.bytes_per_page() > b,
             None => false,
         }
     }
@@ -188,7 +336,7 @@ impl BlockPool {
     /// possible. Budget-driven eviction is the caller's job (it owns the
     /// prefix index that knows which pages are reclaimable).
     pub fn alloc(&mut self) -> PageId {
-        assert!(self.shape.d_head != 0, "set_d_head before alloc");
+        let layout = self.layout.as_ref().expect("set_d_head before alloc");
         self.in_use += 1;
         if let Some(id) = self.free.pop() {
             let p = &mut self.pages[id as usize];
@@ -196,7 +344,7 @@ impl BlockPool {
             p.frozen = false;
             id
         } else {
-            self.pages.push(Page::new(&self.shape));
+            self.pages.push(Page::new(layout));
             (self.pages.len() - 1) as PageId
         }
     }
@@ -209,16 +357,27 @@ impl BlockPool {
         &mut self.pages[id as usize]
     }
 
-    /// Two distinct pages mutably (copy-on-write source/destination).
-    pub fn page_pair_mut(&mut self, a: PageId, b: PageId) -> (&Page, &mut Page) {
+    /// A page mutably, together with the layout (the append path needs
+    /// both and the borrows must split).
+    pub fn page_mut_with_layout(&mut self, id: PageId) -> (&PageLayout, &mut Page) {
+        (
+            self.layout.as_ref().expect("set_d_head before use"),
+            &mut self.pages[id as usize],
+        )
+    }
+
+    /// Two distinct pages (copy-on-write source/destination) plus the
+    /// layout that addresses them.
+    pub fn page_pair_mut(&mut self, a: PageId, b: PageId) -> (&PageLayout, &Page, &mut Page) {
         assert_ne!(a, b);
+        let layout = self.layout.as_ref().expect("set_d_head before use");
         let (a, b) = (a as usize, b as usize);
         if a < b {
             let (lo, hi) = self.pages.split_at_mut(b);
-            (&lo[a], &mut hi[0])
+            (layout, &lo[a], &mut hi[0])
         } else {
             let (lo, hi) = self.pages.split_at_mut(a);
-            (&hi[0], &mut lo[b])
+            (layout, &hi[0], &mut lo[b])
         }
     }
 
@@ -262,6 +421,39 @@ mod tests {
         }
     }
 
+    /// The nested-lane spec at rate q — mirrors
+    /// `KvLaneCodec::lane_specs`, hand-rolled so the slab tests stay
+    /// independent of the pool layer.
+    fn nested_spec(d_head: usize, q: u32) -> LaneSpec {
+        LaneSpec {
+            class: LaneClass::Nested,
+            stride: d_head + d_head / D,
+            bits: crate::lattice::nested::payload_bits_for(d_head, q),
+        }
+    }
+
+    fn nested_specs(d_head: usize, qs: &[(u32, u32)]) -> Vec<(LaneSpec, LaneSpec)> {
+        qs.iter()
+            .map(|&(qk, qv)| (nested_spec(d_head, qk), nested_spec(d_head, qv)))
+            .collect()
+    }
+
+    fn fp_spec(d_head: usize) -> LaneSpec {
+        LaneSpec {
+            class: LaneClass::Fp,
+            stride: 4 * d_head,
+            bits: 32 * d_head,
+        }
+    }
+
+    fn uniform_spec(d_head: usize, bits: u32) -> LaneSpec {
+        LaneSpec {
+            class: LaneClass::Uniform,
+            stride: d_head,
+            bits: bits as usize * d_head + 32,
+        }
+    }
+
     #[test]
     fn lane_slot_layout_is_lane_major() {
         let mut s = shape();
@@ -275,16 +467,65 @@ mod tests {
     #[test]
     fn bytes_per_page_accounting() {
         let mut bp = BlockPool::new(shape(), None);
-        bp.set_d_head(16, &[(14, 14), (14, 14)]);
+        bp.set_d_head(16, &nested_specs(16, &[(14, 14), (14, 14)]));
         // per vector: ceil(16·log2 14) + 2·2 + 32 = 61 + 36 = 97 bits
         let vec_bits = crate::lattice::nested::payload_bits_for(16, 14);
         assert_eq!(vec_bits, 97);
         let page_bits = 2 * 2 * 4 * 2 * vec_bits;
         assert_eq!(bp.bytes_per_page(), page_bits.div_ceil(8));
+        // all-nested: the class split puts everything in one bucket
+        assert_eq!(bp.class_bytes(), [0, 0, page_bits.div_ceil(8)]);
         let id = bp.alloc();
         assert_eq!(bp.bytes_in_use(), bp.bytes_per_page());
         bp.decref(id);
         assert_eq!(bp.bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn heterogeneous_layout_strides_do_not_overlap() {
+        // layer 0 fp32, layer 1 nested: every vector byte range must be
+        // disjoint and inside the arena, and the per-class byte split
+        // must account each layer to its own bucket.
+        let mut bp = BlockPool::new(shape(), None);
+        let dh = 16;
+        let specs = vec![
+            (fp_spec(dh), uniform_spec(dh, 4)),
+            (nested_spec(dh, 14), nested_spec(dh, 14)),
+        ];
+        bp.set_d_head(dh, &specs);
+        let layout = bp.layout();
+        let mut seen = vec![false; layout.arena_bytes()];
+        for layer in 0..2 {
+            for head in 0..2 {
+                for local in 0..4 {
+                    for r in [
+                        layout.k_range(layer, head, local),
+                        layout.v_range(layer, head, local),
+                    ] {
+                        assert!(r.end <= layout.arena_bytes());
+                        for i in r {
+                            assert!(!seen[i], "byte {i} claimed twice");
+                            seen[i] = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "arena has unaddressed bytes");
+        // run ranges prefix the per-(layer, head) regions
+        assert_eq!(layout.k_run(1, 1, 4).end, layout.k_range(1, 1, 3).end);
+        assert_eq!(layout.k_run(1, 1, 0).len(), 0);
+        // class split: fp = layer-0 K, uniform = layer-0 V, nested = layer 1
+        let vecs = 2 * 4;
+        let [fp, uni, nest] = layout.class_bytes();
+        assert_eq!(fp, (vecs * 32 * dh).div_ceil(8));
+        assert_eq!(uni, (vecs * (4 * dh + 32)).div_ceil(8));
+        assert_eq!(
+            nest,
+            (2 * vecs * crate::lattice::nested::payload_bits_for(dh, 14)).div_ceil(8)
+        );
+        let total = layout.bytes_per_page();
+        assert!(fp + uni + nest >= total && fp + uni + nest <= total + 2);
     }
 
     #[test]
@@ -294,7 +535,7 @@ mod tests {
         // in_use + free == slab length at every step.
         propcheck::check("blockpool-invariants", 30, 0xB10C, |rng| {
             let mut bp = BlockPool::new(shape(), None);
-            bp.set_d_head(8, &[(14, 14), (14, 14)]);
+            bp.set_d_head(8, &nested_specs(8, &[(14, 14), (14, 14)]));
             let mut live: Vec<(PageId, u32)> = Vec::new(); // model refcounts
             let mut peak = 0usize;
             for _ in 0..200 {
@@ -357,7 +598,7 @@ mod tests {
     #[test]
     fn recycled_pages_reset_state() {
         let mut bp = BlockPool::new(shape(), None);
-        bp.set_d_head(8, &[(14, 14), (14, 14)]);
+        bp.set_d_head(8, &nested_specs(8, &[(14, 14), (14, 14)]));
         let a = bp.alloc();
         bp.page_mut(a).frozen = true;
         bp.incref(a);
@@ -373,7 +614,7 @@ mod tests {
     #[should_panic(expected = "double free")]
     fn double_free_panics() {
         let mut bp = BlockPool::new(shape(), None);
-        bp.set_d_head(8, &[(14, 14), (14, 14)]);
+        bp.set_d_head(8, &nested_specs(8, &[(14, 14), (14, 14)]));
         let id = bp.alloc();
         bp.decref(id);
         bp.decref(id);
@@ -382,10 +623,10 @@ mod tests {
     #[test]
     fn at_budget_tracks_capacity() {
         let mut bp = BlockPool::new(shape(), Some(1));
-        bp.set_d_head(8, &[(14, 14), (14, 14)]);
+        bp.set_d_head(8, &nested_specs(8, &[(14, 14), (14, 14)]));
         assert!(bp.at_budget(), "1-byte budget can't fit a page");
         let mut bp2 = BlockPool::new(shape(), None);
-        bp2.set_d_head(8, &[(14, 14), (14, 14)]);
+        bp2.set_d_head(8, &nested_specs(8, &[(14, 14), (14, 14)]));
         assert!(!bp2.at_budget());
     }
 }

@@ -1,49 +1,144 @@
-//! Paged quantized KV pool — a shared, budgeted store for *coded* KV
-//! payloads serving many generation sessions at once (the paper's §1/§4.6
-//! serving motivation compounded with vLLM-style paging).
+//! Paged KV pool — the **sole** KV backend: a shared, budgeted store for
+//! per-layer-coded KV payloads serving many generation sessions at once
+//! (the paper's §1/§4.6 serving motivation compounded with vLLM-style
+//! paging).
 //!
-//! Keeping the KV cache in nested-lattice coded form means a page of
-//! fixed byte size holds ~8× the tokens of fp32, so every serving-systems
-//! trick over pages pays ~8× more: more sessions per byte budget, more
-//! prefix reuse per cached page. The pool is built from:
+//! Every layer carries its own [`KvLaneCodec`]: raw fp32 lanes
+//! (unquantized layers — including entire all-fp models), branch-free
+//! uniform lanes (the scalar baselines), or calibrated nested-lattice
+//! pairs (§4.6 step 4 — per-layer dictionaries). Pages are heterogeneous
+//! within: the byte arena is addressed through per-layer strides
+//! ([`block::PageLayout`]), so a plan mixing fp, uniform and nested KV
+//! layers runs end-to-end through one pool, and the bytes each lane
+//! stores are exactly what the batch-eval fake-quant path reconstructs —
+//! eval and serve consume bitwise-identical KV values. The pool is built
+//! from:
 //!
 //! * [`block::BlockPool`] — slab allocator of fixed-size pages
 //!   (`page_size` positions × every (layer, head) lane × coded K/V) with
 //!   free-list recycling, refcounts and a global byte budget;
 //! * [`page_table::PageTable`] — per-session logical→physical mapping
 //!   with copy-on-write on shared / partial tail pages;
-//! * [`prefix::PrefixIndex`] — a token-ID trie over frozen pages: a new
-//!   session whose prompt shares a prefix with a live or recently
-//!   finished session maps the shared pages (refcount bump, **zero
-//!   quantization work**) instead of re-quantizing them;
+//! * [`prefix::PrefixIndex`] — an exact-token-chunk trie over frozen
+//!   pages: a new session whose prompt shares a prefix with a live or
+//!   recently finished session maps the shared pages (refcount bump,
+//!   **zero quantization work**) instead of re-coding them;
 //! * LRU eviction of index-held page runs when the budget is exceeded.
 //!
 //! [`SessionKv`] is the per-session view; its `scores` /
-//! `weighted_value_sum` kernels stream page-by-page straight off the
-//! coded payloads through [`crate::quant::qgemm::DecodeConsts`] (the
-//! same all-integer decoder as the packed GEMM) with fixed stack
-//! scratch — no per-position `Vec<f32>` is ever materialized on the
-//! decode hot path. Quantizers are **per layer** (each layer decodes
-//! with its own calibrated K/V pair — §4.6 step 4).
+//! `weighted_value_sum` kernels dispatch **once per call** on the lane's
+//! codec and then stream page-by-page straight off the coded payloads —
+//! fp32 copy, branch-free uniform decode, or the
+//! [`crate::quant::qgemm::DecodeConsts`] all-integer nested decoder (the
+//! same as the packed GEMM) — with fixed stack scratch: no per-position
+//! `Vec<f32>` is ever materialized on any decode hot path.
 
 pub mod block;
 pub mod page_table;
 pub mod prefix;
 
-pub use block::{BlockPool, PageId, PageShape};
+pub use block::{BlockPool, LaneClass, LaneSpec, PageId, PageShape};
 pub use page_table::PageTable;
 pub use prefix::PrefixIndex;
 
 use crate::lattice::e8::D;
-use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector};
+use crate::lattice::nested::{payload_bits_for, NestedLatticeQuantizer, QuantizedVector};
 use crate::quant::qgemm::DecodeConsts;
+use crate::quant::uniform::UniformQuantizer;
 use std::sync::{Arc, Mutex};
 
-/// Calibrated key/value quantizer pair for one layer.
-#[derive(Clone)]
-pub struct KvLayerQuant {
-    pub k: NestedLatticeQuantizer,
-    pub v: NestedLatticeQuantizer,
+/// How one layer's KV lane stores (and fake-quants) its vectors — the
+/// single source of truth shared by the batch-eval roundtrip
+/// (`Engine::forward_window`) and the pool's coded serving path, which
+/// is what makes mixed-precision plans eval-vs-serve consistent.
+#[derive(Clone, Debug)]
+pub enum KvLaneCodec {
+    /// exact fp32 lane (raw little-endian bytes in the page arena)
+    Fp32,
+    /// symmetric uniform fake-quant at `bits` (one code byte per entry
+    /// plus a per-vector Δ in the scale slot)
+    Uniform(u32),
+    /// calibrated nested-lattice pair (coset codes + β indices + scale)
+    Nested {
+        k: NestedLatticeQuantizer,
+        v: NestedLatticeQuantizer,
+    },
+}
+
+impl KvLaneCodec {
+    /// True for the exact fp32 lane (the per-site analog of the legacy
+    /// `KvQuant::None`).
+    pub fn is_fp(&self) -> bool {
+        matches!(self, KvLaneCodec::Fp32)
+    }
+
+    /// Accounting/metrics bucket of this codec.
+    pub fn class(&self) -> LaneClass {
+        match self {
+            KvLaneCodec::Fp32 => LaneClass::Fp,
+            KvLaneCodec::Uniform(_) => LaneClass::Uniform,
+            KvLaneCodec::Nested { .. } => LaneClass::Nested,
+        }
+    }
+
+    /// Physical/logical per-vector lane costs at head dimension
+    /// `d_head`, for K and V.
+    pub fn lane_specs(&self, d_head: usize) -> (LaneSpec, LaneSpec) {
+        match self {
+            KvLaneCodec::Fp32 => {
+                let s = LaneSpec {
+                    class: LaneClass::Fp,
+                    stride: 4 * d_head,
+                    bits: 32 * d_head,
+                };
+                (s, s)
+            }
+            KvLaneCodec::Uniform(bits) => {
+                let s = LaneSpec {
+                    class: LaneClass::Uniform,
+                    stride: d_head,
+                    bits: *bits as usize * d_head + 32, // + f32 Δ
+                };
+                (s, s)
+            }
+            KvLaneCodec::Nested { k, v } => {
+                let stride = d_head + d_head / D; // codes + β indices
+                let spec = |q: u32| LaneSpec {
+                    class: LaneClass::Nested,
+                    stride,
+                    bits: payload_bits_for(d_head, q),
+                };
+                (spec(k.q()), spec(v.q()))
+            }
+        }
+    }
+
+    fn roundtrip(&self, key: bool, x: &mut [f32]) {
+        match self {
+            KvLaneCodec::Fp32 => {}
+            KvLaneCodec::Uniform(bits) => {
+                let uq = UniformQuantizer::new(*bits);
+                let rt = uq.roundtrip(x);
+                x.copy_from_slice(&rt);
+            }
+            KvLaneCodec::Nested { k, v } => {
+                let nq = if key { k } else { v };
+                let rt = nq.roundtrip(x);
+                x.copy_from_slice(&rt);
+            }
+        }
+    }
+
+    /// Fake-quant a per-head key vector — the batch-eval path. The
+    /// pool's coded storage decodes bitwise-identically to this.
+    pub fn roundtrip_key(&self, x: &mut [f32]) {
+        self.roundtrip(true, x);
+    }
+
+    /// Fake-quant a per-head value vector.
+    pub fn roundtrip_value(&self, x: &mut [f32]) {
+        self.roundtrip(false, x);
+    }
 }
 
 /// Pool sizing knobs.
@@ -70,7 +165,16 @@ pub struct PoolStats {
     pub pages_in_use: usize,
     pub pages_free: usize,
     pub bytes_in_use: usize,
+    /// exact logical bytes per page (the budget accounting unit)
     pub bytes_per_page: usize,
+    /// per-page logical bytes stored in fp32 lanes (each class bucket
+    /// rounds its own bit total up, so the three buckets can exceed
+    /// `bytes_per_page` by at most 2 bytes)
+    pub page_bytes_fp: usize,
+    /// per-page logical bytes stored in uniform lanes
+    pub page_bytes_uniform: usize,
+    /// per-page logical bytes stored in nested-lattice lanes
+    pub page_bytes_nested: usize,
     pub budget_bytes: Option<usize>,
     /// trie nodes currently caching a frozen page
     pub cached_pages: usize,
@@ -91,6 +195,15 @@ impl PoolStats {
         } else {
             self.prefix_hit_tokens as f64 / total as f64
         }
+    }
+
+    /// Bytes in use split per lane-codec class `[fp, uniform, nested]`.
+    pub fn bytes_in_use_split(&self) -> [usize; 3] {
+        [
+            self.pages_in_use * self.page_bytes_fp,
+            self.pages_in_use * self.page_bytes_uniform,
+            self.pages_in_use * self.page_bytes_nested,
+        ]
     }
 }
 
@@ -138,23 +251,20 @@ pub struct KvPool {
     page_size: usize,
     n_layer: usize,
     n_head: usize,
-    layers: Vec<KvLayerQuant>,
-    /// (q_k, q_v) per layer, cached for page byte accounting
-    layer_qs: Vec<(u32, u32)>,
+    /// one lane codec per layer
+    lanes: Vec<KvLaneCodec>,
     inner: Mutex<PoolInner>,
 }
 
 impl KvPool {
-    pub fn new(n_layer: usize, n_head: usize, layers: Vec<KvLayerQuant>, cfg: PoolConfig) -> Self {
-        assert_eq!(layers.len(), n_layer, "one quantizer pair per layer");
+    pub fn new(n_layer: usize, n_head: usize, lanes: Vec<KvLaneCodec>, cfg: PoolConfig) -> Self {
+        assert_eq!(lanes.len(), n_layer, "one lane codec per layer");
         assert!(cfg.page_size >= 1);
-        let layer_qs = layers.iter().map(|l| (l.k.q(), l.v.q())).collect();
         KvPool {
             page_size: cfg.page_size,
             n_layer,
             n_head,
-            layers,
-            layer_qs,
+            lanes,
             inner: Mutex::new(PoolInner {
                 blocks: BlockPool::new(
                     PageShape {
@@ -184,18 +294,26 @@ impl KvPool {
         self.n_head
     }
 
-    /// The calibrated quantizer pair a given layer decodes with.
-    pub fn layer_quant(&self, layer: usize) -> &KvLayerQuant {
-        &self.layers[layer]
+    /// The codec a given layer's KV lane stores with.
+    pub fn lane(&self, layer: usize) -> &KvLaneCodec {
+        &self.lanes[layer]
+    }
+
+    fn lane_specs(&self, d_head: usize) -> Vec<(LaneSpec, LaneSpec)> {
+        self.lanes.iter().map(|c| c.lane_specs(d_head)).collect()
     }
 
     pub fn stats(&self) -> PoolStats {
         let g = self.inner.lock().unwrap();
+        let [fp, uni, nest] = g.blocks.class_bytes();
         PoolStats {
             pages_in_use: g.blocks.pages_in_use(),
             pages_free: g.blocks.pages_free(),
             bytes_in_use: g.blocks.bytes_in_use(),
             bytes_per_page: g.blocks.bytes_per_page(),
+            page_bytes_fp: fp,
+            page_bytes_uniform: uni,
+            page_bytes_nested: nest,
             budget_bytes: g.blocks.budget_bytes(),
             cached_pages: g.index.len(),
             prefix_hit_tokens: g.prefix_hit_tokens,
@@ -204,6 +322,14 @@ impl KvPool {
             budget_overruns: g.blocks.budget_overruns,
         }
     }
+}
+
+/// A position's payload coded outside the pool lock (quantization is the
+/// expensive part; the lock only covers the page write).
+enum Coded<'a> {
+    Fp { k: &'a [f32], v: &'a [f32] },
+    Uniform { ck: Vec<i8>, dk: f32, cv: Vec<i8>, dv: f32 },
+    Nested { qk: QuantizedVector, qv: QuantizedVector },
 }
 
 /// Per-session view over a shared [`KvPool`]: owns a [`PageTable`], the
@@ -225,6 +351,20 @@ impl SessionKv {
             tokens: Vec::new(),
             cursor: (0, 0),
         }
+    }
+
+    /// Single-owner adapter: a private, unbudgeted pool with the given
+    /// lane codec replicated across layers — the old `KvCache::new_nest`
+    /// (and, with [`KvLaneCodec::Fp32`], `KvCache::new_fp`) behaviour,
+    /// for tests/benches that need no pool plumbing.
+    pub fn solo(n_layer: usize, n_head: usize, lane: KvLaneCodec) -> Self {
+        let lanes = (0..n_layer).map(|_| lane.clone()).collect();
+        SessionKv::new(Arc::new(KvPool::new(
+            n_layer,
+            n_head,
+            lanes,
+            PoolConfig::default(),
+        )))
     }
 
     pub fn pool(&self) -> &Arc<KvPool> {
@@ -252,35 +392,74 @@ impl SessionKv {
         self.table.n_pages() * g.blocks.bytes_per_page()
     }
 
-    /// Quantize and append one position's K and V for (layer, head).
-    /// Copy-on-write and budget eviction are applied by the page claim.
+    /// Code and append one position's K and V for (layer, head) through
+    /// the layer's lane codec. Copy-on-write and budget eviction are
+    /// applied by the page claim.
     pub fn append(&mut self, layer: usize, head: usize, k: &[f32], v: &[f32]) {
         assert_eq!(k.len(), v.len());
-        let lq = &self.pool.layers[layer];
-        // quantization (the expensive part) runs outside the pool lock
-        let qk = lq.k.quantize(k);
-        let qv = lq.v.quantize(v);
+        // coding (the expensive part) runs outside the pool lock
+        let coded = match &self.pool.lanes[layer] {
+            KvLaneCodec::Fp32 => Coded::Fp { k, v },
+            KvLaneCodec::Uniform(bits) => {
+                let uq = UniformQuantizer::new(*bits);
+                let (ck, dk) = uq.quantize(k);
+                let (cv, dv) = uq.quantize(v);
+                Coded::Uniform { ck, dk, cv, dv }
+            }
+            KvLaneCodec::Nested { k: knq, v: vnq } => Coded::Nested {
+                qk: knq.quantize(k),
+                qv: vnq.quantize(v),
+            },
+        };
         let lane = self.lane(layer, head);
         let mut g = self.pool.inner.lock().unwrap();
         let inner = &mut *g;
         if inner.blocks.d_head() == 0 {
-            inner.blocks.set_d_head(k.len(), &self.pool.layer_qs);
+            // once per pool lifetime, so the spec Vec is not a per-append
+            // allocation
+            let specs = self.pool.lane_specs(k.len());
+            inner.blocks.set_d_head(k.len(), &specs);
         }
         assert_eq!(k.len(), inner.blocks.d_head(), "d_head fixed by first append");
         let index = &mut inner.index;
         let (pid, local) = self
             .table
             .claim_slot(lane, &mut inner.blocks, |b| trim_to_budget(b, index, true));
-        let shape = *inner.blocks.shape();
-        let (dh, bpv) = (shape.d_head, shape.blocks_per_vec());
-        let s = shape.slot(lane, local);
-        let page = inner.blocks.page_mut(pid);
-        page.codes_k[s * dh..(s + 1) * dh].copy_from_slice(&qk.codes);
-        page.beta_k[s * bpv..(s + 1) * bpv].copy_from_slice(&qk.beta_idx);
-        page.scale_k[s] = qk.scale;
-        page.codes_v[s * dh..(s + 1) * dh].copy_from_slice(&qv.codes);
-        page.beta_v[s * bpv..(s + 1) * bpv].copy_from_slice(&qv.beta_idx);
-        page.scale_v[s] = qv.scale;
+        let (layout, page) = inner.blocks.page_mut_with_layout(pid);
+        let s = layout.shape().slot(lane, local);
+        let kr = layout.k_range(layer, head, local);
+        let vr = layout.v_range(layer, head, local);
+        let dh = k.len();
+        match coded {
+            Coded::Fp { k, v } => {
+                for (dst, &x) in page.data[kr].chunks_exact_mut(4).zip(k) {
+                    dst.copy_from_slice(&x.to_le_bytes());
+                }
+                for (dst, &x) in page.data[vr].chunks_exact_mut(4).zip(v) {
+                    dst.copy_from_slice(&x.to_le_bytes());
+                }
+            }
+            Coded::Uniform { ck, dk, cv, dv } => {
+                for (dst, &c) in page.data[kr].iter_mut().zip(&ck) {
+                    *dst = c as u8;
+                }
+                page.scale_k[s] = dk;
+                for (dst, &c) in page.data[vr].iter_mut().zip(&cv) {
+                    *dst = c as u8;
+                }
+                page.scale_v[s] = dv;
+            }
+            Coded::Nested { qk, qv } => {
+                let dst = &mut page.data[kr];
+                dst[..dh].copy_from_slice(&qk.codes);
+                dst[dh..].copy_from_slice(&qk.beta_idx);
+                page.scale_k[s] = qk.scale;
+                let dst = &mut page.data[vr];
+                dst[..dh].copy_from_slice(&qv.codes);
+                dst[dh..].copy_from_slice(&qv.beta_idx);
+                page.scale_v[s] = qv.scale;
+            }
+        }
     }
 
     /// Record the token behind the position just appended (all lanes).
@@ -293,8 +472,10 @@ impl SessionKv {
         if n % ps != 0 {
             return;
         }
-        if (0..self.pool.n_layer * self.pool.n_head).any(|l| self.table.fill(l) != n) {
-            // ragged lanes (adapter usage) — nothing shareable
+        let lanes = self.pool.n_layer * self.pool.n_head;
+        if lanes == 0 || (0..lanes).any(|l| self.table.fill(l) != n) {
+            // ragged (adapter usage) or degenerate lanes — nothing
+            // shareable
             return;
         }
         let mut g = self.pool.inner.lock().unwrap();
@@ -367,8 +548,10 @@ impl SessionKv {
 
     /// Attention scores q·k_t for every cached position of (layer, head)
     /// (pre-softmax, unscaled), streamed page-by-page off the coded
-    /// payload: all-integer block decode via [`DecodeConsts`] for
-    /// M-variant codecs at q ≤ 16, float decode otherwise. Fixed stack
+    /// payload. Dispatch is per lane, once per call: fp32 lanes read raw
+    /// bytes, uniform lanes run the branch-free scalar decode, nested
+    /// lanes the all-integer block decode via [`DecodeConsts`]
+    /// (M-variant codecs at q ≤ 16; float decode otherwise). Fixed stack
     /// scratch — no per-position allocation (`out` is reused across
     /// calls and only grows).
     pub fn scores(&self, layer: usize, head: usize, qvec: &[f32], out: &mut Vec<f32>) {
@@ -378,63 +561,82 @@ impl SessionKv {
         if total == 0 {
             return;
         }
-        let nq = &self.pool.layers[layer].k;
-        let q = nq.q() as i32;
-        let use_int = nq.codec.m_variant && q <= 16;
-        let consts = DecodeConsts::new(q);
         let g = self.pool.inner.lock().unwrap();
-        let shape = *g.blocks.shape();
-        let (dh, bpv, ps) = (shape.d_head, shape.blocks_per_vec(), shape.page_size);
+        let layout = g.blocks.layout();
+        let shape = *layout.shape();
+        let (dh, ps) = (shape.d_head, shape.page_size);
         debug_assert_eq!(qvec.len(), dh);
-        let sqrt_dh = (dh as f32).sqrt();
-        let mut c = [0u8; D];
-        let mut e = [0i32; D];
-        for (pi, &pid) in self.table.pages().iter().enumerate() {
-            if pi * ps >= total {
-                break;
-            }
-            let cnt = (total - pi * ps).min(ps);
-            let page = g.blocks.page(pid);
-            let s0 = shape.slot(lane, 0);
-            for t in 0..cnt {
-                let s = s0 + t;
-                let scale = page.scale_k[s];
-                if scale == 0.0 {
-                    out.push(0.0);
-                    continue;
-                }
-                let denorm = (scale / sqrt_dh) as f64;
-                let codes = &page.codes_k[s * dh..(s + 1) * dh];
-                let bidx = &page.beta_k[s * bpv..(s + 1) * bpv];
-                let mut acc = 0f64;
-                for j in 0..bpv {
-                    c.copy_from_slice(&codes[j * D..(j + 1) * D]);
-                    let xb = &qvec[j * D..(j + 1) * D];
-                    if use_int {
-                        consts.decode(&c, &mut e);
-                        let mut d = 0f32;
-                        for i in 0..D {
-                            d += e[i] as f32 * xb[i];
-                        }
-                        acc += (d * 0.5 * nq.betas[bidx[j] as usize]) as f64;
-                    } else {
-                        let rec = nq.decode_block(&c, bidx[j]);
-                        let mut d = 0f32;
-                        for i in 0..D {
-                            d += rec[i] * xb[i];
-                        }
-                        acc += d as f64;
+        match &self.pool.lanes[layer] {
+            KvLaneCodec::Fp32 => {
+                self.stream(&g.blocks, total, ps, |page, local, _| {
+                    let bytes = &page.data[layout.k_range(layer, head, local)];
+                    let mut acc = 0f64;
+                    for (xb, &qi) in bytes.chunks_exact(4).zip(qvec) {
+                        let x = f32::from_le_bytes([xb[0], xb[1], xb[2], xb[3]]);
+                        acc += x as f64 * qi as f64;
                     }
-                }
-                out.push((acc * denorm) as f32);
+                    out.push(acc as f32);
+                });
+            }
+            KvLaneCodec::Uniform(_) => {
+                self.stream(&g.blocks, total, ps, |page, local, _| {
+                    let delta = page.scale_k[shape.slot(lane, local)];
+                    let codes = &page.data[layout.k_range(layer, head, local)];
+                    let mut acc = 0f32;
+                    for (&c, &qi) in codes.iter().zip(qvec) {
+                        acc += (c as i8 as f32) * qi;
+                    }
+                    out.push(acc * delta);
+                });
+            }
+            KvLaneCodec::Nested { k: nq, .. } => {
+                let q = nq.q() as i32;
+                let use_int = nq.codec.m_variant && q <= 16;
+                let consts = DecodeConsts::new(q);
+                let bpv = shape.blocks_per_vec();
+                let sqrt_dh = (dh as f32).sqrt();
+                let mut c = [0u8; D];
+                let mut e = [0i32; D];
+                self.stream(&g.blocks, total, ps, |page, local, _| {
+                    let scale = page.scale_k[shape.slot(lane, local)];
+                    if scale == 0.0 {
+                        out.push(0.0);
+                        return;
+                    }
+                    let denorm = (scale / sqrt_dh) as f64;
+                    let payload = &page.data[layout.k_range(layer, head, local)];
+                    let (codes, bidx) = payload.split_at(dh);
+                    let mut acc = 0f64;
+                    for j in 0..bpv {
+                        c.copy_from_slice(&codes[j * D..(j + 1) * D]);
+                        let xb = &qvec[j * D..(j + 1) * D];
+                        if use_int {
+                            consts.decode(&c, &mut e);
+                            let mut d = 0f32;
+                            for i in 0..D {
+                                d += e[i] as f32 * xb[i];
+                            }
+                            acc += (d * 0.5 * nq.betas[bidx[j] as usize]) as f64;
+                        } else {
+                            let rec = nq.decode_block(&c, bidx[j]);
+                            let mut d = 0f32;
+                            for i in 0..D {
+                                d += rec[i] * xb[i];
+                            }
+                            acc += d as f64;
+                        }
+                    }
+                    out.push((acc * denorm) as f32);
+                });
             }
         }
     }
 
     /// out = Σ_t probs[t]·v_t for (layer, head): the decode-step value
-    /// path, streamed page-by-page with the same integer decoder as
-    /// [`Self::scores`] — replaces the per-position dequantize-into-Vec
-    /// loop. `out` must be the head dimension; it is overwritten.
+    /// path, streamed page-by-page with the same per-lane dispatch as
+    /// [`Self::scores`] — no per-position dequantize buffer. Each lane's
+    /// per-entry reconstruction mirrors its eval-path roundtrip
+    /// bit-for-bit. `out` must be the head dimension; it is overwritten.
     pub fn weighted_value_sum(&self, layer: usize, head: usize, probs: &[f32], out: &mut [f32]) {
         out.fill(0.0);
         let lane = self.lane(layer, head);
@@ -446,52 +648,92 @@ impl SessionKv {
         if total == 0 {
             return;
         }
-        let nq = &self.pool.layers[layer].v;
-        let q = nq.q() as i32;
-        let use_int = nq.codec.m_variant && q <= 16;
-        let consts = DecodeConsts::new(q);
         let g = self.pool.inner.lock().unwrap();
-        let shape = *g.blocks.shape();
-        let (dh, bpv, ps) = (shape.d_head, shape.blocks_per_vec(), shape.page_size);
+        let layout = g.blocks.layout();
+        let shape = *layout.shape();
+        let (dh, ps) = (shape.d_head, shape.page_size);
         assert_eq!(out.len(), dh);
-        let sqrt_dh = (dh as f32).sqrt();
-        let mut c = [0u8; D];
-        let mut e = [0i32; D];
+        match &self.pool.lanes[layer] {
+            KvLaneCodec::Fp32 => {
+                self.stream(&g.blocks, total, ps, |page, local, t| {
+                    let p = probs[t];
+                    let bytes = &page.data[layout.v_range(layer, head, local)];
+                    for (i, xb) in bytes.chunks_exact(4).enumerate() {
+                        let x = f32::from_le_bytes([xb[0], xb[1], xb[2], xb[3]]);
+                        out[i] += p * x;
+                    }
+                });
+            }
+            KvLaneCodec::Uniform(_) => {
+                self.stream(&g.blocks, total, ps, |page, local, t| {
+                    let p = probs[t];
+                    let delta = page.scale_v[shape.slot(lane, local)];
+                    let codes = &page.data[layout.v_range(layer, head, local)];
+                    for (i, &c) in codes.iter().enumerate() {
+                        // (c·Δ) mirrors the uniform dequantize bit-for-bit
+                        out[i] += p * ((c as i8 as f32) * delta);
+                    }
+                });
+            }
+            KvLaneCodec::Nested { v: nq, .. } => {
+                let q = nq.q() as i32;
+                let use_int = nq.codec.m_variant && q <= 16;
+                let consts = DecodeConsts::new(q);
+                let bpv = shape.blocks_per_vec();
+                let sqrt_dh = (dh as f32).sqrt();
+                let mut c = [0u8; D];
+                let mut e = [0i32; D];
+                self.stream(&g.blocks, total, ps, |page, local, t| {
+                    let p = probs[t];
+                    let scale = page.scale_v[shape.slot(lane, local)];
+                    if scale == 0.0 {
+                        return;
+                    }
+                    let denorm = scale / sqrt_dh;
+                    let payload = &page.data[layout.v_range(layer, head, local)];
+                    let (codes, bidx) = payload.split_at(dh);
+                    for j in 0..bpv {
+                        c.copy_from_slice(&codes[j * D..(j + 1) * D]);
+                        let ob = &mut out[j * D..(j + 1) * D];
+                        if use_int {
+                            consts.decode(&c, &mut e);
+                            let beta = nq.betas[bidx[j] as usize];
+                            for i in 0..D {
+                                // (e·0.5)·β·denorm mirrors dequantize's
+                                // (dec·β)·denorm bit-for-bit: e·0.5 is exact
+                                ob[i] += p * (((e[i] as f32 * 0.5) * beta) * denorm);
+                            }
+                        } else {
+                            let rec = nq.decode_block(&c, bidx[j]);
+                            for i in 0..D {
+                                ob[i] += p * (rec[i] * denorm);
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    }
+
+    /// Walk this session's cached positions `[0, total)` page-by-page,
+    /// calling `f(page, local, t)` for each — the shared streaming
+    /// skeleton of the decode kernels (no allocation).
+    #[inline]
+    fn stream<F: FnMut(&block::Page, usize, usize)>(
+        &self,
+        blocks: &BlockPool,
+        total: usize,
+        ps: usize,
+        mut f: F,
+    ) {
         for (pi, &pid) in self.table.pages().iter().enumerate() {
             if pi * ps >= total {
                 break;
             }
             let cnt = (total - pi * ps).min(ps);
-            let page = g.blocks.page(pid);
-            let s0 = shape.slot(lane, 0);
-            for t in 0..cnt {
-                let p = probs[pi * ps + t];
-                let s = s0 + t;
-                let scale = page.scale_v[s];
-                if scale == 0.0 {
-                    continue;
-                }
-                let denorm = scale / sqrt_dh;
-                let codes = &page.codes_v[s * dh..(s + 1) * dh];
-                let bidx = &page.beta_v[s * bpv..(s + 1) * bpv];
-                for j in 0..bpv {
-                    c.copy_from_slice(&codes[j * D..(j + 1) * D]);
-                    let ob = &mut out[j * D..(j + 1) * D];
-                    if use_int {
-                        consts.decode(&c, &mut e);
-                        let beta = nq.betas[bidx[j] as usize];
-                        for i in 0..D {
-                            // (e·0.5)·β·denorm mirrors dequantize's
-                            // (dec·β)·denorm bit-for-bit: e·0.5 is exact
-                            ob[i] += p * (((e[i] as f32 * 0.5) * beta) * denorm);
-                        }
-                    } else {
-                        let rec = nq.decode_block(&c, bidx[j]);
-                        for i in 0..D {
-                            ob[i] += p * (rec[i] * denorm);
-                        }
-                    }
-                }
+            let page = blocks.page(pid);
+            for local in 0..cnt {
+                f(page, local, pi * ps + local);
             }
         }
     }
@@ -500,26 +742,37 @@ impl SessionKv {
         let lane = self.lane(layer, head);
         assert!(pos < self.table.fill(lane), "position {pos} not cached");
         let g = self.pool.inner.lock().unwrap();
-        let shape = *g.blocks.shape();
-        let (dh, bpv, ps) = (shape.d_head, shape.blocks_per_vec(), shape.page_size);
+        let layout = g.blocks.layout();
+        let shape = *layout.shape();
+        let (dh, ps) = (shape.d_head, shape.page_size);
         let page = g.blocks.page(self.table.pages()[pos / ps]);
-        let s = shape.slot(lane, pos % ps);
-        let (codes, beta, scale) = if key {
-            (&page.codes_k, &page.beta_k, page.scale_k[s])
+        let local = pos % ps;
+        let s = shape.slot(lane, local);
+        let range = if key {
+            layout.k_range(layer, head, local)
         } else {
-            (&page.codes_v, &page.beta_v, page.scale_v[s])
+            layout.v_range(layer, head, local)
         };
-        let qv = QuantizedVector {
-            codes: codes[s * dh..(s + 1) * dh].to_vec(),
-            beta_idx: beta[s * bpv..(s + 1) * bpv].to_vec(),
-            scale,
-            n: dh,
-        };
-        let lq = &self.pool.layers[layer];
-        if key {
-            lq.k.dequantize(&qv)
-        } else {
-            lq.v.dequantize(&qv)
+        let payload = &page.data[range];
+        match &self.pool.lanes[layer] {
+            KvLaneCodec::Fp32 => payload
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect(),
+            KvLaneCodec::Uniform(_) => {
+                let delta = if key { page.scale_k[s] } else { page.scale_v[s] };
+                payload.iter().map(|&c| (c as i8 as f32) * delta).collect()
+            }
+            KvLaneCodec::Nested { k, v } => {
+                let qv = QuantizedVector {
+                    codes: payload[..dh].to_vec(),
+                    beta_idx: payload[dh..].to_vec(),
+                    scale: if key { page.scale_k[s] } else { page.scale_v[s] },
+                    n: dh,
+                };
+                let nq = if key { k } else { v };
+                nq.dequantize(&qv)
+            }
         }
     }
 
@@ -549,15 +802,28 @@ mod tests {
     use super::*;
     use crate::util::{propcheck, stats, Rng};
 
+    fn nested(q: u32) -> KvLaneCodec {
+        let betas = if q <= 4 {
+            vec![0.5, 1.0]
+        } else {
+            vec![0.25, 0.32, 0.45, 1.0]
+        };
+        let nq = NestedLatticeQuantizer::new_m(q, betas);
+        KvLaneCodec::Nested {
+            k: nq.clone(),
+            v: nq,
+        }
+    }
+
     fn pool(n_layer: usize, n_head: usize, cfg: PoolConfig) -> Arc<KvPool> {
-        let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
-        let layers = (0..n_layer)
-            .map(|_| KvLayerQuant {
-                k: nq.clone(),
-                v: nq.clone(),
-            })
-            .collect();
-        Arc::new(KvPool::new(n_layer, n_head, layers, cfg))
+        let lanes = (0..n_layer).map(|_| nested(14)).collect();
+        Arc::new(KvPool::new(n_layer, n_head, lanes, cfg))
+    }
+
+    /// A 3-layer pool exercising every lane codec at once.
+    fn mixed_pool(n_head: usize, cfg: PoolConfig) -> Arc<KvPool> {
+        let lanes = vec![KvLaneCodec::Fp32, KvLaneCodec::Uniform(4), nested(14)];
+        Arc::new(KvPool::new(3, n_head, lanes, cfg))
     }
 
     /// Append `n` positions with deterministic per-token vectors to every
@@ -578,8 +844,41 @@ mod tests {
     }
 
     #[test]
+    fn lanes_decode_bitwise_equal_to_eval_roundtrip() {
+        // The eval-vs-serve parity contract: what the pool stores and
+        // decodes for each lane codec is bitwise what the batch-eval
+        // fake-quant path (`KvLaneCodec::roundtrip_*`) computes.
+        let p = mixed_pool(2, PoolConfig::default());
+        let mut sess = SessionKv::new(p.clone());
+        let mut rng = Rng::new(0xBEA7);
+        let dh = 16;
+        for pos in 0..3 {
+            let k = rng.gauss_vec(dh);
+            let v = rng.gauss_vec(dh);
+            for l in 0..3 {
+                for h in 0..2 {
+                    sess.append(l, h, &k, &v);
+                }
+            }
+            for l in 0..3 {
+                let mut rt_k = k.clone();
+                p.lane(l).roundtrip_key(&mut rt_k);
+                assert_eq!(sess.key(l, 1, pos), rt_k, "layer {l} key parity");
+                let mut rt_v = v.clone();
+                p.lane(l).roundtrip_value(&mut rt_v);
+                assert_eq!(sess.value(l, 0, pos), rt_v, "layer {l} value parity");
+            }
+            // the fp lane is exact
+            assert_eq!(sess.key(0, 0, pos), k);
+            assert_eq!(sess.value(0, 0, pos), v);
+        }
+    }
+
+    #[test]
     fn prefix_hit_shares_pages_and_decodes_identically() {
-        let p = pool(2, 2, PoolConfig { page_size: 4, budget_bytes: None });
+        // mixed lanes: prefix sharing must hand back bitwise-identical
+        // payloads on fp32, uniform and nested layers alike.
+        let p = mixed_pool(2, PoolConfig { page_size: 4, budget_bytes: None });
         let dh = 16;
         let toks: Vec<i32> = (0..17).collect();
         let mut a = SessionKv::new(p.clone());
@@ -593,10 +892,13 @@ mod tests {
         // cap = 16 → 4 full pages; no partial child of the last node
         assert_eq!(matched, 16);
         assert_eq!(b.n_pages(), 4);
-        // shared pages decode bit-identically for both sessions
-        for pos in [0usize, 3, 7, 15] {
-            assert_eq!(a.key(1, 0, pos), b.key(1, 0, pos));
-            assert_eq!(a.value(0, 1, pos), b.value(0, 1, pos));
+        // shared pages decode bit-identically for both sessions, on
+        // every lane codec
+        for layer in 0..3 {
+            for pos in [0usize, 3, 7, 15] {
+                assert_eq!(a.key(layer, 0, pos), b.key(layer, 0, pos), "L{layer} key");
+                assert_eq!(a.value(layer, 1, pos), b.value(layer, 1, pos), "L{layer} val");
+            }
         }
         // pool-wide: the second session added zero pages
         assert_eq!(p.stats().pages_in_use, 5);
@@ -607,7 +909,10 @@ mod tests {
 
     #[test]
     fn partial_tail_match_is_copy_on_write() {
-        let p = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: None });
+        // COW over the heterogeneous byte arena: the diverging session
+        // must copy the tail page without disturbing any lane of the
+        // source session.
+        let p = mixed_pool(1, PoolConfig { page_size: 4, budget_bytes: None });
         let dh = 16;
         let toks: Vec<i32> = (0..8).collect();
         let mut a = SessionKv::new(p.clone());
@@ -621,28 +926,37 @@ mod tests {
         let shared_tail = b.table.pages()[1];
         assert_eq!(shared_tail, a.table.pages()[1]);
         // diverging append must COW the tail, leaving A's data intact
-        let a_key_before = a.key(0, 0, 6);
+        let before: Vec<Vec<f32>> = (0..3).map(|l| a.key(l, 0, 6)).collect();
         run_session(&mut b, &b_toks[6..], dh);
         assert_ne!(b.table.pages()[1], shared_tail, "tail not copied on write");
-        assert_eq!(a.key(0, 0, 6), a_key_before);
-        // shared positions still decode identically; diverged ones differ
-        assert_eq!(a.key(0, 0, 5), b.key(0, 0, 5));
-        assert_ne!(a.key(0, 0, 6), b.key(0, 0, 6));
+        for l in 0..3 {
+            assert_eq!(a.key(l, 0, 6), before[l], "L{l} disturbed by COW");
+            // shared positions still decode identically; diverged differ
+            assert_eq!(a.key(l, 0, 5), b.key(l, 0, 5), "L{l} shared pos");
+            assert_ne!(a.key(l, 0, 6), b.key(l, 0, 6), "L{l} diverged pos");
+        }
     }
 
     #[test]
     fn streaming_kernels_match_dequantized_reference() {
-        for m_variant in [false, true] {
-            let betas = vec![0.25, 0.32, 0.45, 1.0];
-            let nq = if m_variant {
-                NestedLatticeQuantizer::new_m(14, betas)
-            } else {
-                NestedLatticeQuantizer::new(14, betas)
-            };
-            let layers = vec![KvLayerQuant { k: nq.clone(), v: nq.clone() }];
+        // every lane codec (and both nested decode variants): the
+        // page-streaming score / value kernels must agree with
+        // decode-then-dot over the same coded entries.
+        let lanes: Vec<KvLaneCodec> = vec![
+            KvLaneCodec::Fp32,
+            KvLaneCodec::Uniform(4),
+            KvLaneCodec::Uniform(8),
+            {
+                let betas = vec![0.25, 0.32, 0.45, 1.0];
+                let nq = NestedLatticeQuantizer::new(14, betas);
+                KvLaneCodec::Nested { k: nq.clone(), v: nq }
+            },
+            nested(14),
+        ];
+        for lane in lanes {
+            let label = format!("{lane:?}");
             let cfg = PoolConfig { page_size: 4, budget_bytes: None };
-            let p = Arc::new(KvPool::new(1, 1, layers, cfg));
-            let mut sess = SessionKv::new(p);
+            let mut sess = SessionKv::new(Arc::new(KvPool::new(1, 1, vec![lane], cfg)));
             let dh = 16;
             let mut rng = Rng::new(1704);
             for _ in 0..11 {
@@ -663,7 +977,7 @@ mod tests {
                 let s = stats::dot(&qv, &kd) as f32;
                 assert!(
                     (scores[t] - s).abs() < 1e-4 * (1.0 + s.abs()),
-                    "m={m_variant} t={t}: streaming {} vs reference {s}",
+                    "{label} t={t}: streaming {} vs reference {s}",
                     scores[t]
                 );
                 let vd = sess.value(0, 0, t);
@@ -674,12 +988,102 @@ mod tests {
             for i in 0..dh {
                 assert!(
                     (wsum[i] - expect_w[i]).abs() < 1e-5 * (1.0 + expect_w[i].abs()),
-                    "m={m_variant} value sum diverges at {i}: {} vs {}",
+                    "{label} value sum diverges at {i}: {} vs {}",
                     wsum[i],
                     expect_w[i]
                 );
             }
         }
+    }
+
+    #[test]
+    fn fp_lane_pool_is_exact() {
+        let mut sess = SessionKv::solo(1, 1, KvLaneCodec::Fp32);
+        let mut rng = Rng::new(1703);
+        let k = rng.gauss_vec(16);
+        let v = rng.gauss_vec(16);
+        sess.append(0, 0, &k, &v);
+        assert_eq!(sess.key(0, 0, 0), k);
+        assert_eq!(sess.value(0, 0, 0), v);
+        let qv = rng.gauss_vec(16);
+        let mut scores = Vec::new();
+        sess.scores(0, 0, &qv, &mut scores);
+        assert_eq!(scores[0], stats::dot(&qv, &k) as f32);
+    }
+
+    #[test]
+    fn fp_and_uniform_lanes_accept_non_8_divisible_d_head() {
+        // only nested lanes carry the 8-block geometry: an fp32/uniform
+        // pool must serve head dims the old fp cache path accepted
+        // (e.g. d_head = 12), through append, kernels and decode.
+        let lanes = vec![KvLaneCodec::Fp32, KvLaneCodec::Uniform(4)];
+        let p = Arc::new(KvPool::new(2, 1, lanes, PoolConfig::default()));
+        let mut sess = SessionKv::new(p);
+        let mut rng = Rng::new(12);
+        let dh = 12;
+        let k = rng.gauss_vec(dh);
+        let v = rng.gauss_vec(dh);
+        sess.append(0, 0, &k, &v);
+        sess.append(1, 0, &k, &v);
+        assert_eq!(sess.key(0, 0, 0), k);
+        let mut scores = Vec::new();
+        sess.scores(1, 0, &k, &mut scores);
+        assert_eq!(scores.len(), 1);
+        let mut wsum = vec![0f32; dh];
+        sess.weighted_value_sum(0, 0, &[1.0], &mut wsum);
+        assert_eq!(wsum, v);
+    }
+
+    #[test]
+    fn nested_lane_pages_smaller_than_fp_lane_pages() {
+        // the memory claim at the page level: an all-nested pool's page
+        // byte cost is > 4× below an all-fp32 pool of the same geometry,
+        // and the stats split attributes each pool's bytes to its class.
+        let dh = 48;
+        let mut fp = SessionKv::solo(2, 2, KvLaneCodec::Fp32);
+        let mut nest = SessionKv::solo(2, 2, nested(14));
+        let mut rng = Rng::new(1702);
+        for _ in 0..50 {
+            let k = rng.gauss_vec(dh);
+            let v = rng.gauss_vec(dh);
+            for l in 0..2 {
+                for h in 0..2 {
+                    fp.append(l, h, &k, &v);
+                    nest.append(l, h, &k, &v);
+                }
+            }
+        }
+        let fp_bytes = fp.payload_bytes();
+        let nest_bytes = nest.payload_bytes();
+        assert!(
+            (nest_bytes as f64) < fp_bytes as f64 / 4.0,
+            "cache compression too weak: {nest_bytes} vs {fp_bytes}"
+        );
+        let fp_stats = fp.pool().stats();
+        assert_eq!(fp_stats.page_bytes_uniform + fp_stats.page_bytes_nested, 0);
+        assert_eq!(fp_stats.page_bytes_fp, fp_stats.bytes_per_page);
+        let nest_stats = nest.pool().stats();
+        assert_eq!(nest_stats.page_bytes_fp + nest_stats.page_bytes_uniform, 0);
+        assert_eq!(nest_stats.page_bytes_nested, nest_stats.bytes_per_page);
+    }
+
+    #[test]
+    fn mixed_pool_stats_split_bytes_by_class() {
+        let p = mixed_pool(2, PoolConfig { page_size: 4, budget_bytes: None });
+        let mut sess = SessionKv::new(p.clone());
+        run_session(&mut sess, &[1, 2, 3, 4, 5], 16);
+        let st = p.stats();
+        assert!(st.page_bytes_fp > 0 && st.page_bytes_uniform > 0 && st.page_bytes_nested > 0);
+        let sum = st.page_bytes_fp + st.page_bytes_uniform + st.page_bytes_nested;
+        assert!(
+            sum >= st.bytes_per_page && sum <= st.bytes_per_page + 2,
+            "split {sum} vs exact {}",
+            st.bytes_per_page
+        );
+        let split = st.bytes_in_use_split();
+        assert_eq!(split[0], st.pages_in_use * st.page_bytes_fp);
+        // fp32 lanes dominate the byte cost of a mixed page
+        assert!(st.page_bytes_fp > st.page_bytes_nested);
     }
 
     #[test]
@@ -756,20 +1160,22 @@ mod tests {
     }
 
     #[test]
-    fn pool_sessions_propcheck_no_leaks_budget_respected() {
-        // random session traffic: spawn / extend / drop sessions against
-        // a budgeted pool; invariants checked at every step: page
-        // accounting consistent, and whenever no session is live the
-        // cached footprint is within budget.
-        propcheck::check("kvpool-session-traffic", 8, 0xF00D_0011, |rng| {
+    fn mixed_pool_sessions_propcheck_no_leaks_budget_respected() {
+        // random session traffic against a budgeted **mixed-lane** pool
+        // (fp32 + uniform + nested layers): spawn sessions that
+        // prefix-match (sharing), extend them (COW on shared tails), and
+        // drop them (index caching + LRU eviction). Invariants at every
+        // step: page accounting consistent, and whenever no session is
+        // live the cached footprint is within budget.
+        propcheck::check("kvpool-mixed-session-traffic", 8, 0xF00D_0011, |rng| {
             let dh = 8;
-            let probe = pool(1, 1, PoolConfig { page_size: 2, budget_bytes: None });
+            let probe = mixed_pool(1, PoolConfig { page_size: 2, budget_bytes: None });
             let bpp = {
                 let mut s = SessionKv::new(probe.clone());
                 s.append(0, 0, &vec![0.5; dh], &vec![0.5; dh]);
                 probe.stats().bytes_per_page
             };
-            let p = pool(1, 1, PoolConfig { page_size: 2, budget_bytes: Some(5 * bpp) });
+            let p = mixed_pool(1, PoolConfig { page_size: 2, budget_bytes: Some(5 * bpp) });
             let mut live: Vec<SessionKv> = Vec::new();
             for step in 0..60 {
                 match rng.below(4) {
@@ -781,6 +1187,23 @@ mod tests {
                         let done = s.tokens.len();
                         let rest: Vec<i32> = toks[done..].to_vec();
                         run_session(&mut s, &rest, dh);
+                        // a prefix-served position must decode bitwise
+                        // like the session that produced it — checked on
+                        // every lane codec via the deterministic
+                        // per-token vectors run_session derives
+                        if done > 0 {
+                            for l in 0..3 {
+                                let mut gen = Rng::new(0x5EED ^ toks[0] as u64);
+                                let kexp = gen.gauss_vec(dh);
+                                let mut rt = kexp.clone();
+                                p.lane(l).roundtrip_key(&mut rt);
+                                if s.key(l, 0, 0) != rt {
+                                    return Err(format!(
+                                        "step {step}: shared pos decodes wrong on layer {l}"
+                                    ));
+                                }
+                            }
+                        }
                         live.push(s);
                     }
                     1 if !live.is_empty() => {
@@ -822,11 +1245,11 @@ mod tests {
         // layer's own codec — coarse decode ≠ fine decode.
         let fine = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
         let coarse = NestedLatticeQuantizer::new_m(3, vec![0.5, 1.0]);
-        let layers = vec![
-            KvLayerQuant { k: fine.clone(), v: fine.clone() },
-            KvLayerQuant { k: coarse.clone(), v: coarse.clone() },
+        let lanes = vec![
+            KvLaneCodec::Nested { k: fine.clone(), v: fine.clone() },
+            KvLaneCodec::Nested { k: coarse.clone(), v: coarse.clone() },
         ];
-        let p = Arc::new(KvPool::new(2, 1, layers, PoolConfig::default()));
+        let p = Arc::new(KvPool::new(2, 1, lanes, PoolConfig::default()));
         let mut sess = SessionKv::new(p);
         let mut rng = Rng::new(9);
         let x = rng.gauss_vec(16);

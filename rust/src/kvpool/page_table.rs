@@ -2,7 +2,7 @@
 //!
 //! A [`PageTable`] maps a session's logical page index (position /
 //! page_size) to a physical [`PageId`] and tracks per-(layer, head) fill
-//! counts — lanes may be ragged (the single-owner `KvCache` adapter
+//! counts — lanes may be ragged (single-owner `SessionKv::solo` usage
 //! appends per head), but pooled serving sessions fill all lanes
 //! uniformly, one position per decode step.
 //!
@@ -93,28 +93,30 @@ impl PageTable {
     }
 
     /// Copy the session-visible filled prefix of every lane of logical
-    /// page `pi` into a freshly allocated page.
+    /// page `pi` into a freshly allocated page. Lane payloads are opaque
+    /// byte runs at the layer's own stride, so the copy is
+    /// codec-agnostic (fp32 / uniform / nested lanes all move as raw
+    /// bytes — bitwise-preserving by construction).
     fn cow(&self, pi: usize, blocks: &mut BlockPool) -> PageId {
         let fresh = blocks.alloc();
-        let shape = *blocks.shape();
-        let (dh, bpv, ps) = (shape.d_head, shape.blocks_per_vec(), shape.page_size);
-        let (src, dst) = blocks.page_pair_mut(self.pages[pi], fresh);
-        for lane in 0..shape.lanes() {
-            let cnt = (self.fill(lane)).saturating_sub(pi * ps).min(ps);
-            if cnt == 0 {
-                continue;
+        let (layout, src, dst) = blocks.page_pair_mut(self.pages[pi], fresh);
+        let shape = *layout.shape();
+        let ps = shape.page_size;
+        for layer in 0..shape.n_layer {
+            for head in 0..shape.n_head {
+                let lane = shape.lane(layer, head);
+                let cnt = (self.fill(lane)).saturating_sub(pi * ps).min(ps);
+                if cnt == 0 {
+                    continue;
+                }
+                let kr = layout.k_run(layer, head, cnt);
+                dst.data[kr.clone()].copy_from_slice(&src.data[kr]);
+                let vr = layout.v_run(layer, head, cnt);
+                dst.data[vr.clone()].copy_from_slice(&src.data[vr]);
+                let s0 = shape.slot(lane, 0);
+                dst.scale_k[s0..s0 + cnt].copy_from_slice(&src.scale_k[s0..s0 + cnt]);
+                dst.scale_v[s0..s0 + cnt].copy_from_slice(&src.scale_v[s0..s0 + cnt]);
             }
-            let s0 = shape.slot(lane, 0);
-            dst.codes_k[s0 * dh..(s0 + cnt) * dh]
-                .copy_from_slice(&src.codes_k[s0 * dh..(s0 + cnt) * dh]);
-            dst.beta_k[s0 * bpv..(s0 + cnt) * bpv]
-                .copy_from_slice(&src.beta_k[s0 * bpv..(s0 + cnt) * bpv]);
-            dst.scale_k[s0..s0 + cnt].copy_from_slice(&src.scale_k[s0..s0 + cnt]);
-            dst.codes_v[s0 * dh..(s0 + cnt) * dh]
-                .copy_from_slice(&src.codes_v[s0 * dh..(s0 + cnt) * dh]);
-            dst.beta_v[s0 * bpv..(s0 + cnt) * bpv]
-                .copy_from_slice(&src.beta_v[s0 * bpv..(s0 + cnt) * bpv]);
-            dst.scale_v[s0..s0 + cnt].copy_from_slice(&src.scale_v[s0..s0 + cnt]);
         }
         fresh
     }
@@ -134,7 +136,7 @@ impl PageTable {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvpool::block::PageShape;
+    use crate::kvpool::block::{LaneClass, LaneSpec, PageShape};
 
     fn pool() -> BlockPool {
         let mut bp = BlockPool::new(
@@ -146,7 +148,12 @@ mod tests {
             },
             None,
         );
-        bp.set_d_head(8, &[(14, 14)]);
+        let spec = LaneSpec {
+            class: LaneClass::Nested,
+            stride: 8 + 1,
+            bits: crate::lattice::nested::payload_bits_for(8, 14),
+        };
+        bp.set_d_head(8, &[(spec, spec)]);
         bp
     }
 
@@ -175,14 +182,15 @@ mod tests {
         let mut t = PageTable::new(2);
         let (p0, s0) = t.claim_slot(0, &mut bp, |_| {});
         assert_eq!(s0, 0);
-        bp.page_mut(p0).codes_k[0] = 42;
+        let kb = bp.layout().k_range(0, 0, 0).start;
+        bp.page_mut(p0).data[kb] = 42;
         bp.page_mut(p0).scale_k[0] = 1.5;
         // simulate the prefix index holding a reference
         bp.incref(p0);
         let (p1, s1) = t.claim_slot(0, &mut bp, |_| {});
         assert_ne!(p0, p1, "shared page must be copied on write");
         assert_eq!(s1, 1);
-        assert_eq!(bp.page(p1).codes_k[0], 42, "filled prefix copied");
+        assert_eq!(bp.page(p1).data[kb], 42, "filled prefix copied");
         assert_eq!(bp.page(p1).scale_k[0], 1.5);
         assert_eq!(bp.refcount(p0), 1, "session ref moved off the old page");
         // subsequent appends stay on the private copy

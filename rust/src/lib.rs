@@ -20,11 +20,11 @@
 //!   `D(R)` and the matrix-multiplication lower bound `Γ(R)` of eq. (1)-(2).
 //! * [`model`] — a small GPT-style transformer (config, tensors, forward
 //!   pass) used as the end-to-end evaluation target.
-//! * [`kvpool`] — paged quantized KV pool: page slab allocator, per-session
-//!   page tables with copy-on-write, token-prefix sharing index, LRU
-//!   eviction under a byte budget (multi-session serving).
-//! * [`kvcache`] — the per-session KV-cache view (fp32 baseline or a
-//!   [`kvpool`]-backed coded store).
+//! * [`kvpool`] — the paged KV pool, the sole KV backend: heterogeneous
+//!   per-layer lane codecs (fp32 / uniform / nested), page slab
+//!   allocator, per-session page tables with copy-on-write, token-prefix
+//!   sharing index, LRU eviction under a byte budget (multi-session
+//!   serving). `SessionKv` is the per-session view.
 //! * [`runtime`] — PJRT (xla crate) wrapper loading AOT-compiled HLO
 //!   artifacts produced by the Layer-2 JAX model. Gated behind the `xla`
 //!   cargo feature: the xla crate + PJRT CPU plugin are only present on
@@ -39,7 +39,6 @@ pub mod bounds;
 pub mod coordinator;
 pub mod experiments;
 pub mod io;
-pub mod kvcache;
 pub mod kvpool;
 pub mod lattice;
 pub mod model;

@@ -6,13 +6,19 @@
 //! nestquant ppl <model> [--regime fp|w|wkv|wkva] [--method M] [--q Q]
 //!               [--k K] [--uniform-bits B] [--windows N] [--plan FILE]
 //!     evaluate perplexity of a quantized model. Flag defaults follow
-//!     `EngineOptions::default()`. `--plan` loads a per-site `.qplan`
-//!     policy file (mixed precision; overrides the uniform flags).
-//! nestquant serve <model> [--requests N] [--batch B]
-//!     run the serving coordinator demo (quantized KV cache)
-//! nestquant generate <model> <prompt> [--tokens N]
+//!     `EngineOptions::default()`.
+//! nestquant serve <model> [--requests N] [--batch B] [quant flags]
+//!     run the serving coordinator demo (pooled, coded KV cache)
+//! nestquant generate <model> <prompt> [--tokens N] [quant flags]
 //!     generate text with the quantized engine
 //! ```
+//!
+//! `ppl`, `serve` and `generate` all accept the same quantization
+//! flags: `--plan FILE` loads a per-site `.qplan` policy file (mixed
+//! precision; overrides the uniform flags below and is validated through
+//! one shared load path), while `--regime/--method/--q/--k/
+//! --uniform-bits` tweak the uniform configuration. Mixed-KV plans
+//! serve end-to-end: the paged pool carries one lane codec per layer.
 //!
 //! (clap is unavailable offline; arguments are parsed by hand. Method
 //! names come from `Method::ALL` — one parse/label pair shared with the
@@ -57,6 +63,44 @@ fn parse_regime(s: &str) -> Result<Regime> {
         .with_context(|| format!("unknown regime '{s}' (available: {})", regime_names()))
 }
 
+/// Apply the shared uniform quantization flags on top of a command's
+/// base options.
+fn apply_quant_flags(args: &[String], mut opts: EngineOptions) -> Result<EngineOptions> {
+    if let Some(s) = flag(args, "--regime") {
+        opts.regime = parse_regime(&s)?;
+    }
+    if let Some(s) = flag(args, "--method") {
+        opts.method = parse_method(&s)?;
+    }
+    if let Some(s) = flag(args, "--q") {
+        opts.q = s.parse().context("--q")?;
+    }
+    if let Some(s) = flag(args, "--k") {
+        opts.k = s.parse().context("--k")?;
+    }
+    if let Some(s) = flag(args, "--uniform-bits") {
+        opts.uniform_bits = s.parse().context("--uniform-bits")?;
+    }
+    Ok(opts)
+}
+
+/// The shared `--plan` load/validate path (`ppl`/`serve`/`generate`):
+/// a `.qplan` file carries the full per-site policy and overrides the
+/// uniform knob flags; without one, the flags lower through
+/// `QuantPlan::uniform`. Returns the plan and the plan path when one
+/// was loaded.
+fn resolve_plan(args: &[String], base: EngineOptions) -> Result<(QuantPlan, Option<String>)> {
+    if let Some(path) = flag(args, "--plan") {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read plan file '{path}'"))?;
+        let plan = QuantPlan::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse '{path}': {e}"))?;
+        Ok((plan, Some(path)))
+    } else {
+        Ok((QuantPlan::uniform(apply_quant_flags(args, base)?), None))
+    }
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
@@ -78,11 +122,9 @@ fn main() -> Result<()> {
                 .parse()?;
             // a .qplan file carries the full per-site policy — it
             // overrides the uniform knob flags below
-            if let Some(path) = flag(&args, "--plan") {
-                let text = std::fs::read_to_string(&path)
-                    .with_context(|| format!("read plan file '{path}'"))?;
-                let plan = QuantPlan::parse(&text)
-                    .map_err(|e| anyhow::anyhow!("parse '{path}': {e}"))?;
+            if flag(&args, "--plan").is_some() {
+                let (plan, path) = resolve_plan(&args, EngineOptions::default())?;
+                let path = path.expect("--plan present");
                 let eng = Engine::build_plan(&w, plan);
                 let ppl = eng.eval_ppl(&w.val_tokens, windows);
                 let payload: usize = eng.site_payloads().iter().map(|s| s.bytes).sum();
@@ -96,22 +138,7 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             // uniform path: every knob defaults to EngineOptions::default()
-            let mut opts = EngineOptions::default();
-            if let Some(s) = flag(&args, "--regime") {
-                opts.regime = parse_regime(&s)?;
-            }
-            if let Some(s) = flag(&args, "--method") {
-                opts.method = parse_method(&s)?;
-            }
-            if let Some(s) = flag(&args, "--q") {
-                opts.q = s.parse().context("--q")?;
-            }
-            if let Some(s) = flag(&args, "--k") {
-                opts.k = s.parse().context("--k")?;
-            }
-            if let Some(s) = flag(&args, "--uniform-bits") {
-                opts.uniform_bits = s.parse().context("--uniform-bits")?;
-            }
+            let opts = apply_quant_flags(&args, EngineOptions::default())?;
             if opts.regime == Regime::Fp {
                 let ppl = nestquant::model::forward::eval_ppl(&w, &w.val_tokens, windows);
                 println!("fp32 ppl = {ppl:.4}");
@@ -135,14 +162,20 @@ fn main() -> Result<()> {
                 .parse()?;
             let batch: usize = flag(&args, "--batch").unwrap_or_else(|| "4".into()).parse()?;
             let w = ModelWeights::load(&artifact_path(&artifacts, model))?;
-            let eng = std::sync::Arc::new(Engine::build(
-                &w,
+            // same plan resolution as `ppl`: a `.qplan` file (mixed
+            // precision, heterogeneous KV lanes) or the uniform flags
+            let (plan, plan_path) = resolve_plan(
+                &args,
                 EngineOptions {
                     regime: Regime::WKv,
                     calib_windows: 2,
                     ..Default::default()
                 },
-            ));
+            )?;
+            if let Some(p) = &plan_path {
+                println!("serving with plan {p}");
+            }
+            let eng = std::sync::Arc::new(Engine::build_plan(&w, plan));
             let (srv, rx) = nestquant::coordinator::Server::start(
                 eng,
                 nestquant::coordinator::ServerConfig {
@@ -184,14 +217,18 @@ fn main() -> Result<()> {
                 .unwrap_or_else(|| "64".into())
                 .parse()?;
             let w = ModelWeights::load(&artifact_path(&artifacts, model))?;
-            let eng = Engine::build(
-                &w,
+            let (plan, plan_path) = resolve_plan(
+                &args,
                 EngineOptions {
                     regime: Regime::WKv,
                     calib_windows: 2,
                     ..Default::default()
                 },
-            );
+            )?;
+            if let Some(p) = &plan_path {
+                println!("generating with plan {p}");
+            }
+            let eng = Engine::build_plan(&w, plan);
             const VOCAB: &str = "abcdefghijklmnopqrstuvwxyz0123456789 .,;=+-()[]{}<>\n";
             let prompt: Vec<i32> = prompt_str
                 .chars()
@@ -216,8 +253,10 @@ fn main() -> Result<()> {
                  usage:\n  nestquant exp <id|all>\n  nestquant ppl <model> \
                  [--regime {}] [--method {}]\n      [--q Q] [--k K] [--uniform-bits B] \
                  [--windows N] [--plan FILE]\n  \
-                 nestquant serve <model> [--requests N] [--batch B]\n  \
-                 nestquant generate <model> <prompt> [--tokens N]",
+                 nestquant serve <model> [--requests N] [--batch B] [quant flags]\n  \
+                 nestquant generate <model> <prompt> [--tokens N] [quant flags]\n\
+                 `serve` and `generate` take the same quant flags as `ppl`, \
+                 including --plan FILE",
                 regime_names(),
                 method_names()
             );

@@ -11,8 +11,10 @@
 //! (QA-)LDLQ and DP-chosen βs; (3) activation/KV quantizers get their own
 //! DP βs; (4) evaluation runs the quantized forward (fake-quant semantics,
 //! bit-exact with coded storage — `quant::matrix` tests prove the
-//! equivalence), while the serving path (`kvcache`, `coordinator`) keeps
-//! KV entries in coded form.
+//! equivalence), while the serving path (`kvpool`, `coordinator`) keeps
+//! KV entries in coded form — per layer, through the same
+//! [`KvLaneCodec`] the eval roundtrips use, so mixed-KV plans are
+//! eval-vs-serve consistent.
 //!
 //! Policy is **per site**: [`Engine::build_plan`] resolves every linear,
 //! every layer's KV pair and every activation tap through a
@@ -23,7 +25,7 @@
 //! [`QuantPlan::uniform`](crate::quant::plan::QuantPlan::uniform) and
 //! constructs bit-identical engines.
 
-use crate::kvpool::{KvLayerQuant, KvPool, PoolConfig};
+use crate::kvpool::{KvPool, PoolConfig};
 use crate::lattice::beta_dp::select_betas_for_data;
 use crate::lattice::e8::D;
 use crate::lattice::nested::{NestedLatticeQuantizer, Strategy};
@@ -244,50 +246,13 @@ pub enum ActQuant {
     Uniform(u32),
 }
 
-/// A layer's resolved KV-cache treatment.
-pub enum KvQuant {
-    /// fp32 KV cache
-    None,
-    /// uniform fake-quant baseline at the given bit width
-    Uniform(u32),
-    /// calibrated nested-lattice pair (coded serving path)
-    Nested {
-        k_nq: NestedLatticeQuantizer,
-        v_nq: NestedLatticeQuantizer,
-    },
-}
-
-impl KvQuant {
-    pub fn is_none(&self) -> bool {
-        matches!(self, KvQuant::None)
-    }
-
-    fn roundtrip(&self, key: bool, x: &mut [f32]) {
-        match self {
-            KvQuant::None => {}
-            KvQuant::Uniform(bits) => {
-                let uq = UniformQuantizer::new(*bits);
-                let rt = uq.roundtrip(x);
-                x.copy_from_slice(&rt);
-            }
-            KvQuant::Nested { k_nq, v_nq } => {
-                let nq = if key { k_nq } else { v_nq };
-                let rt = nq.roundtrip(x);
-                x.copy_from_slice(&rt);
-            }
-        }
-    }
-
-    /// Fake-quant a per-head key vector.
-    pub fn roundtrip_key(&self, x: &mut [f32]) {
-        self.roundtrip(true, x);
-    }
-
-    /// Fake-quant a per-head value vector.
-    pub fn roundtrip_value(&self, x: &mut [f32]) {
-        self.roundtrip(false, x);
-    }
-}
+/// A layer's resolved KV-cache treatment is its pool lane codec —
+/// re-exported here because the engine resolves it from the plan. One
+/// enum serves both paths: `forward_window` fake-quants through
+/// `roundtrip_key`/`roundtrip_value`, and [`Engine::kv_pool`] hands the
+/// same codec to the paged pool, whose coded storage decodes
+/// bitwise-identically to those roundtrips (tested in `kvpool`).
+pub use crate::kvpool::KvLaneCodec;
 
 /// Logical coded-payload accounting for one weight site (what the
 /// serving tier would ship/keep resident for that tensor).
@@ -421,8 +386,9 @@ pub struct QLayer {
     pub w_down: QLinear,
     /// per-head rotation applied to k and q (scores invariant) and to v
     pub head_rot: Option<Rotation>,
-    /// KV-cache treatment for this layer (per-site policy)
-    pub kv: KvQuant,
+    /// KV-cache lane codec for this layer (per-site policy) — shared by
+    /// the eval roundtrips and the paged pool's coded storage
+    pub kv: KvLaneCodec,
 }
 
 /// The quantized model + evaluation entry points.
@@ -612,7 +578,7 @@ impl Engine {
                 w_up: mk(SiteKind::Up, &p[4], &lw.w_up, 2),
                 w_down: mk(SiteKind::Down, &p[5], &lw.w_down, 3),
                 head_rot: head_rots[i].clone(),
-                kv: Self::kv_quant(&kvpols[i], &calib.k_blocks[i], &calib.v_blocks[i]),
+                kv: Self::kv_lane(&kvpols[i], &calib.k_blocks[i], &calib.v_blocks[i]),
             };
             layers.push(layer);
         }
@@ -680,56 +646,35 @@ impl Engine {
         out
     }
 
-    /// Build a paged KV pool carrying each layer's own calibrated
-    /// key/value quantizer pair (§4.6 step 4 — per-layer dictionaries,
-    /// at that layer's own plan-resolved rate). `None` when any layer
-    /// doesn't keep a coded KV cache (fp or uniform-baseline KV stays on
-    /// the fp32 per-session path).
-    ///
-    /// Caveat for mixed-KV plans: without a pool, `GenSession` falls
-    /// back to the fp32 cache for **every** layer, while the batch-eval
-    /// path (`forward_window`) still applies each layer's `KvQuant`
-    /// roundtrip — so eval ppl for such plans describes the fake-quant
-    /// path, not serving output. All-nested (or all-fp) KV plans have no
-    /// such gap. A per-layer fp lane in `kvpool` would close it
-    /// (ROADMAP open item).
-    pub fn kv_pool(&self, cfg: PoolConfig) -> Option<Arc<KvPool>> {
-        if self.layers.is_empty() {
-            return None;
-        }
-        let mut layers = Vec::with_capacity(self.layers.len());
-        for l in &self.layers {
-            match &l.kv {
-                KvQuant::Nested { k_nq, v_nq } => layers.push(KvLayerQuant {
-                    k: k_nq.clone(),
-                    v: v_nq.clone(),
-                }),
-                _ => return None,
-            }
-        }
-        Some(Arc::new(KvPool::new(
-            self.cfg.n_layer,
-            self.cfg.n_head,
-            layers,
-            cfg,
-        )))
+    /// Build the paged KV pool — the **sole** KV backend, total over
+    /// plans: every layer contributes its own [`KvLaneCodec`] (raw fp32
+    /// lanes for unquantized KV, branch-free uniform lanes for the
+    /// baselines, calibrated nested pairs per §4.6 step 4, each at that
+    /// layer's own plan-resolved rate). Because the lane codec is the
+    /// same object `forward_window` roundtrips through, generation
+    /// serves exactly the per-layer KV treatment that batch eval
+    /// applies — mixed fp/uniform/nested plans included, with the pool's
+    /// decoded values bitwise equal to the eval roundtrips.
+    pub fn kv_pool(&self, cfg: PoolConfig) -> Arc<KvPool> {
+        let lanes = self.layers.iter().map(|l| l.kv.clone()).collect();
+        Arc::new(KvPool::new(self.cfg.n_layer, self.cfg.n_head, lanes, cfg))
     }
 
-    /// Resolve a layer's KV treatment from its policy + calibration
+    /// Resolve a layer's KV lane codec from its policy + calibration
     /// blocks. Empty calibration blocks fall back to the uniform
     /// roundtrip, like the pre-plan engine's missing-quantizer path.
-    fn kv_quant(pol: &SitePolicy, k_blocks: &[[f32; D]], v_blocks: &[[f32; D]]) -> KvQuant {
+    fn kv_lane(pol: &SitePolicy, k_blocks: &[[f32; D]], v_blocks: &[[f32; D]]) -> KvLaneCodec {
         if !pol.quantize {
-            return KvQuant::None;
+            return KvLaneCodec::Fp32;
         }
         if !pol.method.is_nested() {
-            return KvQuant::Uniform(pol.uniform_bits);
+            return KvLaneCodec::Uniform(pol.uniform_bits);
         }
         match (
             Self::kv_quantizer(k_blocks, pol),
             Self::kv_quantizer(v_blocks, pol),
         ) {
-            (Some(k_nq), Some(v_nq)) => KvQuant::Nested { k_nq, v_nq },
+            (Some(k), Some(v)) => KvLaneCodec::Nested { k, v },
             _ => {
                 // pre-plan behavior, but with the plan API this can
                 // contradict an *explicit* nested KV request — say so
@@ -739,7 +684,7 @@ impl Engine {
                      (q={}); falling back to uniform {}-bit KV fake-quant",
                     pol.q, pol.uniform_bits
                 );
-                KvQuant::Uniform(pol.uniform_bits)
+                KvLaneCodec::Uniform(pol.uniform_bits)
             }
         }
     }
@@ -1223,7 +1168,7 @@ impl Engine {
         let mut v = l.wv.forward(x);
 
         // KV-cache quantization (per position, per head, rotated basis)
-        if !l.kv.is_none() {
+        if !l.kv.is_fp() {
             for t in 0..seq {
                 for h in 0..cfg.n_head {
                     let kr = &mut k.row_mut(t)[h * dh..(h + 1) * dh];
@@ -1665,18 +1610,27 @@ mod tests {
         )
         .build(&w);
         match &eng.layers[0].kv {
-            KvQuant::Nested { k_nq, .. } => assert_eq!(k_nq.q(), 16),
+            KvLaneCodec::Nested { k, .. } => assert_eq!(k.q(), 16),
             _ => panic!("layer 0 must carry a nested KV pair"),
         }
-        let pool = eng.kv_pool(PoolConfig::default()).expect("all-nested KV pools");
-        assert_eq!(pool.layer_quant(0).k.q(), 16);
-        assert_eq!(pool.layer_quant(0).v.q(), 16);
-        assert_eq!(pool.layer_quant(1).k.q(), 14);
+        let pool = eng.kv_pool(PoolConfig::default());
+        match pool.lane(0) {
+            KvLaneCodec::Nested { k, v } => {
+                assert_eq!(k.q(), 16);
+                assert_eq!(v.q(), 16);
+            }
+            other => panic!("layer 0 lane must be nested, got {other:?}"),
+        }
+        match pool.lane(1) {
+            KvLaneCodec::Nested { k, .. } => assert_eq!(k.q(), 14),
+            other => panic!("layer 1 lane must be nested, got {other:?}"),
+        }
     }
 
     #[test]
-    fn mixed_kv_plan_disables_the_shared_pool() {
-        // a layer with fp KV forces the per-session fp path: no pool
+    fn mixed_kv_plan_builds_heterogeneous_pool() {
+        // a layer with fp KV becomes an fp32 lane in the shared pool —
+        // the pool is total over plans, no per-session fp fallback
         let w = synth_weights_2l();
         let eng = EngineBuilder::from_options(EngineOptions {
             method: Method::NestQuantM,
@@ -1693,9 +1647,17 @@ mod tests {
             PolicyPatch::fp(),
         )
         .build(&w);
-        assert!(!eng.layers[0].kv.is_none());
-        assert!(eng.layers[1].kv.is_none());
-        assert!(eng.kv_pool(PoolConfig::default()).is_none());
+        assert!(!eng.layers[0].kv.is_fp());
+        assert!(eng.layers[1].kv.is_fp());
+        let pool = eng.kv_pool(PoolConfig::default());
+        assert!(matches!(pool.lane(0), KvLaneCodec::Nested { .. }));
+        assert!(pool.lane(1).is_fp());
+        // and the mixed pool generates end-to-end
+        let mut sess = crate::coordinator::generator::GenSession::new_in_pool(&eng, &pool);
+        let out = sess.generate(&w.val_tokens[..4].to_vec(), 6);
+        assert_eq!(out.len(), 6);
+        let st = pool.stats();
+        assert!(st.page_bytes_fp > 0 && st.page_bytes_nested > 0, "{st:?}");
     }
 
     #[test]

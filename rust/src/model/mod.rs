@@ -19,6 +19,6 @@ pub mod weights;
 
 pub use config::ModelConfig;
 pub use engine::{
-    ActQuant, Engine, EngineOptions, KvQuant, Method, Regime, RotKind, SitePayload,
+    ActQuant, Engine, EngineOptions, KvLaneCodec, Method, Regime, RotKind, SitePayload,
 };
 pub use weights::ModelWeights;

@@ -243,22 +243,31 @@ fn integer_gemm_backend_end_to_end() {
 }
 
 #[test]
-fn kv_decode_hot_paths_are_allocation_free() {
+fn kv_decode_hot_paths_are_allocation_free_for_every_lane_codec() {
     // Acceptance criterion: a decode step performs zero per-position
-    // heap allocation on the scores AND value paths. After one warm-up
-    // call (which sizes the caller-owned score buffer), repeated
-    // streaming score / weighted-value-sum calls over the paged coded
-    // store must not touch the allocator at all.
-    use nestquant::kvcache::KvCache;
+    // heap allocation on the scores AND value paths, for ALL THREE lane
+    // codecs (fp32 copy, branch-free uniform decode, integer nested
+    // decode). After one warm-up call (which sizes the caller-owned
+    // score buffer), repeated streaming score / weighted-value-sum
+    // calls over the heterogeneous paged store must not touch the
+    // allocator at all.
+    use nestquant::kvpool::{KvLaneCodec, KvPool, PoolConfig, SessionKv};
     use nestquant::lattice::nested::NestedLatticeQuantizer;
+    use std::sync::Arc;
     let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
-    let mut cache = KvCache::new_nest(2, 2, nq.clone(), nq.clone());
+    let lanes = vec![
+        KvLaneCodec::Fp32,
+        KvLaneCodec::Uniform(4),
+        KvLaneCodec::Nested { k: nq.clone(), v: nq },
+    ];
+    let pool = Arc::new(KvPool::new(3, 2, lanes, PoolConfig::default()));
+    let mut cache = SessionKv::new(pool);
     let mut rng = nestquant::util::Rng::new(0xA110C);
     let dh = 32;
     for _ in 0..40 {
         let k = rng.gauss_vec(dh);
         let v = rng.gauss_vec(dh);
-        for l in 0..2 {
+        for l in 0..3 {
             for h in 0..2 {
                 cache.append(l, h, &k, &v);
             }
@@ -273,10 +282,12 @@ fn kv_decode_hot_paths_are_allocation_free() {
     cache.weighted_value_sum(0, 1, &probs, &mut wsum);
     let before = alloc_counter::thread_allocs();
     for _ in 0..5 {
-        cache.scores(0, 1, &q, &mut scores);
-        cache.weighted_value_sum(0, 1, &probs, &mut wsum);
-        cache.scores(1, 0, &q, &mut scores);
-        cache.weighted_value_sum(1, 0, &probs, &mut wsum);
+        for l in 0..3 {
+            cache.scores(l, 1, &q, &mut scores);
+            cache.weighted_value_sum(l, 1, &probs, &mut wsum);
+            cache.scores(l, 0, &q, &mut scores);
+            cache.weighted_value_sum(l, 0, &probs, &mut wsum);
+        }
     }
     let after = alloc_counter::thread_allocs();
     assert_eq!(scores.len(), 40);
@@ -284,6 +295,89 @@ fn kv_decode_hot_paths_are_allocation_free() {
         after, before,
         "decode hot paths allocated {} time(s)",
         after - before
+    );
+}
+
+#[test]
+fn mixed_kv_plan_eval_and_serve_are_consistent() {
+    // Acceptance criterion: a plan mixing Fp32, Uniform and Nested KV
+    // layers runs end-to-end through the (now total) paged pool, and
+    // the serving path applies exactly the per-layer roundtrips that
+    // batch eval applies. The KV payloads both paths consume are
+    // bitwise identical (the pool decodes to the same bits as
+    // `KvLaneCodec::roundtrip_*` — asserted per layer below and in
+    // `kvpool`'s lane-parity test); the logits agree to the same
+    // float-accumulation tolerance as the all-fp incremental-vs-window
+    // test, which the pre-refactor fp-everywhere fallback failed by
+    // construction for such plans.
+    use nestquant::kvpool::{KvLaneCodec, PoolConfig};
+    use nestquant::quant::plan::{EngineBuilder, PolicyPatch, SiteRole, SiteSelector};
+    let w = ModelWeights::synthetic(
+        nestquant::model::ModelConfig {
+            vocab: 48,
+            ctx: 48,
+            d_model: 32,
+            n_layer: 3,
+            n_head: 2,
+            d_ff: 64,
+        },
+        0x3A2E,
+    );
+    let eng = EngineBuilder::from_options(EngineOptions {
+        method: Method::NestQuantM,
+        regime: Regime::WKv,
+        calib_windows: 1,
+        ..Default::default()
+    })
+    .rule(
+        SiteSelector {
+            layers: Some((0, 0)),
+            role: Some(SiteRole::Kv),
+            ..Default::default()
+        },
+        PolicyPatch::fp(),
+    )
+    .rule(
+        SiteSelector {
+            layers: Some((1, 1)),
+            role: Some(SiteRole::Kv),
+            ..Default::default()
+        },
+        PolicyPatch {
+            method: Some(Method::UniformRot),
+            ..Default::default()
+        },
+    )
+    .build(&w);
+    assert!(matches!(eng.layers[0].kv, KvLaneCodec::Fp32));
+    assert!(matches!(eng.layers[1].kv, KvLaneCodec::Uniform(_)));
+    assert!(matches!(eng.layers[2].kv, KvLaneCodec::Nested { .. }));
+    // the pool is total: every lane codec matches the engine's
+    let pool = eng.kv_pool(PoolConfig::default());
+    for l in 0..3 {
+        assert_eq!(pool.lane(l).is_fp(), eng.layers[l].kv.is_fp());
+    }
+    // serve (incremental, through the heterogeneous pool) vs eval
+    // (forward_window fake-quant roundtrips): step-by-step logits
+    let toks: Vec<i32> = (0..24).map(|i| (i * 7 + 3) % 48).collect();
+    let full = eng.forward_window(&toks);
+    let mut sess = nestquant::coordinator::generator::GenSession::new_in_pool(&eng, &pool);
+    for (t, &tok) in toks.iter().enumerate() {
+        let logits = sess.step(tok);
+        for v in 0..w.cfg.vocab {
+            assert!(
+                (logits[v] - full[(t, v)]).abs() < 2e-3 * (1.0 + full[(t, v)].abs()),
+                "t={t} v={v}: serve {} vs eval {}",
+                logits[v],
+                full[(t, v)]
+            );
+        }
+    }
+    let st = pool.stats();
+    assert!(st.pages_in_use > 0);
+    assert!(
+        st.page_bytes_fp > 0 && st.page_bytes_uniform > 0 && st.page_bytes_nested > 0,
+        "mixed page must account every lane class: {st:?}"
     );
 }
 
@@ -318,18 +412,16 @@ fn budget_constrained_pool_keeps_live_sessions_bit_identical() {
     let prompt_b: Vec<i32> = (0..33).map(|i| (i * 5 + 7) % 48).collect();
 
     // reference: unbounded pool, session B alone
-    let ref_pool = eng.kv_pool(PoolConfig::default()).unwrap();
+    let ref_pool = eng.kv_pool(PoolConfig::default());
     let ref_logits = GenSession::new_in_pool(&eng, &ref_pool).prefill(&prompt_b);
 
     // learn the page byte cost, then budget exactly 3 pages
     let bpp = ref_pool.stats().bytes_per_page;
     assert!(bpp > 0);
-    let pool = eng
-        .kv_pool(PoolConfig {
-            page_size: 16,
-            budget_bytes: Some(3 * bpp),
-        })
-        .unwrap();
+    let pool = eng.kv_pool(PoolConfig {
+        page_size: 16,
+        budget_bytes: Some(3 * bpp),
+    });
     {
         let mut a = GenSession::new_in_pool(&eng, &pool);
         a.prefill(&prompt_a);
