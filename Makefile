@@ -8,8 +8,8 @@
 #   make bench-serve  multi-session serving sweep only -> BENCH_serve.json
 #   make bench-plan   mixed-precision QuantPlan sweep only -> BENCH_plan.json
 #   make bench-kvmix  heterogeneous KV-lane sweep only -> BENCH_kvmix.json
-#   make ci           fmt-check + clippy + build + test + the kvmix smoke
-#                     bench (what a CI job runs)
+#   make ci           fmt-check + clippy + build + test + the kvmix and
+#                     serve smoke benches (what a CI job runs)
 #   make clean        remove build artifacts
 #
 # The python layer (training + AOT lowering, `make artifacts`) is only
@@ -30,9 +30,10 @@ clippy:
 fmt-check:
 	cd rust && cargo fmt --check
 
-# bench-kvmix doubles as the CI smoke run of the mixed-lane serving
-# path (seconds on the synthetic model)
-ci: fmt-check clippy build test bench-kvmix
+# bench-kvmix and bench-serve double as the CI smoke runs of the
+# mixed-lane serving path and the fused decode-batch scheduler
+# (seconds each on the synthetic model)
+ci: fmt-check clippy build test bench-kvmix bench-serve
 
 # no pipefail in POSIX sh: redirect, propagate the bench exit status,
 # then show the log — a crashed bench must not leave a "fresh" log

@@ -9,6 +9,9 @@
 //! * the multi-session serving sweep over the paged KV pool: sessions
 //!   {1, 8, 32} × shared-prefix {0%, 50%, 90%}, reporting tokens/s,
 //!   pool bytes and prefix hit rate
+//! * the fused decode-batch sweep: sessions {1, 8, 32} × admission
+//!   {all-at-once, staggered} through the token-level scheduler,
+//!   reporting decode tok/s and mean fused batch occupancy
 //! * the mixed-precision QuantPlan sweep: per-site rate split
 //!   q∈{12,16} vs uniform q=14 at equal payload bytes
 //! * the heterogeneous KV-lane sweep: all-nested vs fp-edge +
@@ -301,12 +304,18 @@ fn core_benches() {
 /// fresh pool, so prefix hits are exactly the within-set sharing (the
 /// first session misses, later ones map the common pages). Reports
 /// tokens/s, the pool's post-serve byte footprint, and the prefix hit
-/// rate; serialized to BENCH_serve.json.
+/// rate; serialized to BENCH_serve.json. A second sweep drives the
+/// fused token-level scheduler end-to-end (sessions × admission
+/// pattern) and records decode tok/s, fused batch occupancy and
+/// preemption counts into the same file. Small shapes throughout, so
+/// `make ci` runs the whole section as a scheduler smoke test.
 fn serve_benches() {
     use nestquant::coordinator::generator::GenSession;
+    use nestquant::coordinator::{BatchPolicy, Request, Server, ServerConfig};
     use nestquant::kvpool::{PoolConfig, PoolStats};
     use nestquant::model::engine::{Engine, EngineOptions, Method, Regime};
     use nestquant::model::weights::ModelWeights;
+    use std::sync::Arc;
 
     println!("\n## multi-session serving: paged KV pool sweep");
     let cfg = nestquant::model::ModelConfig {
@@ -318,7 +327,7 @@ fn serve_benches() {
         d_ff: 64,
     };
     let w = ModelWeights::synthetic(cfg, 0x5E12E);
-    let eng = Engine::build(
+    let eng = Arc::new(Engine::build(
         &w,
         EngineOptions {
             method: Method::NestQuantM,
@@ -326,7 +335,7 @@ fn serve_benches() {
             calib_windows: 1,
             ..Default::default()
         },
-    );
+    ));
     let mut suite = BenchSuite::new("serve_multisession_pool");
     let budget = Duration::from_millis(600);
     let prompt_len = 40usize;
@@ -389,6 +398,95 @@ fn serve_benches() {
             );
         }
     }
+    // --- fused decode-batch sweep: the token-level scheduler ---
+    // Every live session's current token rides one activation panel per
+    // layer through the packed GEMM ([`Server`]'s fused loop); the sweep
+    // crosses batch size with admission pattern. `batch` submits every
+    // request before the loop starts; `staggered` submits half, then the
+    // rest as soon as the first streamed token proves decode is running —
+    // token-level admission must merge them mid-flight without a barrier.
+    println!("\n## fused decode batching: sessions × admission sweep");
+    let fused_budget = Duration::from_millis(300);
+    let n_new_fused = 8usize;
+    for &sessions in &[1usize, 8, 32] {
+        let prompts: Vec<Vec<i32>> = (0..sessions)
+            .map(|s| {
+                let mut p: Vec<i32> = (0..20).map(|i| (i * 3 + 1) % 64).collect();
+                p.extend((0..4).map(|i| (i * 7 + 11 * (s as i32 + 1)) % 64));
+                p
+            })
+            .collect();
+        for &staggered in &[false, true] {
+            let last = std::cell::Cell::new((0u64, 0u64, 0u64));
+            let label = format!(
+                "fused decode s={sessions} admission={}",
+                if staggered { "staggered" } else { "batch" }
+            );
+            let r = bench(&label, fused_budget, || {
+                let (srv, rx) = Server::start(
+                    eng.clone(),
+                    ServerConfig {
+                        policy: BatchPolicy {
+                            max_batch: 8,
+                            max_wait: Duration::from_millis(1),
+                        },
+                        stream: staggered,
+                        ..ServerConfig::default()
+                    },
+                );
+                let first = if staggered { sessions.div_ceil(2) } else { sessions };
+                for (id, p) in prompts.iter().take(first).enumerate() {
+                    srv.submit(Request::Generate {
+                        id: id as u64,
+                        prompt: p.clone(),
+                        n_new: n_new_fused,
+                    });
+                }
+                let mut submitted = first;
+                let mut finals = 0usize;
+                while finals < sessions {
+                    let resp = rx.recv().expect("worker died");
+                    if resp.done {
+                        finals += 1;
+                    }
+                    // second wave joins while the first is mid-decode
+                    while submitted < sessions {
+                        srv.submit(Request::Generate {
+                            id: submitted as u64,
+                            prompt: prompts[submitted].clone(),
+                            n_new: n_new_fused,
+                        });
+                        submitted += 1;
+                    }
+                }
+                let (steps, dtoks) = srv.metrics.decode_stats();
+                last.set((steps, dtoks, srv.metrics.preemptions()));
+                srv.shutdown();
+                sessions * n_new_fused
+            });
+            let (steps, dtoks, preempt) = last.get();
+            let decode_tok_s = (sessions * n_new_fused) as f64 / r.median.as_secs_f64();
+            let mean_batch = if steps > 0 { dtoks as f64 / steps as f64 } else { 0.0 };
+            println!(
+                "{}  [{:.0} decode tok/s, mean fused batch {:.2}, preemptions {}]",
+                r.report(),
+                decode_tok_s,
+                mean_batch,
+                preempt
+            );
+            suite.push(
+                &r,
+                &[
+                    ("sessions", sessions as f64),
+                    ("staggered", if staggered { 1.0 } else { 0.0 }),
+                    ("decode_tok_s", decode_tok_s),
+                    ("mean_decode_batch", mean_batch),
+                    ("preemptions", preempt as f64),
+                ],
+            );
+        }
+    }
+
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("rust/ has a parent")

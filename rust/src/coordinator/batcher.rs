@@ -2,7 +2,7 @@
 //! deadline expires — the standard continuous-batching admission policy
 //! (vLLM-style), sized to the AOT artifact's static batch dimension.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug)]
@@ -53,6 +53,26 @@ impl<T> Batcher<T> {
         }
         Some(batch)
     }
+
+    /// Block for one item — token-level admission pulls requests one at
+    /// a time between decode steps instead of waiting out a batch
+    /// deadline. `None` when the channel closed.
+    pub fn recv(&self) -> Option<T> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain everything currently queued without blocking. Returns
+    /// `false` once the channel has disconnected (nothing more will
+    /// ever arrive), `true` while senders remain.
+    pub fn try_drain(&self, into: &mut Vec<T>) -> bool {
+        loop {
+            match self.rx.try_recv() {
+                Ok(item) => into.push(item),
+                Err(TryRecvError::Empty) => return true,
+                Err(TryRecvError::Disconnected) => return false,
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -101,5 +121,24 @@ mod tests {
         drop(tx);
         let b = Batcher::new(rx, BatchPolicy::default());
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn try_drain_takes_queued_items_without_blocking() {
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy::default());
+        let mut inbox = Vec::new();
+        assert!(b.try_drain(&mut inbox), "sender still alive");
+        assert_eq!(inbox, vec![0, 1, 2]);
+        assert!(b.try_drain(&mut inbox), "empty but open");
+        assert_eq!(inbox.len(), 3);
+        tx.send(9).unwrap();
+        drop(tx);
+        assert!(!b.try_drain(&mut inbox), "disconnected after draining");
+        assert_eq!(inbox, vec![0, 1, 2, 9]);
+        assert!(b.recv().is_none());
     }
 }

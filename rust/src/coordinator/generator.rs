@@ -10,11 +10,43 @@
 //! steps publish completed pages back to the pool's prefix index.
 
 use crate::kvpool::{KvPool, PoolConfig, SessionKv};
-use crate::model::engine::Engine;
+use crate::model::engine::{Engine, StepScratch};
 use crate::model::forward::{gelu, rmsnorm, softmax_inplace};
 use crate::util::linalg::Mat;
 use crate::util::Rng;
 use std::sync::Arc;
+
+/// Advance every session one token in a single fused forward pass — the
+/// multi-session decode loop. `sessions[i]` consumes `tokens[i]`; row
+/// `i` of `logits` holds its next-token logits afterwards. All sessions
+/// must share one engine (the panel runs through that engine's
+/// weights). Bitwise-identical to calling [`GenSession::step`] per
+/// session — [`Engine::forward_step_fused`] documents the argument and
+/// `fused_decode_matches_solo_bitwise` pins it.
+pub fn step_fused(
+    sessions: &mut [&mut GenSession<'_>],
+    tokens: &[i32],
+    scratch: &mut StepScratch,
+    logits: &mut Mat,
+) {
+    assert_eq!(sessions.len(), tokens.len(), "one token per session");
+    if sessions.is_empty() {
+        logits.rows = 0;
+        logits.data.clear();
+        return;
+    }
+    let eng = sessions[0].eng;
+    assert!(
+        sessions.iter().all(|s| std::ptr::eq(s.eng, eng)),
+        "fused step requires one shared engine"
+    );
+    let positions: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
+    let mut caches: Vec<&mut SessionKv> = sessions.iter_mut().map(|s| &mut s.cache).collect();
+    eng.forward_step_fused(tokens, &positions, &mut caches, scratch, logits);
+    for s in sessions.iter_mut() {
+        s.pos += 1;
+    }
+}
 
 /// A single-stream generation session.
 pub struct GenSession<'a> {
@@ -48,6 +80,18 @@ impl<'a> GenSession<'a> {
 
     pub fn position(&self) -> usize {
         self.pos
+    }
+
+    /// Release every KV page back to the pool (keeping whatever the
+    /// prefix index already published) and rewind to position 0 — the
+    /// scheduler's pressure valve under pool-byte pressure. The token
+    /// stream lives with the caller (requeue + replay); a later
+    /// [`Self::prefill`] re-maps whatever prefix the pool still caches
+    /// and recomputes the rest, bitwise-identical to an uninterrupted
+    /// run (`kvpool` pins the rebuild). Returns the pages released.
+    pub fn preempt(&mut self) -> usize {
+        self.pos = 0;
+        self.cache.preempt()
     }
 
     pub fn kv_bytes(&self) -> usize {
@@ -330,6 +374,238 @@ mod tests {
             for (i, (x, y)) in ga.iter().zip(&gb).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "step {s} logit {i} diverges");
             }
+        }
+    }
+
+    #[test]
+    fn fused_decode_matches_solo_bitwise() {
+        // The tentpole's parity harness: a fused multi-session decode in
+        // one shared pool must be bitwise identical to stepping every
+        // session alone on a private pool — across mixed plans (fp
+        // lm_head, fp32/uniform/nested KV lanes), session counts
+        // {1, 2, 8, 17} and staggered admission.
+        use crate::quant::plan::{EngineBuilder, PolicyPatch, SiteKind, SiteSelector};
+        use crate::util::propcheck;
+
+        let cfg = crate::model::ModelConfig {
+            vocab: 48,
+            ctx: 96,
+            d_model: 32,
+            n_layer: 3,
+            n_head: 2,
+            d_ff: 64,
+        };
+        let w = ModelWeights::synthetic(cfg, 0xFA57);
+        let nested = Engine::build(
+            &w,
+            EngineOptions {
+                method: Method::NestQuantM,
+                regime: Regime::WKv,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        );
+        // mixed plan: fp32 lane in layer 0, uniform-4 lane in layer 1,
+        // nested lane in layer 2, fp lm_head
+        let mixed = EngineBuilder::from_options(EngineOptions {
+            method: Method::NestQuantM,
+            regime: Regime::WKv,
+            calib_windows: 1,
+            ..Default::default()
+        })
+        .rule(
+            SiteSelector {
+                layers: Some((0, 0)),
+                kind: Some(SiteKind::KvCache),
+                ..Default::default()
+            },
+            PolicyPatch::fp(),
+        )
+        .rule(
+            SiteSelector {
+                layers: Some((1, 1)),
+                kind: Some(SiteKind::KvCache),
+                ..Default::default()
+            },
+            PolicyPatch {
+                method: Some(Method::Rtn),
+                uniform_bits: Some(4),
+                ..Default::default()
+            },
+        )
+        .rule(
+            SiteSelector {
+                kind: Some(SiteKind::LmHead),
+                ..Default::default()
+            },
+            PolicyPatch::fp(),
+        )
+        .build(&w);
+        assert!(mixed.layers[0].kv.is_fp(), "plan must yield an fp32 lane");
+        let engines = [&nested, &mixed];
+
+        propcheck::check("fused_decode_matches_solo", 6, 0xD05EED, |rng| {
+            let eng = engines[rng.below(engines.len())];
+            let n = [1usize, 2, 8, 17][rng.below(4)];
+            // session s: shared random prefix + private tail, admitted
+            // into the fused loop at iteration joins[s]
+            let shared_len = 1 + rng.below(8);
+            let shared: Vec<i32> = (0..shared_len)
+                .map(|_| rng.below(cfg.vocab) as i32)
+                .collect();
+            let mut prompts: Vec<Vec<i32>> = Vec::new();
+            let mut joins = Vec::new();
+            for _ in 0..n {
+                let mut p = shared.clone();
+                for _ in 0..1 + rng.below(4) {
+                    p.push(rng.below(cfg.vocab) as i32);
+                }
+                prompts.push(p);
+                joins.push(rng.below(4));
+            }
+            let n_new = 4 + rng.below(3);
+
+            // solo references: each on a private pool, greedy decode,
+            // logits recorded after prefill and after every step
+            let mut solo: Vec<Vec<Vec<f32>>> = Vec::new();
+            for p in &prompts {
+                let mut sess = GenSession::new(eng);
+                let mut log = vec![sess.prefill(p)];
+                for _ in 0..n_new {
+                    let t = GenSession::greedy(log.last().unwrap());
+                    log.push(sess.step(t));
+                }
+                solo.push(log);
+            }
+
+            // fused run: one shared pool, token-level admission
+            let pool = eng.kv_pool(PoolConfig::default());
+            let mut fused: Vec<Option<GenSession>> = (0..n).map(|_| None).collect();
+            let mut last: Vec<Vec<f32>> = vec![Vec::new(); n];
+            let mut emitted = vec![0usize; n];
+            let mut scratch = StepScratch::new();
+            let mut logits = Mat::zeros(0, 0);
+            let mut iter = 0usize;
+            loop {
+                assert!(iter < 64, "fused drive did not terminate");
+                for s in 0..n {
+                    if joins[s] == iter {
+                        let mut sess = GenSession::new_in_pool(eng, &pool);
+                        let l = sess.prefill(&prompts[s]);
+                        for (i, (a, b)) in l.iter().zip(&solo[s][0]).enumerate() {
+                            if a.to_bits() != b.to_bits() {
+                                return Err(format!(
+                                    "prefill logit {i} of session {s} diverges: {a} vs {b}"
+                                ));
+                            }
+                        }
+                        last[s] = l;
+                        fused[s] = Some(sess);
+                    }
+                }
+                let mut ids = Vec::new();
+                let mut sessions: Vec<&mut GenSession> = Vec::new();
+                for (s, slot) in fused.iter_mut().enumerate() {
+                    if let Some(sess) = slot {
+                        if emitted[s] < n_new {
+                            ids.push(s);
+                            sessions.push(sess);
+                        }
+                    }
+                }
+                if sessions.is_empty() {
+                    if emitted.iter().all(|&e| e >= n_new) {
+                        break;
+                    }
+                    iter += 1;
+                    continue;
+                }
+                let tokens: Vec<i32> = ids.iter().map(|&s| GenSession::greedy(&last[s])).collect();
+                step_fused(&mut sessions, &tokens, &mut scratch, &mut logits);
+                for (r, &s) in ids.iter().enumerate() {
+                    emitted[s] += 1;
+                    let expect = &solo[s][emitted[s]];
+                    let row = logits.row(r);
+                    for (i, (a, b)) in row.iter().zip(expect).enumerate() {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "iter {iter} session {s} (batch {}) logit {i}: {a} vs {b}",
+                                ids.len()
+                            ));
+                        }
+                    }
+                    last[s].clear();
+                    last[s].extend_from_slice(row);
+                }
+                iter += 1;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn preempted_session_requeues_bitwise() {
+        // preempt mid-decode, then replay the full stream on the same
+        // pool: logits after replay must bitwise match an uninterrupted
+        // solo run (the scheduler's requeue path)
+        let cfg = crate::model::ModelConfig {
+            vocab: 48,
+            ctx: 96,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 64,
+        };
+        let w = ModelWeights::synthetic(cfg, 0xBEEF);
+        let eng = Engine::build(
+            &w,
+            EngineOptions {
+                method: Method::NestQuantM,
+                regime: Regime::WKv,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        );
+        let vocab = cfg.vocab as i32;
+        let prompt: Vec<i32> = (0..24).map(|i| (i * 7 % vocab + i) % vocab).collect();
+
+        // uninterrupted reference
+        let mut solo = GenSession::new(&eng);
+        let mut logits = solo.prefill(&prompt);
+        let mut stream = prompt.clone();
+        for _ in 0..6 {
+            let t = GenSession::greedy(&logits);
+            stream.push(t);
+            logits = solo.step(t);
+        }
+
+        // interrupted run: 3 tokens in, preempt, requeue with the whole
+        // stream-so-far as the replay prompt
+        let pool = eng.kv_pool(PoolConfig::default());
+        let mut sess = GenSession::new_in_pool(&eng, &pool);
+        let mut l2 = sess.prefill(&prompt);
+        let mut replay = prompt.clone();
+        for _ in 0..3 {
+            let t = GenSession::greedy(&l2);
+            replay.push(t);
+            l2 = sess.step(t);
+        }
+        let released = sess.preempt();
+        assert!(released > 0, "preempt must hand pages back");
+        assert_eq!(sess.position(), 0);
+        let mut l3 = sess.prefill(&replay);
+        for _ in 0..3 {
+            let t = GenSession::greedy(&l3);
+            replay.push(t);
+            l3 = sess.step(t);
+        }
+        assert_eq!(replay, stream, "requeued decode took a different path");
+        for (i, (a, b)) in l3.iter().zip(&logits).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "post-requeue logit {i} diverges: {a} vs {b}"
+            );
         }
     }
 

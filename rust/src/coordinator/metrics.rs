@@ -17,6 +17,13 @@ struct Inner {
     batch_slots: u64,
     wall_ms: f64,
     kv_bytes: usize,
+    /// every token the engine processed (prefill + decode + scoring)
+    tokens_processed: u64,
+    /// fused decode steps and the tokens they produced
+    decode_steps: u64,
+    decode_tokens: u64,
+    /// sessions swapped out under pool-byte pressure (and requeued)
+    preemptions: u64,
     /// latest paged-pool snapshot (None until a pooled engine serves)
     pool: Option<PoolStats>,
     /// per-site weight payload (label, bytes), recorded once per engine
@@ -48,6 +55,45 @@ impl Metrics {
         g.batches += 1;
         g.batch_slots += size as u64;
         let _ = capacity;
+    }
+
+    /// Count tokens the engine actually processed (prefill, decode and
+    /// scoring alike) — the counter the fused scheduler feeds instead of
+    /// dropping its tally on the floor.
+    pub fn record_tokens(&self, n: usize) {
+        self.inner.lock().unwrap().tokens_processed += n as u64;
+    }
+
+    pub fn tokens_processed(&self) -> u64 {
+        self.inner.lock().unwrap().tokens_processed
+    }
+
+    /// One fused decode step over `batch` live sessions (each step
+    /// emits one token per session, so the step also counts as a batch
+    /// for occupancy).
+    pub fn record_decode_step(&self, batch: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_slots += batch as u64;
+        g.decode_steps += 1;
+        g.decode_tokens += batch as u64;
+    }
+
+    /// (fused decode steps, tokens they produced) — occupancy of the
+    /// fused loop is their ratio.
+    pub fn decode_stats(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.decode_steps, g.decode_tokens)
+    }
+
+    /// A session was swapped out under pool-byte pressure (its pages
+    /// released, its request requeued).
+    pub fn record_preemption(&self) {
+        self.inner.lock().unwrap().preemptions += 1;
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.inner.lock().unwrap().preemptions
     }
 
     pub fn record_wall(&self, wall: Duration) {
@@ -118,6 +164,17 @@ impl Metrics {
             occupancy,
             g.kv_bytes as f64 / 1024.0
         );
+        if g.tokens_processed > 0 || g.decode_steps > 0 || g.preemptions > 0 {
+            let mean_decode = if g.decode_steps > 0 {
+                g.decode_tokens as f64 / g.decode_steps as f64
+            } else {
+                0.0
+            };
+            s.push_str(&format!(
+                " | sched: processed={} decode_steps={} mean_decode_batch={:.2} preemptions={}",
+                g.tokens_processed, g.decode_steps, mean_decode, g.preemptions
+            ));
+        }
         if let Some(p) = &g.pool {
             let [fp, uni, nest] = p.bytes_in_use_split();
             s.push_str(&format!(
@@ -175,6 +232,27 @@ mod tests {
         assert!(r.contains("kv_peak=2.0 KiB"));
         assert!(!r.contains("pool:"), "no pool gauges before a snapshot");
         assert!(m.throughput_tok_s() > 0.0);
+    }
+
+    #[test]
+    fn scheduler_counters_surface_in_report() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("sched:"), "no gauges before a record");
+        m.record_tokens(40);
+        m.record_decode_step(3);
+        m.record_decode_step(1);
+        m.record_tokens(4);
+        m.record_preemption();
+        assert_eq!(m.tokens_processed(), 44);
+        assert_eq!(m.decode_stats(), (2, 4));
+        assert_eq!(m.preemptions(), 1);
+        let r = m.report();
+        assert!(
+            r.contains("sched: processed=44 decode_steps=2 mean_decode_batch=2.00 preemptions=1"),
+            "{r}"
+        );
+        // decode steps also feed batch occupancy
+        assert!(r.contains("mean_batch=2.00"), "{r}");
     }
 
     #[test]

@@ -1,18 +1,24 @@
-//! The serving front-end: a router thread fans requests out to a
-//! generation worker (continuous batching over `GenSession`s, all
-//! drawing quantized KV pages from one shared
-//! [`KvPool`](crate::kvpool::KvPool)) and a scoring
-//! worker (batched full-window forward through the AOT HLO artifact when
-//! available, native engine otherwise). Sessions with common prompt
-//! prefixes — within a batch or across batches — share coded pages
-//! through the pool's prefix index instead of re-quantizing them, and
-//! the pool's byte budget caps total KV memory under load.
+//! The serving front-end: a single fused decode loop (vLLM-style
+//! token-level continuous batching). Every live session's current token
+//! is gathered into one activation panel per layer and served through
+//! the packed integer GEMM ([`step_fused`]); per-session attention runs
+//! against each session's own coded pages in the shared
+//! [`KvPool`](crate::kvpool::KvPool). Admission happens between decode
+//! steps (a request joins the running loop as soon as a slot and pool
+//! headroom exist — no batch barrier), and pool-byte pressure preempts
+//! the youngest session (pages released, request requeued and replayed)
+//! instead of overrunning the budget. Sessions with common prompt
+//! prefixes share coded pages through the pool's prefix index instead
+//! of re-quantizing them.
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
-use crate::coordinator::generator::GenSession;
+use crate::coordinator::generator::{step_fused, GenSession};
 use crate::coordinator::metrics::Metrics;
 use crate::kvpool::PoolConfig;
-use crate::model::engine::Engine;
+use crate::model::engine::{Engine, StepScratch};
+use crate::quant::gemm::scatter_panel;
+use crate::util::linalg::Mat;
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -44,6 +50,11 @@ pub struct Response {
     pub tokens: Vec<i32>,
     pub nll: Option<f64>,
     pub latency_ms: f64,
+    /// `true` on the final response for a request (the full token
+    /// stream / score); `false` on per-token streaming updates (sent
+    /// only when [`ServerConfig::stream`] is on, one generated token
+    /// each)
+    pub done: bool,
 }
 
 #[derive(Clone, Copy)]
@@ -55,6 +66,10 @@ pub struct ServerConfig {
     /// prefix index would retain every finished session's frozen pages
     /// forever and sustained traffic would grow memory without bound.
     pub pool: PoolConfig,
+    /// also send a `done: false` response per generated token as the
+    /// fused loop produces it (the final `done: true` response still
+    /// carries the full stream)
+    pub stream: bool,
 }
 
 impl ServerConfig {
@@ -71,6 +86,7 @@ impl Default for ServerConfig {
                 budget_bytes: Some(Self::DEFAULT_POOL_BUDGET),
                 ..PoolConfig::default()
             },
+            stream: false,
         }
     }
 }
@@ -104,91 +120,212 @@ impl Server {
             // their per-tensor byte split here)
             m.record_weight_sites(&engine.site_payloads());
             let batcher = Batcher::new(rx, cfg.policy);
-            while let Some(batch) = batcher.next_batch() {
-                m.record_batch(batch.len(), cfg.policy.max_batch);
-                let t_batch = Instant::now();
-                let mut total_tokens = 0usize;
+            let page_size = cfg.pool.page_size.max(1);
+            let max_live = cfg.policy.max_batch.max(1);
 
-                // continuous-batching lite: round-robin one decode step
-                // per active session until all sessions finish.
-                struct Active<'a> {
-                    id: u64,
-                    t0: Instant,
-                    sess: GenSession<'a>,
-                    pending_prompt: Vec<i32>,
-                    remaining: usize,
-                    logits: Vec<f32>,
-                    out: Vec<i32>,
+            // a Generate request waiting for admission; `out` carries
+            // tokens already produced before a preemption, replayed on
+            // re-admission
+            struct Pending {
+                id: u64,
+                t0: Instant,
+                prompt: Vec<i32>,
+                n_new: usize,
+                out: Vec<i32>,
+            }
+            // a session inside the fused decode loop
+            struct Live<'a> {
+                id: u64,
+                t0: Instant,
+                // admission order — preemption swaps out the youngest
+                seq: u64,
+                sess: GenSession<'a>,
+                prompt: Vec<i32>,
+                n_new: usize,
+                out: Vec<i32>,
+                logits: Vec<f32>,
+            }
+
+            let mut queue: VecDeque<Pending> = VecDeque::new();
+            let mut live: Vec<Live> = Vec::new();
+            let mut inbox: Vec<(Request, Instant)> = Vec::new();
+            let mut open = true;
+            let mut next_seq = 0u64;
+            let mut scratch = StepScratch::new();
+            let mut panel = Mat::zeros(0, 0);
+
+            loop {
+                // ingest: block only when idle, otherwise take whatever
+                // has queued up since the last decode step
+                if open && live.is_empty() && queue.is_empty() {
+                    match batcher.recv() {
+                        Some(item) => inbox.push(item),
+                        None => open = false,
+                    }
                 }
-                let mut gen_sessions: Vec<Active> = Vec::new();
-                for (req, t0) in batch {
+                if open && !batcher.try_drain(&mut inbox) {
+                    open = false;
+                }
+                for (req, t0) in inbox.drain(..) {
                     match req {
                         Request::Generate { id, prompt, n_new } => {
-                            let sess = GenSession::new_in_pool(&engine, &pool);
-                            gen_sessions.push(Active {
+                            queue.push_back(Pending {
                                 id,
                                 t0,
-                                sess,
-                                pending_prompt: prompt,
-                                remaining: n_new,
-                                logits: Vec::new(),
+                                prompt,
+                                n_new,
                                 out: Vec::new(),
                             });
                         }
                         Request::Score { id, window } => {
-                            // native scoring (the HLO path is exercised by
-                            // runtime::ModelRunner in examples/tests; the
-                            // in-process worker stays self-contained)
+                            // native scoring (the HLO path is exercised
+                            // by runtime::ModelRunner in examples/tests;
+                            // the in-process worker stays self-contained)
+                            let t_score = Instant::now();
                             let logits = engine.forward_window(&window[..window.len() - 1]);
                             let nll =
                                 crate::model::forward::window_nll(&logits, &window[1..]);
-                            total_tokens += window.len();
+                            m.record_tokens(window.len());
+                            m.record_request(t0.elapsed(), window.len());
+                            m.record_wall(t_score.elapsed());
                             let _ = resp_tx.send(Response {
                                 id,
                                 tokens: Vec::new(),
                                 nll: Some(nll),
                                 latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                                done: true,
                             });
-                            m.record_request(t0.elapsed(), window.len());
                         }
                     }
                 }
-                // prefill phase: pool-cached prefixes are mapped (zero
-                // quantization work), the remainder steps through the cache
-                for a in gen_sessions.iter_mut() {
-                    a.logits = a.sess.prefill(&a.pending_prompt);
-                    total_tokens += a.pending_prompt.len();
+                if !open && live.is_empty() && queue.is_empty() {
+                    break;
                 }
-                // decode phase, round-robin
-                let mut done = false;
-                while !done {
-                    done = true;
-                    for a in gen_sessions.iter_mut() {
-                        if a.remaining == 0 || a.sess.position() >= engine.cfg.ctx {
-                            continue;
-                        }
-                        done = false;
-                        let next = GenSession::greedy(&a.logits);
-                        a.out.push(next);
-                        a.logits = a.sess.step(next);
-                        a.remaining -= 1;
-                        total_tokens += 1;
+
+                // token-level admission: a queued request joins the
+                // running loop between decode steps as soon as a slot is
+                // free and its pages fit (preemption keeps at least one
+                // session running, so an empty loop always admits)
+                while live.len() < max_live {
+                    let Some(front) = queue.front() else { break };
+                    let need = (front.prompt.len() + front.out.len()) / page_size + 1;
+                    if !live.is_empty() && pool.would_overrun(need) {
+                        break;
+                    }
+                    let p = queue.pop_front().unwrap();
+                    let t_adm = Instant::now();
+                    let mut sess = GenSession::new_in_pool(&engine, &pool);
+                    // requeued sessions replay prompt + prior output;
+                    // the prefix index serves whatever pages survived
+                    let replay: Vec<i32> =
+                        p.prompt.iter().chain(p.out.iter()).copied().collect();
+                    let logits = sess.prefill(&replay);
+                    m.record_tokens(replay.len());
+                    m.record_wall(t_adm.elapsed());
+                    live.push(Live {
+                        id: p.id,
+                        t0: p.t0,
+                        seq: next_seq,
+                        sess,
+                        prompt: p.prompt,
+                        n_new: p.n_new,
+                        out: p.out,
+                        logits,
+                    });
+                    next_seq += 1;
+                }
+
+                // completions (before the step so a request admitted
+                // with nothing left to generate answers immediately)
+                let mut i = 0;
+                while i < live.len() {
+                    let a = &live[i];
+                    if a.out.len() >= a.n_new || a.sess.position() >= engine.cfg.ctx {
+                        let a = live.swap_remove(i);
+                        m.record_kv_bytes(a.sess.kv_bytes());
+                        m.record_request(a.t0.elapsed(), a.out.len());
+                        let _ = resp_tx.send(Response {
+                            id: a.id,
+                            tokens: a.out,
+                            nll: None,
+                            latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+                            done: true,
+                        });
+                    } else {
+                        i += 1;
                     }
                 }
-                for a in gen_sessions {
-                    m.record_kv_bytes(a.sess.kv_bytes());
-                    m.record_request(a.t0.elapsed(), a.out.len());
-                    let _ = resp_tx.send(Response {
+                if live.is_empty() {
+                    m.record_pool(pool.stats());
+                    continue;
+                }
+
+                // pool-pressure preemption: if the next step's page
+                // claims could overrun the byte budget, swap out the
+                // youngest session — release its pages, requeue its
+                // request at the front — rather than fail. The oldest
+                // session is never preempted, so every stream finishes.
+                loop {
+                    let upcoming = live
+                        .iter()
+                        .filter(|a| a.sess.position() % page_size == 0)
+                        .count()
+                        .max(1);
+                    if live.len() <= 1 || !pool.would_overrun(upcoming) {
+                        break;
+                    }
+                    let vi = live
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, a)| a.seq)
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    let mut a = live.swap_remove(vi);
+                    a.sess.preempt();
+                    m.record_preemption();
+                    queue.push_front(Pending {
                         id: a.id,
-                        tokens: a.out,
-                        nll: None,
-                        latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+                        t0: a.t0,
+                        prompt: a.prompt,
+                        n_new: a.n_new,
+                        out: a.out,
                     });
                 }
+
+                // one fused decode step over every live session: greedy
+                // next tokens in, one activation panel through the
+                // engine, next-token logits scattered back per session
+                let t_step = Instant::now();
+                let tokens: Vec<i32> =
+                    live.iter().map(|a| GenSession::greedy(&a.logits)).collect();
+                {
+                    let mut sessions: Vec<&mut GenSession> =
+                        live.iter_mut().map(|a| &mut a.sess).collect();
+                    step_fused(&mut sessions, &tokens, &mut scratch, &mut panel);
+                }
+                for a in live.iter_mut() {
+                    a.logits.clear();
+                    a.logits.resize(engine.cfg.vocab, 0.0);
+                }
+                scatter_panel(&panel, live.iter_mut().map(|a| a.logits.as_mut_slice()));
+                for (a, &t) in live.iter_mut().zip(tokens.iter()) {
+                    a.out.push(t);
+                    if cfg.stream {
+                        let _ = resp_tx.send(Response {
+                            id: a.id,
+                            tokens: vec![t],
+                            nll: None,
+                            latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+                            done: false,
+                        });
+                    }
+                }
+                m.record_decode_step(live.len());
+                m.record_tokens(live.len());
                 m.record_pool(pool.stats());
-                m.record_wall(t_batch.elapsed());
-                let _ = total_tokens;
+                m.record_wall(t_step.elapsed());
             }
+            m.record_pool(pool.stats());
         });
 
         (
@@ -327,6 +464,156 @@ mod tests {
         assert_eq!(sites.len(), 7);
         assert!(sites.iter().all(|(_, b)| *b > 0));
         assert!(srv.metrics.report().contains("weights: sites=7"));
+        // the throughput tally actually reaches Metrics now (it used to
+        // be dropped on the floor): 3 × (33-token prefill + 3 decode)
+        assert_eq!(srv.metrics.tokens_processed(), 3 * 36);
+        let (steps, decode_tokens) = srv.metrics.decode_stats();
+        assert_eq!(decode_tokens, 9, "3 sessions × 3 generated tokens");
+        assert!(
+            (3..=9).contains(&steps),
+            "fused steps must batch up to 3 sessions, got {steps}"
+        );
+        assert!(srv.metrics.report().contains("sched: processed=108"));
+        assert!(srv.metrics.throughput_tok_s() > 0.0);
+        srv.shutdown();
+    }
+
+    fn soak_engine() -> Arc<Engine> {
+        let w = crate::model::weights::ModelWeights::synthetic(
+            crate::model::ModelConfig {
+                vocab: 48,
+                ctx: 64,
+                d_model: 32,
+                n_layer: 2,
+                n_head: 2,
+                d_ff: 64,
+            },
+            0x50AC,
+        );
+        Arc::new(Engine::build(
+            &w,
+            crate::model::engine::EngineOptions {
+                method: crate::model::engine::Method::NestQuantM,
+                regime: Regime::WKv,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        ))
+    }
+
+    #[test]
+    fn soak_tight_budget_preempts_requeues_and_stays_bitwise() {
+        // Stress the scheduler: 12 overlapping-prefix sessions against a
+        // pool budget of 8 pages (each finished stream needs 3). The
+        // loop must (a) never overrun the byte budget, (b) preempt and
+        // requeue rather than fail, (c) finish every request with the
+        // exact token stream an unconstrained solo run produces.
+        let eng = soak_engine();
+        let ps = 8usize;
+        // learn this engine's page byte size from an unbounded probe pool
+        let bpp = eng
+            .kv_pool(PoolConfig {
+                page_size: ps,
+                budget_bytes: None,
+            })
+            .stats()
+            .bytes_per_page;
+        assert!(bpp > 0);
+
+        let common: Vec<i32> = (0..8).map(|i| (i * 5 + 1) % 48).collect();
+        let mut prompts = Vec::new();
+        for s in 0..12i32 {
+            let mut p = common.clone();
+            for j in 0..4 {
+                p.push((s * 7 + j * 3 + 2) % 48);
+            }
+            prompts.push(p);
+        }
+        let n_new = 6usize;
+        // solo references on private, unbounded pools
+        let expect: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| GenSession::new(&eng).generate(p, n_new))
+            .collect();
+
+        let (srv, rx) = Server::start(
+            eng.clone(),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 6,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+                pool: PoolConfig {
+                    page_size: ps,
+                    budget_bytes: Some(8 * bpp),
+                },
+                stream: false,
+            },
+        );
+        for (id, p) in prompts.iter().enumerate() {
+            srv.submit(Request::Generate {
+                id: id as u64,
+                prompt: p.clone(),
+                n_new,
+            });
+        }
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..12 {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            assert!(r.done);
+            got.insert(r.id, r.tokens);
+        }
+        assert_eq!(got.len(), 12, "every session must complete (no starvation)");
+        for (id, exp) in expect.iter().enumerate() {
+            assert_eq!(
+                &got[&(id as u64)], exp,
+                "session {id}: preemption/requeue changed the decoded stream"
+            );
+        }
+        let stats = srv.metrics.pool_stats().unwrap();
+        assert_eq!(
+            stats.budget_overruns, 0,
+            "scheduler must preempt before the pool overruns: {stats:?}"
+        );
+        assert!(
+            srv.metrics.preemptions() > 0,
+            "a 8-page budget cannot hold 6 × 3-page sessions without preemption"
+        );
+        assert!(stats.bytes_in_use <= 8 * bpp, "budget exceeded: {stats:?}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn streaming_emits_per_token_then_final() {
+        let eng = soak_engine();
+        let (srv, rx) = Server::start(
+            eng,
+            ServerConfig {
+                stream: true,
+                ..ServerConfig::default()
+            },
+        );
+        let prompt: Vec<i32> = (0..6).map(|i| (i * 11 + 3) % 48).collect();
+        srv.submit(Request::Generate {
+            id: 7,
+            prompt,
+            n_new: 4,
+        });
+        let mut streamed = Vec::new();
+        let fin = loop {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            assert_eq!(r.id, 7);
+            if r.done {
+                break r;
+            }
+            assert_eq!(r.tokens.len(), 1, "one token per streaming update");
+            streamed.push(r.tokens[0]);
+        };
+        assert_eq!(fin.tokens.len(), 4);
+        assert_eq!(
+            streamed, fin.tokens,
+            "streamed tokens must replay the final stream in order"
+        );
         srv.shutdown();
     }
 }

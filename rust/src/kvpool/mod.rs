@@ -322,14 +322,37 @@ impl KvPool {
             budget_overruns: g.blocks.budget_overruns,
         }
     }
+
+    /// Would allocating `new_pages` fresh pages exceed the byte budget
+    /// even after evicting every reclaimable (index-only) cached page?
+    /// The fused decode scheduler preempts sessions while this holds —
+    /// *before* the allocations happen — which keeps `budget_overruns`
+    /// at zero whenever shrinking the live set can restore headroom.
+    pub fn would_overrun(&self, new_pages: usize) -> bool {
+        let g = self.inner.lock().unwrap();
+        let Some(budget) = g.blocks.budget_bytes() else {
+            return false;
+        };
+        let bpp = g.blocks.bytes_per_page();
+        if bpp == 0 {
+            // layout not fixed yet: nothing allocated, nothing to predict
+            return false;
+        }
+        let evictable = g.index.count_pages(|p| g.blocks.refcount(p) == 1);
+        let pages = (g.blocks.pages_in_use() + new_pages).saturating_sub(evictable);
+        pages * bpp > budget
+    }
 }
 
-/// A position's payload coded outside the pool lock (quantization is the
-/// expensive part; the lock only covers the page write).
-enum Coded<'a> {
-    Fp { k: &'a [f32], v: &'a [f32] },
-    Uniform { ck: Vec<i8>, dk: f32, cv: Vec<i8>, dv: f32 },
-    Nested { qk: QuantizedVector, qv: QuantizedVector },
+/// Reusable per-session coding buffers: `append` quantizes into these
+/// (outside the pool lock) instead of allocating per token — the fused
+/// decode hot loop is allocation-free once they are warm.
+#[derive(Default)]
+struct CodeScratch {
+    ck: Vec<i8>,
+    cv: Vec<i8>,
+    qk: QuantizedVector,
+    qv: QuantizedVector,
 }
 
 /// Per-session view over a shared [`KvPool`]: owns a [`PageTable`], the
@@ -340,6 +363,7 @@ pub struct SessionKv {
     tokens: Vec<i32>,
     /// (node, generation) registration cursor into the prefix trie
     cursor: (usize, u32),
+    code: CodeScratch,
 }
 
 impl SessionKv {
@@ -350,6 +374,7 @@ impl SessionKv {
             table: PageTable::new(lanes),
             tokens: Vec::new(),
             cursor: (0, 0),
+            code: CodeScratch::default(),
         }
     }
 
@@ -397,19 +422,26 @@ impl SessionKv {
     /// applied by the page claim.
     pub fn append(&mut self, layer: usize, head: usize, k: &[f32], v: &[f32]) {
         assert_eq!(k.len(), v.len());
-        // coding (the expensive part) runs outside the pool lock
-        let coded = match &self.pool.lanes[layer] {
-            KvLaneCodec::Fp32 => Coded::Fp { k, v },
+        // coding (the expensive part) runs outside the pool lock, into
+        // the session-owned scratch buffers
+        enum Kind {
+            Fp,
+            Uniform { dk: f32, dv: f32 },
+            Nested,
+        }
+        let kind = match &self.pool.lanes[layer] {
+            KvLaneCodec::Fp32 => Kind::Fp,
             KvLaneCodec::Uniform(bits) => {
                 let uq = UniformQuantizer::new(*bits);
-                let (ck, dk) = uq.quantize(k);
-                let (cv, dv) = uq.quantize(v);
-                Coded::Uniform { ck, dk, cv, dv }
+                let dk = uq.quantize_into(k, &mut self.code.ck);
+                let dv = uq.quantize_into(v, &mut self.code.cv);
+                Kind::Uniform { dk, dv }
             }
-            KvLaneCodec::Nested { k: knq, v: vnq } => Coded::Nested {
-                qk: knq.quantize(k),
-                qv: vnq.quantize(v),
-            },
+            KvLaneCodec::Nested { k: knq, v: vnq } => {
+                knq.quantize_into(k, &mut self.code.qk);
+                vnq.quantize_into(v, &mut self.code.qv);
+                Kind::Nested
+            }
         };
         let lane = self.lane(layer, head);
         let mut g = self.pool.inner.lock().unwrap();
@@ -430,8 +462,8 @@ impl SessionKv {
         let kr = layout.k_range(layer, head, local);
         let vr = layout.v_range(layer, head, local);
         let dh = k.len();
-        match coded {
-            Coded::Fp { k, v } => {
+        match kind {
+            Kind::Fp => {
                 for (dst, &x) in page.data[kr].chunks_exact_mut(4).zip(k) {
                     dst.copy_from_slice(&x.to_le_bytes());
                 }
@@ -439,17 +471,18 @@ impl SessionKv {
                     dst.copy_from_slice(&x.to_le_bytes());
                 }
             }
-            Coded::Uniform { ck, dk, cv, dv } => {
-                for (dst, &c) in page.data[kr].iter_mut().zip(&ck) {
+            Kind::Uniform { dk, dv } => {
+                for (dst, &c) in page.data[kr].iter_mut().zip(&self.code.ck) {
                     *dst = c as u8;
                 }
                 page.scale_k[s] = dk;
-                for (dst, &c) in page.data[vr].iter_mut().zip(&cv) {
+                for (dst, &c) in page.data[vr].iter_mut().zip(&self.code.cv) {
                     *dst = c as u8;
                 }
                 page.scale_v[s] = dv;
             }
-            Coded::Nested { qk, qv } => {
+            Kind::Nested => {
+                let (qk, qv) = (&self.code.qk, &self.code.qv);
                 let dst = &mut page.data[kr];
                 dst[..dh].copy_from_slice(&qk.codes);
                 dst[dh..].copy_from_slice(&qk.beta_idx);
@@ -460,6 +493,31 @@ impl SessionKv {
                 page.scale_v[s] = qv.scale;
             }
         }
+    }
+
+    /// Pre-reserve the token-history buffer (e.g. to the model context
+    /// length) so per-token [`Self::note_token`] pushes never reallocate
+    /// on the fused decode hot loop.
+    pub fn reserve_tokens(&mut self, n: usize) {
+        self.tokens.reserve(n);
+    }
+
+    /// Swap this session out under pool pressure: unmap every page and
+    /// reset to the fresh-session state [`Self::match_prefix`] requires.
+    /// Frozen pages registered in the prefix index stay cached, so a
+    /// requeued session re-maps its shared prefix (bitwise-identical
+    /// bytes) instead of re-coding it; only the partial tail is
+    /// recomputed. Returns the number of pages released.
+    pub fn preempt(&mut self) -> usize {
+        let released = self.table.n_pages();
+        let mut g = self.pool.inner.lock().unwrap();
+        let inner = &mut *g;
+        self.table.release(&mut inner.blocks);
+        // freshly unpinned cached pages may now exceed the budget
+        trim_to_budget(&mut inner.blocks, &mut inner.index, false);
+        self.tokens.clear();
+        self.cursor = (inner.index.root(), 0);
+        released
     }
 
     /// Record the token behind the position just appended (all lanes).
@@ -935,6 +993,62 @@ mod tests {
             assert_eq!(a.key(l, 0, 5), b.key(l, 0, 5), "L{l} shared pos");
             assert_ne!(a.key(l, 0, 6), b.key(l, 0, 6), "L{l} diverged pos");
         }
+    }
+
+    #[test]
+    fn preempt_releases_pages_and_requeue_rebuilds_bitwise() {
+        let p = mixed_pool(2, PoolConfig { page_size: 4, budget_bytes: None });
+        let dh = 16;
+        let toks: Vec<i32> = (0..11).collect();
+        let mut a = SessionKv::new(p.clone());
+        run_session(&mut a, &toks, dh);
+        let before: Vec<Vec<f32>> = (0..3).map(|l| a.key(l, 0, 9)).collect();
+        let released = a.preempt();
+        assert_eq!(released, 3, "11 positions / 4 per page");
+        assert_eq!(a.n_pages(), 0);
+        assert_eq!(p.stats().cached_pages, 2, "frozen prefix pages stay cached");
+        // requeue: the frozen prefix re-maps, only the tail recomputes
+        let matched = a.match_prefix(&toks);
+        assert_eq!(matched, 8, "two frozen pages re-mapped");
+        for (t, &tok) in toks.iter().enumerate().skip(matched) {
+            for l in 0..3 {
+                for h in 0..2 {
+                    let mut rng = Rng::new(0x5EED ^ tok as u64 ^ ((t as u64) << 32));
+                    let k = rng.gauss_vec(dh);
+                    let v = rng.gauss_vec(dh);
+                    a.append(l, h, &k, &v);
+                }
+            }
+            a.note_token(tok);
+        }
+        for (l, b) in before.iter().enumerate() {
+            assert_eq!(&a.key(l, 0, 9), b, "L{l} rebuild not bitwise");
+        }
+    }
+
+    #[test]
+    fn would_overrun_predicts_allocation_pressure() {
+        // learn the page byte cost from an unbudgeted probe pool
+        let probe = mixed_pool(1, PoolConfig { page_size: 4, budget_bytes: None });
+        let mut s = SessionKv::new(probe.clone());
+        run_session(&mut s, &[1], 16);
+        let bpp = probe.stats().bytes_per_page;
+
+        let p = mixed_pool(1, PoolConfig { page_size: 4, budget_bytes: Some(3 * bpp) });
+        assert!(!p.would_overrun(100), "no layout fixed yet → nothing to predict");
+        let mut a = SessionKv::new(p.clone());
+        let a_toks: Vec<i32> = (0..8).collect();
+        run_session(&mut a, &a_toks, 16); // 2 pages, pinned + cached
+        assert!(!p.would_overrun(1), "third page still fits");
+        assert!(p.would_overrun(2), "two fresh pages would blow the 3-page budget");
+        let mut b = SessionKv::new(p.clone());
+        let b_toks: Vec<i32> = (100..104).collect();
+        run_session(&mut b, &b_toks, 16); // third page
+        assert!(p.would_overrun(1), "every page pinned by a live session");
+        drop(a);
+        // a's pages are now index-only → evictable headroom is back
+        assert!(!p.would_overrun(2));
+        assert_eq!(p.stats().budget_overruns, 0);
     }
 
     #[test]

@@ -171,6 +171,21 @@ impl PrefixIndex {
         id
     }
 
+    /// Count live registered pages whose id satisfies `pred` — used by
+    /// the pool to measure evictable headroom (pages only the index
+    /// references) without touching LRU state. Any such page is
+    /// eventually reclaimable by repeated [`Self::evict_lru`] calls:
+    /// a mapping session always holds the whole root path, so an
+    /// index-only node can't have a pinned descendant blocking the
+    /// bottom-up peel.
+    pub fn count_pages<F: Fn(PageId) -> bool>(&self, pred: F) -> usize {
+        self.nodes
+            .iter()
+            .skip(1)
+            .filter(|n| !n.dead && pred(n.page))
+            .count()
+    }
+
     /// Evict the least-recently-used *leaf* whose page satisfies
     /// `reclaimable` (i.e. only the index references it). Returns the
     /// evicted page so the caller can drop the index's reference. Leaves
@@ -270,6 +285,19 @@ mod tests {
         assert_eq!(idx.evict_lru(|_| true), None);
         assert!(idx.is_empty());
         let _ = c;
+    }
+
+    #[test]
+    fn count_pages_tracks_live_nodes() {
+        let mut idx = PrefixIndex::new();
+        let r = idx.root();
+        idx.insert(r, &chunk(0, 4), 1);
+        let a = idx.insert(r, &chunk(10, 4), 2);
+        idx.insert(a, &chunk(20, 4), 3);
+        assert_eq!(idx.count_pages(|_| true), 3);
+        assert_eq!(idx.count_pages(|p| p != 2), 2);
+        idx.evict_lru(|p| p == 3);
+        assert_eq!(idx.count_pages(|_| true), 2, "evicted node drops out");
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub enum Strategy {
 }
 
 /// A quantized vector: packed coset codes + per-block β indices + scale.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct QuantizedVector {
     /// n coset code entries in [0, q)
     pub codes: Vec<u8>,
@@ -153,18 +153,32 @@ impl NestedLatticeQuantizer {
 
     /// Paper Algorithm 3: quantize a full vector (length divisible by 8).
     pub fn quantize(&self, a: &[f32]) -> QuantizedVector {
+        let mut out = QuantizedVector {
+            codes: Vec::new(),
+            beta_idx: Vec::new(),
+            scale: 0.0,
+            n: 0,
+        };
+        self.quantize_into(a, &mut out);
+        out
+    }
+
+    /// [`Self::quantize`] into a caller-owned [`QuantizedVector`] whose
+    /// buffers are cleared and refilled (capacity reused) — the paged-KV
+    /// append path codes one vector per (layer, head) per token and must
+    /// not pay a per-token allocation.
+    pub fn quantize_into(&self, a: &[f32], out: &mut QuantizedVector) {
         assert_eq!(a.len() % D, 0, "vector length must be divisible by 8");
         let n = a.len();
         let s = crate::util::stats::norm2(a) as f32;
-        let mut codes = vec![0u8; n];
-        let mut beta_idx = vec![0u8; n / D];
+        out.n = n;
+        out.scale = s;
+        out.codes.clear();
+        out.codes.resize(n, 0);
+        out.beta_idx.clear();
+        out.beta_idx.resize(n / D, 0);
         if s == 0.0 {
-            return QuantizedVector {
-                codes,
-                beta_idx,
-                scale: 0.0,
-                n,
-            };
+            return;
         }
         let norm = (n as f32).sqrt() / s;
         let mut block = [0f32; D];
@@ -173,22 +187,26 @@ impl NestedLatticeQuantizer {
                 block[i] = chunk[i] * norm;
             }
             let (c, t, _, _) = self.quantize_block(&block);
-            codes[j * D..(j + 1) * D].copy_from_slice(&c);
-            beta_idx[j] = t;
-        }
-        QuantizedVector {
-            codes,
-            beta_idx,
-            scale: s,
-            n,
+            out.codes[j * D..(j + 1) * D].copy_from_slice(&c);
+            out.beta_idx[j] = t;
         }
     }
 
     /// Dequantize a full vector back to f32.
     pub fn dequantize(&self, qv: &QuantizedVector) -> Vec<f32> {
         let mut out = vec![0f32; qv.n];
+        self.dequantize_into(qv, &mut out);
+        out
+    }
+
+    /// [`Self::dequantize`] into a caller-provided slice of length
+    /// `qv.n` — the allocation-free counterpart used by the activation
+    /// fake-quant path of the fused decode step.
+    pub fn dequantize_into(&self, qv: &QuantizedVector, out: &mut [f32]) {
+        assert_eq!(out.len(), qv.n);
         if qv.scale == 0.0 {
-            return out;
+            out.fill(0.0);
+            return;
         }
         let denorm = qv.scale / (qv.n as f32).sqrt();
         for j in 0..qv.n / D {
@@ -199,7 +217,6 @@ impl NestedLatticeQuantizer {
                 out[j * D + i] = r[i] * denorm;
             }
         }
-        out
     }
 
     /// One-shot quantize→dequantize ("fake quant"); bit-exact with
@@ -268,6 +285,31 @@ mod tests {
     fn quantizer(q: u32) -> NestedLatticeQuantizer {
         // βs tuned for N(0,1) blocks at q=14-ish rates (paper App. G shape)
         NestedLatticeQuantizer::new(q, vec![0.25, 0.32, 0.45, 1.0])
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_and_reuses_capacity() {
+        let mut rng = Rng::new(77);
+        let nq = quantizer(14);
+        let mut qv = QuantizedVector {
+            codes: Vec::new(),
+            beta_idx: Vec::new(),
+            scale: 0.0,
+            n: 0,
+        };
+        let mut buf = vec![0f32; 64];
+        for n in [64usize, 128, 64] {
+            let x = rng.gauss_vec(n);
+            let fresh = nq.quantize(&x);
+            nq.quantize_into(&x, &mut qv);
+            assert_eq!(qv, fresh);
+            buf.resize(n, 0.0);
+            nq.dequantize_into(&qv, &mut buf);
+            assert_eq!(buf, nq.dequantize(&fresh));
+        }
+        let cap = qv.codes.capacity();
+        nq.quantize_into(&rng.gauss_vec(64), &mut qv);
+        assert_eq!(qv.codes.capacity(), cap, "shrinking input must not reallocate");
     }
 
     #[test]

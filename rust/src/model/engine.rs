@@ -25,12 +25,12 @@
 //! [`QuantPlan::uniform`](crate::quant::plan::QuantPlan::uniform) and
 //! constructs bit-identical engines.
 
-use crate::kvpool::{KvPool, PoolConfig};
+use crate::kvpool::{KvPool, PoolConfig, SessionKv};
 use crate::lattice::beta_dp::select_betas_for_data;
 use crate::lattice::e8::D;
-use crate::lattice::nested::{NestedLatticeQuantizer, Strategy};
+use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector, Strategy};
 use crate::lattice::voronoi::VoronoiCodec;
-use crate::model::forward::{gelu, rmsnorm, softmax_inplace, window_nll};
+use crate::model::forward::{embed_into, gelu, rmsnorm, rmsnorm_rows, softmax_inplace, window_nll};
 use crate::model::weights::ModelWeights;
 use crate::quant::gemm::GemmScratch;
 use crate::quant::ldlq::hessian_from_activations;
@@ -298,6 +298,38 @@ pub struct QLinear {
     pub bits_packed: f64,
 }
 
+/// Reusable buffers for [`QLinear::forward_into`]: the rotated /
+/// fake-quantized input copy, the packed-GEMM panel scratch and the
+/// activation-quantizer staging. One instance per thread (or one inside
+/// a [`StepScratch`]) makes every linear allocation-free once warm.
+pub struct LinScratch {
+    /// working copy of the input (rotation + fake-quant applied in place)
+    xbuf: Mat,
+    /// panel/staging buffers for the packed integer GEMM
+    gemm: GemmScratch,
+    /// uniform activation codes
+    act_codes: Vec<i8>,
+    /// nested activation codes
+    act_qv: QuantizedVector,
+}
+
+impl LinScratch {
+    pub fn new() -> Self {
+        LinScratch {
+            xbuf: Mat::zeros(0, 0),
+            gemm: GemmScratch::new(),
+            act_codes: Vec::new(),
+            act_qv: QuantizedVector::default(),
+        }
+    }
+}
+
+impl Default for LinScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl QLinear {
     /// y = (x·R)·W̃ᵀ with the site's activation quantization applied
     /// after rotation. x (seq, in) → y (seq, out). When the packed
@@ -306,51 +338,76 @@ impl QLinear {
     /// multi-row prefill windows through the decode-amortized
     /// multithreaded GEMM.
     pub fn forward(&self, x: &Mat) -> Mat {
-        let mut xr = x.clone();
+        // spawning workers is only worth it for real prefill panels
+        let threads = if x.rows >= 16 { 0 } else { 1 };
+        // per-thread scratch: prefill reuses the panel/staging buffers
+        // instead of reallocating them every linear
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<LinScratch> =
+                std::cell::RefCell::new(LinScratch::new());
+        }
+        let mut y = Mat::zeros(x.rows, self.out_features);
+        SCRATCH.with(|s| self.forward_into(x, &mut y, &mut s.borrow_mut(), threads));
+        y
+    }
+
+    /// [`Self::forward`] into a caller-owned output through caller-owned
+    /// scratch — the fused decode loop calls every linear once per token
+    /// batch and must not allocate. Bitwise-identical to `forward`: the
+    /// rotation, the activation fake-quant and the fp fallback all work
+    /// row by row, single rows take the integer GEMV, and the panel GEMM
+    /// is decode-for-decode identical to the GEMV (`quant::gemm` pins
+    /// this), so `threads` never changes the bits.
+    pub fn forward_into(&self, x: &Mat, y: &mut Mat, s: &mut LinScratch, threads: usize) {
+        s.xbuf.rows = x.rows;
+        s.xbuf.cols = x.cols;
+        s.xbuf.data.clear();
+        s.xbuf.data.extend_from_slice(&x.data);
         if let Some(rot) = &self.rot {
-            rot.apply_rows(&mut xr.data);
+            rot.apply_rows(&mut s.xbuf.data);
         }
         match &self.act {
             ActQuant::None => {}
             ActQuant::Nested(nq) => {
-                for t in 0..xr.rows {
-                    let rt = nq.roundtrip(xr.row(t));
-                    xr.row_mut(t).copy_from_slice(&rt);
+                for t in 0..s.xbuf.rows {
+                    nq.quantize_into(s.xbuf.row(t), &mut s.act_qv);
+                    nq.dequantize_into(&s.act_qv, s.xbuf.row_mut(t));
                 }
             }
             ActQuant::Uniform(bits) => {
                 let uq = UniformQuantizer::new(*bits);
-                for t in 0..xr.rows {
-                    let rt = uq.roundtrip(xr.row(t));
-                    xr.row_mut(t).copy_from_slice(&rt);
+                for t in 0..s.xbuf.rows {
+                    let delta = uq.quantize_into(s.xbuf.row(t), &mut s.act_codes);
+                    for (v, &c) in s.xbuf.row_mut(t).iter_mut().zip(s.act_codes.iter()) {
+                        *v = c as f32 * delta;
+                    }
                 }
             }
         }
-        let mut y = Mat::zeros(xr.rows, self.out_features);
+        y.rows = s.xbuf.rows;
+        y.cols = self.out_features;
+        y.data.clear();
+        y.data.resize(s.xbuf.rows * self.out_features, 0.0);
         if let Some(packed) = &self.packed {
-            if xr.rows == 1 {
-                packed.gemv_into(xr.row(0), y.row_mut(0));
+            if s.xbuf.rows == 1 {
+                packed.gemv_into(s.xbuf.row(0), y.row_mut(0));
             } else {
-                // spawning workers is only worth it for real prefill panels
-                let threads = if xr.rows >= 16 { 0 } else { 1 };
-                // per-thread scratch: prefill reuses the panel/staging
-                // buffers instead of reallocating them every linear
-                thread_local! {
-                    static SCRATCH: std::cell::RefCell<GemmScratch> =
-                        std::cell::RefCell::new(GemmScratch::new());
-                }
-                SCRATCH.with(|s| {
-                    packed.gemm_into(&xr, &mut y, threads, &mut s.borrow_mut())
-                });
+                packed.gemm_into(&s.xbuf, y, threads, &mut s.gemm);
             }
         } else {
             let wt = self
                 .wt_deq
                 .as_ref()
                 .expect("QLinear without the integer backend must keep wt_deq");
-            matmul_into(&xr.data, &wt.data, &mut y.data, xr.rows, xr.cols, wt.cols);
+            matmul_into(
+                &s.xbuf.data,
+                &wt.data,
+                &mut y.data,
+                s.xbuf.rows,
+                s.xbuf.cols,
+                wt.cols,
+            );
         }
-        y
     }
 
     /// Logical payload this site ships: the coded bytes for nested
@@ -389,6 +446,68 @@ pub struct QLayer {
     /// KV-cache lane codec for this layer (per-site policy) — shared by
     /// the eval roundtrips and the paged pool's coded storage
     pub kv: KvLaneCodec,
+}
+
+/// Reusable panels and staging buffers for
+/// [`Engine::forward_step_fused`] — sized lazily on first use,
+/// allocation-free on every later step whose batch is no larger than
+/// the high-water mark.
+pub struct StepScratch {
+    /// (n, d) residual stream
+    x: Mat,
+    /// (n, d) rmsnorm output
+    normed: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    /// (n, d) per-head attention output (rotated basis)
+    att: Mat,
+    /// (n, d) wo / w_down projection output
+    proj: Mat,
+    /// (n, d_ff) MLP mid panel
+    hmid: Mat,
+    /// per-head staging for the KV append (rotated basis)
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    qh: Vec<f32>,
+    /// attention scores (capacity pinned to ctx on first use)
+    scores: Vec<f32>,
+    /// shared scratch for every linear in the step
+    lin: LinScratch,
+}
+
+impl StepScratch {
+    pub fn new() -> Self {
+        StepScratch {
+            x: Mat::zeros(0, 0),
+            normed: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            k: Mat::zeros(0, 0),
+            v: Mat::zeros(0, 0),
+            att: Mat::zeros(0, 0),
+            proj: Mat::zeros(0, 0),
+            hmid: Mat::zeros(0, 0),
+            kh: Vec::new(),
+            vh: Vec::new(),
+            qh: Vec::new(),
+            scores: Vec::new(),
+            lin: LinScratch::new(),
+        }
+    }
+}
+
+impl Default for StepScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Resize a scratch `Mat` to (rows, cols) of zeros, reusing capacity.
+fn reshape(m: &mut Mat, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    m.data.clear();
+    m.data.resize(rows * cols, 0.0);
 }
 
 /// The quantized model + evaluation entry points.
@@ -1271,6 +1390,122 @@ impl Engine {
         self.head.forward(&normed)
     }
 
+    /// One fused decode step over `n` live sessions: gather every
+    /// session's current token into one (n, d) activation panel, run
+    /// each linear once over the whole panel (the packed integer GEMM at
+    /// n>1, the GEMV at n=1), score attention per session against its
+    /// own coded cache, and leave the next-token logits for session `s`
+    /// in `logits.row(s)`.
+    ///
+    /// Bitwise-identical to stepping each session alone (the propcheck
+    /// harness in `coordinator::generator` pins this): every fused op is
+    /// row-independent — `gemm_into` is decode-for-decode identical to
+    /// `gemv_into` (proven in `quant::gemm`), the fp fallback matmul,
+    /// rotations, rmsnorm and the activation fake-quant all work row by
+    /// row, and attention touches only the session's own cache.
+    ///
+    /// Allocation-free after warmup away from page boundaries: all
+    /// staging lives in `scratch`/`logits` and the caches code each
+    /// append through their own reusable buffers (`kvpool`). Page
+    /// boundary events (fresh page claims, prefix-index publication)
+    /// still allocate.
+    pub fn forward_step_fused(
+        &self,
+        tokens: &[i32],
+        positions: &[usize],
+        caches: &mut [&mut SessionKv],
+        scratch: &mut StepScratch,
+        logits: &mut Mat,
+    ) {
+        let n = tokens.len();
+        assert_eq!(positions.len(), n, "one position per token");
+        assert_eq!(caches.len(), n, "one cache per token");
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let dh = cfg.d_head();
+        logits.rows = n;
+        logits.cols = cfg.vocab;
+        logits.data.clear();
+        logits.data.resize(n * cfg.vocab, 0.0);
+        if n == 0 {
+            return;
+        }
+        for &p in positions {
+            assert!(p < cfg.ctx, "context overflow");
+        }
+        scratch.kh.clear();
+        scratch.kh.resize(dh, 0.0);
+        scratch.vh.clear();
+        scratch.vh.resize(dh, 0.0);
+        scratch.qh.clear();
+        scratch.qh.resize(dh, 0.0);
+        // pin score capacity to the context length once so the per-head
+        // score fills never reallocate mid-decode
+        scratch.scores.clear();
+        scratch.scores.reserve(cfg.ctx);
+
+        embed_into(&self.tok_emb, &self.pos_emb, tokens, positions, &mut scratch.x);
+        for (li, l) in self.layers.iter().enumerate() {
+            rmsnorm_rows(&scratch.x, &l.ln1, &mut scratch.normed);
+            l.wq.forward_into(&scratch.normed, &mut scratch.q, &mut scratch.lin, 1);
+            l.wk.forward_into(&scratch.normed, &mut scratch.k, &mut scratch.lin, 1);
+            l.wv.forward_into(&scratch.normed, &mut scratch.v, &mut scratch.lin, 1);
+            reshape(&mut scratch.att, n, d);
+            for (s, cache) in caches.iter_mut().enumerate() {
+                for h in 0..cfg.n_head {
+                    scratch
+                        .kh
+                        .copy_from_slice(&scratch.k.row(s)[h * dh..(h + 1) * dh]);
+                    scratch
+                        .vh
+                        .copy_from_slice(&scratch.v.row(s)[h * dh..(h + 1) * dh]);
+                    scratch
+                        .qh
+                        .copy_from_slice(&scratch.q.row(s)[h * dh..(h + 1) * dh]);
+                    if let Some(r) = &l.head_rot {
+                        r.apply(&mut scratch.kh);
+                        r.apply(&mut scratch.vh);
+                        r.apply(&mut scratch.qh);
+                    }
+                    cache.append(li, h, &scratch.kh, &scratch.vh);
+                    cache.scores(li, h, &scratch.qh, &mut scratch.scores);
+                    let scale = 1.0 / (dh as f32).sqrt();
+                    for v in scratch.scores.iter_mut() {
+                        *v *= scale;
+                    }
+                    softmax_inplace(&mut scratch.scores);
+                    let oh = &mut scratch.att.row_mut(s)[h * dh..(h + 1) * dh];
+                    cache.weighted_value_sum(li, h, &scratch.scores, oh);
+                    if let Some(r) = &l.head_rot {
+                        r.apply_t(oh);
+                    }
+                }
+            }
+            l.wo.forward_into(&scratch.att, &mut scratch.proj, &mut scratch.lin, 1);
+            for (xv, &pv) in scratch.x.data.iter_mut().zip(scratch.proj.data.iter()) {
+                *xv += pv;
+            }
+            rmsnorm_rows(&scratch.x, &l.ln2, &mut scratch.normed);
+            l.w_up
+                .forward_into(&scratch.normed, &mut scratch.hmid, &mut scratch.lin, 1);
+            for v in scratch.hmid.data.iter_mut() {
+                *v = gelu(*v);
+            }
+            l.w_down
+                .forward_into(&scratch.hmid, &mut scratch.proj, &mut scratch.lin, 1);
+            for (xv, &pv) in scratch.x.data.iter_mut().zip(scratch.proj.data.iter()) {
+                *xv += pv;
+            }
+        }
+        // positions are complete on every (layer, head) lane: publish
+        // them (freezes + registers pages at page boundaries)
+        for (cache, &t) in caches.iter_mut().zip(tokens.iter()) {
+            cache.note_token(t);
+        }
+        rmsnorm_rows(&scratch.x, &self.final_norm, &mut scratch.normed);
+        self.head.forward_into(&scratch.normed, logits, &mut scratch.lin, 1);
+    }
+
     /// Perplexity over non-overlapping windows.
     pub fn eval_ppl(&self, tokens: &[i32], max_windows: usize) -> f64 {
         let win = self.cfg.ctx;
@@ -1332,6 +1567,62 @@ mod tests {
                 a.data[i],
                 b.data[i]
             );
+        }
+    }
+
+    #[test]
+    fn forward_into_matches_forward_with_dirty_scratch() {
+        // one LinScratch serving sites of different widths back to back
+        // (the fused-step usage) must reproduce `forward` bit for bit on
+        // the GEMV (rows=1), small-GEMM and threaded-GEMM paths, for
+        // packed, fp and act-quantized sites alike
+        let cfg = crate::model::ModelConfig {
+            vocab: 48,
+            ctx: 96,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 64,
+        };
+        let w = ModelWeights::synthetic(cfg, 0x51EF);
+        for (method, regime) in [
+            (Method::NestQuantM, Regime::WKvA),
+            (Method::Rtn, Regime::WKvA),
+            (Method::NestQuantM, Regime::W),
+        ] {
+            let eng = Engine::build(
+                &w,
+                EngineOptions {
+                    method,
+                    regime,
+                    calib_windows: 1,
+                    ..Default::default()
+                },
+            );
+            let mut rng = Rng::new(0xF00D);
+            let mut s = LinScratch::new();
+            for rows in [1usize, 3, 17] {
+                for lin in [&eng.layers[0].wq, &eng.layers[1].w_down, &eng.head] {
+                    let x = Mat {
+                        rows,
+                        cols: lin.in_features,
+                        data: (0..rows * lin.in_features).map(|_| rng.f32() - 0.5).collect(),
+                    };
+                    let y_ref = lin.forward(&x);
+                    let mut y = Mat::zeros(0, 0);
+                    let threads = if rows >= 16 { 0 } else { 1 };
+                    lin.forward_into(&x, &mut y, &mut s, threads);
+                    assert_eq!((y.rows, y.cols), (rows, lin.out_features));
+                    for (i, (a, b)) in y.data.iter().zip(y_ref.data.iter()).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{:?} {regime:?} rows={rows} out {i}: {a} vs {b}",
+                            lin.site
+                        );
+                    }
+                }
+            }
         }
     }
 

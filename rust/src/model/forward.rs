@@ -16,6 +16,42 @@ pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Row-wise [`rmsnorm`] into a caller-owned output panel (resized in
+/// place — allocation-free once capacity is warm).
+pub fn rmsnorm_rows(x: &Mat, g: &[f32], out: &mut Mat) {
+    out.rows = x.rows;
+    out.cols = x.cols;
+    out.data.clear();
+    out.data.resize(x.rows * x.cols, 0.0);
+    for t in 0..x.rows {
+        rmsnorm(x.row(t), g, out.row_mut(t));
+    }
+}
+
+/// Gather one embedding row per (token, position) pair into an
+/// activation panel: `x[s] = tok_emb[tokens[s]] + pos_emb[positions[s]]`.
+/// Built on the GEMM panel gather so the fused decode step shares one
+/// panel-assembly entry point; allocation-free once `x` has capacity.
+pub fn embed_into(
+    tok_emb: &Mat,
+    pos_emb: &Mat,
+    tokens: &[i32],
+    positions: &[usize],
+    x: &mut Mat,
+) {
+    assert_eq!(tokens.len(), positions.len());
+    crate::quant::gemm::gather_panel(
+        tokens.iter().map(|&t| tok_emb.row(t as usize)),
+        tok_emb.cols,
+        x,
+    );
+    for (s, &p) in positions.iter().enumerate() {
+        for (xv, &pv) in x.row_mut(s).iter_mut().zip(pos_emb.row(p).iter()) {
+            *xv += pv;
+        }
+    }
+}
+
 /// GELU, tanh approximation (identical constants to the JAX side).
 #[inline]
 pub fn gelu(x: f32) -> f32 {

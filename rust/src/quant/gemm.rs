@@ -36,19 +36,58 @@ use crate::util::linalg::Mat;
 /// in registers.
 pub const PANEL: usize = 16;
 
-/// Reusable buffers for [`gemm_driver`]: the packed activation panels and
-/// the (rows, batch) staging output. Hold one per call site to make the
-/// steady state allocation-free.
+/// Reusable buffers for [`gemm_driver`]: the packed activation panels,
+/// the (rows, batch) staging output, and the single-threaded decode-row
+/// buffers. Hold one per call site to make the steady state
+/// allocation-free — the fused decode loop relies on this (worker
+/// threads still use their own per-scope decode buffers).
 #[derive(Default)]
 pub struct GemmScratch {
     pub(crate) xp: Vec<f32>,
     pub(crate) ytmp: Vec<f32>,
+    pub(crate) ebuf: Vec<i16>,
+    pub(crate) bscale: Vec<f32>,
 }
 
 impl GemmScratch {
     pub fn new() -> Self {
         GemmScratch::default()
     }
+}
+
+/// Gather scattered per-session rows into one contiguous (n, cols)
+/// activation panel — the fused-decode entry point that turns N live
+/// sessions' current activations into a single GEMM batch. `dst` is
+/// resized without reallocating once warm; `rows` yields one `cols`-long
+/// slice per session.
+pub fn gather_panel<'a, I>(rows: I, cols: usize, dst: &mut Mat)
+where
+    I: ExactSizeIterator<Item = &'a [f32]>,
+{
+    dst.rows = rows.len();
+    dst.cols = cols;
+    dst.data.clear();
+    for row in rows {
+        assert_eq!(row.len(), cols, "panel row width mismatch");
+        dst.data.extend_from_slice(row);
+    }
+}
+
+/// Scatter a (n, cols) result panel back to per-session buffers — the
+/// inverse of [`gather_panel`], used to hand each live session its own
+/// logits row after the fused step. Destination slices must already have
+/// the panel width.
+pub fn scatter_panel<'a, I>(src: &Mat, dsts: I)
+where
+    I: Iterator<Item = &'a mut [f32]>,
+{
+    let mut n = 0usize;
+    for (r, dst) in dsts.enumerate() {
+        assert_eq!(dst.len(), src.cols, "scatter row width mismatch");
+        dst.copy_from_slice(src.row(r));
+        n = r + 1;
+    }
+    assert_eq!(n, src.rows, "scatter row count mismatch");
 }
 
 /// Repack `xt` (batch, cols) into `[panel][block j][lane i][col c]` order
@@ -177,9 +216,32 @@ pub(crate) fn gemm_driver<F>(
     pack_panels(xt, &mut scratch.xp);
     scratch.ytmp.clear();
     scratch.ytmp.resize(rows * batch, 0.0);
-    let GemmScratch { xp, ytmp } = scratch;
+    let GemmScratch { xp, ytmp, ebuf, bscale } = scratch;
     let xp: &[f32] = xp.as_slice();
     let bpr = cols / D;
+
+    if threads == 1 {
+        // Allocation-free fast path (after warmup): the decode-row
+        // buffers live in the scratch and no range vector is built —
+        // this is the fused decode scheduler's hot loop.
+        ebuf.clear();
+        ebuf.resize(cols, 0);
+        bscale.clear();
+        bscale.resize(bpr, 0.0);
+        for r in 0..rows {
+            let row_scale = decode_row(r, ebuf, bscale);
+            row_times_panels(
+                ebuf,
+                bscale,
+                xp,
+                batch,
+                row_scale,
+                &mut ytmp[r * batch..(r + 1) * batch],
+            );
+        }
+        transpose_into(ytmp, rows, batch, yt);
+        return;
+    }
 
     let run = |range: std::ops::Range<usize>, out: &mut [f32]| {
         let mut ebuf = vec![0i16; cols];
@@ -283,6 +345,26 @@ mod tests {
                 assert_eq!(dst[(c, r)], src[r * batch + c]);
             }
         }
+    }
+
+    #[test]
+    fn gather_scatter_panel_roundtrip() {
+        let mut rng = Rng::new(2204);
+        let cols = 6;
+        let srcs: Vec<Vec<f32>> = (0..3).map(|_| rng.gauss_vec(cols)).collect();
+        let mut panel = Mat::zeros(0, 0);
+        gather_panel(srcs.iter().map(|v| v.as_slice()), cols, &mut panel);
+        assert_eq!((panel.rows, panel.cols), (3, cols));
+        for (r, src) in srcs.iter().enumerate() {
+            assert_eq!(panel.row(r), src.as_slice());
+        }
+        let mut outs: Vec<Vec<f32>> = (0..3).map(|_| vec![0f32; cols]).collect();
+        scatter_panel(&panel, outs.iter_mut().map(|v| v.as_mut_slice()));
+        assert_eq!(outs, srcs);
+        // re-gathering a smaller batch shrinks the panel without stale rows
+        gather_panel(srcs[..1].iter().map(|v| v.as_slice()), cols, &mut panel);
+        assert_eq!((panel.rows, panel.cols), (1, cols));
+        assert_eq!(panel.data.len(), cols);
     }
 
     #[test]

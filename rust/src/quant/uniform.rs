@@ -26,17 +26,28 @@ impl UniformQuantizer {
 
     /// Quantize a vector: L∞ scale + round-to-nearest. Returns (codes, Δ).
     pub fn quantize(&self, x: &[f32]) -> (Vec<i8>, f32) {
+        let mut codes = Vec::new();
+        let delta = self.quantize_into(x, &mut codes);
+        (codes, delta)
+    }
+
+    /// [`Self::quantize`] into a caller-owned code buffer (cleared and
+    /// refilled, capacity reused) — the paged-KV append path must not pay
+    /// a per-token allocation. Returns Δ.
+    pub fn quantize_into(&self, x: &[f32], codes: &mut Vec<i8>) -> f32 {
+        codes.clear();
         let maxabs = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
         if maxabs == 0.0 {
-            return (vec![0i8; x.len()], 0.0);
+            codes.resize(x.len(), 0);
+            return 0.0;
         }
         let l = self.levels();
         let delta = maxabs / l as f32;
-        let codes = x
-            .iter()
-            .map(|&v| ((v / delta).round() as i32).clamp(-l, l - 1) as i8)
-            .collect();
-        (codes, delta)
+        codes.extend(
+            x.iter()
+                .map(|&v| ((v / delta).round() as i32).clamp(-l, l - 1) as i8),
+        );
+        delta
     }
 
     pub fn dequantize(&self, codes: &[i8], delta: f32) -> Vec<f32> {
@@ -182,6 +193,24 @@ mod tests {
             // no +2^{R-1} level — the clamp costs one extra half-step).
             assert!((a - b).abs() <= delta + 1e-6);
         }
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_and_reuses_capacity() {
+        let mut rng = Rng::new(1009);
+        let uq = UniformQuantizer::new(4);
+        let mut buf = Vec::new();
+        for n in [16usize, 64, 16] {
+            let x = rng.gauss_vec(n);
+            let (codes, delta) = uq.quantize(&x);
+            let d2 = uq.quantize_into(&x, &mut buf);
+            assert_eq!(buf, codes);
+            assert_eq!(d2.to_bits(), delta.to_bits());
+        }
+        let cap = buf.capacity();
+        let x = rng.gauss_vec(32);
+        uq.quantize_into(&x, &mut buf);
+        assert_eq!(buf.capacity(), cap, "shrinking input must not reallocate");
     }
 
     #[test]

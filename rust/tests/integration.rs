@@ -299,6 +299,107 @@ fn kv_decode_hot_paths_are_allocation_free_for_every_lane_codec() {
 }
 
 #[test]
+fn fused_decode_hot_loop_is_allocation_free_for_every_lane_codec() {
+    // The fused scheduler's acceptance criterion: after a warm-up that
+    // sizes every scratch buffer (StepScratch mats, per-linear GEMM
+    // scratch, score buffer, token history, page 0 of each session),
+    // `Engine::forward_step_fused` over a 3-session batch must perform
+    // zero heap allocations per token — for all three KV lane codecs.
+    // The measured steps stay inside one 16-token page, since crossing a
+    // page boundary legitimately claims a fresh page.
+    use nestquant::kvpool::{KvLaneCodec, PoolConfig, SessionKv};
+    use nestquant::model::engine::StepScratch;
+    use nestquant::util::linalg::Mat;
+    let cfg = nestquant::model::ModelConfig {
+        vocab: 48,
+        ctx: 64,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+    };
+    let w = ModelWeights::synthetic(cfg, 0xA110C2);
+    let cases = [
+        (
+            "fp32",
+            EngineOptions {
+                method: Method::NestQuantM,
+                regime: Regime::W,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        ),
+        (
+            "uniform",
+            EngineOptions {
+                method: Method::UniformRot,
+                regime: Regime::WKv,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        ),
+        (
+            "nested",
+            EngineOptions {
+                method: Method::NestQuantM,
+                regime: Regime::WKv,
+                calib_windows: 1,
+                ..Default::default()
+            },
+        ),
+    ];
+    for (name, opts) in cases {
+        let eng = Engine::build(&w, opts);
+        match name {
+            "fp32" => assert!(matches!(eng.layers[0].kv, KvLaneCodec::Fp32)),
+            "uniform" => assert!(matches!(eng.layers[0].kv, KvLaneCodec::Uniform(_))),
+            _ => assert!(matches!(eng.layers[0].kv, KvLaneCodec::Nested { .. })),
+        }
+        let pool = eng.kv_pool(PoolConfig::default()); // 16-token pages
+        let mut s0 = SessionKv::new(pool.clone());
+        let mut s1 = SessionKv::new(pool.clone());
+        let mut s2 = SessionKv::new(pool);
+        for s in [&mut s0, &mut s1, &mut s2] {
+            s.reserve_tokens(cfg.ctx);
+        }
+        let mut caches: Vec<&mut SessionKv> = vec![&mut s0, &mut s1, &mut s2];
+        let mut scratch = StepScratch::new();
+        let mut logits = Mat::zeros(0, 0);
+        let mut tokens = [0i32; 3];
+        let mut positions = [0usize; 3];
+        // warm-up: sizes every scratch buffer, claims page 0 per session
+        for it in 0..6usize {
+            for (s, t) in tokens.iter_mut().enumerate() {
+                *t = ((it * 7 + s * 3 + 1) % 48) as i32;
+            }
+            eng.forward_step_fused(&tokens, &positions, &mut caches, &mut scratch, &mut logits);
+            for p in positions.iter_mut() {
+                *p += 1;
+            }
+        }
+        let before = alloc_counter::thread_allocs();
+        for it in 6..14usize {
+            for (s, t) in tokens.iter_mut().enumerate() {
+                *t = ((it * 5 + s * 2 + 3) % 48) as i32;
+            }
+            eng.forward_step_fused(&tokens, &positions, &mut caches, &mut scratch, &mut logits);
+            for p in positions.iter_mut() {
+                *p += 1;
+            }
+        }
+        let after = alloc_counter::thread_allocs();
+        assert_eq!(logits.rows, 3);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        assert_eq!(
+            after,
+            before,
+            "{name}: fused decode hot loop allocated {} time(s)",
+            after - before
+        );
+    }
+}
+
+#[test]
 fn mixed_kv_plan_eval_and_serve_are_consistent() {
     // Acceptance criterion: a plan mixing Fp32, Uniform and Nested KV
     // layers runs end-to-end through the (now total) paged pool, and
