@@ -8,15 +8,18 @@
 #   make bench-serve  multi-session serving sweep only -> BENCH_serve.json
 #   make bench-plan   mixed-precision QuantPlan sweep only -> BENCH_plan.json
 #   make bench-kvmix  heterogeneous KV-lane sweep only -> BENCH_kvmix.json
-#   make ci           fmt-check + clippy + build + test + the kvmix and
-#                     serve smoke benches (what a CI job runs)
+#   make soak-faults  fault-injection soak: the deterministic fail-point
+#                     scenarios (kvpool alloc, codec decode, prefill,
+#                     fused step, worker respawn)
+#   make ci           fmt-check + clippy + build + test + soak-faults +
+#                     the kvmix and serve smoke benches (what a CI job runs)
 #   make clean        remove build artifacts
 #
 # The python layer (training + AOT lowering, `make artifacts`) is only
 # needed for the artifact-gated integration tests; the rust suite skips
 # those gracefully when artifacts/ is absent.
 
-.PHONY: build test clippy bench bench-serve bench-plan bench-kvmix fmt-check ci artifacts clean
+.PHONY: build test clippy bench bench-serve bench-plan bench-kvmix soak-faults fmt-check ci artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -30,10 +33,17 @@ clippy:
 fmt-check:
 	cd rust && cargo fmt --check
 
+# fault-injection soak: every test exercising the deterministic
+# fail-point sites ("fault"/"failpoint" in the name). Debug build so the
+# sites are compiled in (they vanish from release unless the
+# `failpoints` feature is on).
+soak-faults:
+	cd rust && cargo test -q fault && cargo test -q failpoint
+
 # bench-kvmix and bench-serve double as the CI smoke runs of the
 # mixed-lane serving path and the fused decode-batch scheduler
 # (seconds each on the synthetic model)
-ci: fmt-check clippy build test bench-kvmix bench-serve
+ci: fmt-check clippy build test soak-faults bench-kvmix bench-serve
 
 # no pipefail in POSIX sh: redirect, propagate the bench exit status,
 # then show the log — a crashed bench must not leave a "fresh" log

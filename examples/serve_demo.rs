@@ -48,24 +48,41 @@ fn main() -> Result<()> {
             id: i as u64,
             prompt: w.val_tokens[start..start + 16].to_vec(),
             n_new: 32,
-        });
+        })?;
         // also interleave scoring traffic
         if i % 3 == 0 {
             srv.submit(Request::Score {
                 id: 1000 + i as u64,
                 window: w.val_tokens[start..start + w.cfg.ctx + 1].to_vec(),
-            });
+            })?;
         }
     }
-    let total = n_req + n_req.div_ceil(3);
+    // a deliberately malformed request: a one-token score window has no
+    // (context, target) pair. It is rejected with a typed error on its
+    // Response — the server keeps serving everyone else.
+    srv.submit(Request::Score {
+        id: 9999,
+        window: w.val_tokens[..1].to_vec(),
+    })?;
+    let total = n_req + n_req.div_ceil(3) + 1;
     let mut nlls = Vec::new();
+    let mut rejected = 0;
     for _ in 0..total {
         let r = rx.recv()?;
+        if let Some(e) = &r.error {
+            println!("request {} rejected: {e}", r.id);
+            rejected += 1;
+            continue;
+        }
         if let Some(nll) = r.nll {
             nlls.push(nll);
         }
     }
-    println!("completed {total} requests in {:.2}s", t0.elapsed().as_secs_f64());
+    println!(
+        "completed {} requests in {:.2}s ({rejected} rejected up front)",
+        total - rejected,
+        t0.elapsed().as_secs_f64()
+    );
     println!("{}", srv.metrics.report());
     if let Some(p) = srv.metrics.pool_stats() {
         println!(
@@ -79,6 +96,9 @@ fn main() -> Result<()> {
         let mean = nlls.iter().sum::<f64>() / nlls.len() as f64;
         println!("scored windows: mean nll {mean:.4} (ppl {:.3})", mean.exp());
     }
-    srv.shutdown();
+    let report = srv.shutdown();
+    if !report.drained {
+        println!("shutdown timed out: {} request(s) undrained", report.undrained);
+    }
     Ok(())
 }

@@ -440,7 +440,8 @@ fn serve_benches() {
                         id: id as u64,
                         prompt: p.clone(),
                         n_new: n_new_fused,
-                    });
+                    })
+                    .expect("submit");
                 }
                 let mut submitted = first;
                 let mut finals = 0usize;
@@ -455,7 +456,8 @@ fn serve_benches() {
                             id: submitted as u64,
                             prompt: prompts[submitted].clone(),
                             n_new: n_new_fused,
-                        });
+                        })
+                        .expect("submit");
                         submitted += 1;
                     }
                 }

@@ -76,6 +76,7 @@ impl<T> Batcher<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;

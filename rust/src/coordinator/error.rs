@@ -1,0 +1,55 @@
+//! Typed serving errors carried on `Response` and returned by
+//! `Server::submit` — failures become per-request answers instead of
+//! silent channel drops or worker panics.
+
+use std::fmt;
+
+/// Why a request was rejected, expired, or failed mid-flight.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request could never be served (bad window, out-of-vocab token,
+    /// prompt + n_new past the model context, ...). Rejected at admission.
+    InvalidRequest(String),
+    /// The request's deadline passed — either while queued (shed before
+    /// admission, no tokens) or mid-generation (partial tokens attached).
+    DeadlineExceeded,
+    /// The server's admission queue is full; retry later.
+    Capacity(String),
+    /// A fault inside the serving stack poisoned this request's session.
+    /// Other sessions are unaffected; partial tokens are attached when any
+    /// were generated before the fault.
+    Internal(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServeError::Capacity(msg) => write!(f, "over capacity: {msg}"),
+            ServeError::Internal(msg) => write!(f, "internal serving fault: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_friendly_and_error_trait_object_safe() {
+        let e: Box<dyn std::error::Error> = Box::new(ServeError::InvalidRequest("empty prompt".into()));
+        assert_eq!(e.to_string(), "invalid request: empty prompt");
+        assert_eq!(ServeError::DeadlineExceeded.to_string(), "deadline exceeded");
+        assert_eq!(
+            ServeError::Capacity("queue full (4)".into()).to_string(),
+            "over capacity: queue full (4)"
+        );
+        assert_eq!(
+            ServeError::Internal("worker restarted".into()).to_string(),
+            "internal serving fault: worker restarted"
+        );
+    }
+}

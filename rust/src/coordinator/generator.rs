@@ -175,6 +175,9 @@ impl<'a> GenSession<'a> {
     /// after the last prompt token (zeros for an empty prompt).
     pub fn prefill(&mut self, prompt: &[i32]) -> Vec<f32> {
         assert_eq!(self.pos, 0, "prefill on a fresh session only");
+        // before any page is claimed: a contained fault at admission
+        // tears down a session that owns nothing yet
+        crate::fail_point!("engine/prefill");
         let matched = self.cache.match_prefix(prompt);
         self.pos = matched;
         let mut logits = vec![0f32; self.eng.cfg.vocab];
@@ -247,6 +250,7 @@ impl<'a> GenSession<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::engine::{EngineOptions, Method, Regime};

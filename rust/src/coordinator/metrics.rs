@@ -30,6 +30,16 @@ struct Inner {
     weight_sites: Vec<(String, usize)>,
     /// how many of those sites carry a quantized payload
     weight_sites_quantized: usize,
+    /// requests rejected at admission (invalid or over capacity)
+    rejected: u64,
+    /// requests shed or expired past their deadline
+    expired: u64,
+    /// panics caught at a session boundary (score/prefill/step/probe)
+    session_panics: u64,
+    /// uncontained worker faults the supervisor respawned from
+    respawns: u64,
+    /// result of the pool's idle leak audit at worker exit
+    pool_idle: Option<Result<(), String>>,
 }
 
 /// Thread-safe metrics sink.
@@ -43,15 +53,23 @@ impl Metrics {
         Self::default()
     }
 
+    /// Metrics survive panics elsewhere: a recorder that unwound while
+    /// holding the lock cannot tear the counters (each is a plain
+    /// scalar write), so poisoned locks are recovered rather than
+    /// propagated.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn record_request(&self, latency: Duration, tokens: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.latencies_ms.push(latency.as_secs_f64() * 1e3);
         g.tokens_out += tokens as u64;
         g.requests += 1;
     }
 
     pub fn record_batch(&self, size: usize, capacity: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.batches += 1;
         g.batch_slots += size as u64;
         let _ = capacity;
@@ -61,18 +79,18 @@ impl Metrics {
     /// scoring alike) — the counter the fused scheduler feeds instead of
     /// dropping its tally on the floor.
     pub fn record_tokens(&self, n: usize) {
-        self.inner.lock().unwrap().tokens_processed += n as u64;
+        self.lock().tokens_processed += n as u64;
     }
 
     pub fn tokens_processed(&self) -> u64 {
-        self.inner.lock().unwrap().tokens_processed
+        self.lock().tokens_processed
     }
 
     /// One fused decode step over `batch` live sessions (each step
     /// emits one token per session, so the step also counts as a batch
     /// for occupancy).
     pub fn record_decode_step(&self, batch: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.batches += 1;
         g.batch_slots += batch as u64;
         g.decode_steps += 1;
@@ -82,26 +100,78 @@ impl Metrics {
     /// (fused decode steps, tokens they produced) — occupancy of the
     /// fused loop is their ratio.
     pub fn decode_stats(&self) -> (u64, u64) {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         (g.decode_steps, g.decode_tokens)
     }
 
     /// A session was swapped out under pool-byte pressure (its pages
     /// released, its request requeued).
     pub fn record_preemption(&self) {
-        self.inner.lock().unwrap().preemptions += 1;
+        self.lock().preemptions += 1;
     }
 
     pub fn preemptions(&self) -> u64 {
-        self.inner.lock().unwrap().preemptions
+        self.lock().preemptions
+    }
+
+    /// A request was rejected at admission (invalid, or over capacity).
+    pub fn record_rejected(&self) {
+        self.lock().rejected += 1;
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.lock().rejected
+    }
+
+    /// A request passed its deadline (shed while queued, or expired
+    /// mid-generation with partial output).
+    pub fn record_expired(&self) {
+        self.lock().expired += 1;
+    }
+
+    pub fn expired(&self) -> u64 {
+        self.lock().expired
+    }
+
+    /// A panic was caught at a session boundary (scoring, prefill, the
+    /// fused step, or a recovery probe).
+    pub fn record_session_panic(&self) {
+        self.lock().session_panics += 1;
+    }
+
+    pub fn session_panics(&self) -> u64 {
+        self.lock().session_panics
+    }
+
+    /// The supervision loop respawned the worker after an uncontained
+    /// fault.
+    pub fn record_respawn(&self) {
+        self.lock().respawns += 1;
+    }
+
+    pub fn respawns(&self) -> u64 {
+        self.lock().respawns
+    }
+
+    /// Store the pool's idle leak audit (`KvPool::verify_idle`),
+    /// recorded when a worker drains cleanly.
+    pub fn record_pool_idle(&self, r: Result<(), String>) {
+        self.lock().pool_idle = Some(r);
+    }
+
+    /// `Some(Ok(()))` once a drained worker verified the pool returned
+    /// to idle (only prefix-cache pages, each holding exactly its index
+    /// reference); `Some(Err(msg))` describes a leak.
+    pub fn pool_idle(&self) -> Option<Result<(), String>> {
+        self.lock().pool_idle.clone()
     }
 
     pub fn record_wall(&self, wall: Duration) {
-        self.inner.lock().unwrap().wall_ms += wall.as_secs_f64() * 1e3;
+        self.lock().wall_ms += wall.as_secs_f64() * 1e3;
     }
 
     pub fn record_kv_bytes(&self, bytes: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.kv_bytes = g.kv_bytes.max(bytes);
     }
 
@@ -109,19 +179,19 @@ impl Metrics {
     /// hits/misses, evictions). Counters inside the snapshot are
     /// cumulative pool-side; the gauge is replaced, not accumulated.
     pub fn record_pool(&self, stats: PoolStats) {
-        self.inner.lock().unwrap().pool = Some(stats);
+        self.lock().pool = Some(stats);
     }
 
     /// Latest paged-pool snapshot, if a pooled engine is serving.
     pub fn pool_stats(&self) -> Option<PoolStats> {
-        self.inner.lock().unwrap().pool
+        self.lock().pool
     }
 
     /// Record the serving engine's per-site weight payload accounting
     /// (`Engine::site_payloads`): one (site label, bytes) gauge per
     /// quantized tensor. Replaced, not accumulated.
     pub fn record_weight_sites(&self, sites: &[SitePayload]) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.weight_sites = sites.iter().map(|s| (s.site.label(), s.bytes)).collect();
         g.weight_sites_quantized = sites.iter().filter(|s| s.quantized).count();
     }
@@ -129,11 +199,11 @@ impl Metrics {
     /// Per-site weight payload gauges (label, bytes); empty until an
     /// engine has been recorded.
     pub fn weight_sites(&self) -> Vec<(String, usize)> {
-        self.inner.lock().unwrap().weight_sites.clone()
+        self.lock().weight_sites.clone()
     }
 
     pub fn report(&self) -> String {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let mut lat = g.latencies_ms.clone();
         let (p50, p95) = if lat.is_empty() {
             (0.0, 0.0)
@@ -164,15 +234,24 @@ impl Metrics {
             occupancy,
             g.kv_bytes as f64 / 1024.0
         );
-        if g.tokens_processed > 0 || g.decode_steps > 0 || g.preemptions > 0 {
+        let faults = g.rejected + g.expired + g.session_panics + g.respawns;
+        if g.tokens_processed > 0 || g.decode_steps > 0 || g.preemptions > 0 || faults > 0 {
             let mean_decode = if g.decode_steps > 0 {
                 g.decode_tokens as f64 / g.decode_steps as f64
             } else {
                 0.0
             };
             s.push_str(&format!(
-                " | sched: processed={} decode_steps={} mean_decode_batch={:.2} preemptions={}",
-                g.tokens_processed, g.decode_steps, mean_decode, g.preemptions
+                " | sched: processed={} decode_steps={} mean_decode_batch={:.2} preemptions={} \
+                 rejected={} expired={} panics={} respawns={}",
+                g.tokens_processed,
+                g.decode_steps,
+                mean_decode,
+                g.preemptions,
+                g.rejected,
+                g.expired,
+                g.session_panics,
+                g.respawns
             ));
         }
         if let Some(p) = &g.pool {
@@ -192,6 +271,9 @@ impl Metrics {
                 p.budget_overruns
             ));
         }
+        if let Some(Err(msg)) = &g.pool_idle {
+            s.push_str(&format!(" | pool_leak: {msg}"));
+        }
         if !g.weight_sites.is_empty() {
             let total: usize = g.weight_sites.iter().map(|(_, b)| b).sum();
             s.push_str(&format!(
@@ -205,7 +287,7 @@ impl Metrics {
     }
 
     pub fn throughput_tok_s(&self) -> f64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         if g.wall_ms > 0.0 {
             g.tokens_out as f64 / (g.wall_ms / 1e3)
         } else {
@@ -215,6 +297,7 @@ impl Metrics {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -253,6 +336,33 @@ mod tests {
         );
         // decode steps also feed batch occupancy
         assert!(r.contains("mean_batch=2.00"), "{r}");
+    }
+
+    #[test]
+    fn fault_counters_surface_in_report() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("sched:"), "no gauges before a record");
+        m.record_rejected();
+        m.record_rejected();
+        m.record_expired();
+        m.record_session_panic();
+        m.record_respawn();
+        assert_eq!(m.rejected(), 2);
+        assert_eq!(m.expired(), 1);
+        assert_eq!(m.session_panics(), 1);
+        assert_eq!(m.respawns(), 1);
+        let r = m.report();
+        assert!(
+            r.contains("rejected=2 expired=1 panics=1 respawns=1"),
+            "{r}"
+        );
+        // the idle audit only surfaces on failure
+        assert_eq!(m.pool_idle(), None);
+        m.record_pool_idle(Ok(()));
+        assert!(!m.report().contains("pool_leak:"));
+        m.record_pool_idle(Err("2 pages unaccounted".into()));
+        assert_eq!(m.pool_idle(), Some(Err("2 pages unaccounted".into())));
+        assert!(m.report().contains("pool_leak: 2 pages unaccounted"), "{}", m.report());
     }
 
     #[test]

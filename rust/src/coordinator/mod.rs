@@ -11,13 +11,24 @@
 //! hit rate, evictions) flow through [`Metrics`]. Batched scoring goes
 //! through the PJRT HLO artifact (`runtime::ModelRunner`) — python
 //! never appears on the request path.
+//!
+//! Faults are contained per request: admission validates every
+//! [`Request`] against the model config, deadlines shed stale work, and
+//! panics inside prefill or the fused step tear down only the faulted
+//! session (pages verifiably released) while survivors continue
+//! bitwise-identical. Callers see a typed [`ServeError`] on the
+//! [`Response`], never a worker panic.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod batcher;
+pub mod error;
 pub mod generator;
 pub mod metrics;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use error::ServeError;
 pub use generator::GenSession;
 pub use metrics::Metrics;
-pub use server::{Request, Response, Server, ServerConfig};
+pub use server::{Request, Response, Server, ServerConfig, ShutdownReport};

@@ -10,19 +10,32 @@
 //! instead of overrunning the budget. Sessions with common prompt
 //! prefixes share coded pages through the pool's prefix index instead
 //! of re-quantizing them.
+//!
+//! Fault containment: requests are validated at admission and answered
+//! with a typed [`ServeError`] instead of panicking the worker;
+//! per-request deadlines shed queued work and expire mid-generation
+//! runs with partial output; panics inside scoring, prefill, or the
+//! fused step are caught at the session boundary — the poisoned
+//! session is torn down (its pages verifiably released), survivors are
+//! replayed bitwise-identically, and a supervision loop respawns the
+//! worker state after any uncontained fault so [`Server::submit`]
+//! never panics.
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::error::ServeError;
 use crate::coordinator::generator::{step_fused, GenSession};
 use crate::coordinator::metrics::Metrics;
 use crate::kvpool::PoolConfig;
 use crate::model::engine::{Engine, StepScratch};
+use crate::model::ModelConfig;
 use crate::quant::gemm::scatter_panel;
 use crate::util::linalg::Mat;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A serving request.
 pub enum Request {
@@ -42,6 +55,62 @@ impl Request {
             Request::Generate { id, .. } | Request::Score { id, .. } => *id,
         }
     }
+
+    /// Admission-time validation against the model shape. Anything that
+    /// could never be served — and in particular anything that would
+    /// previously have panicked the worker (an empty score window
+    /// underflowed `window[..len - 1]`) — is answered with
+    /// [`ServeError::InvalidRequest`] instead of entering the loop.
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<(), ServeError> {
+        let bad_token = |toks: &[i32]| {
+            toks.iter()
+                .find(|&&t| t < 0 || t as usize >= cfg.vocab)
+                .copied()
+        };
+        match self {
+            Request::Generate { prompt, n_new, .. } => {
+                if prompt.is_empty() {
+                    return Err(ServeError::InvalidRequest("empty prompt".into()));
+                }
+                if prompt.len() + n_new > cfg.ctx {
+                    return Err(ServeError::InvalidRequest(format!(
+                        "prompt ({}) + n_new ({}) exceeds model context ({})",
+                        prompt.len(),
+                        n_new,
+                        cfg.ctx
+                    )));
+                }
+                if let Some(t) = bad_token(prompt) {
+                    return Err(ServeError::InvalidRequest(format!(
+                        "prompt token {t} outside vocab (0..{})",
+                        cfg.vocab
+                    )));
+                }
+            }
+            Request::Score { window, .. } => {
+                if window.len() < 2 {
+                    return Err(ServeError::InvalidRequest(format!(
+                        "score window needs at least 2 tokens, got {}",
+                        window.len()
+                    )));
+                }
+                if window.len() - 1 > cfg.ctx {
+                    return Err(ServeError::InvalidRequest(format!(
+                        "score window ({} tokens) exceeds model context ({})",
+                        window.len(),
+                        cfg.ctx
+                    )));
+                }
+                if let Some(t) = bad_token(window) {
+                    return Err(ServeError::InvalidRequest(format!(
+                        "window token {t} outside vocab (0..{})",
+                        cfg.vocab
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[derive(Debug)]
@@ -55,6 +124,56 @@ pub struct Response {
     /// only when [`ServerConfig::stream`] is on, one generated token
     /// each)
     pub done: bool,
+    /// `None` on success. On failure this is the final answer for the
+    /// request: `tokens` carries whatever was generated before the
+    /// deadline/fault (possibly empty).
+    pub error: Option<ServeError>,
+}
+
+impl Response {
+    fn finished(id: u64, t0: Instant, tokens: Vec<i32>) -> Self {
+        Response {
+            id,
+            tokens,
+            nll: None,
+            latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+            done: true,
+            error: None,
+        }
+    }
+
+    fn scored(id: u64, t0: Instant, nll: f64) -> Self {
+        Response {
+            id,
+            tokens: Vec::new(),
+            nll: Some(nll),
+            latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+            done: true,
+            error: None,
+        }
+    }
+
+    fn token(id: u64, t0: Instant, t: i32) -> Self {
+        Response {
+            id,
+            tokens: vec![t],
+            nll: None,
+            latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+            done: false,
+            error: None,
+        }
+    }
+
+    fn failed(id: u64, t0: Instant, tokens: Vec<i32>, error: ServeError) -> Self {
+        Response {
+            id,
+            tokens,
+            nll: None,
+            latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+            done: true,
+            error: Some(error),
+        }
+    }
 }
 
 #[derive(Clone, Copy)]
@@ -70,6 +189,15 @@ pub struct ServerConfig {
     /// fused loop produces it (the final `done: true` response still
     /// carries the full stream)
     pub stream: bool,
+    /// default per-request deadline, applied by [`Server::submit`]
+    /// (override per request via [`Server::submit_with_deadline`]).
+    /// A request past its deadline is shed from the queue or expired
+    /// mid-generation with partial output + `DeadlineExceeded`.
+    pub deadline: Option<Duration>,
+    /// admission-queue bound: requests arriving while this many
+    /// `Generate`s wait are answered `ServeError::Capacity` immediately
+    /// instead of queueing without bound.
+    pub max_queue: Option<usize>,
 }
 
 impl ServerConfig {
@@ -87,14 +215,79 @@ impl Default for ServerConfig {
                 ..PoolConfig::default()
             },
             stream: false,
+            deadline: None,
+            max_queue: None,
+        }
+    }
+}
+
+/// What a bounded [`Server::shutdown`] observed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShutdownReport {
+    /// worker exited cleanly within the deadline
+    pub drained: bool,
+    /// requests admitted but still unanswered when the deadline hit
+    /// (0 when `drained`)
+    pub undrained: usize,
+}
+
+/// A submitted request travelling to the worker.
+struct Inbound {
+    req: Request,
+    t0: Instant,
+    deadline: Option<Instant>,
+}
+
+type Inflight = Arc<Mutex<HashMap<u64, Instant>>>;
+
+/// Response sender + the shared admitted-but-unanswered map. The map is
+/// what makes worker respawn lossless: after an uncontained fault the
+/// supervisor answers every orphaned request with a typed error instead
+/// of letting it hang on a dead channel.
+struct Responder {
+    tx: Sender<Response>,
+    inflight: Inflight,
+}
+
+impl Responder {
+    fn lock(&self) -> MutexGuard<'_, HashMap<u64, Instant>> {
+        // a panic while the map was held is already contained elsewhere;
+        // the map itself (u64 -> Instant) cannot be torn
+        self.inflight.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn admit(&self, id: u64, t0: Instant) {
+        self.lock().insert(id, t0);
+    }
+
+    fn finish(&self, r: Response) {
+        self.lock().remove(&r.id);
+        let _ = self.tx.send(r);
+    }
+
+    fn stream(&self, r: Response) {
+        let _ = self.tx.send(r);
+    }
+
+    fn fail_all_inflight(&self, msg: &str) {
+        let orphans: Vec<(u64, Instant)> = self.lock().drain().collect();
+        for (id, t0) in orphans {
+            let _ = self.tx.send(Response::failed(
+                id,
+                t0,
+                Vec::new(),
+                ServeError::Internal(msg.to_string()),
+            ));
         }
     }
 }
 
 /// Handle to a running server.
 pub struct Server {
-    tx: Option<Sender<(Request, Instant)>>,
+    tx: Option<Sender<Inbound>>,
     worker: Option<JoinHandle<()>>,
+    default_deadline: Option<Duration>,
+    inflight: Inflight,
     pub metrics: Arc<Metrics>,
 }
 
@@ -105,252 +298,125 @@ impl Server {
         engine: Arc<Engine>,
         cfg: ServerConfig,
     ) -> (Self, std::sync::mpsc::Receiver<Response>) {
-        let (tx, rx) = channel::<(Request, Instant)>();
+        let (tx, rx) = channel::<Inbound>();
         let (resp_tx, resp_rx) = channel::<Response>();
         let metrics = Arc::new(Metrics::new());
         let m = metrics.clone();
+        let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
+        let inflight_w = inflight.clone();
+        // fault-injection scope is per-thread (see util::failpoint); the
+        // worker inherits the spawner's membership so a test scenario
+        // reaches the serving loop but not unrelated concurrent tests
+        let fault_scope = crate::util::failpoint::participating();
 
         let worker = std::thread::spawn(move || {
-            // one shared paged pool for every session this worker runs:
-            // prefix reuse and the byte budget span the server's
-            // lifetime. The pool is total over plans — fp/uniform KV
-            // layers ride their own lanes — so every engine pools.
-            let pool = engine.kv_pool(cfg.pool);
-            // per-site weight payload gauges (mixed-precision plans show
-            // their per-tensor byte split here)
-            m.record_weight_sites(&engine.site_payloads());
+            crate::util::failpoint::join_scenario(fault_scope);
+            // the batcher (and its receiver) outlives worker respawns, so
+            // requests still queued in the channel survive a fault and are
+            // served by the respawned loop
             let batcher = Batcher::new(rx, cfg.policy);
-            let page_size = cfg.pool.page_size.max(1);
-            let max_live = cfg.policy.max_batch.max(1);
-
-            // a Generate request waiting for admission; `out` carries
-            // tokens already produced before a preemption, replayed on
-            // re-admission
-            struct Pending {
-                id: u64,
-                t0: Instant,
-                prompt: Vec<i32>,
-                n_new: usize,
-                out: Vec<i32>,
-            }
-            // a session inside the fused decode loop
-            struct Live<'a> {
-                id: u64,
-                t0: Instant,
-                // admission order — preemption swaps out the youngest
-                seq: u64,
-                sess: GenSession<'a>,
-                prompt: Vec<i32>,
-                n_new: usize,
-                out: Vec<i32>,
-                logits: Vec<f32>,
-            }
-
-            let mut queue: VecDeque<Pending> = VecDeque::new();
-            let mut live: Vec<Live> = Vec::new();
-            let mut inbox: Vec<(Request, Instant)> = Vec::new();
-            let mut open = true;
-            let mut next_seq = 0u64;
-            let mut scratch = StepScratch::new();
-            let mut panel = Mat::zeros(0, 0);
-
+            let out = Responder {
+                tx: resp_tx,
+                inflight: inflight_w,
+            };
+            // supervision: an uncontained panic anywhere in the loop tears
+            // down all worker state; orphaned requests get a typed error
+            // and the loop restarts with a fresh pool
             loop {
-                // ingest: block only when idle, otherwise take whatever
-                // has queued up since the last decode step
-                if open && live.is_empty() && queue.is_empty() {
-                    match batcher.recv() {
-                        Some(item) => inbox.push(item),
-                        None => open = false,
+                let run = catch_unwind(AssertUnwindSafe(|| {
+                    worker_loop(&engine, cfg, &batcher, &out, &m)
+                }));
+                match run {
+                    Ok(()) => break,
+                    Err(_) => {
+                        m.record_respawn();
+                        out.fail_all_inflight("serving worker restarted after a fault");
                     }
                 }
-                if open && !batcher.try_drain(&mut inbox) {
-                    open = false;
-                }
-                for (req, t0) in inbox.drain(..) {
-                    match req {
-                        Request::Generate { id, prompt, n_new } => {
-                            queue.push_back(Pending {
-                                id,
-                                t0,
-                                prompt,
-                                n_new,
-                                out: Vec::new(),
-                            });
-                        }
-                        Request::Score { id, window } => {
-                            // native scoring (the HLO path is exercised
-                            // by runtime::ModelRunner in examples/tests;
-                            // the in-process worker stays self-contained)
-                            let t_score = Instant::now();
-                            let logits = engine.forward_window(&window[..window.len() - 1]);
-                            let nll =
-                                crate::model::forward::window_nll(&logits, &window[1..]);
-                            m.record_tokens(window.len());
-                            m.record_request(t0.elapsed(), window.len());
-                            m.record_wall(t_score.elapsed());
-                            let _ = resp_tx.send(Response {
-                                id,
-                                tokens: Vec::new(),
-                                nll: Some(nll),
-                                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
-                                done: true,
-                            });
-                        }
-                    }
-                }
-                if !open && live.is_empty() && queue.is_empty() {
-                    break;
-                }
-
-                // token-level admission: a queued request joins the
-                // running loop between decode steps as soon as a slot is
-                // free and its pages fit (preemption keeps at least one
-                // session running, so an empty loop always admits)
-                while live.len() < max_live {
-                    let Some(front) = queue.front() else { break };
-                    let need = (front.prompt.len() + front.out.len()) / page_size + 1;
-                    if !live.is_empty() && pool.would_overrun(need) {
-                        break;
-                    }
-                    let p = queue.pop_front().unwrap();
-                    let t_adm = Instant::now();
-                    let mut sess = GenSession::new_in_pool(&engine, &pool);
-                    // requeued sessions replay prompt + prior output;
-                    // the prefix index serves whatever pages survived
-                    let replay: Vec<i32> =
-                        p.prompt.iter().chain(p.out.iter()).copied().collect();
-                    let logits = sess.prefill(&replay);
-                    m.record_tokens(replay.len());
-                    m.record_wall(t_adm.elapsed());
-                    live.push(Live {
-                        id: p.id,
-                        t0: p.t0,
-                        seq: next_seq,
-                        sess,
-                        prompt: p.prompt,
-                        n_new: p.n_new,
-                        out: p.out,
-                        logits,
-                    });
-                    next_seq += 1;
-                }
-
-                // completions (before the step so a request admitted
-                // with nothing left to generate answers immediately)
-                let mut i = 0;
-                while i < live.len() {
-                    let a = &live[i];
-                    if a.out.len() >= a.n_new || a.sess.position() >= engine.cfg.ctx {
-                        let a = live.swap_remove(i);
-                        m.record_kv_bytes(a.sess.kv_bytes());
-                        m.record_request(a.t0.elapsed(), a.out.len());
-                        let _ = resp_tx.send(Response {
-                            id: a.id,
-                            tokens: a.out,
-                            nll: None,
-                            latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
-                            done: true,
-                        });
-                    } else {
-                        i += 1;
-                    }
-                }
-                if live.is_empty() {
-                    m.record_pool(pool.stats());
-                    continue;
-                }
-
-                // pool-pressure preemption: if the next step's page
-                // claims could overrun the byte budget, swap out the
-                // youngest session — release its pages, requeue its
-                // request at the front — rather than fail. The oldest
-                // session is never preempted, so every stream finishes.
-                loop {
-                    let upcoming = live
-                        .iter()
-                        .filter(|a| a.sess.position() % page_size == 0)
-                        .count()
-                        .max(1);
-                    if live.len() <= 1 || !pool.would_overrun(upcoming) {
-                        break;
-                    }
-                    let vi = live
-                        .iter()
-                        .enumerate()
-                        .max_by_key(|(_, a)| a.seq)
-                        .map(|(i, _)| i)
-                        .unwrap();
-                    let mut a = live.swap_remove(vi);
-                    a.sess.preempt();
-                    m.record_preemption();
-                    queue.push_front(Pending {
-                        id: a.id,
-                        t0: a.t0,
-                        prompt: a.prompt,
-                        n_new: a.n_new,
-                        out: a.out,
-                    });
-                }
-
-                // one fused decode step over every live session: greedy
-                // next tokens in, one activation panel through the
-                // engine, next-token logits scattered back per session
-                let t_step = Instant::now();
-                let tokens: Vec<i32> =
-                    live.iter().map(|a| GenSession::greedy(&a.logits)).collect();
-                {
-                    let mut sessions: Vec<&mut GenSession> =
-                        live.iter_mut().map(|a| &mut a.sess).collect();
-                    step_fused(&mut sessions, &tokens, &mut scratch, &mut panel);
-                }
-                for a in live.iter_mut() {
-                    a.logits.clear();
-                    a.logits.resize(engine.cfg.vocab, 0.0);
-                }
-                scatter_panel(&panel, live.iter_mut().map(|a| a.logits.as_mut_slice()));
-                for (a, &t) in live.iter_mut().zip(tokens.iter()) {
-                    a.out.push(t);
-                    if cfg.stream {
-                        let _ = resp_tx.send(Response {
-                            id: a.id,
-                            tokens: vec![t],
-                            nll: None,
-                            latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
-                            done: false,
-                        });
-                    }
-                }
-                m.record_decode_step(live.len());
-                m.record_tokens(live.len());
-                m.record_pool(pool.stats());
-                m.record_wall(t_step.elapsed());
             }
-            m.record_pool(pool.stats());
         });
 
         (
             Server {
                 tx: Some(tx),
                 worker: Some(worker),
+                default_deadline: cfg.deadline,
+                inflight,
                 metrics,
             },
             resp_rx,
         )
     }
 
-    pub fn submit(&self, req: Request) {
-        self.tx
-            .as_ref()
-            .expect("server closed")
-            .send((req, Instant::now()))
-            .expect("worker died");
+    /// Enqueue a request under the server's default deadline. Never
+    /// panics: a dead or shut-down worker is a typed error.
+    pub fn submit(&self, req: Request) -> Result<(), ServeError> {
+        self.submit_with_deadline(req, self.default_deadline)
     }
 
-    /// Close the queue and wait for the worker to drain.
-    pub fn shutdown(mut self) {
+    /// Enqueue a request with an explicit deadline override (`None` =
+    /// no deadline, regardless of the server default).
+    pub fn submit_with_deadline(
+        &self,
+        req: Request,
+        deadline: Option<Duration>,
+    ) -> Result<(), ServeError> {
+        let t0 = Instant::now();
+        // an unrepresentable (astronomically far) deadline is no deadline
+        let abs = deadline.and_then(|d| t0.checked_add(d));
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| ServeError::Internal("server is shut down".into()))?;
+        tx.send(Inbound {
+            req,
+            t0,
+            deadline: abs,
+        })
+        .map_err(|_| ServeError::Internal("serving worker is gone".into()))
+    }
+
+    /// Close the queue and wait up to 10 minutes for the worker to
+    /// drain (see [`Server::shutdown_within`]).
+    pub fn shutdown(self) -> ShutdownReport {
+        self.shutdown_within(Duration::from_secs(600))
+    }
+
+    /// Close the queue and wait for the worker to drain, but give up
+    /// after `limit` and report how many admitted requests were still
+    /// unanswered (the detached worker keeps draining in the
+    /// background; its responses land on the receiver as usual).
+    pub fn shutdown_within(mut self, limit: Duration) -> ShutdownReport {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        let Some(w) = self.worker.take() else {
+            return ShutdownReport {
+                drained: true,
+                undrained: 0,
+            };
+        };
+        let giveup = Instant::now().checked_add(limit);
+        loop {
+            if w.is_finished() {
+                let _ = w.join();
+                return ShutdownReport {
+                    drained: true,
+                    undrained: 0,
+                };
+            }
+            if let Some(g) = giveup {
+                if Instant::now() >= g {
+                    let undrained = self
+                        .inflight
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .len();
+                    return ShutdownReport {
+                        drained: false,
+                        undrained,
+                    };
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
         }
     }
 }
@@ -364,11 +430,401 @@ impl Drop for Server {
     }
 }
 
+/// A `Generate` waiting for admission; `out` carries tokens already
+/// produced before a preemption, replayed on re-admission.
+struct Pending {
+    id: u64,
+    t0: Instant,
+    deadline: Option<Instant>,
+    prompt: Vec<i32>,
+    n_new: usize,
+    out: Vec<i32>,
+}
+
+/// A session inside the fused decode loop.
+struct Live<'a> {
+    id: u64,
+    t0: Instant,
+    deadline: Option<Instant>,
+    // admission order — preemption swaps out the youngest
+    seq: u64,
+    sess: GenSession<'a>,
+    prompt: Vec<i32>,
+    n_new: usize,
+    out: Vec<i32>,
+    logits: Vec<f32>,
+}
+
+/// One incarnation of the worker. Returns when the submit channel is
+/// closed and all work is drained; panics only on uncontained faults
+/// (the supervisor in [`Server::start`] respawns it).
+fn worker_loop(
+    engine: &Arc<Engine>,
+    cfg: ServerConfig,
+    batcher: &Batcher<Inbound>,
+    out: &Responder,
+    m: &Metrics,
+) {
+    // one shared paged pool for every session this worker runs: prefix
+    // reuse and the byte budget span the incarnation's lifetime. The
+    // pool is total over plans — fp/uniform KV layers ride their own
+    // lanes — so every engine pools. A respawn starts a fresh pool; the
+    // old one's pages were released when its sessions unwound.
+    let pool = engine.kv_pool(cfg.pool);
+    // per-site weight payload gauges (mixed-precision plans show their
+    // per-tensor byte split here)
+    m.record_weight_sites(&engine.site_payloads());
+    let page_size = cfg.pool.page_size.max(1);
+    let max_live = cfg.policy.max_batch.max(1);
+
+    let mut queue: VecDeque<Pending> = VecDeque::new();
+    let mut live: Vec<Live> = Vec::new();
+    let mut inbox: Vec<Inbound> = Vec::new();
+    let mut open = true;
+    let mut next_seq = 0u64;
+    let mut scratch = StepScratch::new();
+    let mut panel = Mat::zeros(0, 0);
+
+    loop {
+        // ingest: block only when idle, otherwise take whatever has
+        // queued up since the last decode step
+        if open && live.is_empty() && queue.is_empty() {
+            match batcher.recv() {
+                Some(item) => inbox.push(item),
+                None => open = false,
+            }
+        }
+        if open && !batcher.try_drain(&mut inbox) {
+            open = false;
+        }
+        for Inbound { req, t0, deadline } in inbox.drain(..) {
+            let id = req.id();
+            out.admit(id, t0);
+            if let Err(e) = req.validate(&engine.cfg) {
+                m.record_rejected();
+                out.finish(Response::failed(id, t0, Vec::new(), e));
+                continue;
+            }
+            if deadline.is_some_and(|dl| Instant::now() >= dl) {
+                m.record_expired();
+                out.finish(Response::failed(
+                    id,
+                    t0,
+                    Vec::new(),
+                    ServeError::DeadlineExceeded,
+                ));
+                continue;
+            }
+            match req {
+                Request::Generate { id, prompt, n_new } => {
+                    if cfg.max_queue.is_some_and(|cap| queue.len() >= cap) {
+                        m.record_rejected();
+                        out.finish(Response::failed(
+                            id,
+                            t0,
+                            Vec::new(),
+                            ServeError::Capacity(format!(
+                                "admission queue full ({} waiting)",
+                                queue.len()
+                            )),
+                        ));
+                        continue;
+                    }
+                    queue.push_back(Pending {
+                        id,
+                        t0,
+                        deadline,
+                        prompt,
+                        n_new,
+                        out: Vec::new(),
+                    });
+                }
+                Request::Score { id, window } => {
+                    // native scoring (the HLO path is exercised by
+                    // runtime::ModelRunner in examples/tests; the
+                    // in-process worker stays self-contained). A panic
+                    // in the forward pass is this request's fault, not
+                    // the worker's.
+                    let t_score = Instant::now();
+                    let scored = catch_unwind(AssertUnwindSafe(|| {
+                        let logits = engine.forward_window(&window[..window.len() - 1]);
+                        crate::model::forward::window_nll(&logits, &window[1..])
+                    }));
+                    match scored {
+                        Ok(nll) => {
+                            m.record_tokens(window.len());
+                            m.record_request(t0.elapsed(), window.len());
+                            m.record_wall(t_score.elapsed());
+                            out.finish(Response::scored(id, t0, nll));
+                        }
+                        Err(_) => {
+                            m.record_session_panic();
+                            out.finish(Response::failed(
+                                id,
+                                t0,
+                                Vec::new(),
+                                ServeError::Internal("score forward panicked".into()),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        // deliberately uncontained: exercises the supervision respawn
+        // path (tests only — compiled out of release builds)
+        crate::fail_point!("coordinator/worker");
+        if !open && live.is_empty() && queue.is_empty() {
+            break;
+        }
+
+        // age-based shedding: queued requests past their deadline are
+        // answered now (with any pre-preemption partial output) instead
+        // of burning pool pages on work nobody is waiting for
+        let now = Instant::now();
+        let mut qi = 0;
+        while qi < queue.len() {
+            if !queue[qi].deadline.is_some_and(|dl| now >= dl) {
+                qi += 1;
+                continue;
+            }
+            let Some(p) = queue.remove(qi) else { break };
+            m.record_expired();
+            out.finish(Response::failed(
+                p.id,
+                p.t0,
+                p.out,
+                ServeError::DeadlineExceeded,
+            ));
+        }
+
+        // token-level admission: a queued request joins the running
+        // loop between decode steps as soon as a slot is free and its
+        // pages fit (preemption keeps at least one session running, so
+        // an empty loop always admits)
+        while live.len() < max_live {
+            let Some(front) = queue.front() else { break };
+            let need = (front.prompt.len() + front.out.len()) / page_size + 1;
+            if !live.is_empty() && pool.would_overrun(need) {
+                break;
+            }
+            let Some(p) = queue.pop_front() else { break };
+            let t_adm = Instant::now();
+            let mut sess = GenSession::new_in_pool(engine, &pool);
+            // requeued sessions replay prompt + prior output; the
+            // prefix index serves whatever pages survived
+            let replay: Vec<i32> = p.prompt.iter().chain(p.out.iter()).copied().collect();
+            let n_replay = replay.len();
+            // a prefill panic poisons only this session: the unwinding
+            // closure drops `sess`, whose Drop releases every page it
+            // had claimed back to the pool
+            let prefilled = catch_unwind(AssertUnwindSafe(move || {
+                let logits = sess.prefill(&replay);
+                (sess, logits)
+            }));
+            match prefilled {
+                Ok((sess, logits)) => {
+                    m.record_tokens(n_replay);
+                    m.record_wall(t_adm.elapsed());
+                    live.push(Live {
+                        id: p.id,
+                        t0: p.t0,
+                        deadline: p.deadline,
+                        seq: next_seq,
+                        sess,
+                        prompt: p.prompt,
+                        n_new: p.n_new,
+                        out: p.out,
+                        logits,
+                    });
+                    next_seq += 1;
+                }
+                Err(_) => {
+                    m.record_session_panic();
+                    out.finish(Response::failed(
+                        p.id,
+                        p.t0,
+                        p.out,
+                        ServeError::Internal("prefill panicked; session torn down".into()),
+                    ));
+                }
+            }
+        }
+
+        // completions and mid-generation expiry (before the step so a
+        // request admitted with nothing left to generate answers
+        // immediately, and an expired session stops burning steps)
+        let mut i = 0;
+        while i < live.len() {
+            let a = &live[i];
+            let done = a.out.len() >= a.n_new || a.sess.position() >= engine.cfg.ctx;
+            let expired = !done && a.deadline.is_some_and(|dl| Instant::now() >= dl);
+            if !done && !expired {
+                i += 1;
+                continue;
+            }
+            let a = live.swap_remove(i);
+            m.record_kv_bytes(a.sess.kv_bytes());
+            m.record_request(a.t0.elapsed(), a.out.len());
+            if expired {
+                m.record_expired();
+                out.finish(Response::failed(
+                    a.id,
+                    a.t0,
+                    a.out,
+                    ServeError::DeadlineExceeded,
+                ));
+            } else {
+                out.finish(Response::finished(a.id, a.t0, a.out));
+            }
+        }
+        if live.is_empty() {
+            m.record_pool(pool.stats());
+            continue;
+        }
+
+        // pool-pressure preemption: if the next step's page claims
+        // could overrun the byte budget, swap out the youngest session
+        // — release its pages, requeue its request at the front —
+        // rather than fail. The oldest session is never preempted, so
+        // every stream finishes.
+        loop {
+            let upcoming = live
+                .iter()
+                .filter(|a| a.sess.position() % page_size == 0)
+                .count()
+                .max(1);
+            if live.len() <= 1 || !pool.would_overrun(upcoming) {
+                break;
+            }
+            let Some(vi) = live
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, a)| a.seq)
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            let mut a = live.swap_remove(vi);
+            a.sess.preempt();
+            m.record_preemption();
+            queue.push_front(Pending {
+                id: a.id,
+                t0: a.t0,
+                deadline: a.deadline,
+                prompt: a.prompt,
+                n_new: a.n_new,
+                out: a.out,
+            });
+        }
+
+        // one fused decode step over every live session: greedy next
+        // tokens in, one activation panel through the engine,
+        // next-token logits scattered back per session
+        let t_step = Instant::now();
+        let tokens: Vec<i32> = live.iter().map(|a| GenSession::greedy(&a.logits)).collect();
+        let stepped = {
+            let mut sessions: Vec<&mut GenSession> =
+                live.iter_mut().map(|a| &mut a.sess).collect();
+            catch_unwind(AssertUnwindSafe(|| {
+                step_fused(&mut sessions, &tokens, &mut scratch, &mut panel);
+            }))
+        };
+        match stepped {
+            Ok(()) => {
+                for a in live.iter_mut() {
+                    a.logits.clear();
+                    a.logits.resize(engine.cfg.vocab, 0.0);
+                }
+                scatter_panel(&panel, live.iter_mut().map(|a| a.logits.as_mut_slice()));
+                for (a, &t) in live.iter_mut().zip(tokens.iter()) {
+                    a.out.push(t);
+                    if cfg.stream {
+                        out.stream(Response::token(a.id, a.t0, t));
+                    }
+                }
+                m.record_decode_step(live.len());
+                m.record_tokens(live.len());
+            }
+            Err(_) => {
+                m.record_session_panic();
+                recover_fused_fault(engine, &cfg, out, m, &mut live, &tokens);
+            }
+        }
+        m.record_pool(pool.stats());
+        m.record_wall(t_step.elapsed());
+    }
+    m.record_pool(pool.stats());
+    // leak audit: with every session gone, only prefix-index pages may
+    // remain and each must hold exactly its index reference
+    m.record_pool_idle(pool.verify_idle());
+}
+
+/// A panic escaped `step_fused`: some sessions' caches may hold
+/// partially-appended positions for the faulted token (never frozen or
+/// prefix-registered — `note_token` only runs after all layers
+/// complete). Recovery preempts every live session (releasing all its
+/// pages, partial state included) and replays each solo under its own
+/// `catch_unwind`: prefill(prompt + out) re-serves the clean prefix
+/// from the pool, then the faulted token is stepped again. Survivors
+/// continue bitwise-identically (the same preempt-requeue guarantee the
+/// scheduler already relies on); a session that panics again is the
+/// faulty one — it is torn down with its pages released and answered
+/// with a typed error.
+fn recover_fused_fault(
+    engine: &Arc<Engine>,
+    cfg: &ServerConfig,
+    out: &Responder,
+    m: &Metrics,
+    live: &mut Vec<Live<'_>>,
+    tokens: &[i32],
+) {
+    for i in (0..live.len().min(tokens.len())).rev() {
+        let t = tokens[i];
+        let probed = {
+            let a = &mut live[i];
+            a.sess.preempt();
+            let replay: Vec<i32> = a.prompt.iter().chain(a.out.iter()).copied().collect();
+            catch_unwind(AssertUnwindSafe(|| {
+                let _ = a.sess.prefill(&replay);
+                a.sess.step(t)
+            }))
+        };
+        match probed {
+            Ok(logits) => {
+                let a = &mut live[i];
+                a.out.push(t);
+                a.logits = logits;
+                m.record_tokens(1);
+                if cfg.stream {
+                    out.stream(Response::token(a.id, a.t0, t));
+                }
+            }
+            Err(_) => {
+                m.record_session_panic();
+                let mut a = live.remove(i);
+                // release whatever the failed probe appended; if even
+                // that panics the Drop impl is the backstop
+                let _ = catch_unwind(AssertUnwindSafe(|| a.sess.preempt()));
+                m.record_kv_bytes(a.sess.kv_bytes());
+                m.record_request(a.t0.elapsed(), a.out.len());
+                out.finish(Response::failed(
+                    a.id,
+                    a.t0,
+                    a.out,
+                    ServeError::Internal("session poisoned by a decode fault".into()),
+                ));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::engine::{EngineOptions, Regime};
     use crate::model::weights::{artifact_path, ModelWeights};
+    use crate::util::failpoint::{scenario, FailSpec};
 
     fn engine() -> Option<Arc<Engine>> {
         let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -397,22 +853,25 @@ mod tests {
             id: 1,
             prompt: prompt.clone(),
             n_new: 4,
-        });
-        srv.submit(Request::Score { id: 2, window });
+        })
+        .unwrap();
+        srv.submit(Request::Score { id: 2, window }).unwrap();
         srv.submit(Request::Generate {
             id: 3,
             prompt,
             n_new: 2,
-        });
+        })
+        .unwrap();
         let mut got = std::collections::HashMap::new();
         for _ in 0..3 {
             let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            assert!(r.error.is_none(), "unexpected error: {:?}", r.error);
             got.insert(r.id, r);
         }
         assert_eq!(got[&1].tokens.len(), 4);
         assert_eq!(got[&3].tokens.len(), 2);
         assert!(got[&2].nll.unwrap() > 0.0);
-        srv.shutdown();
+        assert!(srv.shutdown().drained);
     }
 
     #[test]
@@ -445,7 +904,7 @@ mod tests {
         for id in 0..3u64 {
             let mut prompt = common.clone();
             prompt.push(40 + id as i32);
-            srv.submit(Request::Generate { id, prompt, n_new: 3 });
+            srv.submit(Request::Generate { id, prompt, n_new: 3 }).unwrap();
         }
         for _ in 0..3 {
             let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
@@ -475,7 +934,9 @@ mod tests {
         );
         assert!(srv.metrics.report().contains("sched: processed=108"));
         assert!(srv.metrics.throughput_tok_s() > 0.0);
-        srv.shutdown();
+        let m = srv.metrics.clone();
+        assert!(srv.shutdown().drained);
+        assert_eq!(m.pool_idle(), Some(Ok(())), "pool must be leak-free at exit");
     }
 
     fn soak_engine() -> Arc<Engine> {
@@ -547,7 +1008,7 @@ mod tests {
                     page_size: ps,
                     budget_bytes: Some(8 * bpp),
                 },
-                stream: false,
+                ..ServerConfig::default()
             },
         );
         for (id, p) in prompts.iter().enumerate() {
@@ -555,7 +1016,8 @@ mod tests {
                 id: id as u64,
                 prompt: p.clone(),
                 n_new,
-            });
+            })
+            .unwrap();
         }
         let mut got = std::collections::HashMap::new();
         for _ in 0..12 {
@@ -598,7 +1060,8 @@ mod tests {
             id: 7,
             prompt,
             n_new: 4,
-        });
+        })
+        .unwrap();
         let mut streamed = Vec::new();
         let fin = loop {
             let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
@@ -615,5 +1078,362 @@ mod tests {
             "streamed tokens must replay the final stream in order"
         );
         srv.shutdown();
+    }
+
+    #[test]
+    fn invalid_requests_are_rejected_with_typed_errors() {
+        let eng = soak_engine(); // vocab 48, ctx 64
+        let (srv, rx) = Server::start(eng, ServerConfig::default());
+        // the underflow case from the old worker: a 1-token score window
+        srv.submit(Request::Score { id: 1, window: vec![3] }).unwrap();
+        // empty prompt
+        srv.submit(Request::Generate { id: 2, prompt: vec![], n_new: 4 }).unwrap();
+        // prompt + n_new past ctx
+        srv.submit(Request::Generate {
+            id: 3,
+            prompt: (0..40).map(|i| i % 48).collect(),
+            n_new: 40,
+        })
+        .unwrap();
+        // out-of-vocab token
+        srv.submit(Request::Generate { id: 4, prompt: vec![1, 99], n_new: 2 }).unwrap();
+        // and one valid request to prove the worker survived all of the
+        // above
+        srv.submit(Request::Generate {
+            id: 5,
+            prompt: vec![1, 2, 3, 4],
+            n_new: 2,
+        })
+        .unwrap();
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..5 {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            got.insert(r.id, r);
+        }
+        for id in 1..=4u64 {
+            match got[&id].error {
+                Some(ServeError::InvalidRequest(_)) => {}
+                ref other => panic!("request {id}: expected InvalidRequest, got {other:?}"),
+            }
+            assert!(got[&id].tokens.is_empty());
+            assert!(got[&id].done);
+        }
+        assert!(got[&5].error.is_none());
+        assert_eq!(got[&5].tokens.len(), 2);
+        assert_eq!(srv.metrics.rejected(), 4);
+        assert!(srv.metrics.report().contains("rejected=4"));
+        assert!(srv.shutdown().drained);
+    }
+
+    #[test]
+    fn deadline_zero_sheds_before_admission() {
+        let eng = soak_engine();
+        let (srv, rx) = Server::start(eng, ServerConfig::default());
+        srv.submit_with_deadline(
+            Request::Generate {
+                id: 1,
+                prompt: vec![1, 2, 3],
+                n_new: 4,
+            },
+            Some(Duration::ZERO),
+        )
+        .unwrap();
+        // no deadline: must still serve normally
+        srv.submit(Request::Generate {
+            id: 2,
+            prompt: vec![1, 2, 3],
+            n_new: 4,
+        })
+        .unwrap();
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..2 {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            got.insert(r.id, r);
+        }
+        assert_eq!(got[&1].error, Some(ServeError::DeadlineExceeded));
+        assert!(got[&1].tokens.is_empty(), "shed before any generation");
+        assert!(got[&2].error.is_none());
+        assert_eq!(got[&2].tokens.len(), 4);
+        assert_eq!(srv.metrics.expired(), 1);
+        assert!(srv.metrics.report().contains("expired=1"));
+        assert!(srv.shutdown().drained);
+    }
+
+    #[test]
+    fn prefill_fault_poisons_only_that_session() {
+        let eng = soak_engine();
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|s: i32| (0..6).map(|j| (s * 13 + j * 7 + 1) % 48).collect())
+            .collect();
+        let n_new = 4;
+        // solo refs BEFORE arming (reference runs must not hit sites)
+        let expect: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| GenSession::new(&eng).generate(p, n_new))
+            .collect();
+
+        let sc = scenario();
+        // the 2nd admission prefill panics (solo refs above are done)
+        sc.fail("engine/prefill", FailSpec::Nth(2));
+        let (srv, rx) = Server::start(
+            eng.clone(),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 1, // serialize admissions so Nth(2) = request id 1
+                    max_wait: Duration::from_millis(1),
+                },
+                ..ServerConfig::default()
+            },
+        );
+        for (id, p) in prompts.iter().enumerate() {
+            srv.submit(Request::Generate {
+                id: id as u64,
+                prompt: p.clone(),
+                n_new,
+            })
+            .unwrap();
+        }
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..3 {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            got.insert(r.id, r);
+        }
+        assert_eq!(sc.fired("engine/prefill"), 1);
+        let faulted: Vec<u64> = got
+            .values()
+            .filter(|r| r.error.is_some())
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(faulted.len(), 1, "exactly one session faults: {got:?}");
+        let fid = faulted[0];
+        match got[&fid].error {
+            Some(ServeError::Internal(_)) => {}
+            ref e => panic!("expected Internal, got {e:?}"),
+        }
+        for (id, exp) in expect.iter().enumerate() {
+            let id = id as u64;
+            if id == fid {
+                continue;
+            }
+            assert_eq!(
+                &got[&id].tokens, exp,
+                "survivor {id} must stream bitwise-identically to solo"
+            );
+        }
+        assert!(srv.metrics.session_panics() >= 1);
+        let m = srv.metrics.clone();
+        assert!(srv.shutdown().drained);
+        assert_eq!(m.pool_idle(), Some(Ok(())), "faulted teardown must not leak pages");
+    }
+
+    #[test]
+    fn step_fault_recovers_survivors_bitwise() {
+        let eng = soak_engine();
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|s: i32| (0..6).map(|j| (s * 17 + j * 5 + 2) % 48).collect())
+            .collect();
+        let n_new = 5;
+        let expect: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| GenSession::new(&eng).generate(p, n_new))
+            .collect();
+
+        let sc = scenario();
+        // one mid-flight fused step panics; solo recovery probes pass
+        // (Nth fires once)
+        sc.fail("engine/step_fused", FailSpec::Nth(2));
+        let (srv, rx) = Server::start(eng.clone(), ServerConfig::default());
+        for (id, p) in prompts.iter().enumerate() {
+            srv.submit(Request::Generate {
+                id: id as u64,
+                prompt: p.clone(),
+                n_new,
+            })
+            .unwrap();
+        }
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..3 {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            got.insert(r.id, r);
+        }
+        assert_eq!(sc.fired("engine/step_fused"), 1);
+        // every session recovers: the faulted step is replayed solo from
+        // the pool-served prefix, bitwise-identically
+        for (id, exp) in expect.iter().enumerate() {
+            let r = &got[&(id as u64)];
+            assert!(r.error.is_none(), "session {id} should recover: {:?}", r.error);
+            assert_eq!(&r.tokens, exp, "session {id}: recovery changed the stream");
+        }
+        assert!(srv.metrics.session_panics() >= 1, "the caught step fault must count");
+        let m = srv.metrics.clone();
+        assert!(srv.shutdown().drained);
+        assert_eq!(m.pool_idle(), Some(Ok(())));
+    }
+
+    #[test]
+    fn worker_respawn_after_uncontained_fault() {
+        let eng = soak_engine();
+        let sc = scenario();
+        // fires after the first ingest block: request 1 is admitted
+        // (inflight) when the worker dies uncontained
+        sc.fail("coordinator/worker", FailSpec::Nth(1));
+        let (srv, rx) = Server::start(eng, ServerConfig::default());
+        srv.submit(Request::Generate {
+            id: 1,
+            prompt: vec![1, 2, 3],
+            n_new: 3,
+        })
+        .unwrap();
+        let r1 = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert_eq!(r1.id, 1);
+        match r1.error {
+            Some(ServeError::Internal(ref msg)) => {
+                assert!(msg.contains("restarted"), "got: {msg}")
+            }
+            ref e => panic!("expected Internal(restarted), got {e:?}"),
+        }
+        // the respawned worker serves as if nothing happened — submit
+        // still returns Ok (never panics)
+        srv.submit(Request::Generate {
+            id: 2,
+            prompt: vec![4, 5, 6],
+            n_new: 3,
+        })
+        .unwrap();
+        let r2 = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert_eq!(r2.id, 2);
+        assert!(r2.error.is_none());
+        assert_eq!(r2.tokens.len(), 3);
+        assert_eq!(srv.metrics.respawns(), 1);
+        assert!(srv.metrics.report().contains("respawns=1"));
+        assert!(srv.shutdown().drained);
+    }
+
+    #[test]
+    fn fault_soak_contains_faults_and_leaks_nothing() {
+        // The acceptance soak: seeded fail-point schedules firing in
+        // pool alloc, codec decode, prefill, and the fused step. Every
+        // faulted session gets a typed error with a prefix-of-solo
+        // token stream; every non-faulted session is bitwise-identical
+        // to its solo run; the pool's page/refcount accounting returns
+        // to idle after every case.
+        let eng = soak_engine();
+        let sites = [
+            "kvpool/alloc",
+            "kvpool/decode",
+            "engine/prefill",
+            "engine/step_fused",
+        ];
+        crate::util::propcheck::check("fault-soak", 6, 0xFA17, |rng| {
+            let n_sess = 4 + rng.below(3);
+            let n_new = 3 + rng.below(4);
+            let prompts: Vec<Vec<i32>> = (0..n_sess)
+                .map(|s| {
+                    let len = 4 + rng.below(6);
+                    (0..len).map(|j| ((s * 19 + j * 7) % 48) as i32).collect()
+                })
+                .collect();
+            // solo references BEFORE the scenario arms (they must not
+            // consume fail-point hits)
+            let expect: Vec<Vec<i32>> = prompts
+                .iter()
+                .map(|p| GenSession::new(&eng).generate(p, n_new))
+                .collect();
+
+            let sc = scenario();
+            let site = sites[rng.below(sites.len())];
+            let spec = if rng.below(4) == 0 {
+                // a sticky fault: fires on every hit from n on, so the
+                // faulted session cannot be saved by the solo re-probe
+                FailSpec::From(10 + rng.below(60) as u64)
+            } else {
+                FailSpec::Nth(1 + rng.below(60) as u64)
+            };
+            sc.fail(site, spec);
+
+            let (srv, rx) = Server::start(eng.clone(), ServerConfig::default());
+            for (id, p) in prompts.iter().enumerate() {
+                // submit must never panic, faults or not
+                srv.submit(Request::Generate {
+                    id: id as u64,
+                    prompt: p.clone(),
+                    n_new,
+                })
+                .map_err(|e| format!("submit failed: {e}"))?;
+            }
+            let mut got: HashMap<u64, Response> = HashMap::new();
+            while got.len() < n_sess {
+                let r = rx
+                    .recv_timeout(std::time::Duration::from_secs(120))
+                    .map_err(|e| format!("response channel: {e}"))?;
+                if !r.done {
+                    continue;
+                }
+                if got.insert(r.id, r).is_some() {
+                    return Err("two done responses for one request".into());
+                }
+            }
+            for (id, exp) in expect.iter().enumerate() {
+                let r = &got[&(id as u64)];
+                match &r.error {
+                    None => {
+                        if &r.tokens != exp {
+                            return Err(format!(
+                                "session {id} (site {site}): non-faulted stream diverged"
+                            ));
+                        }
+                    }
+                    Some(ServeError::Internal(_)) => {
+                        if r.tokens.len() > exp.len() || r.tokens[..] != exp[..r.tokens.len()] {
+                            return Err(format!(
+                                "session {id} (site {site}): faulted partial output is not \
+                                 a prefix of the solo stream"
+                            ));
+                        }
+                    }
+                    Some(e) => {
+                        return Err(format!("session {id}: unexpected error class {e:?}"));
+                    }
+                }
+            }
+            let m = srv.metrics.clone();
+            let rep = srv.shutdown();
+            if !rep.drained {
+                return Err(format!("shutdown did not drain: {rep:?}"));
+            }
+            match m.pool_idle() {
+                Some(Ok(())) => {}
+                other => {
+                    return Err(format!(
+                        "pool leaked after faults at {site}: {other:?}"
+                    ))
+                }
+            }
+            drop(sc);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shutdown_within_reports_undrained_then_drains() {
+        let eng = soak_engine();
+        let (srv, rx) = Server::start(eng, ServerConfig::default());
+        srv.submit(Request::Generate {
+            id: 1,
+            prompt: vec![1, 2, 3, 4],
+            n_new: 4,
+        })
+        .unwrap();
+        // zero-deadline shutdown usually reports the request undrained
+        // (the detached worker keeps going); either way the response
+        // still arrives and accounting stays consistent
+        let rep = srv.shutdown_within(Duration::ZERO);
+        if !rep.drained {
+            assert!(rep.undrained <= 1);
+        }
+        let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert_eq!(r.id, 1);
+        assert!(r.error.is_none());
+        assert_eq!(r.tokens.len(), 4);
     }
 }

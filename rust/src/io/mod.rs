@@ -1,10 +1,16 @@
 //! I/O: the `.nqt` tensor container (python ↔ rust interchange), zstd /
 //! entropy coding of β side information (the Tables 1/3 "Bits" columns),
 //! and the markdown results writer used by the experiment harness.
+//!
+//! Tensor reads fail with a typed [`TensorFileError`] naming the file
+//! and the corrupt field — corrupt artifacts become friendly CLI
+//! messages, never panics.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod results;
 pub mod sideinfo;
 pub mod tensorfile;
 
 pub use sideinfo::{beta_bits_entropy, beta_bits_packed, beta_bits_zstd};
-pub use tensorfile::{read_tensors, write_tensors, Tensor};
+pub use tensorfile::{read_tensors, write_tensors, Tensor, TensorFileError};

@@ -24,7 +24,12 @@ pub fn beta_bits_zstd(beta_idx: &[u8]) -> f64 {
     for (i, &b) in beta_idx.iter().enumerate() {
         packed[i / 4] |= (b & 0x3) << (2 * (i % 4));
     }
-    let compressed = zstd::bulk::compress(&packed, 19).expect("zstd compress");
+    // in-memory compression of a buffer we just built: the only failure
+    // mode is allocator exhaustion, which is unrecoverable anyway
+    let compressed = match zstd::bulk::compress(&packed, 19) {
+        Ok(c) => c,
+        Err(e) => panic!("zstd compress of in-memory β stream failed: {e}"),
+    };
     (compressed.len() as f64 * 8.0).min(beta_idx.len() as f64 * 2.0)
 }
 
@@ -54,6 +59,7 @@ pub fn bits_per_entry(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::Rng;

@@ -11,10 +11,91 @@
 //!   u64×ndim dims
 //!   bytes    row-major data
 //! ```
+//!
+//! Reads return a typed [`TensorFileError`] instead of a bare panic or
+//! opaque string: a truncated or corrupted artifact names the file, the
+//! field that failed, and (for headers) what was expected — so the CLI
+//! can print a friendly message and exit nonzero instead of unwinding.
+//! Header fields are sanity-capped before any allocation sized by them,
+//! so a corrupt count/dim can't OOM the process.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+
+/// Caps on header-declared sizes: a well-formed artifact stays far
+/// under these; a corrupt header fails fast instead of allocating.
+const MAX_TENSORS: usize = 1 << 20;
+const MAX_NDIM: usize = 8;
+const MAX_NUMEL: usize = 1 << 28;
+
+/// Why a `.nqt` read failed — every variant names the offending file or
+/// tensor so callers can surface an actionable message.
+#[derive(Debug)]
+pub enum TensorFileError {
+    /// The underlying filesystem read failed (open error, permission,
+    /// or an injected fault in tests).
+    Io { path: PathBuf, source: std::io::Error },
+    /// The file ended before the named field could be read.
+    Truncated { path: PathBuf, what: &'static str },
+    /// The first four bytes are not `b"NQT1"`.
+    BadMagic { path: PathBuf, magic: [u8; 4] },
+    /// A tensor name was not valid utf-8.
+    BadName { path: PathBuf },
+    /// A tensor declared a dtype tag outside {0, 1, 2}.
+    BadDtype { path: PathBuf, name: String, dtype: u8 },
+    /// A header-declared size exceeds the sanity caps — the file is
+    /// corrupt (or adversarial), not merely large.
+    Implausible { path: PathBuf, what: String },
+    /// [`find`] did not locate the named tensor.
+    NotFound { name: String },
+    /// The tensor exists but holds a different dtype than requested.
+    WrongDtype { name: String, expected: &'static str },
+}
+
+impl std::fmt::Display for TensorFileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TensorFileError::Io { path, source } => {
+                write!(f, "{}: read failed: {source}", path.display())
+            }
+            TensorFileError::Truncated { path, what } => {
+                write!(f, "{}: file truncated while reading {what}", path.display())
+            }
+            TensorFileError::BadMagic { path, magic } => write!(
+                f,
+                "{}: bad magic {magic:?} (expected b\"NQT1\" — not a .nqt tensor file?)",
+                path.display()
+            ),
+            TensorFileError::BadName { path } => {
+                write!(f, "{}: tensor name is not valid utf-8", path.display())
+            }
+            TensorFileError::BadDtype { path, name, dtype } => write!(
+                f,
+                "{}: tensor '{name}' has unknown dtype tag {dtype} (known: 0=f32 1=u8 2=i32)",
+                path.display()
+            ),
+            TensorFileError::Implausible { path, what } => write!(
+                f,
+                "{}: implausible header ({what}) — file is corrupt",
+                path.display()
+            ),
+            TensorFileError::NotFound { name } => write!(f, "tensor '{name}' not found"),
+            TensorFileError::WrongDtype { name, expected } => {
+                write!(f, "tensor '{name}' is not {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TensorFileError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TensorFileError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {
@@ -44,17 +125,23 @@ impl Tensor {
         self.dims.iter().product()
     }
 
-    pub fn as_f32(&self) -> Result<&[f32]> {
+    pub fn as_f32(&self) -> std::result::Result<&[f32], TensorFileError> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
-            _ => bail!("tensor {} is not f32", self.name),
+            _ => Err(TensorFileError::WrongDtype {
+                name: self.name.clone(),
+                expected: "f32",
+            }),
         }
     }
 
-    pub fn as_u8(&self) -> Result<&[u8]> {
+    pub fn as_u8(&self) -> std::result::Result<&[u8], TensorFileError> {
         match &self.data {
             TensorData::U8(v) => Ok(v),
-            _ => bail!("tensor {} is not u8", self.name),
+            _ => Err(TensorFileError::WrongDtype {
+                name: self.name.clone(),
+                expected: "u8",
+            }),
         }
     }
 }
@@ -69,12 +156,11 @@ pub fn write_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
         let name = t.name.as_bytes();
         f.write_all(&(name.len() as u16).to_le_bytes())?;
         f.write_all(name)?;
-        let (dtype, nbytes) = match &t.data {
-            TensorData::F32(v) => (0u8, v.len() * 4),
-            TensorData::U8(v) => (1u8, v.len()),
-            TensorData::I32(v) => (2u8, v.len() * 4),
+        let dtype = match &t.data {
+            TensorData::F32(_) => 0u8,
+            TensorData::U8(_) => 1u8,
+            TensorData::I32(_) => 2u8,
         };
-        let _ = nbytes;
         f.write_all(&[dtype, t.dims.len() as u8])?;
         for &d in &t.dims {
             f.write_all(&(d as u64).to_le_bytes())?;
@@ -96,40 +182,99 @@ pub fn write_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
     Ok(())
 }
 
-pub fn read_tensors(path: &Path) -> Result<Vec<Tensor>> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
-    );
+/// Read exactly `buf.len()` bytes, mapping an early EOF to
+/// [`TensorFileError::Truncated`] naming the field being read.
+fn read_exact_or(
+    f: &mut impl Read,
+    buf: &mut [u8],
+    path: &Path,
+    what: &'static str,
+) -> std::result::Result<(), TensorFileError> {
+    f.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            TensorFileError::Truncated {
+                path: path.to_path_buf(),
+                what,
+            }
+        } else {
+            TensorFileError::Io {
+                path: path.to_path_buf(),
+                source: e,
+            }
+        }
+    })
+}
+
+pub fn read_tensors(path: &Path) -> std::result::Result<Vec<Tensor>, TensorFileError> {
+    let file = std::fs::File::open(path).map_err(|e| TensorFileError::Io {
+        path: path.to_path_buf(),
+        source: e,
+    })?;
+    // deterministic injected read fault — exercises the typed-error
+    // path without a real bad disk
+    crate::fail_point!("io/read", {
+        return Err(TensorFileError::Io {
+            path: path.to_path_buf(),
+            source: std::io::Error::new(std::io::ErrorKind::Other, "injected read fault"),
+        });
+    });
+    let mut f = std::io::BufReader::new(file);
     let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
+    read_exact_or(&mut f, &mut magic, path, "magic")?;
     if &magic != b"NQT1" {
-        bail!("{path:?}: bad magic {magic:?}");
+        return Err(TensorFileError::BadMagic {
+            path: path.to_path_buf(),
+            magic,
+        });
     }
     let mut buf4 = [0u8; 4];
-    f.read_exact(&mut buf4)?;
+    read_exact_or(&mut f, &mut buf4, path, "tensor count")?;
     let count = u32::from_le_bytes(buf4) as usize;
+    if count > MAX_TENSORS {
+        return Err(TensorFileError::Implausible {
+            path: path.to_path_buf(),
+            what: format!("tensor count {count} > {MAX_TENSORS}"),
+        });
+    }
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
         let mut buf2 = [0u8; 2];
-        f.read_exact(&mut buf2)?;
+        read_exact_or(&mut f, &mut buf2, path, "name length")?;
         let name_len = u16::from_le_bytes(buf2) as usize;
         let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let name = String::from_utf8(name).context("tensor name not utf-8")?;
+        read_exact_or(&mut f, &mut name, path, "tensor name")?;
+        let name = String::from_utf8(name).map_err(|_| TensorFileError::BadName {
+            path: path.to_path_buf(),
+        })?;
         let mut hdr = [0u8; 2];
-        f.read_exact(&mut hdr)?;
+        read_exact_or(&mut f, &mut hdr, path, "dtype/ndim header")?;
         let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        if ndim > MAX_NDIM {
+            return Err(TensorFileError::Implausible {
+                path: path.to_path_buf(),
+                what: format!("tensor '{name}' ndim {ndim} > {MAX_NDIM}"),
+            });
+        }
         let mut dims = Vec::with_capacity(ndim);
         let mut buf8 = [0u8; 8];
         for _ in 0..ndim {
-            f.read_exact(&mut buf8)?;
+            read_exact_or(&mut f, &mut buf8, path, "dims")?;
             dims.push(u64::from_le_bytes(buf8) as usize);
         }
-        let numel: usize = dims.iter().product();
+        let mut numel: usize = 1;
+        for &d in &dims {
+            numel = numel
+                .checked_mul(d)
+                .filter(|&n| n <= MAX_NUMEL)
+                .ok_or_else(|| TensorFileError::Implausible {
+                    path: path.to_path_buf(),
+                    what: format!("tensor '{name}' element count overflows (dims {dims:?})"),
+                })?;
+        }
         let data = match dtype {
             0 => {
                 let mut bytes = vec![0u8; numel * 4];
-                f.read_exact(&mut bytes)?;
+                read_exact_or(&mut f, &mut bytes, path, "f32 data")?;
                 TensorData::F32(
                     bytes
                         .chunks_exact(4)
@@ -139,12 +284,12 @@ pub fn read_tensors(path: &Path) -> Result<Vec<Tensor>> {
             }
             1 => {
                 let mut bytes = vec![0u8; numel];
-                f.read_exact(&mut bytes)?;
+                read_exact_or(&mut f, &mut bytes, path, "u8 data")?;
                 TensorData::U8(bytes)
             }
             2 => {
                 let mut bytes = vec![0u8; numel * 4];
-                f.read_exact(&mut bytes)?;
+                read_exact_or(&mut f, &mut bytes, path, "i32 data")?;
                 TensorData::I32(
                     bytes
                         .chunks_exact(4)
@@ -152,7 +297,13 @@ pub fn read_tensors(path: &Path) -> Result<Vec<Tensor>> {
                         .collect(),
                 )
             }
-            d => bail!("unknown dtype {d}"),
+            d => {
+                return Err(TensorFileError::BadDtype {
+                    path: path.to_path_buf(),
+                    name,
+                    dtype: d,
+                })
+            }
         };
         out.push(Tensor { name, dims, data });
     }
@@ -160,17 +311,29 @@ pub fn read_tensors(path: &Path) -> Result<Vec<Tensor>> {
 }
 
 /// Find a tensor by name.
-pub fn find<'a>(tensors: &'a [Tensor], name: &str) -> Result<&'a Tensor> {
+pub fn find<'a>(
+    tensors: &'a [Tensor],
+    name: &str,
+) -> std::result::Result<&'a Tensor, TensorFileError> {
     tensors
         .iter()
         .find(|t| t.name == name)
-        .with_context(|| format!("tensor '{name}' not found"))
+        .ok_or_else(|| TensorFileError::NotFound {
+            name: name.to_string(),
+        })
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("nqt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
 
     #[test]
     fn roundtrip_all_dtypes() {
@@ -188,9 +351,7 @@ mod tests {
                 data: TensorData::I32(vec![-1, 0, 42]),
             },
         ];
-        let dir = std::env::temp_dir().join("nqt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("roundtrip.nqt");
+        let path = tmp("roundtrip.nqt");
         write_tensors(&path, &tensors).unwrap();
         let back = read_tensors(&path).unwrap();
         assert_eq!(tensors, back);
@@ -199,11 +360,104 @@ mod tests {
 
     #[test]
     fn bad_magic_rejected() {
-        let dir = std::env::temp_dir().join("nqt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.nqt");
+        let path = tmp("bad.nqt");
         std::fs::write(&path, b"XXXX\0\0\0\0").unwrap();
-        assert!(read_tensors(&path).is_err());
+        match read_tensors(&path) {
+            Err(TensorFileError::BadMagic { magic, .. }) => assert_eq!(&magic, b"XXXX"),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_names_the_missing_field() {
+        // valid magic + count=1, then EOF: dies reading the name length
+        let path = tmp("truncated.nqt");
+        let mut bytes = b"NQT1".to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        match read_tensors(&path) {
+            Err(TensorFileError::Truncated { what, .. }) => assert_eq!(what, "name length"),
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // cut mid-data: a real tensor header promising more bytes than exist
+        let t = vec![Tensor::f32("w", vec![8], vec![1.0; 8])];
+        write_tensors(&path, &t).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        match read_tensors(&path) {
+            Err(TensorFileError::Truncated { what, .. }) => assert_eq!(what, "f32 data"),
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn implausible_headers_fail_before_allocating() {
+        // count = u32::MAX would reserve gigabytes if trusted
+        let path = tmp("implausible.nqt");
+        let mut bytes = b"NQT1".to_vec();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_tensors(&path),
+            Err(TensorFileError::Implausible { .. })
+        ));
+        // dim product overflowing usize must be caught, not wrapped
+        let mut bytes = b"NQT1".to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.push(b'w');
+        bytes.push(0); // dtype f32
+        bytes.push(2); // ndim
+        bytes.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_tensors(&path),
+            Err(TensorFileError::Implausible { .. })
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unknown_dtype_names_the_tensor() {
+        let path = tmp("baddtype.nqt");
+        let mut bytes = b"NQT1".to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&3u16.to_le_bytes());
+        bytes.extend_from_slice(b"abc");
+        bytes.push(7); // unknown dtype tag
+        bytes.push(0); // ndim 0
+        std::fs::write(&path, &bytes).unwrap();
+        match read_tensors(&path) {
+            Err(TensorFileError::BadDtype { name, dtype, .. }) => {
+                assert_eq!(name, "abc");
+                assert_eq!(dtype, 7);
+            }
+            other => panic!("expected BadDtype, got {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn injected_read_fault_surfaces_as_typed_io_error() {
+        use crate::util::failpoint::{scenario, FailSpec};
+        let path = tmp("faulted.nqt");
+        let t = vec![Tensor::f32("w", vec![2], vec![1.0, 2.0])];
+        write_tensors(&path, &t).unwrap();
+        let s = scenario();
+        s.fail("io/read", FailSpec::Nth(1));
+        match read_tensors(&path) {
+            Err(TensorFileError::Io { source, .. }) => {
+                assert!(source.to_string().contains("injected"));
+            }
+            other => panic!("expected injected Io error, got {other:?}"),
+        }
+        // the error arm returns instead of panicking — the next read,
+        // past the Nth(1) trigger, succeeds on the same file
+        assert_eq!(read_tensors(&path).unwrap(), t);
+        drop(s);
         std::fs::remove_file(&path).ok();
     }
 
@@ -211,6 +465,19 @@ mod tests {
     fn find_by_name() {
         let t = vec![Tensor::f32("a", vec![1], vec![1.0])];
         assert!(find(&t, "a").is_ok());
-        assert!(find(&t, "b").is_err());
+        assert!(matches!(
+            find(&t, "b"),
+            Err(TensorFileError::NotFound { .. })
+        ));
+    }
+
+    #[test]
+    fn wrong_dtype_is_typed() {
+        let t = Tensor::f32("a", vec![1], vec![1.0]);
+        assert!(t.as_f32().is_ok());
+        assert!(matches!(
+            t.as_u8(),
+            Err(TensorFileError::WrongDtype { expected: "u8", .. })
+        ));
     }
 }

@@ -287,7 +287,7 @@ impl BlockPool {
 
     /// The page byte geometry; panics before the first append fixes it.
     pub fn layout(&self) -> &PageLayout {
-        self.layout.as_ref().expect("set_d_head before use")
+        layout_of(&self.layout)
     }
 
     pub fn bytes_per_page(&self) -> usize {
@@ -336,7 +336,7 @@ impl BlockPool {
     /// possible. Budget-driven eviction is the caller's job (it owns the
     /// prefix index that knows which pages are reclaimable).
     pub fn alloc(&mut self) -> PageId {
-        let layout = self.layout.as_ref().expect("set_d_head before alloc");
+        let layout = layout_of(&self.layout);
         self.in_use += 1;
         if let Some(id) = self.free.pop() {
             let p = &mut self.pages[id as usize];
@@ -360,17 +360,14 @@ impl BlockPool {
     /// A page mutably, together with the layout (the append path needs
     /// both and the borrows must split).
     pub fn page_mut_with_layout(&mut self, id: PageId) -> (&PageLayout, &mut Page) {
-        (
-            self.layout.as_ref().expect("set_d_head before use"),
-            &mut self.pages[id as usize],
-        )
+        (layout_of(&self.layout), &mut self.pages[id as usize])
     }
 
     /// Two distinct pages (copy-on-write source/destination) plus the
     /// layout that addresses them.
     pub fn page_pair_mut(&mut self, a: PageId, b: PageId) -> (&PageLayout, &Page, &mut Page) {
         assert_ne!(a, b);
-        let layout = self.layout.as_ref().expect("set_d_head before use");
+        let layout = layout_of(&self.layout);
         let (a, b) = (a as usize, b as usize);
         if a < b {
             let (lo, hi) = self.pages.split_at_mut(b);
@@ -407,7 +404,18 @@ impl BlockPool {
     }
 }
 
+/// The fixed page geometry, or a diagnostic panic when nothing has been
+/// appended yet. A free function over the field (not a method) so call
+/// sites keep their disjoint borrows of `pages` / `in_use`.
+fn layout_of(layout: &Option<PageLayout>) -> &PageLayout {
+    match layout {
+        Some(l) => l,
+        None => panic!("BlockPool: set_d_head must run before the page layout is used"),
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::propcheck;

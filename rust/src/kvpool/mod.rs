@@ -33,6 +33,8 @@
 //! same as the packed GEMM) — with fixed stack scratch: no per-position
 //! `Vec<f32>` is ever materialized on any decode hot path.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod block;
 pub mod page_table;
 pub mod prefix;
@@ -257,6 +259,16 @@ pub struct KvPool {
 }
 
 impl KvPool {
+    /// All pool state sits behind this mutex. Injected faults and
+    /// contained panics deliberately fire *before* the lock is taken
+    /// (see the `fail_point!` sites), but a panic elsewhere while the
+    /// guard was held must not cascade: every invariant the pool relies
+    /// on is restored before the holding call can panic, so a poisoned
+    /// lock is recovered rather than propagated.
+    fn guard(&self) -> std::sync::MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn new(n_layer: usize, n_head: usize, lanes: Vec<KvLaneCodec>, cfg: PoolConfig) -> Self {
         assert_eq!(lanes.len(), n_layer, "one lane codec per layer");
         assert!(cfg.page_size >= 1);
@@ -304,7 +316,7 @@ impl KvPool {
     }
 
     pub fn stats(&self) -> PoolStats {
-        let g = self.inner.lock().unwrap();
+        let g = self.guard();
         let [fp, uni, nest] = g.blocks.class_bytes();
         PoolStats {
             pages_in_use: g.blocks.pages_in_use(),
@@ -329,7 +341,7 @@ impl KvPool {
     /// *before* the allocations happen — which keeps `budget_overruns`
     /// at zero whenever shrinking the live set can restore headroom.
     pub fn would_overrun(&self, new_pages: usize) -> bool {
-        let g = self.inner.lock().unwrap();
+        let g = self.guard();
         let Some(budget) = g.blocks.budget_bytes() else {
             return false;
         };
@@ -341,6 +353,32 @@ impl KvPool {
         let evictable = g.index.count_pages(|p| g.blocks.refcount(p) == 1);
         let pages = (g.blocks.pages_in_use() + new_pages).saturating_sub(evictable);
         pages * bpp > budget
+    }
+
+    /// Leak audit for an idle pool (no live sessions): every in-use page
+    /// must be a prefix-cache page holding exactly its one index
+    /// reference. A faulted session teardown that leaked a page or a
+    /// refcount shows up here as `Err` — the serving worker records the
+    /// verdict in `Metrics` when it drains.
+    pub fn verify_idle(&self) -> Result<(), String> {
+        let g = self.guard();
+        let in_use = g.blocks.pages_in_use();
+        let cached = g.index.len();
+        let singly = g.index.count_pages(|p| g.blocks.refcount(p) == 1);
+        if in_use != cached {
+            return Err(format!(
+                "{in_use} pages in use but {cached} cached in the prefix index \
+                 ({} page(s) unaccounted)",
+                in_use.abs_diff(cached)
+            ));
+        }
+        if singly != cached {
+            return Err(format!(
+                "{} cached page(s) hold refcounts beyond the index's own",
+                cached - singly
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -413,7 +451,7 @@ impl SessionKv {
     /// Logical coded-payload bytes of this session's mapped pages
     /// (capacity-based: a page costs its full size once mapped).
     pub fn payload_bytes(&self) -> usize {
-        let g = self.pool.inner.lock().unwrap();
+        let g = self.pool.guard();
         self.table.n_pages() * g.blocks.bytes_per_page()
     }
 
@@ -422,6 +460,12 @@ impl SessionKv {
     /// applied by the page claim.
     pub fn append(&mut self, layer: usize, head: usize, k: &[f32], v: &[f32]) {
         assert_eq!(k.len(), v.len());
+        if self.table.fill(self.lane(layer, head)) % self.pool.page_size == 0 {
+            // this append claims a fresh (or copy-on-write) page; the
+            // site fires before any coding or locking so a contained
+            // panic leaves the pool's accounting untouched
+            crate::fail_point!("kvpool/alloc");
+        }
         // coding (the expensive part) runs outside the pool lock, into
         // the session-owned scratch buffers
         enum Kind {
@@ -444,7 +488,7 @@ impl SessionKv {
             }
         };
         let lane = self.lane(layer, head);
-        let mut g = self.pool.inner.lock().unwrap();
+        let mut g = self.pool.guard();
         let inner = &mut *g;
         if inner.blocks.d_head() == 0 {
             // once per pool lifetime, so the spec Vec is not a per-append
@@ -510,7 +554,7 @@ impl SessionKv {
     /// recomputed. Returns the number of pages released.
     pub fn preempt(&mut self) -> usize {
         let released = self.table.n_pages();
-        let mut g = self.pool.inner.lock().unwrap();
+        let mut g = self.pool.guard();
         let inner = &mut *g;
         self.table.release(&mut inner.blocks);
         // freshly unpinned cached pages may now exceed the budget
@@ -536,7 +580,7 @@ impl SessionKv {
             // shareable
             return;
         }
-        let mut g = self.pool.inner.lock().unwrap();
+        let mut g = self.pool.guard();
         let inner = &mut *g;
         let pid = self.table.pages()[n / ps - 1];
         inner.blocks.page_mut(pid).frozen = true;
@@ -568,7 +612,7 @@ impl SessionKv {
         );
         let ps = self.pool.page_size;
         let cap = prompt.len().saturating_sub(1);
-        let mut g = self.pool.inner.lock().unwrap();
+        let mut g = self.pool.guard();
         let inner = &mut *g;
         let mut node = inner.index.root();
         let mut matched = 0usize;
@@ -613,13 +657,14 @@ impl SessionKv {
     /// scratch — no per-position allocation (`out` is reused across
     /// calls and only grows).
     pub fn scores(&self, layer: usize, head: usize, qvec: &[f32], out: &mut Vec<f32>) {
+        crate::fail_point!("kvpool/decode");
         out.clear();
         let lane = self.lane(layer, head);
         let total = self.table.fill(lane);
         if total == 0 {
             return;
         }
-        let g = self.pool.inner.lock().unwrap();
+        let g = self.pool.guard();
         let layout = g.blocks.layout();
         let shape = *layout.shape();
         let (dh, ps) = (shape.d_head, shape.page_size);
@@ -706,7 +751,7 @@ impl SessionKv {
         if total == 0 {
             return;
         }
-        let g = self.pool.inner.lock().unwrap();
+        let g = self.pool.guard();
         let layout = g.blocks.layout();
         let shape = *layout.shape();
         let (dh, ps) = (shape.d_head, shape.page_size);
@@ -799,7 +844,7 @@ impl SessionKv {
     fn fetch(&self, layer: usize, head: usize, pos: usize, key: bool) -> Vec<f32> {
         let lane = self.lane(layer, head);
         assert!(pos < self.table.fill(lane), "position {pos} not cached");
-        let g = self.pool.inner.lock().unwrap();
+        let g = self.pool.guard();
         let layout = g.blocks.layout();
         let shape = *layout.shape();
         let (dh, ps) = (shape.d_head, shape.page_size);
@@ -847,7 +892,7 @@ impl SessionKv {
 
 impl Drop for SessionKv {
     fn drop(&mut self) {
-        let mut g = self.pool.inner.lock().unwrap();
+        let mut g = self.pool.guard();
         let inner = &mut *g;
         self.table.release(&mut inner.blocks);
         // freshly unpinned cached pages may now exceed the budget
@@ -856,6 +901,7 @@ impl Drop for SessionKv {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::{propcheck, stats, Rng};
@@ -1377,5 +1423,110 @@ mod tests {
             stats::rmse(&x, &d0) < stats::rmse(&x, &d1),
             "fine layer should reconstruct better"
         );
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_and_accounting_survives() {
+        // A panic while the pool guard is held must not brick the pool:
+        // subsequent sessions recover the lock and the accounting they
+        // see is consistent.
+        let p = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: None });
+        let mut sess = SessionKv::new(p.clone());
+        run_session(&mut sess, &[1, 2, 3, 4, 5], 16);
+        let before = p.stats();
+        let poisoner = p.clone();
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _g = poisoner.guard();
+            panic!("injected panic while holding the pool lock");
+        }));
+        // every entry point still works through the recovered lock
+        let after = p.stats();
+        assert_eq!(after.pages_in_use, before.pages_in_use);
+        assert!(!p.would_overrun(1));
+        assert_eq!(sess.key(0, 0, 2).len(), 16);
+        drop(sess);
+        assert_eq!(p.verify_idle(), Ok(()));
+    }
+
+    #[test]
+    fn alloc_failpoint_teardown_releases_every_page() {
+        use crate::util::failpoint::{scenario, FailSpec};
+        // An injected allocation fault mid-session, then teardown: the
+        // pool must return to idle (frozen prefix pages only, each with
+        // exactly the index reference) with zero leaked refcounts.
+        let p = pool(2, 2, PoolConfig { page_size: 4, budget_bytes: None });
+        let toks: Vec<i32> = (0..11).collect();
+        let mut keeper = SessionKv::new(p.clone());
+        run_session(&mut keeper, &toks, 16);
+        let sc = scenario();
+        sc.fail("kvpool/alloc", FailSpec::Nth(2));
+        let mut victim = SessionKv::new(p.clone());
+        let crashed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // diverging tokens -> no prefix hit -> fresh page claims
+            run_session(&mut victim, &[40, 41, 42, 43, 44, 45, 46, 47, 48], 16);
+        }));
+        assert!(crashed.is_err(), "the armed alloc site must fire");
+        assert_eq!(sc.fired("kvpool/alloc"), 1);
+        drop(sc);
+        drop(victim); // faulted teardown: releases whatever was claimed
+        let full_pages_kept = toks.len() / 4;
+        drop(keeper);
+        // idle: only the keeper's frozen pages remain, index-owned
+        assert_eq!(p.verify_idle(), Ok(()));
+        assert_eq!(p.stats().pages_in_use, full_pages_kept);
+        // and the pool still serves new sessions bitwise-identically
+        let mut again = SessionKv::new(p.clone());
+        assert_eq!(again.match_prefix(&toks), 8);
+        run_session(&mut again, &toks[8..], 16);
+    }
+
+    #[test]
+    fn decode_failpoint_is_contained_to_the_calling_session() {
+        use crate::util::failpoint::{scenario, FailSpec};
+        let p = pool(1, 1, PoolConfig::default());
+        let mut sess = SessionKv::new(p.clone());
+        run_session(&mut sess, &[7, 8, 9], 16);
+        let mut out = Vec::new();
+        let sc = scenario();
+        sc.fail("kvpool/decode", FailSpec::Nth(1));
+        let q = vec![0.5f32; 16];
+        let crashed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sess.scores(0, 0, &q, &mut out);
+        }));
+        assert!(crashed.is_err());
+        drop(sc);
+        // the fault fired before the lock: the pool is not poisoned and
+        // the same call now succeeds
+        sess.scores(0, 0, &q, &mut out);
+        assert_eq!(out.len(), 3);
+        drop(sess);
+        assert_eq!(p.verify_idle(), Ok(()));
+    }
+
+    #[test]
+    fn verify_idle_reports_leaked_refcounts() {
+        let p = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: None });
+        let mut sess = SessionKv::new(p.clone());
+        run_session(&mut sess, &(0..8).collect::<Vec<i32>>(), 16);
+        {
+            // simulate a teardown bug: an extra refcount on a frozen page
+            let mut g = p.guard();
+            let inner = &mut *g;
+            assert!(inner.index.count_pages(|_| true) > 0);
+            let first = std::cell::Cell::new(None);
+            inner.index.count_pages(|pg| {
+                if first.get().is_none() {
+                    first.set(Some(pg));
+                }
+                true
+            });
+            if let Some(pg) = first.get() {
+                inner.blocks.incref(pg);
+            }
+        }
+        drop(sess);
+        let verdict = p.verify_idle();
+        assert!(verdict.is_err(), "leaked refcount must be detected: {verdict:?}");
+        assert!(verdict.unwrap_err().contains("refcount"));
     }
 }

@@ -134,6 +134,7 @@ impl PageTable {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kvpool::block::{LaneClass, LaneSpec, PageShape};

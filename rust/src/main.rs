@@ -95,6 +95,10 @@ fn resolve_plan(args: &[String], base: EngineOptions) -> Result<(QuantPlan, Opti
             .with_context(|| format!("read plan file '{path}'"))?;
         let plan = QuantPlan::parse(&text)
             .map_err(|e| anyhow::anyhow!("parse '{path}': {e}"))?;
+        // validate here so a bad plan file is a CLI error with the file
+        // named, not a panic inside Engine::build_plan
+        plan.validate()
+            .map_err(|e| anyhow::anyhow!("invalid plan '{path}': {e}"))?;
         Ok((plan, Some(path)))
     } else {
         Ok((QuantPlan::uniform(apply_quant_flags(args, base)?), None))
@@ -193,20 +197,30 @@ fn main() -> Result<()> {
                     id: i as u64,
                     prompt: w.val_tokens[start..start + 16].to_vec(),
                     n_new: 32,
-                });
+                })?;
             }
             for _ in 0..n_req {
                 let r = rx.recv()?;
-                println!(
-                    "request {} done: {} tokens, {:.1} ms",
-                    r.id,
-                    r.tokens.len(),
-                    r.latency_ms
-                );
+                match &r.error {
+                    None => println!(
+                        "request {} done: {} tokens, {:.1} ms",
+                        r.id,
+                        r.tokens.len(),
+                        r.latency_ms
+                    ),
+                    Some(e) => println!(
+                        "request {} failed after {} tokens: {e}",
+                        r.id,
+                        r.tokens.len()
+                    ),
+                }
             }
             println!("wall: {:.2}s", t0.elapsed().as_secs_f64());
             println!("{}", srv.metrics.report());
-            srv.shutdown();
+            let report = srv.shutdown();
+            if !report.drained {
+                println!("shutdown timed out: {} request(s) undrained", report.undrained);
+            }
         }
         "generate" => {
             let model = args

@@ -1433,6 +1433,9 @@ impl Engine {
         for &p in positions {
             assert!(p < cfg.ctx, "context overflow");
         }
+        // before any cache mutation: a contained fault here leaves every
+        // session's KV state exactly as it was before the step
+        crate::fail_point!("engine/step_fused");
         scratch.kh.clear();
         scratch.kh.resize(dh, 0.0);
         scratch.vh.clear();

@@ -1,0 +1,292 @@
+//! Deterministic fail-point injection (fail-rs style).
+//!
+//! Named sites are spread through the hot paths of the serving stack
+//! (`kvpool/alloc`, `kvpool/decode`, `engine/prefill`, `engine/step_fused`,
+//! `io/read`, `coordinator/worker`). A test arms a [`Scenario`], attaches a
+//! [`FailSpec`] trigger schedule to one or more sites, and the instrumented
+//! code panics (or runs a site-specific recovery expression) exactly when the
+//! schedule says so — the same seed always fires the same hits, so fault-soak
+//! tests are reproducible bit for bit.
+//!
+//! In release builds without the `failpoints` feature the whole subsystem
+//! compiles down to a constant-false branch: [`armed`] is
+//! `cfg!(any(debug_assertions, feature = "failpoints")) && ...`, so the
+//! optimizer removes every site.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// When a site should fire, as a function of its 1-based hit count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailSpec {
+    /// Fire exactly on the n-th hit (1-based), then never again.
+    Nth(u64),
+    /// Fire on every n-th hit (n, 2n, 3n, ...).
+    Every(u64),
+    /// Fire on every hit with index >= n (1-based).
+    From(u64),
+    /// Fire pseudo-randomly on `percent`% of hits, deterministically
+    /// derived from `seed`, the hit index, and the site name.
+    Seeded { seed: u64, percent: u64 },
+}
+
+impl FailSpec {
+    fn fires(&self, site: &str, hit: u64) -> bool {
+        match *self {
+            FailSpec::Nth(n) => hit == n,
+            FailSpec::Every(n) => n > 0 && hit % n == 0,
+            FailSpec::From(n) => hit >= n,
+            FailSpec::Seeded { seed, percent } => {
+                // FNV-1a over (seed, hit, site bytes), then splitmix finish.
+                let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+                for b in seed
+                    .to_le_bytes()
+                    .iter()
+                    .chain(hit.to_le_bytes().iter())
+                    .chain(site.as_bytes())
+                {
+                    h ^= u64::from(*b);
+                    h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                }
+                h = (h ^ (h >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+                h = (h ^ (h >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+                h ^= h >> 31;
+                h % 100 < percent
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct SiteState {
+    spec: Option<FailSpec>,
+    hits: u64,
+    fired: u64,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    // Only threads that belong to the active scenario see armed sites:
+    // `cargo test` runs tests concurrently in one process, and a
+    // globally-armed "engine/prefill" would panic an innocent test that
+    // happens to prefill while a fault scenario runs elsewhere. The
+    // scenario's own thread participates automatically; threads it
+    // spawns opt in via [`join_scenario`] (the server worker does this
+    // with the spawner's flag).
+    static PARTICIPANT: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is inside the active fault scenario.
+pub fn participating() -> bool {
+    PARTICIPANT.with(|c| c.get())
+}
+
+/// Propagate scenario membership into a spawned thread: capture
+/// [`participating`] on the spawning thread and pass it here from the
+/// new thread before any fail-point site runs.
+pub fn join_scenario(member: bool) {
+    PARTICIPANT.with(|c| c.set(member));
+}
+
+fn registry() -> &'static Mutex<HashMap<String, SiteState>> {
+    static REG: OnceLock<Mutex<HashMap<String, SiteState>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn reg_lock() -> MutexGuard<'static, HashMap<String, SiteState>> {
+    registry().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// True when fail points are compiled in AND a scenario is active.
+///
+/// The `cfg!` operand is a compile-time constant, so in release builds
+/// without the `failpoints` feature this function is `false` and every
+/// `fail_point!` site folds away.
+#[inline]
+pub fn armed() -> bool {
+    cfg!(any(debug_assertions, feature = "failpoints"))
+        && ARMED.load(Ordering::Relaxed)
+        && participating()
+}
+
+/// Record a hit on `site`; return true when its schedule says to fire.
+pub fn should_fail(site: &str) -> bool {
+    let mut reg = reg_lock();
+    let st = reg.entry(site.to_string()).or_default();
+    st.hits += 1;
+    let fire = st.spec.map(|s| s.fires(site, st.hits)).unwrap_or(false);
+    if fire {
+        st.fired += 1;
+    }
+    fire
+}
+
+/// Default fire action: panic with the site name. The containment layers in
+/// `coordinator` are expected to catch this and tear down only the faulted
+/// session.
+pub fn trigger(site: &str) {
+    if should_fail(site) {
+        panic!("failpoint '{site}' fired");
+    }
+}
+
+fn scenario_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Serializes fault-injection tests (the registry is process-global) and
+/// arms the sites for the duration of the guard. Dropping the scenario
+/// disarms and clears every site.
+pub struct Scenario {
+    _serial: MutexGuard<'static, ()>,
+}
+
+/// Start a fault-injection scenario. Blocks until any other scenario in the
+/// process has finished.
+pub fn scenario() -> Scenario {
+    let serial = scenario_lock().lock().unwrap_or_else(|e| e.into_inner());
+    reg_lock().clear();
+    join_scenario(true);
+    ARMED.store(true, Ordering::SeqCst);
+    Scenario { _serial: serial }
+}
+
+impl Scenario {
+    /// Attach (or replace) the trigger schedule for `site`.
+    pub fn fail(&self, site: &str, spec: FailSpec) {
+        let mut reg = reg_lock();
+        let st = reg.entry(site.to_string()).or_default();
+        st.spec = Some(spec);
+    }
+
+    /// Total hits recorded on `site` so far (fired or not).
+    pub fn hits(&self, site: &str) -> u64 {
+        reg_lock().get(site).map(|s| s.hits).unwrap_or(0)
+    }
+
+    /// Number of times `site` actually fired.
+    pub fn fired(&self, site: &str) -> u64 {
+        reg_lock().get(site).map(|s| s.fired).unwrap_or(0)
+    }
+}
+
+impl Drop for Scenario {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::SeqCst);
+        join_scenario(false);
+        reg_lock().clear();
+    }
+}
+
+/// Mark a potential fault site.
+///
+/// * `fail_point!("site")` — panics with the site name when the active
+///   scenario's schedule fires (contained by `catch_unwind` at the
+///   coordinator boundaries).
+/// * `fail_point!("site", expr)` — runs `expr` instead of panicking; used
+///   where the natural fault is an error return (e.g. an injected I/O error).
+#[macro_export]
+macro_rules! fail_point {
+    ($site:expr) => {
+        if $crate::util::failpoint::armed() {
+            $crate::util::failpoint::trigger($site);
+        }
+    };
+    ($site:expr, $on_fire:expr) => {
+        if $crate::util::failpoint::armed() && $crate::util::failpoint::should_fail($site) {
+            $on_fire
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_sites_never_fire() {
+        // No scenario active: armed() is false, macro is a no-op.
+        assert!(!armed());
+        fail_point!("test/disarmed");
+        // And should_fail without a spec never fires even when polled.
+        assert!(!should_fail("test/disarmed-polled"));
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let sc = scenario();
+        sc.fail("test/nth", FailSpec::Nth(3));
+        let fired: Vec<bool> = (0..6).map(|_| should_fail("test/nth")).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, false]);
+        assert_eq!(sc.hits("test/nth"), 6);
+        assert_eq!(sc.fired("test/nth"), 1);
+    }
+
+    #[test]
+    fn every_fires_periodically() {
+        let sc = scenario();
+        sc.fail("test/every", FailSpec::Every(2));
+        let fired: Vec<bool> = (0..5).map(|_| should_fail("test/every")).collect();
+        assert_eq!(fired, vec![false, true, false, true, false]);
+        drop(sc);
+    }
+
+    #[test]
+    fn from_fires_for_every_later_hit() {
+        let sc = scenario();
+        sc.fail("test/from", FailSpec::From(3));
+        let fired: Vec<bool> = (0..5).map(|_| should_fail("test/from")).collect();
+        assert_eq!(fired, vec![false, false, true, true, true]);
+        drop(sc);
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_roughly_calibrated() {
+        let pattern = |seed: u64| -> Vec<bool> {
+            let sc = scenario();
+            sc.fail("test/seeded", FailSpec::Seeded { seed, percent: 30 });
+            let v = (0..200).map(|_| should_fail("test/seeded")).collect();
+            drop(sc);
+            v
+        };
+        let a = pattern(42);
+        let b = pattern(42);
+        assert_eq!(a, b, "same seed must reproduce the same schedule");
+        let c = pattern(43);
+        assert_ne!(a, c, "different seeds should differ");
+        let rate = a.iter().filter(|&&f| f).count();
+        assert!((20..=100).contains(&rate), "30% of 200 hits, got {rate}");
+    }
+
+    #[test]
+    fn macro_panics_when_fired_and_scenario_drop_disarms() {
+        let sc = scenario();
+        sc.fail("test/macro", FailSpec::Nth(1));
+        let err = std::panic::catch_unwind(|| {
+            fail_point!("test/macro");
+        });
+        assert!(err.is_err());
+        assert_eq!(sc.fired("test/macro"), 1);
+        drop(sc);
+        assert!(!armed());
+        // After the scenario ends the same site is inert again.
+        fail_point!("test/macro");
+    }
+
+    #[test]
+    fn macro_error_arm_runs_expression_instead_of_panicking() {
+        let sc = scenario();
+        sc.fail("test/errarm", FailSpec::Nth(1));
+        let run = || -> Result<u32, String> {
+            fail_point!("test/errarm", return Err("injected".to_string()));
+            Ok(7)
+        };
+        assert_eq!(run(), Err("injected".to_string()));
+        assert_eq!(run(), Ok(7));
+        drop(sc);
+    }
+}

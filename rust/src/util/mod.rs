@@ -1,9 +1,11 @@
 //! Utilities shared across the crate: deterministic RNG, Gaussian sampling,
-//! streaming statistics, a micro-benchmark harness and a small seeded
+//! streaming statistics, a micro-benchmark harness, a small seeded
 //! property-testing helper (criterion / proptest are unavailable in the
-//! offline vendor set — see DESIGN.md §2).
+//! offline vendor set — see DESIGN.md §2), and the deterministic
+//! fail-point registry behind `fail_point!`.
 
 pub mod bench;
+pub mod failpoint;
 pub mod linalg;
 pub mod propcheck;
 pub mod rng;

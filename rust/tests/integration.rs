@@ -586,7 +586,8 @@ fn mixed_precision_plan_serves_end_to_end() {
             id,
             prompt,
             n_new: 4,
-        });
+        })
+        .unwrap();
     }
     for _ in 0..2 {
         let r = rx
@@ -625,7 +626,8 @@ fn coordinator_concurrent_load() {
             id: i,
             prompt: w.val_tokens[..8].to_vec(),
             n_new: 6,
-        });
+        })
+        .unwrap();
     }
     let mut seen = std::collections::HashSet::new();
     for _ in 0..n {
