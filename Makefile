@@ -11,15 +11,18 @@
 #   make soak-faults  fault-injection soak: the deterministic fail-point
 #                     scenarios (kvpool alloc, codec decode, prefill,
 #                     fused step, worker respawn)
+#   make trace-smoke  observability gate: a traced multi-session soak
+#                     whose Perfetto/Prometheus exports must shape-validate
 #   make ci           fmt-check + clippy + build + test + soak-faults +
-#                     the kvmix and serve smoke benches (what a CI job runs)
+#                     trace-smoke + the kvmix and serve smoke benches
+#                     (what a CI job runs)
 #   make clean        remove build artifacts
 #
 # The python layer (training + AOT lowering, `make artifacts`) is only
 # needed for the artifact-gated integration tests; the rust suite skips
 # those gracefully when artifacts/ is absent.
 
-.PHONY: build test clippy bench bench-serve bench-plan bench-kvmix soak-faults fmt-check ci artifacts clean
+.PHONY: build test clippy bench bench-serve bench-plan bench-kvmix soak-faults trace-smoke fmt-check ci artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -40,10 +43,17 @@ fmt-check:
 soak-faults:
 	cd rust && cargo test -q fault && cargo test -q failpoint
 
+# observability gate: the traced multi-session soak (synthetic model, no
+# artifacts needed) whose Chrome-trace and Prometheus exports must
+# shape-validate — plus the journal/export unit tests riding the same
+# name filter
+trace-smoke:
+	cd rust && cargo test -q trace_smoke
+
 # bench-kvmix and bench-serve double as the CI smoke runs of the
 # mixed-lane serving path and the fused decode-batch scheduler
 # (seconds each on the synthetic model)
-ci: fmt-check clippy build test soak-faults bench-kvmix bench-serve
+ci: fmt-check clippy build test soak-faults trace-smoke bench-kvmix bench-serve
 
 # no pipefail in POSIX sh: redirect, propagate the bench exit status,
 # then show the log — a crashed bench must not leave a "fresh" log

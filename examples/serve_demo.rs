@@ -1,7 +1,10 @@
 //! Serving demo: the coordinator (router → batcher → continuous-batching
 //! generation worker) over the NestQuant W+KV engine, reporting
 //! latency/throughput and quantized-KV memory — the paper's serving
-//! motivation (§1, goals 2–3).
+//! motivation (§1, goals 2–3). Prints the per-phase latency percentiles
+//! (queue wait / TTFT / inter-token / prefill / fused step) and writes
+//! the run's trace journal to `serve_demo_trace.json`, loadable in
+//! <https://ui.perfetto.dev>.
 //!
 //! Run: `cargo run --release --example serve_demo [model] [n_requests]`.
 
@@ -96,9 +99,27 @@ fn main() -> Result<()> {
         let mean = nlls.iter().sum::<f64>() / nlls.len() as f64;
         println!("scored windows: mean nll {mean:.4} (ppl {:.3})", mean.exp());
     }
+    let m = &srv.metrics;
+    println!(
+        "latency percentiles:\n  queue wait  {}\n  ttft        {}\n  inter-token {}\n  \
+         prefill     {}\n  fused step  {}",
+        m.queue_wait_summary().render(),
+        m.ttft_summary().render(),
+        m.inter_token_summary().render(),
+        m.prefill_summary().render(),
+        m.fused_step_summary().render()
+    );
+    let trace = srv.trace.clone();
     let report = srv.shutdown();
     if !report.drained {
         println!("shutdown timed out: {} request(s) undrained", report.undrained);
     }
+    let json = nestquant::obs::chrome_trace_json(&trace.snapshot());
+    std::fs::write("serve_demo_trace.json", json)?;
+    println!(
+        "trace: serve_demo_trace.json ({} events, {} dropped) — open in ui.perfetto.dev",
+        trace.len(),
+        trace.dropped()
+    );
     Ok(())
 }

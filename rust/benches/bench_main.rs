@@ -306,8 +306,9 @@ fn core_benches() {
 /// tokens/s, the pool's post-serve byte footprint, and the prefix hit
 /// rate; serialized to BENCH_serve.json. A second sweep drives the
 /// fused token-level scheduler end-to-end (sessions × admission
-/// pattern) and records decode tok/s, fused batch occupancy and
-/// preemption counts into the same file. Small shapes throughout, so
+/// pattern) and records decode tok/s, fused batch occupancy, preemption
+/// counts and TTFT / inter-token p50/p99 (from the server's bounded
+/// latency histograms) into the same file. Small shapes throughout, so
 /// `make ci` runs the whole section as a scheduler smoke test.
 fn serve_benches() {
     use nestquant::coordinator::generator::GenSession;
@@ -418,6 +419,9 @@ fn serve_benches() {
             .collect();
         for &staggered in &[false, true] {
             let last = std::cell::Cell::new((0u64, 0u64, 0u64));
+            // TTFT / inter-token percentiles from the server's bounded
+            // latency histograms (last iteration's server)
+            let lat = std::cell::Cell::new((0f64, 0f64, 0f64, 0f64));
             let label = format!(
                 "fused decode s={sessions} admission={}",
                 if staggered { "staggered" } else { "batch" }
@@ -463,18 +467,27 @@ fn serve_benches() {
                 }
                 let (steps, dtoks) = srv.metrics.decode_stats();
                 last.set((steps, dtoks, srv.metrics.preemptions()));
+                let ttft = srv.metrics.ttft_summary();
+                let itl = srv.metrics.inter_token_summary();
+                lat.set((ttft.p50_ms, ttft.p99_ms, itl.p50_ms, itl.p99_ms));
                 srv.shutdown();
                 sessions * n_new_fused
             });
             let (steps, dtoks, preempt) = last.get();
+            let (ttft_p50, ttft_p99, itl_p50, itl_p99) = lat.get();
             let decode_tok_s = (sessions * n_new_fused) as f64 / r.median.as_secs_f64();
             let mean_batch = if steps > 0 { dtoks as f64 / steps as f64 } else { 0.0 };
             println!(
-                "{}  [{:.0} decode tok/s, mean fused batch {:.2}, preemptions {}]",
+                "{}  [{:.0} decode tok/s, mean fused batch {:.2}, preemptions {}, \
+                 ttft p50/p99 {:.1}/{:.1} ms, itl p50/p99 {:.2}/{:.2} ms]",
                 r.report(),
                 decode_tok_s,
                 mean_batch,
-                preempt
+                preempt,
+                ttft_p50,
+                ttft_p99,
+                itl_p50,
+                itl_p99
             );
             suite.push(
                 &r,
@@ -484,6 +497,10 @@ fn serve_benches() {
                     ("decode_tok_s", decode_tok_s),
                     ("mean_decode_batch", mean_batch),
                     ("preemptions", preempt as f64),
+                    ("ttft_p50_ms", ttft_p50),
+                    ("ttft_p99_ms", ttft_p99),
+                    ("itl_p50_ms", itl_p50),
+                    ("itl_p99_ms", itl_p99),
                 ],
             );
         }

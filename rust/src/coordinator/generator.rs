@@ -12,6 +12,7 @@
 use crate::kvpool::{KvPool, PoolConfig, SessionKv};
 use crate::model::engine::{Engine, StepScratch};
 use crate::model::forward::{gelu, rmsnorm, softmax_inplace};
+use crate::obs::trace::Trace;
 use crate::util::linalg::Mat;
 use crate::util::Rng;
 use std::sync::Arc;
@@ -29,6 +30,20 @@ pub fn step_fused(
     scratch: &mut StepScratch,
     logits: &mut Mat,
 ) {
+    step_fused_traced(sessions, tokens, scratch, logits, None)
+}
+
+/// [`step_fused`] with optional per-site GEMM tracing: `Some(trace)`
+/// records a `SiteGemm` span per (layer, site) of this step on the
+/// engine track. The server passes `Some` on sampled steps only, so the
+/// steady-state decode path is identical to the untraced one.
+pub fn step_fused_traced(
+    sessions: &mut [&mut GenSession<'_>],
+    tokens: &[i32],
+    scratch: &mut StepScratch,
+    logits: &mut Mat,
+    trace: Option<&Trace>,
+) {
     assert_eq!(sessions.len(), tokens.len(), "one token per session");
     if sessions.is_empty() {
         logits.rows = 0;
@@ -42,7 +57,7 @@ pub fn step_fused(
     );
     let positions: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
     let mut caches: Vec<&mut SessionKv> = sessions.iter_mut().map(|s| &mut s.cache).collect();
-    eng.forward_step_fused(tokens, &positions, &mut caches, scratch, logits);
+    eng.forward_step_fused_traced(tokens, &positions, &mut caches, scratch, logits, trace);
     for s in sessions.iter_mut() {
         s.pos += 1;
     }

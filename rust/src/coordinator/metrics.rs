@@ -2,19 +2,42 @@
 //! occupancy, KV-cache memory, the paged-pool gauges (pages/bytes in
 //! use, prefix hit rate, evictions), and the engine's per-site weight
 //! payload accounting — the numbers the serve_demo example reports.
+//!
+//! All latency-shaped series live in bounded [`LogHistogram`]s
+//! (`obs::histogram`): memory is a fixed bucket array per series no
+//! matter how many requests are served. (The previous implementation
+//! kept an unbounded `Vec<f64>` of per-request latencies — a slow leak
+//! under sustained traffic.) Besides the human-readable [`Metrics::report`]
+//! line, the whole sink renders as a Prometheus text-exposition
+//! snapshot via [`Metrics::prometheus_text`].
 
 use crate::kvpool::PoolStats;
 use crate::model::engine::SitePayload;
+use crate::obs::histogram::{HistSummary, LogHistogram};
+use crate::obs::PromWriter;
 use std::sync::Mutex;
 use std::time::Duration;
 
 #[derive(Default)]
 struct Inner {
-    latencies_ms: Vec<f64>,
+    /// end-to-end request latency (admission to completion)
+    latency: LogHistogram,
+    /// time from submit to admission into the live set
+    queue_wait: LogHistogram,
+    /// time from submit to the first generated token
+    ttft: LogHistogram,
+    /// gap between consecutive generated tokens of one request
+    inter_token: LogHistogram,
+    /// prefill span over the prompt (incl. preemption replays)
+    prefill: LogHistogram,
+    /// one fused decode step across all live sessions
+    fused_step: LogHistogram,
     tokens_out: u64,
     requests: u64,
     batches: u64,
     batch_slots: u64,
+    /// capacity of those batches (the real occupancy denominator)
+    batch_capacity_slots: u64,
     wall_ms: f64,
     kv_bytes: usize,
     /// every token the engine processed (prefill + decode + scoring)
@@ -63,16 +86,18 @@ impl Metrics {
 
     pub fn record_request(&self, latency: Duration, tokens: usize) {
         let mut g = self.lock();
-        g.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        g.latency.record_duration(latency);
         g.tokens_out += tokens as u64;
         g.requests += 1;
     }
 
+    /// One scheduled batch of `size` filled slots out of `capacity`
+    /// available — occupancy is reported against the real denominator.
     pub fn record_batch(&self, size: usize, capacity: usize) {
         let mut g = self.lock();
         g.batches += 1;
         g.batch_slots += size as u64;
-        let _ = capacity;
+        g.batch_capacity_slots += capacity.max(size) as u64;
     }
 
     /// Count tokens the engine actually processed (prefill, decode and
@@ -86,13 +111,14 @@ impl Metrics {
         self.lock().tokens_processed
     }
 
-    /// One fused decode step over `batch` live sessions (each step
-    /// emits one token per session, so the step also counts as a batch
-    /// for occupancy).
-    pub fn record_decode_step(&self, batch: usize) {
+    /// One fused decode step over `batch` live sessions out of
+    /// `capacity` decode slots (each step emits one token per session,
+    /// so the step also counts as a batch for occupancy).
+    pub fn record_decode_step(&self, batch: usize, capacity: usize) {
         let mut g = self.lock();
         g.batches += 1;
         g.batch_slots += batch as u64;
+        g.batch_capacity_slots += capacity.max(batch) as u64;
         g.decode_steps += 1;
         g.decode_tokens += batch as u64;
     }
@@ -103,6 +129,69 @@ impl Metrics {
         let g = self.lock();
         (g.decode_steps, g.decode_tokens)
     }
+
+    /// Filled vs available batch slots over every recorded batch.
+    pub fn batch_utilization(&self) -> f64 {
+        let g = self.lock();
+        if g.batch_capacity_slots > 0 {
+            g.batch_slots as f64 / g.batch_capacity_slots as f64
+        } else {
+            0.0
+        }
+    }
+
+    // -- latency histograms -------------------------------------------
+
+    /// Queue wait: submit → admission into the live set.
+    pub fn record_queue_wait(&self, d: Duration) {
+        self.lock().queue_wait.record_duration(d);
+    }
+
+    /// Time to first token: submit → first generated token streamed.
+    pub fn record_ttft(&self, d: Duration) {
+        self.lock().ttft.record_duration(d);
+    }
+
+    /// Gap between consecutive generated tokens of one request.
+    pub fn record_inter_token(&self, d: Duration) {
+        self.lock().inter_token.record_duration(d);
+    }
+
+    /// One prefill span (including replays after preemption).
+    pub fn record_prefill(&self, d: Duration) {
+        self.lock().prefill.record_duration(d);
+    }
+
+    /// One fused decode step across all live sessions.
+    pub fn record_fused_step(&self, d: Duration) {
+        self.lock().fused_step.record_duration(d);
+    }
+
+    pub fn latency_summary(&self) -> HistSummary {
+        self.lock().latency.summary_ms()
+    }
+
+    pub fn queue_wait_summary(&self) -> HistSummary {
+        self.lock().queue_wait.summary_ms()
+    }
+
+    pub fn ttft_summary(&self) -> HistSummary {
+        self.lock().ttft.summary_ms()
+    }
+
+    pub fn inter_token_summary(&self) -> HistSummary {
+        self.lock().inter_token.summary_ms()
+    }
+
+    pub fn prefill_summary(&self) -> HistSummary {
+        self.lock().prefill.summary_ms()
+    }
+
+    pub fn fused_step_summary(&self) -> HistSummary {
+        self.lock().fused_step.summary_ms()
+    }
+
+    // -- fault & lifecycle counters -----------------------------------
 
     /// A session was swapped out under pool-byte pressure (its pages
     /// released, its request requeued).
@@ -204,15 +293,8 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         let g = self.lock();
-        let mut lat = g.latencies_ms.clone();
-        let (p50, p95) = if lat.is_empty() {
-            (0.0, 0.0)
-        } else {
-            (
-                crate::util::stats::quantile(&mut lat, 0.5),
-                crate::util::stats::quantile(&mut lat, 0.95),
-            )
-        };
+        let p50 = g.latency.quantile_us(0.50) as f64 / 1e3;
+        let p95 = g.latency.quantile_us(0.95) as f64 / 1e3;
         let tput = if g.wall_ms > 0.0 {
             g.tokens_out as f64 / (g.wall_ms / 1e3)
         } else {
@@ -223,15 +305,21 @@ impl Metrics {
         } else {
             0.0
         };
+        let batch_util = if g.batch_capacity_slots > 0 {
+            g.batch_slots as f64 / g.batch_capacity_slots as f64
+        } else {
+            0.0
+        };
         let mut s = format!(
             "requests={} tokens={} throughput={:.1} tok/s p50={:.1}ms p95={:.1}ms \
-             mean_batch={:.2} kv_peak={:.1} KiB",
+             mean_batch={:.2} batch_util={:.2} kv_peak={:.1} KiB",
             g.requests,
             g.tokens_out,
             tput,
             p50,
             p95,
             occupancy,
+            batch_util,
             g.kv_bytes as f64 / 1024.0
         );
         let faults = g.rejected + g.expired + g.session_panics + g.respawns;
@@ -252,6 +340,16 @@ impl Metrics {
                 g.expired,
                 g.session_panics,
                 g.respawns
+            ));
+        }
+        if g.queue_wait.count() > 0 || g.ttft.count() > 0 || g.fused_step.count() > 0 {
+            s.push_str(&format!(
+                " | lat: queue[{}] ttft[{}] itl[{}] prefill[{}] step[{}]",
+                g.queue_wait.summary_ms().render(),
+                g.ttft.summary_ms().render(),
+                g.inter_token.summary_ms().render(),
+                g.prefill.summary_ms().render(),
+                g.fused_step.summary_ms().render()
             ));
         }
         if let Some(p) = &g.pool {
@@ -286,6 +384,167 @@ impl Metrics {
         s
     }
 
+    /// Render the whole sink as a Prometheus text-exposition snapshot
+    /// (format 0.0.4): lifecycle counters, pool and weight gauges, and
+    /// every latency histogram as a `_bucket`/`_sum`/`_count` family in
+    /// seconds.
+    pub fn prometheus_text(&self) -> String {
+        let g = self.lock();
+        let mut w = PromWriter::new();
+        w.counter(
+            "nestquant_requests_total",
+            "requests completed",
+            g.requests,
+        );
+        w.counter(
+            "nestquant_tokens_out_total",
+            "tokens returned to clients",
+            g.tokens_out,
+        );
+        w.counter(
+            "nestquant_tokens_processed_total",
+            "tokens the engine processed (prefill + decode + scoring)",
+            g.tokens_processed,
+        );
+        w.counter(
+            "nestquant_decode_steps_total",
+            "fused decode steps",
+            g.decode_steps,
+        );
+        w.counter(
+            "nestquant_decode_tokens_total",
+            "tokens produced by fused decode steps",
+            g.decode_tokens,
+        );
+        w.counter(
+            "nestquant_batch_slots_total",
+            "filled batch slots",
+            g.batch_slots,
+        );
+        w.counter(
+            "nestquant_batch_capacity_slots_total",
+            "available batch slots",
+            g.batch_capacity_slots,
+        );
+        w.counter(
+            "nestquant_preemptions_total",
+            "sessions preempted under pool pressure",
+            g.preemptions,
+        );
+        w.counter(
+            "nestquant_rejected_total",
+            "requests rejected at admission",
+            g.rejected,
+        );
+        w.counter(
+            "nestquant_expired_total",
+            "requests shed or expired past deadline",
+            g.expired,
+        );
+        w.counter(
+            "nestquant_session_panics_total",
+            "panics contained at a session boundary",
+            g.session_panics,
+        );
+        w.counter(
+            "nestquant_respawns_total",
+            "worker respawns after uncontained faults",
+            g.respawns,
+        );
+        w.gauge(
+            "nestquant_kv_peak_bytes",
+            "peak per-session KV bytes observed",
+            g.kv_bytes as f64,
+        );
+        if let Some(p) = &g.pool {
+            w.gauge(
+                "nestquant_pool_pages_in_use",
+                "pool pages currently referenced",
+                p.pages_in_use as f64,
+            );
+            w.gauge(
+                "nestquant_pool_cached_pages",
+                "prefix-cache pages resident",
+                p.cached_pages as f64,
+            );
+            w.gauge(
+                "nestquant_pool_bytes_in_use",
+                "pool bytes currently in use",
+                p.bytes_in_use as f64,
+            );
+            let [fp, uni, nest] = p.bytes_in_use_split();
+            w.gauge_labeled(
+                "nestquant_pool_lane_bytes",
+                "pool bytes in use per lane codec",
+                "lane",
+                &[
+                    ("fp32", fp as f64),
+                    ("uniform", uni as f64),
+                    ("nested", nest as f64),
+                ],
+            );
+            w.gauge(
+                "nestquant_pool_prefix_hit_rate",
+                "fraction of prompt tokens served from cached pages",
+                p.prefix_hit_rate(),
+            );
+            w.counter(
+                "nestquant_pool_evicted_pages_total",
+                "index-only pages evicted for headroom",
+                p.evicted_pages,
+            );
+            w.counter(
+                "nestquant_pool_budget_overruns_total",
+                "allocations past the pool byte budget",
+                p.budget_overruns,
+            );
+        }
+        if !g.weight_sites.is_empty() {
+            let total: usize = g.weight_sites.iter().map(|(_, b)| b).sum();
+            w.gauge(
+                "nestquant_weight_payload_bytes",
+                "total quantized weight payload",
+                total as f64,
+            );
+            w.gauge(
+                "nestquant_weight_sites",
+                "weight sites served (quantized or passthrough)",
+                g.weight_sites.len() as f64,
+            );
+        }
+        w.histogram(
+            "nestquant_request_latency_seconds",
+            "end-to-end request latency",
+            &g.latency,
+        );
+        w.histogram(
+            "nestquant_queue_wait_seconds",
+            "submit to admission into the live set",
+            &g.queue_wait,
+        );
+        w.histogram(
+            "nestquant_ttft_seconds",
+            "submit to first generated token",
+            &g.ttft,
+        );
+        w.histogram(
+            "nestquant_inter_token_seconds",
+            "gap between consecutive generated tokens",
+            &g.inter_token,
+        );
+        w.histogram(
+            "nestquant_prefill_seconds",
+            "prefill span over the prompt",
+            &g.prefill,
+        );
+        w.histogram(
+            "nestquant_fused_step_seconds",
+            "one fused decode step across live sessions",
+            &g.fused_step,
+        );
+        w.finish()
+    }
+
     pub fn throughput_tok_s(&self) -> f64 {
         let g = self.lock();
         if g.wall_ms > 0.0 {
@@ -300,6 +559,7 @@ impl Metrics {
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+    use crate::obs::export::validate_prometheus;
 
     #[test]
     fn aggregates() {
@@ -318,12 +578,92 @@ mod tests {
     }
 
     #[test]
+    fn batch_occupancy_uses_the_real_capacity_denominator() {
+        let m = Metrics::new();
+        assert_eq!(m.batch_utilization(), 0.0);
+        m.record_batch(3, 4);
+        assert!((m.batch_utilization() - 0.75).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("batch_util=0.75"), "{r}");
+        // decode steps feed the same denominator
+        m.record_decode_step(1, 4);
+        assert!((m.batch_utilization() - 0.5).abs() < 1e-12);
+        // capacity can never be reported smaller than the filled slots
+        m.record_batch(6, 2);
+        assert!(m.batch_utilization() <= 1.0);
+    }
+
+    #[test]
+    fn latency_memory_is_bounded_and_quantiles_survive() {
+        let m = Metrics::new();
+        for i in 0..50_000u64 {
+            m.record_request(Duration::from_micros(100 + i % 900), 1);
+        }
+        let s = m.latency_summary();
+        assert_eq!(s.count, 50_000);
+        // all samples in [100 µs, 1 ms): the histogram quantiles must be
+        // in range (bounded error), and no per-request storage exists
+        assert!(s.p50_ms >= 0.1 && s.p50_ms < 1.1, "{:?}", s);
+        assert!(s.max_ms < 1.1, "{:?}", s);
+        let r = m.report();
+        assert!(r.contains("requests=50000"), "{r}");
+    }
+
+    #[test]
+    fn latency_histograms_surface_in_report_and_prometheus() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("lat:"), "no segment before a record");
+        m.record_queue_wait(Duration::from_micros(300));
+        m.record_ttft(Duration::from_millis(2));
+        m.record_inter_token(Duration::from_micros(700));
+        m.record_prefill(Duration::from_millis(1));
+        m.record_fused_step(Duration::from_micros(650));
+        assert_eq!(m.ttft_summary().count, 1);
+        assert_eq!(m.inter_token_summary().count, 1);
+        assert_eq!(m.queue_wait_summary().count, 1);
+        assert_eq!(m.prefill_summary().count, 1);
+        assert_eq!(m.fused_step_summary().count, 1);
+        let r = m.report();
+        assert!(r.contains("lat: queue["), "{r}");
+        assert!(r.contains("ttft["), "{r}");
+        let text = m.prometheus_text();
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("nestquant_ttft_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("nestquant_inter_token_seconds_count 1"));
+    }
+
+    #[test]
+    fn prometheus_snapshot_validates_with_pool_and_weights() {
+        use crate::quant::plan::{SiteId, SiteKind};
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(5), 3);
+        m.record_pool(PoolStats {
+            pages_in_use: 2,
+            bytes_in_use: 1024,
+            page_bytes_fp: 128,
+            ..Default::default()
+        });
+        m.record_weight_sites(&[SitePayload {
+            site: SiteId::weights(0, SiteKind::Up),
+            bytes: 512,
+            bits_per_entry: 4.25,
+            quantized: true,
+        }]);
+        let text = m.prometheus_text();
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("nestquant_requests_total 1"));
+        assert!(text.contains("nestquant_pool_bytes_in_use 1024"));
+        assert!(text.contains("lane=\"fp32\""));
+        assert!(text.contains("nestquant_weight_payload_bytes 512"));
+    }
+
+    #[test]
     fn scheduler_counters_surface_in_report() {
         let m = Metrics::new();
         assert!(!m.report().contains("sched:"), "no gauges before a record");
         m.record_tokens(40);
-        m.record_decode_step(3);
-        m.record_decode_step(1);
+        m.record_decode_step(3, 4);
+        m.record_decode_step(1, 4);
         m.record_tokens(4);
         m.record_preemption();
         assert_eq!(m.tokens_processed(), 44);
@@ -336,6 +676,7 @@ mod tests {
         );
         // decode steps also feed batch occupancy
         assert!(r.contains("mean_batch=2.00"), "{r}");
+        assert!(r.contains("batch_util=0.50"), "{r}");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! The serving front-end: a single fused decode loop (vLLM-style
 //! token-level continuous batching). Every live session's current token
 //! is gathered into one activation panel per layer and served through
-//! the packed integer GEMM ([`step_fused`]); per-session attention runs
+//! the packed integer GEMM
+//! ([`step_fused`](crate::coordinator::generator::step_fused));
+//! per-session attention runs
 //! against each session's own coded pages in the shared
 //! [`KvPool`](crate::kvpool::KvPool). Admission happens between decode
 //! steps (a request joins the running loop as soon as a slot and pool
@@ -23,10 +25,12 @@
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::error::ServeError;
-use crate::coordinator::generator::{step_fused, GenSession};
+use crate::coordinator::generator::{step_fused_traced, GenSession};
 use crate::coordinator::metrics::Metrics;
 use crate::kvpool::PoolConfig;
 use crate::model::engine::{Engine, StepScratch};
+use crate::obs::clock::Clock;
+use crate::obs::trace::{req_track, EventKind, Trace, TraceConfig, TRACK_WORKER};
 use crate::model::ModelConfig;
 use crate::quant::gemm::scatter_panel;
 use crate::util::linalg::Mat;
@@ -198,6 +202,9 @@ pub struct ServerConfig {
     /// `Generate`s wait are answered `ServeError::Capacity` immediately
     /// instead of queueing without bound.
     pub max_queue: Option<usize>,
+    /// trace-journal sizing: ring capacity and fused-step sampling
+    /// period (see [`Server::trace`] for reading it back out)
+    pub trace: TraceConfig,
 }
 
 impl ServerConfig {
@@ -217,6 +224,7 @@ impl Default for ServerConfig {
             stream: false,
             deadline: None,
             max_queue: None,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -289,6 +297,9 @@ pub struct Server {
     default_deadline: Option<Duration>,
     inflight: Inflight,
     pub metrics: Arc<Metrics>,
+    /// bounded request-lifecycle trace journal (export with
+    /// [`crate::obs::chrome_trace_json`])
+    pub trace: Arc<Trace>,
 }
 
 impl Server {
@@ -302,6 +313,8 @@ impl Server {
         let (resp_tx, resp_rx) = channel::<Response>();
         let metrics = Arc::new(Metrics::new());
         let m = metrics.clone();
+        let trace = Arc::new(cfg.trace.build(Clock::wall()));
+        let tr = trace.clone();
         let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
         let inflight_w = inflight.clone();
         // fault-injection scope is per-thread (see util::failpoint); the
@@ -324,12 +337,13 @@ impl Server {
             // and the loop restarts with a fresh pool
             loop {
                 let run = catch_unwind(AssertUnwindSafe(|| {
-                    worker_loop(&engine, cfg, &batcher, &out, &m)
+                    worker_loop(&engine, cfg, &batcher, &out, &m, &tr)
                 }));
                 match run {
                     Ok(()) => break,
                     Err(_) => {
                         m.record_respawn();
+                        tr.instant(TRACK_WORKER, EventKind::WorkerRespawn);
                         out.fail_all_inflight("serving worker restarted after a fault");
                     }
                 }
@@ -343,6 +357,7 @@ impl Server {
                 default_deadline: cfg.deadline,
                 inflight,
                 metrics,
+                trace,
             },
             resp_rx,
         )
@@ -368,6 +383,7 @@ impl Server {
             .tx
             .as_ref()
             .ok_or_else(|| ServeError::Internal("server is shut down".into()))?;
+        self.trace.instant(req_track(req.id()), EventKind::Queued);
         tx.send(Inbound {
             req,
             t0,
@@ -452,6 +468,10 @@ struct Live<'a> {
     prompt: Vec<i32>,
     n_new: usize,
     out: Vec<i32>,
+    /// when the previous token landed — feeds the inter-token latency
+    /// histogram; `None` until this incarnation's first token, so gaps
+    /// spanning a preemption/replay are not counted
+    last_tok: Option<Instant>,
     logits: Vec<f32>,
 }
 
@@ -464,6 +484,7 @@ fn worker_loop(
     batcher: &Batcher<Inbound>,
     out: &Responder,
     m: &Metrics,
+    tr: &Arc<Trace>,
 ) {
     // one shared paged pool for every session this worker runs: prefix
     // reuse and the byte budget span the incarnation's lifetime. The
@@ -471,6 +492,7 @@ fn worker_loop(
     // lanes — so every engine pools. A respawn starts a fresh pool; the
     // old one's pages were released when its sessions unwound.
     let pool = engine.kv_pool(cfg.pool);
+    pool.set_trace(tr.clone());
     // per-site weight payload gauges (mixed-precision plans show their
     // per-tensor byte split here)
     m.record_weight_sites(&engine.site_payloads());
@@ -502,11 +524,14 @@ fn worker_loop(
             out.admit(id, t0);
             if let Err(e) = req.validate(&engine.cfg) {
                 m.record_rejected();
+                tr.instant(req_track(id), EventKind::Rejected);
                 out.finish(Response::failed(id, t0, Vec::new(), e));
                 continue;
             }
+            tr.instant(req_track(id), EventKind::Validated);
             if deadline.is_some_and(|dl| Instant::now() >= dl) {
                 m.record_expired();
+                tr.instant(req_track(id), EventKind::Expired);
                 out.finish(Response::failed(
                     id,
                     t0,
@@ -555,10 +580,12 @@ fn worker_loop(
                             m.record_tokens(window.len());
                             m.record_request(t0.elapsed(), window.len());
                             m.record_wall(t_score.elapsed());
+                            tr.instant(req_track(id), EventKind::Done { tokens: 0 });
                             out.finish(Response::scored(id, t0, nll));
                         }
                         Err(_) => {
                             m.record_session_panic();
+                            tr.instant(req_track(id), EventKind::Fault);
                             out.finish(Response::failed(
                                 id,
                                 t0,
@@ -589,6 +616,7 @@ fn worker_loop(
             }
             let Some(p) = queue.remove(qi) else { break };
             m.record_expired();
+            tr.instant(req_track(p.id), EventKind::Expired);
             out.finish(Response::failed(
                 p.id,
                 p.t0,
@@ -609,6 +637,15 @@ fn worker_loop(
             }
             let Some(p) = queue.pop_front() else { break };
             let t_adm = Instant::now();
+            let queue_wait = t_adm.duration_since(p.t0);
+            m.record_queue_wait(queue_wait);
+            tr.instant(
+                req_track(p.id),
+                EventKind::Admitted {
+                    queue_wait_us: u64::try_from(queue_wait.as_micros()).unwrap_or(u64::MAX),
+                    replayed: !p.out.is_empty(),
+                },
+            );
             let mut sess = GenSession::new_in_pool(engine, &pool);
             // requeued sessions replay prompt + prior output; the
             // prefix index serves whatever pages survived
@@ -617,6 +654,7 @@ fn worker_loop(
             // a prefill panic poisons only this session: the unwinding
             // closure drops `sess`, whose Drop releases every page it
             // had claimed back to the pool
+            let t_prefill = tr.now();
             let prefilled = catch_unwind(AssertUnwindSafe(move || {
                 let logits = sess.prefill(&replay);
                 (sess, logits)
@@ -624,7 +662,15 @@ fn worker_loop(
             match prefilled {
                 Ok((sess, logits)) => {
                     m.record_tokens(n_replay);
+                    m.record_prefill(t_adm.elapsed());
                     m.record_wall(t_adm.elapsed());
+                    tr.span(
+                        req_track(p.id),
+                        EventKind::Prefill {
+                            tokens: n_replay as u32,
+                        },
+                        t_prefill,
+                    );
                     live.push(Live {
                         id: p.id,
                         t0: p.t0,
@@ -634,12 +680,14 @@ fn worker_loop(
                         prompt: p.prompt,
                         n_new: p.n_new,
                         out: p.out,
+                        last_tok: None,
                         logits,
                     });
                     next_seq += 1;
                 }
                 Err(_) => {
                     m.record_session_panic();
+                    tr.instant(req_track(p.id), EventKind::Fault);
                     out.finish(Response::failed(
                         p.id,
                         p.t0,
@@ -667,6 +715,7 @@ fn worker_loop(
             m.record_request(a.t0.elapsed(), a.out.len());
             if expired {
                 m.record_expired();
+                tr.instant(req_track(a.id), EventKind::Expired);
                 out.finish(Response::failed(
                     a.id,
                     a.t0,
@@ -674,6 +723,12 @@ fn worker_loop(
                     ServeError::DeadlineExceeded,
                 ));
             } else {
+                tr.instant(
+                    req_track(a.id),
+                    EventKind::Done {
+                        tokens: a.out.len() as u32,
+                    },
+                );
                 out.finish(Response::finished(a.id, a.t0, a.out));
             }
         }
@@ -707,6 +762,7 @@ fn worker_loop(
             let mut a = live.swap_remove(vi);
             a.sess.preempt();
             m.record_preemption();
+            tr.instant(req_track(a.id), EventKind::Preempted);
             queue.push_front(Pending {
                 id: a.id,
                 t0: a.t0,
@@ -719,44 +775,70 @@ fn worker_loop(
 
         // one fused decode step over every live session: greedy next
         // tokens in, one activation panel through the engine,
-        // next-token logits scattered back per session
+        // next-token logits scattered back per session. Per-step and
+        // per-site GEMM spans are recorded on sampled steps only — the
+        // unsampled path pays one relaxed atomic.
         let t_step = Instant::now();
+        let sampled = tr.sample_step();
+        let t_trace = tr.now();
         let tokens: Vec<i32> = live.iter().map(|a| GenSession::greedy(&a.logits)).collect();
         let stepped = {
             let mut sessions: Vec<&mut GenSession> =
                 live.iter_mut().map(|a| &mut a.sess).collect();
+            let step_trace: Option<&Trace> = if sampled { Some(tr) } else { None };
             catch_unwind(AssertUnwindSafe(|| {
-                step_fused(&mut sessions, &tokens, &mut scratch, &mut panel);
+                step_fused_traced(&mut sessions, &tokens, &mut scratch, &mut panel, step_trace);
             }))
         };
         match stepped {
             Ok(()) => {
+                if sampled {
+                    tr.span(
+                        TRACK_WORKER,
+                        EventKind::DecodeStep {
+                            batch: live.len() as u32,
+                        },
+                        t_trace,
+                    );
+                }
                 for a in live.iter_mut() {
                     a.logits.clear();
                     a.logits.resize(engine.cfg.vocab, 0.0);
                 }
                 scatter_panel(&panel, live.iter_mut().map(|a| a.logits.as_mut_slice()));
                 for (a, &t) in live.iter_mut().zip(tokens.iter()) {
+                    // TTFT fires on the request's genuinely first token;
+                    // replayed sessions (out pre-filled) skip it, and the
+                    // inter-token gauge skips gaps that span a preemption
+                    // (last_tok resets to None on re-admission)
+                    if a.out.is_empty() {
+                        m.record_ttft(a.t0.elapsed());
+                    } else if let Some(lt) = a.last_tok {
+                        m.record_inter_token(lt.elapsed());
+                    }
+                    a.last_tok = Some(Instant::now());
                     a.out.push(t);
                     if cfg.stream {
                         out.stream(Response::token(a.id, a.t0, t));
                     }
                 }
-                m.record_decode_step(live.len());
+                m.record_decode_step(live.len(), max_live);
                 m.record_tokens(live.len());
             }
             Err(_) => {
                 m.record_session_panic();
-                recover_fused_fault(engine, &cfg, out, m, &mut live, &tokens);
+                recover_fused_fault(engine, &cfg, out, m, tr, &mut live, &tokens);
             }
         }
         m.record_pool(pool.stats());
+        m.record_fused_step(t_step.elapsed());
         m.record_wall(t_step.elapsed());
     }
     m.record_pool(pool.stats());
     // leak audit: with every session gone, only prefix-index pages may
     // remain and each must hold exactly its index reference
     m.record_pool_idle(pool.verify_idle());
+    tr.instant(TRACK_WORKER, EventKind::ShutdownDrain { undrained: 0 });
 }
 
 /// A panic escaped `step_fused`: some sessions' caches may hold
@@ -775,6 +857,7 @@ fn recover_fused_fault(
     cfg: &ServerConfig,
     out: &Responder,
     m: &Metrics,
+    tr: &Arc<Trace>,
     live: &mut Vec<Live<'_>>,
     tokens: &[i32],
 ) {
@@ -792,6 +875,12 @@ fn recover_fused_fault(
         match probed {
             Ok(logits) => {
                 let a = &mut live[i];
+                if a.out.is_empty() {
+                    m.record_ttft(a.t0.elapsed());
+                } else if let Some(lt) = a.last_tok {
+                    m.record_inter_token(lt.elapsed());
+                }
+                a.last_tok = Some(Instant::now());
                 a.out.push(t);
                 a.logits = logits;
                 m.record_tokens(1);
@@ -801,6 +890,7 @@ fn recover_fused_fault(
             }
             Err(_) => {
                 m.record_session_panic();
+                tr.instant(req_track(live[i].id), EventKind::Fault);
                 let mut a = live.remove(i);
                 // release whatever the failed probe appended; if even
                 // that panics the Drop impl is the backstop
@@ -1078,6 +1168,62 @@ mod tests {
             "streamed tokens must replay the final stream in order"
         );
         srv.shutdown();
+    }
+
+    #[test]
+    fn server_trace_journal_covers_the_request_lifecycle() {
+        use crate::obs::trace::TraceConfig;
+        let eng = soak_engine();
+        let (srv, rx) = Server::start(
+            eng,
+            ServerConfig {
+                trace: TraceConfig {
+                    capacity: 4096,
+                    sample_every: 1, // trace every fused step
+                },
+                ..ServerConfig::default()
+            },
+        );
+        let prompt: Vec<i32> = (0..6).map(|i| (i * 11 + 3) % 48).collect();
+        srv.submit(Request::Generate {
+            id: 9,
+            prompt,
+            n_new: 4,
+        })
+        .unwrap();
+        let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert!(r.error.is_none(), "unexpected error: {:?}", r.error);
+        let tr = srv.trace.clone();
+        assert!(srv.shutdown().drained);
+
+        let events = tr.snapshot();
+        let has = |k: &str| events.iter().any(|e| e.kind.name() == k);
+        for k in [
+            "queued",
+            "validated",
+            "admitted",
+            "prefill",
+            "decode_step",
+            "site_gemm",
+            "done",
+            "page_alloc",
+            "shutdown_drain",
+        ] {
+            assert!(has(k), "journal is missing a `{k}` event");
+        }
+        // the request rides its own track, with the generated-token
+        // count on the terminal event
+        assert!(events.iter().filter(|e| e.track == req_track(9)).count() >= 4);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::Done { tokens: 4 })));
+        // prefill covered all 6 prompt tokens (fresh session, no replay)
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::Prefill { tokens: 6 })));
+        // and the whole journal exports as a loadable Chrome trace
+        let json = crate::obs::chrome_trace_json(&events);
+        crate::obs::validate_chrome_trace(&json).unwrap();
     }
 
     #[test]

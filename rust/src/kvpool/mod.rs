@@ -40,14 +40,15 @@ pub mod page_table;
 pub mod prefix;
 
 pub use block::{BlockPool, LaneClass, LaneSpec, PageId, PageShape};
-pub use page_table::PageTable;
+pub use page_table::{ClaimKind, PageTable};
 pub use prefix::PrefixIndex;
 
 use crate::lattice::e8::D;
 use crate::lattice::nested::{payload_bits_for, NestedLatticeQuantizer, QuantizedVector};
+use crate::obs::trace::{EventKind, Trace, TRACK_POOL};
 use crate::quant::qgemm::DecodeConsts;
 use crate::quant::uniform::UniformQuantizer;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// How one layer's KV lane stores (and fake-quants) its vectors — the
 /// single source of truth shared by the batch-eval roundtrip
@@ -221,7 +222,14 @@ struct PoolInner {
 /// otherwise the predicate is plain `bytes ≤ budget` (release site).
 /// Live sessions are never evicted: if everything cached is pinned, an
 /// allocating caller proceeds over budget and the overrun is counted.
-fn trim_to_budget(blocks: &mut BlockPool, index: &mut PrefixIndex, need_headroom: bool) {
+/// With a trace attached, every eviction and overrun lands in the
+/// journal as a kvpool event.
+fn trim_to_budget(
+    blocks: &mut BlockPool,
+    index: &mut PrefixIndex,
+    need_headroom: bool,
+    trace: Option<&Trace>,
+) {
     loop {
         let over = if need_headroom {
             blocks.at_budget()
@@ -235,10 +243,16 @@ fn trim_to_budget(blocks: &mut BlockPool, index: &mut PrefixIndex, need_headroom
             Some(p) => {
                 blocks.decref(p);
                 blocks.evicted_pages += 1;
+                if let Some(t) = trace {
+                    t.instant(TRACK_POOL, EventKind::PageEvict);
+                }
             }
             None => {
                 if need_headroom {
                     blocks.budget_overruns += 1;
+                    if let Some(t) = trace {
+                        t.instant(TRACK_POOL, EventKind::BudgetOverrun);
+                    }
                 }
                 return;
             }
@@ -256,6 +270,10 @@ pub struct KvPool {
     /// one lane codec per layer
     lanes: Vec<KvLaneCodec>,
     inner: Mutex<PoolInner>,
+    /// attached observability journal (pools are built by the engine
+    /// before the server's trace exists, so the hookup is late-bound;
+    /// `OnceLock::get` on the hot path is one relaxed atomic load)
+    trace: OnceLock<Arc<Trace>>,
 }
 
 impl KvPool {
@@ -291,7 +309,19 @@ impl KvPool {
                 prefix_hit_tokens: 0,
                 prefix_miss_tokens: 0,
             }),
+            trace: OnceLock::new(),
         }
+    }
+
+    /// Attach an observability journal: page alloc / copy-on-write /
+    /// eviction / budget-overrun events flow to it from every session.
+    /// First attachment wins; later calls are ignored.
+    pub fn set_trace(&self, trace: Arc<Trace>) {
+        let _ = self.trace.set(trace);
+    }
+
+    fn trace(&self) -> Option<&Trace> {
+        self.trace.get().map(|t| t.as_ref())
     }
 
     pub fn page_size(&self) -> usize {
@@ -498,9 +528,19 @@ impl SessionKv {
         }
         assert_eq!(k.len(), inner.blocks.d_head(), "d_head fixed by first append");
         let index = &mut inner.index;
-        let (pid, local) = self
+        let trace = self.pool.trace();
+        let (pid, local, claim) = self
             .table
-            .claim_slot(lane, &mut inner.blocks, |b| trim_to_budget(b, index, true));
+            .claim_slot(lane, &mut inner.blocks, |b| {
+                trim_to_budget(b, index, true, trace)
+            });
+        if let Some(t) = trace {
+            match claim {
+                ClaimKind::Fresh => t.instant(TRACK_POOL, EventKind::PageAlloc),
+                ClaimKind::Cow => t.instant(TRACK_POOL, EventKind::PageCow),
+                ClaimKind::Existing => {}
+            }
+        }
         let (layout, page) = inner.blocks.page_mut_with_layout(pid);
         let s = layout.shape().slot(lane, local);
         let kr = layout.k_range(layer, head, local);
@@ -558,7 +598,7 @@ impl SessionKv {
         let inner = &mut *g;
         self.table.release(&mut inner.blocks);
         // freshly unpinned cached pages may now exceed the budget
-        trim_to_budget(&mut inner.blocks, &mut inner.index, false);
+        trim_to_budget(&mut inner.blocks, &mut inner.index, false, self.pool.trace());
         self.tokens.clear();
         self.cursor = (inner.index.root(), 0);
         released
@@ -896,7 +936,7 @@ impl Drop for SessionKv {
         let inner = &mut *g;
         self.table.release(&mut inner.blocks);
         // freshly unpinned cached pages may now exceed the budget
-        trim_to_budget(&mut inner.blocks, &mut inner.index, false);
+        trim_to_budget(&mut inner.blocks, &mut inner.index, false, self.pool.trace());
     }
 }
 
@@ -1317,6 +1357,44 @@ mod tests {
         drop(a);
         // once the session ends, the trim brings the cache under budget
         assert!(p.stats().bytes_in_use <= 2 * bpp);
+    }
+
+    #[test]
+    fn pool_emits_bounded_trace_events_for_alloc_and_eviction() {
+        let dh = 16;
+        let probe = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: None });
+        let bpp = {
+            let mut s = SessionKv::new(probe.clone());
+            s.append(0, 0, &vec![0.5; dh], &vec![0.5; dh]);
+            probe.stats().bytes_per_page
+        };
+        let p = pool(1, 1, PoolConfig { page_size: 4, budget_bytes: Some(6 * bpp) });
+        let tr = Arc::new(Trace::manual(64));
+        p.set_trace(tr.clone());
+        // a second attach is a no-op: the first trace stays wired
+        p.set_trace(Arc::new(Trace::manual(1)));
+
+        let mut a = SessionKv::new(p.clone());
+        run_session(&mut a, &(0..16).collect::<Vec<_>>(), dh);
+        drop(a); // 4 frozen pages stay cached
+        let mut b = SessionKv::new(p.clone());
+        run_session(&mut b, &(100..116).collect::<Vec<_>>(), dh);
+
+        let events = tr.snapshot();
+        let allocs = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::PageAlloc))
+            .count();
+        let evicts = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::PageEvict))
+            .count() as u64;
+        assert_eq!(allocs, 8, "4 fresh pages per 16-token session");
+        let st = p.stats();
+        assert!(st.evicted_pages >= 2, "budget must force evictions: {st:?}");
+        assert_eq!(evicts, st.evicted_pages, "one event per evicted page");
+        assert!(events.iter().all(|e| e.track == TRACK_POOL));
+        assert_eq!(tr.dropped(), 0, "ring sized for this run");
     }
 
     #[test]

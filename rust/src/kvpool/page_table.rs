@@ -15,6 +15,19 @@
 
 use super::block::{BlockPool, PageId};
 
+/// How [`PageTable::claim_slot`] resolved the physical page behind an
+/// append — surfaced so the pool can emit the matching trace event
+/// (page alloc vs copy-on-write) without re-deriving the decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClaimKind {
+    /// the slot landed on an already-private page — no allocation
+    Existing,
+    /// a fresh page was allocated for the lane's next logical page
+    Fresh,
+    /// a shared or frozen page was copied on write
+    Cow,
+}
+
 pub struct PageTable {
     /// logical page index → physical page
     pages: Vec<PageId>,
@@ -63,21 +76,24 @@ impl PageTable {
 
     /// Resolve (and if needed allocate or copy-on-write) the physical
     /// page behind `lane`'s next append slot, advancing the lane's fill.
-    /// Returns (page id, local slot). `on_alloc` runs before every fresh
-    /// allocation so the pool owner can apply budget eviction.
+    /// Returns (page id, local slot, how the page was obtained).
+    /// `on_alloc` runs before every fresh allocation so the pool owner
+    /// can apply budget eviction.
     pub fn claim_slot<F: FnMut(&mut BlockPool)>(
         &mut self,
         lane: usize,
         blocks: &mut BlockPool,
         mut on_alloc: F,
-    ) -> (PageId, usize) {
+    ) -> (PageId, usize, ClaimKind) {
         let page_size = blocks.shape().page_size;
         let slot = self.fill(lane);
         let pi = slot / page_size;
         let local = slot % page_size;
+        let mut kind = ClaimKind::Existing;
         if pi == self.pages.len() {
             on_alloc(blocks);
             self.pages.push(blocks.alloc());
+            kind = ClaimKind::Fresh;
         } else {
             debug_assert!(pi < self.pages.len(), "lane fill ahead of page table");
             let cur = self.pages[pi];
@@ -86,10 +102,11 @@ impl PageTable {
                 let fresh = self.cow(pi, blocks);
                 self.pages[pi] = fresh;
                 blocks.decref(cur);
+                kind = ClaimKind::Cow;
             }
         }
         self.fill[lane] = (slot + 1) as u32;
-        (self.pages[pi], local)
+        (self.pages[pi], local, kind)
     }
 
     /// Copy the session-visible filled prefix of every lane of logical
@@ -163,8 +180,14 @@ mod tests {
         let mut bp = pool();
         let mut t = PageTable::new(2);
         for i in 0..9 {
-            let (_, local) = t.claim_slot(0, &mut bp, |_| {});
+            let (_, local, kind) = t.claim_slot(0, &mut bp, |_| {});
             assert_eq!(local, i % 4);
+            let expect = if i % 4 == 0 {
+                ClaimKind::Fresh
+            } else {
+                ClaimKind::Existing
+            };
+            assert_eq!(kind, expect, "claim {i}");
         }
         assert_eq!(t.n_pages(), 3);
         assert_eq!(t.fill(0), 9);
@@ -181,22 +204,25 @@ mod tests {
     fn cow_triggers_on_shared_page_and_preserves_content() {
         let mut bp = pool();
         let mut t = PageTable::new(2);
-        let (p0, s0) = t.claim_slot(0, &mut bp, |_| {});
+        let (p0, s0, k0) = t.claim_slot(0, &mut bp, |_| {});
         assert_eq!(s0, 0);
+        assert_eq!(k0, ClaimKind::Fresh);
         let kb = bp.layout().k_range(0, 0, 0).start;
         bp.page_mut(p0).data[kb] = 42;
         bp.page_mut(p0).scale_k[0] = 1.5;
         // simulate the prefix index holding a reference
         bp.incref(p0);
-        let (p1, s1) = t.claim_slot(0, &mut bp, |_| {});
+        let (p1, s1, k1) = t.claim_slot(0, &mut bp, |_| {});
         assert_ne!(p0, p1, "shared page must be copied on write");
         assert_eq!(s1, 1);
+        assert_eq!(k1, ClaimKind::Cow);
         assert_eq!(bp.page(p1).data[kb], 42, "filled prefix copied");
         assert_eq!(bp.page(p1).scale_k[0], 1.5);
         assert_eq!(bp.refcount(p0), 1, "session ref moved off the old page");
         // subsequent appends stay on the private copy
-        let (p2, _) = t.claim_slot(0, &mut bp, |_| {});
+        let (p2, _, k2) = t.claim_slot(0, &mut bp, |_| {});
         assert_eq!(p1, p2);
+        assert_eq!(k2, ClaimKind::Existing);
         t.release(&mut bp);
         bp.decref(p0);
         assert_eq!(bp.pages_in_use(), 0);
@@ -206,10 +232,11 @@ mod tests {
     fn frozen_private_page_also_copies() {
         let mut bp = pool();
         let mut t = PageTable::new(2);
-        let (p0, _) = t.claim_slot(0, &mut bp, |_| {});
+        let (p0, _, _) = t.claim_slot(0, &mut bp, |_| {});
         bp.page_mut(p0).frozen = true;
-        let (p1, _) = t.claim_slot(0, &mut bp, |_| {});
+        let (p1, _, k1) = t.claim_slot(0, &mut bp, |_| {});
         assert_ne!(p0, p1);
+        assert_eq!(k1, ClaimKind::Cow);
         assert_eq!(bp.pages_in_use(), 1, "old private page freed by COW");
         t.release(&mut bp);
     }
@@ -225,9 +252,10 @@ mod tests {
         assert_eq!(t.fill(1), 3);
         assert_eq!(t.filled_on(0, 0, 4), 3);
         // next claim lands on slot 3 of the shared page → COW
-        let (p, local) = t.claim_slot(0, &mut bp, |_| {});
+        let (p, local, kind) = t.claim_slot(0, &mut bp, |_| {});
         assert_eq!(local, 3);
         assert_ne!(p, ext);
+        assert_eq!(kind, ClaimKind::Cow);
         t.release(&mut bp);
         bp.decref(ext);
         assert_eq!(bp.pages_in_use(), 0);

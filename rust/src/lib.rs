@@ -31,6 +31,9 @@
 //!   hosts provisioned with the AOT toolchain.
 //! * [`coordinator`] — serving coordinator: request router, dynamic
 //!   batcher, prefill/decode scheduler, metrics.
+//! * [`obs`] — observability: bounded ring-buffer request tracing,
+//!   HDR-style latency histograms, Chrome-trace (Perfetto) and
+//!   Prometheus exporters threaded through the serving path.
 //! * [`io`] — tensor file format + zstd/entropy coding of β side-information.
 //! * [`util`] — RNG, statistics, a small property-testing and benching
 //!   harness (criterion/proptest are unavailable offline).
@@ -42,6 +45,7 @@ pub mod io;
 pub mod kvpool;
 pub mod lattice;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod rotation;
 #[cfg(feature = "xla")]

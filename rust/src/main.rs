@@ -8,7 +8,12 @@
 //!     evaluate perplexity of a quantized model. Flag defaults follow
 //!     `EngineOptions::default()`.
 //! nestquant serve <model> [--requests N] [--batch B] [quant flags]
-//!     run the serving coordinator demo (pooled, coded KV cache)
+//!               [--trace-out FILE] [--metrics-out FILE] [--metrics-listen ADDR]
+//!     run the serving coordinator demo (pooled, coded KV cache).
+//!     `--trace-out` writes a Chrome trace-event JSON of the run (open
+//!     in ui.perfetto.dev), `--metrics-out` a Prometheus text snapshot,
+//!     and `--metrics-listen 127.0.0.1:PORT` serves live Prometheus
+//!     scrapes while the demo runs.
 //! nestquant generate <model> <prompt> [--tokens N] [quant flags]
 //!     generate text with the quantized engine
 //! ```
@@ -190,6 +195,19 @@ fn main() -> Result<()> {
                     ..Default::default()
                 },
             );
+            // live Prometheus scrape endpoint, served while the demo runs
+            let listener = match flag(&args, "--metrics-listen") {
+                Some(addr) => {
+                    let m = srv.metrics.clone();
+                    let l = nestquant::obs::MetricsServer::serve_text(&addr, move || {
+                        m.prometheus_text()
+                    })
+                    .with_context(|| format!("bind metrics listener on '{addr}'"))?;
+                    println!("metrics: http://{}/metrics", l.local_addr());
+                    Some(l)
+                }
+                None => None,
+            };
             let t0 = std::time::Instant::now();
             for i in 0..n_req {
                 let start = (i * 37) % (w.val_tokens.len() - 32);
@@ -217,10 +235,30 @@ fn main() -> Result<()> {
             }
             println!("wall: {:.2}s", t0.elapsed().as_secs_f64());
             println!("{}", srv.metrics.report());
+            let trace = srv.trace.clone();
+            let metrics = srv.metrics.clone();
             let report = srv.shutdown();
             if !report.drained {
                 println!("shutdown timed out: {} request(s) undrained", report.undrained);
             }
+            // export after shutdown so the journal includes the drain
+            // and the snapshot carries the final pool-idle audit
+            if let Some(path) = flag(&args, "--metrics-out") {
+                std::fs::write(&path, metrics.prometheus_text())
+                    .with_context(|| format!("write metrics snapshot '{path}'"))?;
+                println!("metrics snapshot written to {path}");
+            }
+            if let Some(path) = flag(&args, "--trace-out") {
+                let json = nestquant::obs::chrome_trace_json(&trace.snapshot());
+                std::fs::write(&path, json)
+                    .with_context(|| format!("write trace '{path}'"))?;
+                println!(
+                    "trace written to {path} ({} events, {} dropped; open in ui.perfetto.dev)",
+                    trace.len(),
+                    trace.dropped()
+                );
+            }
+            drop(listener);
         }
         "generate" => {
             let model = args
@@ -267,7 +305,8 @@ fn main() -> Result<()> {
                  usage:\n  nestquant exp <id|all>\n  nestquant ppl <model> \
                  [--regime {}] [--method {}]\n      [--q Q] [--k K] [--uniform-bits B] \
                  [--windows N] [--plan FILE]\n  \
-                 nestquant serve <model> [--requests N] [--batch B] [quant flags]\n  \
+                 nestquant serve <model> [--requests N] [--batch B] [quant flags]\n      \
+                 [--trace-out FILE] [--metrics-out FILE] [--metrics-listen ADDR]\n  \
                  nestquant generate <model> <prompt> [--tokens N] [quant flags]\n\
                  `serve` and `generate` take the same quant flags as `ppl`, \
                  including --plan FILE",

@@ -32,6 +32,7 @@ use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector, Strategy};
 use crate::lattice::voronoi::VoronoiCodec;
 use crate::model::forward::{embed_into, gelu, rmsnorm, rmsnorm_rows, softmax_inplace, window_nll};
 use crate::model::weights::ModelWeights;
+use crate::obs::trace::{EventKind, SiteTag, Trace, TRACK_ENGINE};
 use crate::quant::gemm::GemmScratch;
 use crate::quant::ldlq::hessian_from_activations;
 use crate::quant::matrix::QuantizedMatrix;
@@ -1417,6 +1418,32 @@ impl Engine {
         scratch: &mut StepScratch,
         logits: &mut Mat,
     ) {
+        self.forward_step_fused_traced(tokens, positions, caches, scratch, logits, None)
+    }
+
+    /// [`Self::forward_step_fused`] with optional per-site GEMM timing:
+    /// `Some(trace)` records one `SiteGemm` span per (layer, linear) —
+    /// wq/wk/wv/wo/w_up/w_down per layer plus the lm_head (reported with
+    /// `layer = n_layer`) — on the engine track. The timing reads are
+    /// two clock calls per span and the ring push never allocates, so
+    /// the traced step stays allocation-free; callers that sample (the
+    /// serving loop) pass `None` on unsampled steps, which compiles down
+    /// to the untraced path.
+    pub fn forward_step_fused_traced(
+        &self,
+        tokens: &[i32],
+        positions: &[usize],
+        caches: &mut [&mut SessionKv],
+        scratch: &mut StepScratch,
+        logits: &mut Mat,
+        trace: Option<&Trace>,
+    ) {
+        #[inline]
+        fn gemm_span(trace: Option<&Trace>, layer: u16, site: SiteTag, start: Option<u64>) {
+            if let (Some(tr), Some(t0)) = (trace, start) {
+                tr.span(TRACK_ENGINE, EventKind::SiteGemm { layer, site }, t0);
+            }
+        }
         let n = tokens.len();
         assert_eq!(positions.len(), n, "one position per token");
         assert_eq!(caches.len(), n, "one cache per token");
@@ -1449,10 +1476,17 @@ impl Engine {
 
         embed_into(&self.tok_emb, &self.pos_emb, tokens, positions, &mut scratch.x);
         for (li, l) in self.layers.iter().enumerate() {
+            let lt = li as u16;
             rmsnorm_rows(&scratch.x, &l.ln1, &mut scratch.normed);
+            let t0 = trace.map(Trace::now);
             l.wq.forward_into(&scratch.normed, &mut scratch.q, &mut scratch.lin, 1);
+            gemm_span(trace, lt, SiteTag::Q, t0);
+            let t0 = trace.map(Trace::now);
             l.wk.forward_into(&scratch.normed, &mut scratch.k, &mut scratch.lin, 1);
+            gemm_span(trace, lt, SiteTag::K, t0);
+            let t0 = trace.map(Trace::now);
             l.wv.forward_into(&scratch.normed, &mut scratch.v, &mut scratch.lin, 1);
+            gemm_span(trace, lt, SiteTag::V, t0);
             reshape(&mut scratch.att, n, d);
             for (s, cache) in caches.iter_mut().enumerate() {
                 for h in 0..cfg.n_head {
@@ -1484,18 +1518,24 @@ impl Engine {
                     }
                 }
             }
+            let t0 = trace.map(Trace::now);
             l.wo.forward_into(&scratch.att, &mut scratch.proj, &mut scratch.lin, 1);
+            gemm_span(trace, lt, SiteTag::O, t0);
             for (xv, &pv) in scratch.x.data.iter_mut().zip(scratch.proj.data.iter()) {
                 *xv += pv;
             }
             rmsnorm_rows(&scratch.x, &l.ln2, &mut scratch.normed);
+            let t0 = trace.map(Trace::now);
             l.w_up
                 .forward_into(&scratch.normed, &mut scratch.hmid, &mut scratch.lin, 1);
+            gemm_span(trace, lt, SiteTag::Up, t0);
             for v in scratch.hmid.data.iter_mut() {
                 *v = gelu(*v);
             }
+            let t0 = trace.map(Trace::now);
             l.w_down
                 .forward_into(&scratch.hmid, &mut scratch.proj, &mut scratch.lin, 1);
+            gemm_span(trace, lt, SiteTag::Down, t0);
             for (xv, &pv) in scratch.x.data.iter_mut().zip(scratch.proj.data.iter()) {
                 *xv += pv;
             }
@@ -1506,7 +1546,9 @@ impl Engine {
             cache.note_token(t);
         }
         rmsnorm_rows(&scratch.x, &self.final_norm, &mut scratch.normed);
+        let t0 = trace.map(Trace::now);
         self.head.forward_into(&scratch.normed, logits, &mut scratch.lin, 1);
+        gemm_span(trace, self.layers.len() as u16, SiteTag::Head, t0);
     }
 
     /// Perplexity over non-overlapping windows.

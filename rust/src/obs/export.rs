@@ -1,0 +1,661 @@
+//! Trace and metrics exporters: Chrome trace-event JSON (loadable in
+//! Perfetto / `chrome://tracing`) and Prometheus text exposition
+//! (format 0.0.4), plus shape validators used by `trace-smoke` tests
+//! and a std-only TCP listener for scrape-style metric serving.
+//!
+//! JSON is hand-rolled (the offline vendor set has no serde), mirroring
+//! the `util::bench` BENCH_*.json writer. The validators include a
+//! minimal recursive-descent JSON well-formedness checker so the smoke
+//! test can assert "Perfetto will load this" without a JSON dependency.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::histogram::LogHistogram;
+use super::trace::{Event, EventKind, REQ_TRACK_BASE, TRACK_ENGINE, TRACK_POOL, TRACK_WORKER};
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn track_name(track: u64) -> String {
+    match track {
+        TRACK_WORKER => "worker".to_string(),
+        TRACK_POOL => "kvpool".to_string(),
+        TRACK_ENGINE => "engine".to_string(),
+        t if t >= REQ_TRACK_BASE => format!("req-{}", t - REQ_TRACK_BASE),
+        t => format!("track-{t}"),
+    }
+}
+
+fn event_args(kind: EventKind) -> String {
+    match kind {
+        EventKind::Admitted {
+            queue_wait_us,
+            replayed,
+        } => format!("{{\"queue_wait_us\":{queue_wait_us},\"replayed\":{replayed}}}"),
+        EventKind::Prefill { tokens } => format!("{{\"tokens\":{tokens}}}"),
+        EventKind::DecodeStep { batch } => format!("{{\"batch\":{batch}}}"),
+        EventKind::SiteGemm { layer, site } => {
+            format!("{{\"layer\":{layer},\"site\":\"{}\"}}", site.name())
+        }
+        EventKind::Done { tokens } => format!("{{\"tokens\":{tokens}}}"),
+        EventKind::ShutdownDrain { undrained } => format!("{{\"undrained\":{undrained}}}"),
+        _ => "{}".to_string(),
+    }
+}
+
+/// Render a journal snapshot as Chrome trace-event JSON: one process
+/// (`pid` 1), one thread per track, complete (`"X"`) events for spans
+/// and thread-scoped instant (`"i"`) events for the rest. The output
+/// loads directly in Perfetto (ui.perfetto.dev) or `chrome://tracing`.
+pub fn chrome_trace_json(events: &[Event]) -> String {
+    let mut out = String::with_capacity(events.len() * 96 + 256);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    let mut push = |out: &mut String, item: String| {
+        if !std::mem::take(&mut first) {
+            out.push(',');
+        }
+        out.push_str(&item);
+    };
+
+    push(
+        &mut out,
+        "{\"ph\":\"M\",\"pid\":1,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"nestquant-serve\"}}"
+            .to_string(),
+    );
+    // one thread_name metadata record per distinct track, in order of
+    // first appearance, so Perfetto rows are labeled
+    let mut seen: Vec<u64> = Vec::new();
+    for e in events {
+        if !seen.contains(&e.track) {
+            seen.push(e.track);
+            push(
+                &mut out,
+                format!(
+                    "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    e.track,
+                    json_escape(&track_name(e.track))
+                ),
+            );
+        }
+    }
+
+    for e in events {
+        let (ph, extra) = if e.dur_us > 0 {
+            ("X", format!(",\"dur\":{}", e.dur_us))
+        } else {
+            ("i", ",\"s\":\"t\"".to_string())
+        };
+        push(
+            &mut out,
+            format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{ph}\",\"ts\":{},\
+                 \"pid\":1,\"tid\":{}{extra},\"args\":{}}}",
+                e.kind.name(),
+                e.kind.category(),
+                e.ts_us,
+                e.track,
+                event_args(e.kind)
+            ),
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Prometheus `le` bucket ladder in microseconds: powers of two from
+/// 64 µs to ~67 s. Aligned with [`LogHistogram`] octave boundaries so
+/// cumulative counts are bucket-floor-conservative and monotone.
+pub const PROM_BOUNDS_US: [u64; 21] = [
+    64,
+    128,
+    256,
+    512,
+    1 << 10,
+    1 << 11,
+    1 << 12,
+    1 << 13,
+    1 << 14,
+    1 << 15,
+    1 << 16,
+    1 << 17,
+    1 << 18,
+    1 << 19,
+    1 << 20,
+    1 << 21,
+    1 << 22,
+    1 << 23,
+    1 << 24,
+    1 << 25,
+    1 << 26,
+];
+
+/// Incremental Prometheus text-exposition writer. Durations are
+/// exported in **seconds** (Prometheus convention); the histogram
+/// method expands a [`LogHistogram`] into the standard
+/// `_bucket`/`_sum`/`_count` triple over [`PROM_BOUNDS_US`].
+#[derive(Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n"));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.header(name, help, "counter");
+        self.out.push_str(&format!("{name} {value}\n"));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        self.out.push_str(&format!("{name} {value}\n"));
+    }
+
+    /// A gauge family with one `{label_key="label_val"}` sample per
+    /// entry.
+    pub fn gauge_labeled(
+        &mut self,
+        name: &str,
+        help: &str,
+        label_key: &str,
+        samples: &[(&str, f64)],
+    ) {
+        self.header(name, help, "gauge");
+        for (label_val, value) in samples {
+            self.out
+                .push_str(&format!("{name}{{{label_key}=\"{label_val}\"}} {value}\n"));
+        }
+    }
+
+    pub fn histogram(&mut self, name: &str, help: &str, h: &LogHistogram) {
+        self.header(name, help, "histogram");
+        for &bound_us in PROM_BOUNDS_US.iter() {
+            let le = bound_us as f64 / 1e6;
+            self.out.push_str(&format!(
+                "{name}_bucket{{le=\"{le}\"}} {}\n",
+                h.count_le(bound_us)
+            ));
+        }
+        self.out
+            .push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+        self.out
+            .push_str(&format!("{name}_sum {}\n", h.sum_us() as f64 / 1e6));
+        self.out.push_str(&format!("{name}_count {}\n", h.count()));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+// ---------------------------------------------------------------------
+// shape validators (used by the trace-smoke test)
+// ---------------------------------------------------------------------
+
+/// Minimal recursive-descent JSON well-formedness check — enough to
+/// guarantee a JSON parser (and therefore Perfetto's loader) will accept
+/// the document structurally.
+pub fn json_well_formed(s: &str) -> Result<(), String> {
+    let b = s.as_bytes();
+    let mut p = 0usize;
+    parse_value(b, &mut p)?;
+    skip_ws(b, &mut p);
+    if p != b.len() {
+        return Err(format!("trailing bytes at offset {p}"));
+    }
+    Ok(())
+}
+
+fn skip_ws(b: &[u8], p: &mut usize) {
+    while *p < b.len() && matches!(b[*p], b' ' | b'\t' | b'\n' | b'\r') {
+        *p += 1;
+    }
+}
+
+fn parse_value(b: &[u8], p: &mut usize) -> Result<(), String> {
+    skip_ws(b, p);
+    match b.get(*p) {
+        Some(b'{') => parse_object(b, p),
+        Some(b'[') => parse_array(b, p),
+        Some(b'"') => parse_string(b, p),
+        Some(b't') => parse_lit(b, p, "true"),
+        Some(b'f') => parse_lit(b, p, "false"),
+        Some(b'n') => parse_lit(b, p, "null"),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => parse_number(b, p),
+        Some(c) => Err(format!("unexpected byte {:?} at offset {p}", *c as char)),
+        None => Err("unexpected end of input".to_string()),
+    }
+}
+
+fn parse_lit(b: &[u8], p: &mut usize, lit: &str) -> Result<(), String> {
+    if b[*p..].starts_with(lit.as_bytes()) {
+        *p += lit.len();
+        Ok(())
+    } else {
+        Err(format!("bad literal at offset {p}"))
+    }
+}
+
+fn parse_number(b: &[u8], p: &mut usize) -> Result<(), String> {
+    let start = *p;
+    while *p < b.len() && matches!(b[*p], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+        *p += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*p]).map_err(|e| e.to_string())?;
+    text.parse::<f64>()
+        .map(|_| ())
+        .map_err(|_| format!("bad number {text:?} at offset {start}"))
+}
+
+fn parse_string(b: &[u8], p: &mut usize) -> Result<(), String> {
+    debug_assert_eq!(b.get(*p), Some(&b'"'));
+    *p += 1;
+    while *p < b.len() {
+        match b[*p] {
+            b'"' => {
+                *p += 1;
+                return Ok(());
+            }
+            b'\\' => {
+                *p += 1;
+                match b.get(*p) {
+                    Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => *p += 1,
+                    Some(b'u') => {
+                        if b.len() < *p + 5
+                            || !b[*p + 1..*p + 5].iter().all(u8::is_ascii_hexdigit)
+                        {
+                            return Err(format!("bad \\u escape at offset {p}"));
+                        }
+                        *p += 5;
+                    }
+                    _ => return Err(format!("bad escape at offset {p}")),
+                }
+            }
+            _ => *p += 1,
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn parse_object(b: &[u8], p: &mut usize) -> Result<(), String> {
+    *p += 1; // '{'
+    skip_ws(b, p);
+    if b.get(*p) == Some(&b'}') {
+        *p += 1;
+        return Ok(());
+    }
+    loop {
+        skip_ws(b, p);
+        if b.get(*p) != Some(&b'"') {
+            return Err(format!("expected object key at offset {p}"));
+        }
+        parse_string(b, p)?;
+        skip_ws(b, p);
+        if b.get(*p) != Some(&b':') {
+            return Err(format!("expected ':' at offset {p}"));
+        }
+        *p += 1;
+        parse_value(b, p)?;
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b',') => *p += 1,
+            Some(b'}') => {
+                *p += 1;
+                return Ok(());
+            }
+            _ => return Err(format!("expected ',' or '}}' at offset {p}")),
+        }
+    }
+}
+
+fn parse_array(b: &[u8], p: &mut usize) -> Result<(), String> {
+    *p += 1; // '['
+    skip_ws(b, p);
+    if b.get(*p) == Some(&b']') {
+        *p += 1;
+        return Ok(());
+    }
+    loop {
+        parse_value(b, p)?;
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b',') => *p += 1,
+            Some(b']') => {
+                *p += 1;
+                return Ok(());
+            }
+            _ => return Err(format!("expected ',' or ']' at offset {p}")),
+        }
+    }
+}
+
+/// Validate a Chrome trace document: well-formed JSON with a
+/// `traceEvents` array whose records carry `ph`/`ts`/`pid` fields.
+pub fn validate_chrome_trace(s: &str) -> Result<(), String> {
+    json_well_formed(s)?;
+    if !s.contains("\"traceEvents\"") {
+        return Err("missing traceEvents key".to_string());
+    }
+    for field in ["\"ph\"", "\"ts\"", "\"pid\""] {
+        if !s.contains(field) {
+            return Err(format!("no event carries {field}"));
+        }
+    }
+    Ok(())
+}
+
+/// Validate Prometheus text exposition shape: every non-empty line is a
+/// `# HELP`/`# TYPE` comment or a `name[{labels}] value` sample whose
+/// value parses as a float; every `TYPE histogram` family has
+/// `_bucket`, `_sum`, and `_count` samples including `le="+Inf"`.
+pub fn validate_prometheus(s: &str) -> Result<(), String> {
+    let mut histograms: Vec<String> = Vec::new();
+    for (i, line) in s.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if !(rest.starts_with("HELP ") || rest.starts_with("TYPE ")) {
+                return Err(format!("line {}: unknown comment {line:?}", i + 1));
+            }
+            if let Some(t) = rest.strip_prefix("TYPE ") {
+                let mut it = t.split_whitespace();
+                if let (Some(name), Some("histogram")) = (it.next(), it.next()) {
+                    histograms.push(name.to_string());
+                }
+            }
+            continue;
+        }
+        // sample line: name or name{...}, then a float value
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value in {line:?}", i + 1))?;
+        value
+            .parse::<f64>()
+            .map_err(|_| format!("line {}: bad value {value:?}", i + 1))?;
+        let name = series.split('{').next().unwrap_or("");
+        let base = name
+            .trim_end_matches("_bucket")
+            .trim_end_matches("_sum")
+            .trim_end_matches("_count");
+        if base.is_empty()
+            || !base
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            || base.starts_with(|c: char| c.is_ascii_digit())
+        {
+            return Err(format!("line {}: bad metric name {name:?}", i + 1));
+        }
+    }
+    for h in &histograms {
+        for (suffix, probe) in [
+            ("_bucket", format!("{h}_bucket{{le=\"+Inf\"}} ")),
+            ("_sum", format!("{h}_sum ")),
+            ("_count", format!("{h}_count ")),
+        ] {
+            if !s.contains(&probe) {
+                return Err(format!("histogram {h} missing {suffix} sample"));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// std-only TCP metrics listener
+// ---------------------------------------------------------------------
+
+/// A tiny scrape endpoint: serves `render()` as an HTTP 200 text/plain
+/// response to every connection. Std-only (no HTTP library); one
+/// background thread with a non-blocking accept loop.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve `render()` on every
+    /// connection until [`Self::stop`] or drop.
+    pub fn serve_text<F>(addr: &str, render: F) -> std::io::Result<MetricsServer>
+    where
+        F: Fn() -> String + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut conn, _)) => {
+                        let _ = conn.set_nonblocking(false);
+                        let _ = conn.set_read_timeout(Some(Duration::from_millis(200)));
+                        // drain whatever request bytes arrive; we answer
+                        // every connection the same way
+                        let mut buf = [0u8; 1024];
+                        let _ = conn.read(&mut buf);
+                        let body = render();
+                        let resp = format!(
+                            "HTTP/1.1 200 OK\r\n\
+                             Content-Type: text/plain; version=0.0.4\r\n\
+                             Content-Length: {}\r\n\
+                             Connection: close\r\n\r\n{}",
+                            body.len(),
+                            body
+                        );
+                        let _ = conn.write_all(resp.as_bytes());
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            }
+        });
+        Ok(MetricsServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{req_track, SiteTag, Trace};
+
+    fn demo_trace() -> Trace {
+        let t = Trace::manual(256);
+        t.instant(req_track(0), EventKind::Queued);
+        t.clock().advance_us(40);
+        t.instant(
+            req_track(0),
+            EventKind::Admitted {
+                queue_wait_us: 40,
+                replayed: false,
+            },
+        );
+        let t0 = t.now();
+        t.clock().advance_us(500);
+        t.span(req_track(0), EventKind::Prefill { tokens: 9 }, t0);
+        let t1 = t.now();
+        t.clock().advance_us(120);
+        t.span(TRACK_WORKER, EventKind::DecodeStep { batch: 2 }, t1);
+        t.span(
+            TRACK_ENGINE,
+            EventKind::SiteGemm {
+                layer: 1,
+                site: SiteTag::Up,
+            },
+            t1,
+        );
+        t.instant(TRACK_POOL, EventKind::PageAlloc);
+        t.instant(req_track(0), EventKind::Done { tokens: 4 });
+        t
+    }
+
+    #[test]
+    fn chrome_trace_is_well_formed_and_shaped() {
+        let json = chrome_trace_json(&demo_trace().snapshot());
+        validate_chrome_trace(&json).unwrap();
+        // spans carry durations, instants carry scope, metadata labels rows
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"dur\":500"));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("req-0"));
+        assert!(json.contains("\"site\":\"w_up\""));
+    }
+
+    #[test]
+    fn empty_trace_still_exports_valid_json() {
+        let json = chrome_trace_json(&[]);
+        validate_chrome_trace(&json).unwrap();
+    }
+
+    #[test]
+    fn prom_writer_output_validates() {
+        let mut h = LogHistogram::new();
+        for v in [50u64, 120, 900, 15_000, 2_000_000] {
+            h.record(v);
+        }
+        let mut w = PromWriter::new();
+        w.counter("nestquant_requests_total", "requests completed", 5);
+        w.gauge("nestquant_pool_bytes", "pool bytes in use", 123456.0);
+        w.gauge_labeled(
+            "nestquant_pool_lane_bytes",
+            "per-lane pool bytes",
+            "lane",
+            &[("fp32", 10.0), ("uniform", 20.0), ("nested", 30.0)],
+        );
+        w.histogram("nestquant_ttft_seconds", "time to first token", &h);
+        let text = w.finish();
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("nestquant_ttft_seconds_bucket{le=\"+Inf\"} 5"));
+        assert!(text.contains("nestquant_ttft_seconds_count 5"));
+        assert!(text.contains("lane=\"nested\""));
+        // cumulative bucket counts are monotone non-decreasing
+        let counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("nestquant_ttft_seconds_bucket"))
+            .filter_map(|l| l.rsplit_once(' ').and_then(|(_, v)| v.parse().ok()))
+            .collect();
+        assert_eq!(counts.len(), PROM_BOUNDS_US.len() + 1);
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn json_checker_accepts_valid_and_rejects_broken() {
+        for good in [
+            "{}",
+            "[]",
+            "{\"a\":[1,2.5,-3e2,true,false,null,\"x\\n\\u00e9\"]}",
+            "  {\"nested\":{\"deep\":[{}]}}  ",
+        ] {
+            json_well_formed(good).unwrap();
+        }
+        for bad in [
+            "{",
+            "{\"a\":}",
+            "[1,]",
+            "{\"a\" 1}",
+            "{\"a\":1} trailing",
+            "\"unterminated",
+            "{\"bad\\escape\":1}",
+            "nope",
+        ] {
+            assert!(json_well_formed(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn prometheus_validator_rejects_malformed() {
+        assert!(validate_prometheus("metric_a 1\n").is_ok());
+        assert!(validate_prometheus("bad line without value-number x\n").is_err());
+        assert!(validate_prometheus("9leading_digit 1\n").is_err());
+        assert!(validate_prometheus("# BOGUS comment\n").is_err());
+        // a TYPE histogram with no +Inf bucket is a shape error
+        let partial = "# TYPE h histogram\nh_bucket{le=\"0.1\"} 1\nh_sum 0.1\nh_count 1\n";
+        assert!(validate_prometheus(partial).is_err());
+    }
+
+    #[test]
+    fn metrics_listener_serves_rendered_text() {
+        use std::net::TcpStream;
+        let srv = match MetricsServer::serve_text("127.0.0.1:0", || "m_total 7\n".to_string()) {
+            Ok(s) => s,
+            // sandboxed environments may forbid binding; the feature is
+            // optional, so skip rather than fail
+            Err(_) => return,
+        };
+        let addr = srv.local_addr();
+        let mut resp = String::new();
+        {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n")
+                .unwrap();
+            conn.read_to_string(&mut resp).unwrap();
+        }
+        assert!(resp.starts_with("HTTP/1.1 200 OK"));
+        assert!(resp.contains("text/plain"));
+        assert!(resp.ends_with("m_total 7\n"));
+        srv.stop();
+    }
+}

@@ -1,0 +1,361 @@
+//! Fixed-size log-bucketed latency histograms (HDR-style).
+//!
+//! A [`LogHistogram`] stores microsecond samples in a **bounded** bucket
+//! array: exact 1 µs buckets below 16 µs, then 16 sub-buckets per
+//! power-of-two octave up to `u64::MAX`. Memory is a fixed
+//! [`LogHistogram::N_BUCKETS`] counters regardless of how many samples
+//! are recorded — this is what replaced the serving coordinator's
+//! unbounded `Vec<f64>` of request latencies. The bucketing guarantees a
+//! relative quantile error below 1/16 (6.25%): every sample lands in a
+//! bucket whose width is less than 1/16 of its lower bound.
+//!
+//! Histograms are mergeable (element-wise bucket addition — the parallel
+//! aggregation property Prometheus and HDR both rely on), and the
+//! quantile estimator is rank-exact at the bucket level: the reported
+//! value is the containing bucket's upper bound clamped to the true
+//! maximum, so `quantile(q)` never under-reports and over-reports by at
+//! most one bucket width. `util::propcheck` pins this against exact
+//! sorted quantiles.
+
+/// Sub-buckets per octave (and the linear range below the first octave).
+const SUBS: usize = 16;
+const SUBS_LOG: u32 = 4;
+
+/// Bounded log-bucketed histogram over `u64` microsecond values.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// Total bucket count: 16 exact sub-16 µs buckets + 16 sub-buckets
+    /// for each of the 60 octaves `[2^4, 2^64)`. Fixed at construction —
+    /// the histogram never grows.
+    pub const N_BUCKETS: usize = SUBS + (64 - SUBS_LOG as usize) * SUBS;
+
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0; Self::N_BUCKETS],
+            count: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+        }
+    }
+
+    fn bucket_of(v: u64) -> usize {
+        if v < SUBS as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros(); // >= SUBS_LOG
+        let shift = msb - SUBS_LOG;
+        SUBS + (shift as usize) * SUBS + ((v >> shift) as usize & (SUBS - 1))
+    }
+
+    /// Inclusive `[lower, upper]` value range of bucket `i`.
+    fn bucket_bounds(i: usize) -> (u64, u64) {
+        if i < SUBS {
+            return (i as u64, i as u64);
+        }
+        let octave = ((i - SUBS) / SUBS) as u32;
+        let sub = ((i - SUBS) % SUBS) as u64;
+        let lower = (SUBS as u64 + sub) << octave;
+        let width = 1u64 << octave;
+        (lower, lower + (width - 1))
+    }
+
+    /// Record one sample (microseconds).
+    pub fn record(&mut self, us: u64) {
+        self.counts[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Record a [`std::time::Duration`] sample.
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Element-wise merge (bucket addition) — order-independent, the
+    /// property that makes per-thread or per-shard histograms cheap to
+    /// aggregate.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn max_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.max_us
+        }
+    }
+
+    pub fn min_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_us
+        }
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Rank-based quantile estimate in microseconds: the value of rank
+    /// `ceil(q·count)` (1-based, nearest-rank definition), reported as
+    /// its bucket's upper bound clamped to the recorded maximum. Never
+    /// below the exact nearest-rank quantile; above it by at most one
+    /// bucket width (< 1/16 relative).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_bounds(i).1.min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Samples with value ≤ `bound_us`, counting whole buckets (exact
+    /// whenever `bound_us` is a bucket boundary — in particular at every
+    /// power of two ≥ 16, which is what the Prometheus `le` ladder
+    /// uses); otherwise a conservative undercount by part of one bucket.
+    pub fn count_le(&self, bound_us: u64) -> u64 {
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if Self::bucket_bounds(i).1 <= bound_us {
+                cum += c;
+            }
+        }
+        cum
+    }
+
+    /// The standard percentile summary in milliseconds.
+    pub fn summary_ms(&self) -> HistSummary {
+        HistSummary {
+            count: self.count,
+            p50_ms: self.quantile_us(0.50) as f64 / 1e3,
+            p90_ms: self.quantile_us(0.90) as f64 / 1e3,
+            p99_ms: self.quantile_us(0.99) as f64 / 1e3,
+            max_ms: self.max_us() as f64 / 1e3,
+            mean_ms: self.mean_us() / 1e3,
+        }
+    }
+}
+
+/// p50/p90/p99/max/mean snapshot of one histogram, in milliseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistSummary {
+    pub count: u64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl HistSummary {
+    /// `p50/p90/p99/max` rendered compactly for the serving report line.
+    pub fn render(&self) -> String {
+        format!(
+            "p50={:.1} p90={:.1} p99={:.1} max={:.1}ms",
+            self.p50_ms, self.p90_ms, self.p99_ms, self.max_ms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    /// Exact nearest-rank quantile of a sorted sample set.
+    fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    #[test]
+    fn bucket_layout_is_contiguous_and_ordered() {
+        // every value maps into a bucket whose bounds contain it, bucket
+        // ranges tile the u64 line in order, and relative width < 1/16
+        let mut prev_upper: Option<u64> = None;
+        for i in 0..LogHistogram::N_BUCKETS {
+            let (lo, hi) = LogHistogram::bucket_bounds(i);
+            assert!(lo <= hi, "bucket {i}: {lo} > {hi}");
+            if let Some(p) = prev_upper {
+                assert_eq!(lo, p.wrapping_add(1), "gap/overlap at bucket {i}");
+            }
+            prev_upper = Some(hi);
+            if lo >= SUBS as u64 {
+                assert!(
+                    (hi - lo) as f64 / lo as f64 <= 1.0 / SUBS as f64,
+                    "bucket {i} too wide: [{lo}, {hi}]"
+                );
+            }
+        }
+        assert_eq!(prev_upper, Some(u64::MAX), "buckets must cover all of u64");
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 1000, 1 << 20, u64::MAX] {
+            let i = LogHistogram::bucket_of(v);
+            let (lo, hi) = LogHistogram::bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "value {v} outside its bucket [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn quantiles_match_exact_within_bucket_error_propcheck() {
+        // the satellite acceptance test: histogram quantiles vs exact
+        // sorted nearest-rank quantiles, within the bucket error bound
+        // (never below; above by at most lower/16 + 1)
+        propcheck::check("histogram-quantiles", 24, 0x41570, |rng| {
+            let n = 1 + rng.below(3000);
+            // mix magnitudes so many octaves are exercised
+            let mut xs: Vec<u64> = (0..n)
+                .map(|_| {
+                    let octave = rng.below(30) as u32;
+                    (rng.below(1 << 16) as u64) << octave >> 12
+                })
+                .collect();
+            let mut h = LogHistogram::new();
+            for &x in &xs {
+                h.record(x);
+            }
+            xs.sort_unstable();
+            for &q in &[0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                let exact = exact_quantile(&xs, q);
+                let est = h.quantile_us(q);
+                if est < exact {
+                    return Err(format!("q={q}: estimate {est} below exact {exact}"));
+                }
+                let slack = exact / SUBS as u64 + 1;
+                if est > exact + slack {
+                    return Err(format!(
+                        "q={q}: estimate {est} above exact {exact} + slack {slack}"
+                    ));
+                }
+            }
+            if h.max_us() != *xs.last().ok_or("empty")? {
+                return Err("max is exact by construction".into());
+            }
+            if h.min_us() != xs[0] {
+                return Err("min is exact by construction".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut whole = LogHistogram::new();
+        for i in 0..500u64 {
+            let v = i * i % 7919;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.sum_us(), whole.sum_us());
+        assert_eq!(a.max_us(), whole.max_us());
+        assert_eq!(a.min_us(), whole.min_us());
+        for q in [0.1, 0.5, 0.77, 0.99] {
+            assert_eq!(a.quantile_us(q), whole.quantile_us(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn memory_is_bounded_regardless_of_sample_count() {
+        let mut h = LogHistogram::new();
+        let baseline = h.counts.capacity();
+        for i in 0..200_000u64 {
+            h.record(i % 100_000);
+        }
+        assert_eq!(h.count(), 200_000);
+        assert_eq!(
+            h.counts.capacity(),
+            baseline,
+            "bucket storage must never grow"
+        );
+        assert_eq!(baseline, LogHistogram::N_BUCKETS);
+    }
+
+    #[test]
+    fn count_le_is_exact_at_power_of_two_bounds() {
+        let mut h = LogHistogram::new();
+        let xs: Vec<u64> = (0..4096).map(|i| (i * 37) % 10_000).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        for bound in [16u64, 64, 256, 1024, 4096, 8192, 16384] {
+            let exact = xs.iter().filter(|&&x| x <= bound).count() as u64;
+            // power-of-two bounds are bucket boundaries minus one... the
+            // ladder uses `le` semantics on bound-1 of the next octave:
+            // bucket upper bounds are 2^k - 1, so query at bound-1
+            assert_eq!(
+                h.count_le(bound - 1),
+                xs.iter().filter(|&&x| x < bound).count() as u64,
+                "bound {bound}"
+            );
+            assert!(h.count_le(bound) <= exact, "count_le must never overcount");
+        }
+        assert_eq!(h.count_le(u64::MAX), h.count());
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.min_us(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        let s = h.summary_ms();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99_ms, 0.0);
+    }
+}

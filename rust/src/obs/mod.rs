@@ -1,0 +1,42 @@
+//! Observability: request-level tracing, bounded latency histograms,
+//! and Perfetto/Prometheus export for the serving stack.
+//!
+//! The serving path needs *attribution* — which phase, which site,
+//! which lane burns the time — not just end-of-run counters. This
+//! module provides the three pieces and stays strictly bounded in
+//! memory so it can run always-on under production traffic:
+//!
+//! - [`clock::Clock`] — microsecond timestamps, wall-monotonic in
+//!   production and manually advanced in tests, so every trace and
+//!   histogram assertion is deterministic.
+//! - [`trace::Trace`] — a preallocated ring-buffer event journal of
+//!   fixed-size [`trace::Event`] records covering the request
+//!   lifecycle (queued → admitted → prefill → sampled decode steps →
+//!   preempt/fault/expiry → done), kvpool activity (alloc / COW /
+//!   evict / budget overrun), and worker supervision (respawn,
+//!   shutdown drain). Pushes never allocate; the fused decode hot loop
+//!   stays zero-alloc with tracing enabled (pinned by the
+//!   counting-allocator integration test).
+//! - [`histogram::LogHistogram`] — fixed-size HDR-style log-bucketed
+//!   histograms (< 1/16 relative quantile error, mergeable) for queue
+//!   wait, TTFT, inter-token latency, prefill and fused-step time.
+//!   This type replaced the coordinator's unbounded latency `Vec`.
+//! - [`export`] — Chrome trace-event JSON (open in
+//!   <https://ui.perfetto.dev>) and Prometheus text exposition,
+//!   written via `serve --trace-out/--metrics-out` or served from the
+//!   std-only [`export::MetricsServer`]; shape validators back the
+//!   `make trace-smoke` gate.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod clock;
+pub mod export;
+pub mod histogram;
+pub mod trace;
+
+pub use clock::Clock;
+pub use export::{
+    chrome_trace_json, validate_chrome_trace, validate_prometheus, MetricsServer, PromWriter,
+};
+pub use histogram::{HistSummary, LogHistogram};
+pub use trace::{Event, EventKind, SiteTag, Trace, TraceConfig};

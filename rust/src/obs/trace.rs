@@ -1,0 +1,435 @@
+//! Bounded, lock-light trace-event journal for the serving stack.
+//!
+//! A [`Trace`] is a preallocated ring buffer of fixed-size [`Event`]
+//! records. Recording an event is one short mutex hold and **zero
+//! allocations** — the ring is sized at construction and overwrites its
+//! oldest entry when full (the `dropped` counter reports how many were
+//! lost). That makes it safe to leave tracing always-on in the fused
+//! decode hot loop, which the counting-allocator integration test pins.
+//!
+//! The journal records three families of activity on separate tracks
+//! (Perfetto rows after export):
+//! - **request lifecycle** (one track per request id): queued →
+//!   validated → admitted → prefill → sampled fused decode steps →
+//!   preemption / replay / fault / expiry → done;
+//! - **kvpool**: page alloc, copy-on-write, eviction, budget overrun;
+//! - **worker**: respawn after a panic, shutdown drain.
+//!
+//! Per-step and per-site GEMM spans are *sampled* (every Nth fused step,
+//! one atomic decision per step) so steady-state decode pays a few ring
+//! pushes per sampled step and nothing otherwise. Timestamps come from
+//! [`Clock`] — wall-monotonic in production, manually advanced in tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::clock::Clock;
+
+/// Track id for the worker / scheduler row.
+pub const TRACK_WORKER: u64 = 1;
+/// Track id for the KV pool row.
+pub const TRACK_POOL: u64 = 2;
+/// Track id for the engine (per-site GEMM spans) row.
+pub const TRACK_ENGINE: u64 = 3;
+/// Requests get their own rows: track = `REQ_TRACK_BASE + request id`.
+pub const REQ_TRACK_BASE: u64 = 1000;
+
+/// Track id for a request's lifecycle row.
+pub fn req_track(id: u64) -> u64 {
+    REQ_TRACK_BASE.saturating_add(id)
+}
+
+/// Which weight site a sampled GEMM span covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SiteTag {
+    Q,
+    K,
+    V,
+    O,
+    Up,
+    Down,
+    Head,
+}
+
+impl SiteTag {
+    pub fn name(self) -> &'static str {
+        match self {
+            SiteTag::Q => "wq",
+            SiteTag::K => "wk",
+            SiteTag::V => "wv",
+            SiteTag::O => "wo",
+            SiteTag::Up => "w_up",
+            SiteTag::Down => "w_down",
+            SiteTag::Head => "head",
+        }
+    }
+}
+
+/// Fixed-size event payloads — every variant is `Copy` so a ring push
+/// never allocates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// request entered the inbound queue
+    Queued,
+    /// request passed admission validation
+    Validated,
+    /// request failed validation and was rejected
+    Rejected,
+    /// request admitted to the live set (span duration = 0; the queue
+    /// wait is carried in the payload so it survives sampling)
+    Admitted { queue_wait_us: u64, replayed: bool },
+    /// prefill span over the prompt (or replay after preemption)
+    Prefill { tokens: u32 },
+    /// one fused decode step over `batch` live sessions (sampled)
+    DecodeStep { batch: u32 },
+    /// one site's GEMM inside a sampled fused step
+    SiteGemm { layer: u16, site: SiteTag },
+    /// request preempted under pool pressure (pages released, requeued)
+    Preempted,
+    /// request deadline expired (shed from queue or mid-generation)
+    Expired,
+    /// request failed with a contained fault
+    Fault,
+    /// request completed with `tokens` generated
+    Done { tokens: u32 },
+    /// kvpool: fresh page allocated
+    PageAlloc,
+    /// kvpool: shared page copied on write
+    PageCow,
+    /// kvpool: index-only page evicted for headroom
+    PageEvict,
+    /// kvpool: allocation forced the pool past its byte budget
+    BudgetOverrun,
+    /// worker panicked and was respawned by the supervisor
+    WorkerRespawn,
+    /// shutdown drain finished with `undrained` requests unserved
+    ShutdownDrain { undrained: u32 },
+}
+
+impl EventKind {
+    /// Stable event name (Chrome trace `name` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Queued => "queued",
+            EventKind::Validated => "validated",
+            EventKind::Rejected => "rejected",
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::Prefill { .. } => "prefill",
+            EventKind::DecodeStep { .. } => "decode_step",
+            EventKind::SiteGemm { .. } => "site_gemm",
+            EventKind::Preempted => "preempted",
+            EventKind::Expired => "expired",
+            EventKind::Fault => "fault",
+            EventKind::Done { .. } => "done",
+            EventKind::PageAlloc => "page_alloc",
+            EventKind::PageCow => "page_cow",
+            EventKind::PageEvict => "page_evict",
+            EventKind::BudgetOverrun => "budget_overrun",
+            EventKind::WorkerRespawn => "worker_respawn",
+            EventKind::ShutdownDrain { .. } => "shutdown_drain",
+        }
+    }
+
+    /// Chrome trace category for filtering in the Perfetto UI.
+    pub fn category(self) -> &'static str {
+        match self {
+            EventKind::Queued
+            | EventKind::Validated
+            | EventKind::Rejected
+            | EventKind::Admitted { .. }
+            | EventKind::Prefill { .. }
+            | EventKind::Preempted
+            | EventKind::Expired
+            | EventKind::Fault
+            | EventKind::Done { .. } => "request",
+            EventKind::DecodeStep { .. } | EventKind::SiteGemm { .. } => "engine",
+            EventKind::PageAlloc
+            | EventKind::PageCow
+            | EventKind::PageEvict
+            | EventKind::BudgetOverrun => "kvpool",
+            EventKind::WorkerRespawn | EventKind::ShutdownDrain { .. } => "worker",
+        }
+    }
+}
+
+/// One journal record. `dur_us == 0` renders as an instant event,
+/// anything else as a complete span starting at `ts_us`.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub track: u64,
+    pub kind: EventKind,
+}
+
+struct Ring {
+    buf: Vec<Event>,
+    /// next write position
+    head: usize,
+    /// live entries (saturates at capacity)
+    len: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, e: Event) {
+        let cap = self.buf.len();
+        if cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        self.buf[self.head] = e;
+        self.head = (self.head + 1) % cap;
+        if self.len < cap {
+            self.len += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Bounded trace journal. Cheap to share behind an `Arc`; all methods
+/// take `&self`.
+pub struct Trace {
+    clock: Clock,
+    ring: Mutex<Ring>,
+    /// record DecodeStep/SiteGemm spans on every Nth fused step
+    sample_every: u64,
+    step_counter: AtomicU64,
+}
+
+/// Default ring capacity (events). 8192 × 40 B ≈ 320 KiB.
+pub const DEFAULT_CAPACITY: usize = 8192;
+/// Default decode-step sampling period.
+pub const DEFAULT_SAMPLE_EVERY: u64 = 16;
+
+/// Trace sizing carried inside
+/// [`ServerConfig`](crate::coordinator::server::ServerConfig): how many
+/// events the ring holds and how often fused decode steps are sampled.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// ring capacity in events (0 disables recording; pushes count as
+    /// dropped)
+    pub capacity: usize,
+    /// record DecodeStep/SiteGemm spans on every Nth fused step
+    /// (clamped to ≥ 1)
+    pub sample_every: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            capacity: DEFAULT_CAPACITY,
+            sample_every: DEFAULT_SAMPLE_EVERY,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Build the journal this config describes, stamped by `clock`.
+    pub fn build(self, clock: Clock) -> Trace {
+        Trace::new(self.capacity, self.sample_every, clock)
+    }
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Self::new(DEFAULT_CAPACITY, DEFAULT_SAMPLE_EVERY, Clock::wall())
+    }
+}
+
+impl Trace {
+    /// A journal holding at most `capacity` events, sampling decode
+    /// steps every `sample_every` (clamped to ≥ 1).
+    pub fn new(capacity: usize, sample_every: u64, clock: Clock) -> Self {
+        let zero = Event {
+            ts_us: 0,
+            dur_us: 0,
+            track: 0,
+            kind: EventKind::Queued,
+        };
+        Trace {
+            clock,
+            ring: Mutex::new(Ring {
+                buf: vec![zero; capacity],
+                head: 0,
+                len: 0,
+                dropped: 0,
+            }),
+            sample_every: sample_every.max(1),
+            step_counter: AtomicU64::new(0),
+        }
+    }
+
+    /// A deterministic journal for tests: manual clock, sample every
+    /// step.
+    pub fn manual(capacity: usize) -> Self {
+        Self::new(capacity, 1, Clock::manual())
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Current timestamp; also the way to open a span (`let t0 =
+    /// trace.now(); ...; trace.span(track, kind, t0);`).
+    pub fn now(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ring> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record an instant event stamped now.
+    pub fn instant(&self, track: u64, kind: EventKind) {
+        let ts = self.now();
+        self.lock().push(Event {
+            ts_us: ts,
+            dur_us: 0,
+            track,
+            kind,
+        });
+    }
+
+    /// Record a complete span that started at `start_us` (from
+    /// [`Self::now`]) and ends now.
+    pub fn span(&self, track: u64, kind: EventKind, start_us: u64) {
+        let end = self.now();
+        self.lock().push(Event {
+            ts_us: start_us,
+            dur_us: end.saturating_sub(start_us),
+            track,
+            kind,
+        });
+    }
+
+    /// One sampling decision per fused decode step: true on every Nth
+    /// call. A single relaxed atomic — the unsampled path does no other
+    /// work.
+    pub fn sample_step(&self) -> bool {
+        self.step_counter.fetch_add(1, Ordering::Relaxed) % self.sample_every == 0
+    }
+
+    /// Events currently held, oldest first.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let ring = self.lock();
+        let cap = ring.buf.len();
+        let mut out = Vec::with_capacity(ring.len);
+        if cap == 0 {
+            return out;
+        }
+        let start = (ring.head + cap - ring.len) % cap;
+        for i in 0..ring.len {
+            out.push(ring.buf[(start + i) % cap]);
+        }
+        out
+    }
+
+    /// Live entry count (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.lock().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_keeps_newest_in_order() {
+        let cap = 64;
+        let t = Trace::manual(cap);
+        let total = 3 * cap as u64;
+        for i in 0..total {
+            t.clock().advance_us(1);
+            t.instant(TRACK_WORKER, EventKind::Done { tokens: i as u32 });
+        }
+        assert_eq!(t.len(), cap, "ring must saturate at capacity");
+        assert_eq!(t.dropped(), total - cap as u64);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), cap);
+        // newest `cap` events survive, oldest first, timestamps strictly
+        // increasing under the 1 µs-per-event manual clock
+        for (j, e) in snap.iter().enumerate() {
+            let expect_i = total - cap as u64 + j as u64;
+            assert_eq!(e.ts_us, expect_i + 1, "event {j} out of order");
+            match e.kind {
+                EventKind::Done { tokens } => assert_eq!(tokens as u64, expect_i),
+                other => panic!("unexpected kind {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn span_records_duration_from_start() {
+        let t = Trace::manual(8);
+        let t0 = t.now();
+        t.clock().advance_us(250);
+        t.span(req_track(3), EventKind::Prefill { tokens: 12 }, t0);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].ts_us, 0);
+        assert_eq!(snap[0].dur_us, 250);
+        assert_eq!(snap[0].track, REQ_TRACK_BASE + 3);
+    }
+
+    #[test]
+    fn sampling_fires_every_nth_step() {
+        let t = Trace::new(8, 4, Clock::manual());
+        let hits: Vec<bool> = (0..12).map(|_| t.sample_step()).collect();
+        assert_eq!(
+            hits,
+            vec![true, false, false, false, true, false, false, false, true, false, false, false]
+        );
+        // sample_every is clamped to >= 1
+        let every = Trace::new(8, 0, Clock::manual());
+        assert!((0..5).all(|_| every.sample_step()));
+    }
+
+    #[test]
+    fn zero_capacity_drops_everything() {
+        let t = Trace::manual(0);
+        t.instant(TRACK_POOL, EventKind::PageAlloc);
+        t.instant(TRACK_POOL, EventKind::PageEvict);
+        assert_eq!(t.len(), 0);
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 2);
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn kinds_have_stable_names_and_categories() {
+        assert_eq!(EventKind::Queued.category(), "request");
+        assert_eq!(EventKind::PageCow.category(), "kvpool");
+        assert_eq!(EventKind::WorkerRespawn.category(), "worker");
+        assert_eq!(
+            EventKind::SiteGemm {
+                layer: 0,
+                site: SiteTag::Q
+            }
+            .category(),
+            "engine"
+        );
+        assert_eq!(SiteTag::Down.name(), "w_down");
+        assert_eq!(
+            EventKind::Admitted {
+                queue_wait_us: 1,
+                replayed: false
+            }
+            .name(),
+            "admitted"
+        );
+    }
+}

@@ -307,6 +307,11 @@ fn fused_decode_hot_loop_is_allocation_free_for_every_lane_codec() {
     // zero heap allocations per token — for all three KV lane codecs.
     // The measured steps stay inside one 16-token page, since crossing a
     // page boundary legitimately claims a fresh page.
+    //
+    // The measured window runs WITH tracing enabled (pool journal
+    // attached, every step sampled): per-site GEMM spans cost clock
+    // reads and fixed-size ring pushes only, so the hot loop must stay
+    // allocation-free with instrumentation compiled in and active.
     use nestquant::kvpool::{KvLaneCodec, PoolConfig, SessionKv};
     use nestquant::model::engine::StepScratch;
     use nestquant::util::linalg::Mat;
@@ -356,6 +361,8 @@ fn fused_decode_hot_loop_is_allocation_free_for_every_lane_codec() {
             _ => assert!(matches!(eng.layers[0].kv, KvLaneCodec::Nested { .. })),
         }
         let pool = eng.kv_pool(PoolConfig::default()); // 16-token pages
+        let trace = std::sync::Arc::new(nestquant::obs::Trace::manual(2048));
+        pool.set_trace(trace.clone());
         let mut s0 = SessionKv::new(pool.clone());
         let mut s1 = SessionKv::new(pool.clone());
         let mut s2 = SessionKv::new(pool);
@@ -382,7 +389,14 @@ fn fused_decode_hot_loop_is_allocation_free_for_every_lane_codec() {
             for (s, t) in tokens.iter_mut().enumerate() {
                 *t = ((it * 5 + s * 2 + 3) % 48) as i32;
             }
-            eng.forward_step_fused(&tokens, &positions, &mut caches, &mut scratch, &mut logits);
+            eng.forward_step_fused_traced(
+                &tokens,
+                &positions,
+                &mut caches,
+                &mut scratch,
+                &mut logits,
+                Some(&*trace),
+            );
             for p in positions.iter_mut() {
                 *p += 1;
             }
@@ -396,7 +410,104 @@ fn fused_decode_hot_loop_is_allocation_free_for_every_lane_codec() {
             "{name}: fused decode hot loop allocated {} time(s)",
             after - before
         );
+        // the instrumentation was really live: 8 traced steps × (2
+        // layers × 6 linears + lm head) GEMM spans landed in the ring
+        let spans = trace
+            .snapshot()
+            .iter()
+            .filter(|e| matches!(e.kind, nestquant::obs::EventKind::SiteGemm { .. }))
+            .count();
+        assert_eq!(spans, 8 * 13, "{name}: missing site_gemm spans");
+        assert_eq!(trace.dropped(), 0, "{name}: trace ring overflowed");
     }
+}
+
+#[test]
+fn trace_smoke_soak_exports_perfetto_and_prometheus() {
+    // The `make trace-smoke` gate: a multi-session soak through the
+    // full server with every decode step traced must export (a) a
+    // Chrome trace-event JSON journal that shape-validates for
+    // Perfetto and covers every track category, and (b) a Prometheus
+    // text snapshot that parses with every latency family present.
+    // Synthetic weights — runs without `make artifacts`.
+    use nestquant::coordinator::{BatchPolicy, Request, Server, ServerConfig};
+    use nestquant::obs::TraceConfig;
+    let w = ModelWeights::synthetic(
+        nestquant::model::ModelConfig {
+            vocab: 48,
+            ctx: 64,
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 64,
+        },
+        0x7AACE,
+    );
+    let eng = std::sync::Arc::new(Engine::build(
+        &w,
+        EngineOptions {
+            method: Method::NestQuantM,
+            regime: Regime::WKv,
+            calib_windows: 1,
+            ..Default::default()
+        },
+    ));
+    let (srv, rx) = Server::start(
+        eng,
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            trace: TraceConfig {
+                capacity: 8192,
+                sample_every: 1,
+            },
+            ..ServerConfig::default()
+        },
+    );
+    let common: Vec<i32> = (0..16).map(|i| (i * 5 + 3) % 48).collect();
+    let n = 6u64;
+    for id in 0..n {
+        let mut prompt = common.clone();
+        prompt.push(30 + id as i32);
+        srv.submit(Request::Generate { id, prompt, n_new: 4 }).unwrap();
+    }
+    for _ in 0..n {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(300)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 4);
+    }
+    let trace = srv.trace.clone();
+    let metrics = srv.metrics.clone();
+    assert!(srv.shutdown().drained);
+
+    let events = trace.snapshot();
+    assert!(!events.is_empty());
+    for cat in ["request", "engine", "kvpool", "worker"] {
+        assert!(
+            events.iter().any(|e| e.kind.category() == cat),
+            "journal has no {cat} events"
+        );
+    }
+    let json = nestquant::obs::chrome_trace_json(&events);
+    nestquant::obs::validate_chrome_trace(&json).unwrap();
+
+    let prom = metrics.prometheus_text();
+    nestquant::obs::validate_prometheus(&prom).unwrap();
+    for family in [
+        "nestquant_requests_total",
+        "nestquant_queue_wait_seconds_bucket",
+        "nestquant_ttft_seconds_count",
+        "nestquant_inter_token_seconds_sum",
+        "nestquant_prefill_seconds_count",
+        "nestquant_fused_step_seconds_bucket",
+    ] {
+        assert!(prom.contains(family), "prometheus snapshot missing {family}");
+    }
+    // one TTFT sample per request, and bounded journal memory
+    assert_eq!(metrics.ttft_summary().count, n);
+    assert_eq!(trace.dropped(), 0);
 }
 
 #[test]
