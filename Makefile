@@ -5,6 +5,7 @@
 #   make clippy       lint gate (cargo clippy -- -D warnings)
 #   make bench        full perf suite -> bench_output.txt + BENCH_gemm.json
 #                     + BENCH_serve.json + BENCH_plan.json + BENCH_kvmix.json
+#   make bench-gemm   hierarchical-LUT vs decode GEMM sweep -> BENCH_gemm.json
 #   make bench-serve  multi-session serving sweep only -> BENCH_serve.json
 #   make bench-plan   mixed-precision QuantPlan sweep only -> BENCH_plan.json
 #   make bench-kvmix  heterogeneous KV-lane sweep only -> BENCH_kvmix.json
@@ -14,15 +15,15 @@
 #   make trace-smoke  observability gate: a traced multi-session soak
 #                     whose Perfetto/Prometheus exports must shape-validate
 #   make ci           fmt-check + clippy + build + test + soak-faults +
-#                     trace-smoke + the kvmix and serve smoke benches
-#                     (what a CI job runs)
+#                     trace-smoke + the kvmix, serve and gemm smoke
+#                     benches (what a CI job runs)
 #   make clean        remove build artifacts
 #
 # The python layer (training + AOT lowering, `make artifacts`) is only
 # needed for the artifact-gated integration tests; the rust suite skips
 # those gracefully when artifacts/ is absent.
 
-.PHONY: build test clippy bench bench-serve bench-plan bench-kvmix soak-faults trace-smoke fmt-check ci artifacts clean
+.PHONY: build test clippy bench bench-gemm bench-serve bench-plan bench-kvmix soak-faults trace-smoke fmt-check ci artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -50,16 +51,20 @@ soak-faults:
 trace-smoke:
 	cd rust && cargo test -q trace_smoke
 
-# bench-kvmix and bench-serve double as the CI smoke runs of the
-# mixed-lane serving path and the fused decode-batch scheduler
-# (seconds each on the synthetic model)
-ci: fmt-check clippy build test soak-faults trace-smoke bench-kvmix bench-serve
+# bench-kvmix, bench-serve and bench-gemm double as the CI smoke runs of
+# the mixed-lane serving path, the fused decode-batch scheduler and the
+# hierarchical-LUT GEMM backend (seconds each on synthetic inputs)
+ci: fmt-check clippy build test soak-faults trace-smoke bench-kvmix bench-serve bench-gemm
 
 # no pipefail in POSIX sh: redirect, propagate the bench exit status,
 # then show the log — a crashed bench must not leave a "fresh" log
 bench:
 	cd rust && cargo bench --bench bench_main > ../bench_output.txt 2>&1 || { cat ../bench_output.txt; exit 1; }
 	@cat bench_output.txt
+
+bench-gemm:
+	cd rust && cargo bench --bench bench_main -- gemm > ../bench_gemm_output.txt 2>&1 || { cat ../bench_gemm_output.txt; exit 1; }
+	@cat bench_gemm_output.txt
 
 bench-serve:
 	cd rust && cargo bench --bench bench_main -- serve > ../bench_serve_output.txt 2>&1 || { cat ../bench_serve_output.txt; exit 1; }
@@ -78,4 +83,4 @@ artifacts:
 
 clean:
 	cd rust && cargo clean
-	rm -f bench_output.txt bench_serve_output.txt bench_plan_output.txt bench_kvmix_output.txt
+	rm -f bench_output.txt bench_gemm_output.txt bench_serve_output.txt bench_plan_output.txt bench_kvmix_output.txt

@@ -17,15 +17,22 @@
 //! * the heterogeneous KV-lane sweep: all-nested vs fp-edge +
 //!   nested-middle vs all-fp KV plans served through one pool
 //!
-//! Sections are selectable by argument (`-- core` / `-- serve` /
-//! `-- plan` / `-- kvmix`; no argument runs everything): `make bench`
-//! captures the full output into bench_output.txt, `make bench-serve` /
-//! `make bench-plan` / `make bench-kvmix` run one section. The
-//! GEMV/GEMM suite is serialized to BENCH_gemm.json, the serving sweep
-//! to BENCH_serve.json, the plan sweep to BENCH_plan.json and the lane
-//! sweep to BENCH_kvmix.json at the repo root for cross-PR perf
-//! tracking (schema: EXPERIMENTS.md §Perf / §Serving / §Mixed-precision
-//! / §KV lanes).
+//! * the hierarchical-LUT GEMM sweep: pair-LUT inner products
+//!   (M ∈ {2,3,4} × q ∈ {2,3}) against the packed decode backend at the
+//!   equal flat rate q_eff = q^M
+//!
+//! Sections are selectable by argument (`-- core` / `-- gemm` /
+//! `-- serve` / `-- plan` / `-- kvmix`; no argument runs everything):
+//! `make bench` captures the full output into bench_output.txt,
+//! `make bench-gemm` / `make bench-serve` / `make bench-plan` /
+//! `make bench-kvmix` run one section. The GEMV/GEMM suites (the core
+//! table-4 sweep plus the LUT sweep) are serialized together as a
+//! `{"suites": [...]}` document to BENCH_gemm.json — written ONCE by
+//! `main` so the sections no longer clobber each other's output — the
+//! serving sweep to BENCH_serve.json, the plan sweep to BENCH_plan.json
+//! and the lane sweep to BENCH_kvmix.json at the repo root for cross-PR
+//! perf tracking (schema: EXPERIMENTS.md §Perf / §Serving /
+//! §Mixed-precision / §KV lanes / §LUT backend).
 
 use nestquant::lattice::nested::NestedLatticeQuantizer;
 use nestquant::lattice::voronoi::VoronoiCodec;
@@ -33,7 +40,7 @@ use nestquant::quant::gemm::GemmScratch;
 use nestquant::quant::qgemm::{decode_block_i32, qdot_int, PackedNestMatrix};
 use nestquant::quant::uniform::PackedInt4Matrix;
 use nestquant::rotation::Rotation;
-use nestquant::util::bench::{bench, black_box, BenchSuite};
+use nestquant::util::bench::{bench, black_box, write_suites_json, BenchSuite};
 use nestquant::util::linalg::Mat;
 use nestquant::util::Rng;
 use std::time::Duration;
@@ -43,14 +50,36 @@ fn main() {
         .skip(1)
         .filter(|a| !a.starts_with('-'))
         .collect();
-    const SECTIONS: [&str; 4] = ["core", "serve", "plan", "kvmix"];
+    const SECTIONS: [&str; 5] = ["core", "gemm", "serve", "plan", "kvmix"];
     if let Some(bad) = args.iter().find(|a| !SECTIONS.contains(&a.as_str())) {
         eprintln!("unknown bench section '{bad}' (available: {SECTIONS:?})");
         std::process::exit(2);
     }
     let run = |name: &str| args.is_empty() || args.iter().any(|a| a == name);
+    // both GEMV/GEMM sections feed one multi-suite BENCH_gemm.json,
+    // written once below instead of per-section (which clobbered)
+    let mut gemm_suites: Vec<BenchSuite> = Vec::new();
     if run("core") {
-        core_benches();
+        gemm_suites.push(core_benches());
+    }
+    if run("gemm") {
+        gemm_suites.push(gemm_lut_benches());
+    }
+    if !gemm_suites.is_empty() {
+        let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ has a parent")
+            .join("BENCH_gemm.json");
+        let refs: Vec<&BenchSuite> = gemm_suites.iter().collect();
+        match write_suites_json(&json_path, &refs) {
+            Ok(()) => println!(
+                "\nwrote {} ({} suite(s), {} records)",
+                json_path.display(),
+                refs.len(),
+                refs.iter().map(|s| s.len()).sum::<usize>()
+            ),
+            Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+        }
     }
     if run("serve") {
         serve_benches();
@@ -63,7 +92,123 @@ fn main() {
     }
 }
 
-fn core_benches() {
+/// Hierarchical-LUT GEMM sweep (M ∈ {2,3,4} × q ∈ {2,3}): the pair-LUT
+/// inner-product backend (`quant::lut`, activations encoded per call,
+/// weights never decoded) against the packed decode backend at the
+/// equal flat rate q_eff = q^M — decode baselines only where the packed
+/// coset path serves them (q_eff ≤ 16). Records gemv (batch=1) and
+/// single-thread gemm (batch=32) medians tagged with q / m_levels /
+/// bits-per-entry; merged into BENCH_gemm.json's multi-suite document
+/// next to the core table-4 suite.
+fn gemm_lut_benches() -> BenchSuite {
+    use nestquant::lattice::hierarchical::{lut_supported, HierarchicalQuantizer};
+    use nestquant::quant::lut::{LutScratch, PackedLutMatrix};
+
+    println!("\n## hierarchical-LUT GEMM: M × q sweep (n=512)");
+    let budget = Duration::from_millis(300);
+    let mut rng = Rng::new(0x117);
+    let n = 512usize;
+    let batch = 32usize;
+    let w = Mat::from_vec(n, n, rng.gauss_vec(n * n));
+    let x = rng.gauss_vec(n);
+    let xt = Mat::from_vec(batch, n, rng.gauss_vec(batch * n));
+    let betas = vec![0.25f32, 0.32, 0.45, 1.0];
+    let mut suite = BenchSuite::new("lut");
+    let mut scratch = LutScratch::new();
+    let mut gscratch = GemmScratch::new();
+    for &q in &[2u32, 3] {
+        for &m in &[2usize, 3, 4] {
+            if !lut_supported(q, m as u32) {
+                println!("skipping q={q} M={m}: outside the i32 LUT accumulator window");
+                continue;
+            }
+            let wq = HierarchicalQuantizer::new(q, m, betas.clone());
+            let aq = HierarchicalQuantizer::new(q, m, betas.clone());
+            let qm = wq.quantize_matrix(&w);
+            let lut = PackedLutMatrix::from_quantized(&qm, &wq, aq);
+            let bits = lut.bits_per_entry();
+            let mut y = vec![0f32; n];
+            let r = bench(&format!("lut gemv q={q} M={m}"), budget, || {
+                lut.gemv_into(&x, &mut y, &mut scratch);
+                y[0]
+            });
+            println!("{}  [{:.2} b/entry]", r.report(), bits);
+            suite.push(
+                &r,
+                &[
+                    ("q", q as f64),
+                    ("m_levels", m as f64),
+                    ("batch", 1.0),
+                    ("threads", 1.0),
+                    ("bits_per_entry", bits),
+                ],
+            );
+            let mut yt = Mat::zeros(batch, n);
+            let r = bench(&format!("lut gemm b={batch} q={q} M={m}"), budget, || {
+                lut.gemm_into(&xt, &mut yt, 1, &mut scratch);
+                yt.data[0]
+            });
+            println!("{}  [{:.2} µs/col]", r.report(), r.median_us() / batch as f64);
+            suite.push(
+                &r,
+                &[
+                    ("q", q as f64),
+                    ("m_levels", m as f64),
+                    ("batch", batch as f64),
+                    ("threads", 1.0),
+                    ("bits_per_entry", bits),
+                ],
+            );
+            let q_eff = q.pow(m as u32);
+            if q_eff <= 16 {
+                let nq = NestedLatticeQuantizer::new_m(q_eff, betas.clone());
+                let packed = PackedNestMatrix::quantize(&w, &nq);
+                let mut y2 = vec![0f32; n];
+                let r = bench(&format!("decode gemv q_eff={q_eff}"), budget, || {
+                    packed.gemv_into(&x, &mut y2);
+                    y2[0]
+                });
+                println!("{}", r.report());
+                suite.push(
+                    &r,
+                    &[
+                        ("q", q_eff as f64),
+                        ("m_levels", 1.0),
+                        ("batch", 1.0),
+                        ("threads", 1.0),
+                    ],
+                );
+                let mut yt2 = Mat::zeros(batch, n);
+                let r = bench(
+                    &format!("decode gemm b={batch} q_eff={q_eff}"),
+                    budget,
+                    || {
+                        packed.gemm_into(&xt, &mut yt2, 1, &mut gscratch);
+                        yt2.data[0]
+                    },
+                );
+                println!("{}  [{:.2} µs/col]", r.report(), r.median_us() / batch as f64);
+                suite.push(
+                    &r,
+                    &[
+                        ("q", q_eff as f64),
+                        ("m_levels", 1.0),
+                        ("batch", batch as f64),
+                        ("threads", 1.0),
+                    ],
+                );
+            } else {
+                println!(
+                    "  (no decode baseline at q={q} M={m}: packed coset codes cap \
+                     q_eff at 16, q^M = {q_eff})"
+                );
+            }
+        }
+    }
+    suite
+}
+
+fn core_benches() -> BenchSuite {
     let budget = Duration::from_millis(800);
     let mut rng = Rng::new(42);
     println!("# nestquant benches (1 CPU core)\n");
@@ -242,10 +387,6 @@ fn core_benches() {
             ],
         );
     }
-    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .expect("rust/ has a parent")
-        .join("BENCH_gemm.json");
     println!(
         "\namortization acceptance (gemm_into ≥ 3x per-column gemv at batch ≥ 32, 1 thread): {}",
         if amortization_checked && amortization_ok {
@@ -254,10 +395,6 @@ fn core_benches() {
             "FAIL"
         }
     );
-    match suite.write_json(&json_path) {
-        Ok(()) => println!("wrote {} ({} records)", json_path.display(), suite.len()),
-        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
-    }
 
     // --- rotations ---
     println!("\n## rotations");
@@ -296,6 +433,7 @@ fn core_benches() {
     });
     println!("{}", r.report());
     black_box(&scores);
+    suite
 }
 
 /// Multi-session serving over the shared paged KV pool: sessions

@@ -1,0 +1,815 @@
+//! M-level hierarchical nested-lattice codes (Kaplan & Ordentlich, ISIT
+//! 2025) over the Gosset machinery, and the shared inner-product lookup
+//! table that powers the LUT GEMM backend (`quant::lut`).
+//!
+//! ## Construction
+//!
+//! A block x ∈ R^8 is quantized to λ₀ = Q_Λ(x) and λ₀ is expanded in
+//! "base q over the lattice": digit vectors d_ℓ ∈ Λ ∩ qV_Λ with
+//!
+//!   λ₀ = Σ_{ℓ=0}^{M−1} q^ℓ · d_ℓ        (d_ℓ = the coset decode of c_ℓ)
+//!
+//! computed by the integer residual recursion λ_{ℓ+1} = (λ_ℓ − d_ℓ)/q,
+//! which is *exact*: c_ℓ is the coset code of λ_ℓ, so λ_ℓ − d_ℓ ∈ qΛ and
+//! the division stays on the (half-)integer grid. Decode telescopes back
+//! to λ₀ identically — the M-level codec reconstructs exactly the same
+//! point as the flat codec at nesting ratio q^M whenever neither
+//! overloads (`equal_rate_exactness` propcheck), at M·log2(q) bits/dim.
+//!
+//! Overload ⇔ the residual after M digits is nonzero (λ₀ ∉ q^M·V_Λ).
+//!
+//! ## Successive refinement
+//!
+//! Digit ℓ carries weight q^ℓ, so the *top* m digits (levels M−m..M) are
+//! the most significant: dropping the fine levels leaves
+//! Σ_{ℓ≥M−m} q^ℓ d_ℓ = q^{M−m}·λ_{M−m}, i.e. the same point quantized at
+//! granularity q^{M−m}. Stronger: the top m digits are bit-for-bit the
+//! m-level encoding of the coarse point λ_{M−m} (the recursion is
+//! idempotent on lattice points) — the `truncation_is_m_level_encoding`
+//! propcheck. This is the substrate for tiered / draft-then-verify KV.
+//!
+//! ## The pair LUT
+//!
+//! Each digit packs into one index i = Σ c_j q^j < q^8 (u16 for q ≤ 3).
+//! One shared symmetric table T[i_a][i_b] = ⟨decode(i_a), decode(i_b)⟩
+//! serves *every* level pair: the block inner product of two M-level
+//! codes is Σ_{ℓ,m} q^{ℓ+m} T[i_ℓ^a][i_m^b] — M² lookups, no decode.
+//! Entries are exact integers in half-units² (|coord| ≤ 2q half-units ⇒
+//! |T| ≤ 8·(2q)² = 32q², comfortably i16), and the whole double sum fits
+//! i32 for every supported (q, M) — see [`lut_supported`]. The only
+//! inexactness of a LUT dot product is therefore the quantization error
+//! itself plus f32 scale application: with ε_a = â − a, ε_w = ŵ − w,
+//!
+//!   |⟨â,ŵ⟩ − ⟨a,w⟩| ≤ ‖ε_a‖·‖w‖ + ‖ε_w‖·‖a‖ + ‖ε_a‖·‖ε_w‖
+//!
+//! the documented two-sided bound (EXPERIMENTS.md §LUT backend).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+use super::e8::{nearest_e8, D};
+use super::voronoi::VoronoiCodec;
+
+/// Largest nesting ratio the generic hierarchical codec accepts (matches
+/// the packed/`DecodeConsts` range; the LUT path is further restricted to
+/// q ≤ [`LUT_MAX_Q`] by table size).
+pub const MAX_Q: u32 = 16;
+/// Most levels the codec supports; beyond this the u16/i32 windows and
+/// payload math stop being interesting (q=2, M=8 is already 8 bits/dim).
+pub const MAX_LEVELS: usize = 8;
+/// Largest q whose packed block index q^8 fits u16 (3^8 = 6561).
+pub const LUT_MAX_Q: u32 = 3;
+
+/// Decoded digit coordinates are bounded by `2·q` in half-units (this
+/// constant is the 2): the coset residual lies in [−q, q) and the parity
+/// flip moves one coordinate by m = 2q toward the origin side, landing in
+/// (−2q, 2q). Pinned by the `decoded_digit_coords_bounded` test; the
+/// i16/i32 safety windows below are derived from it.
+pub const DIGIT_BOUND_PER_Q: i64 = 2;
+
+/// An M-level hierarchical codec at base nesting ratio q: encodes one
+/// 8-block into M digit vectors (finest digit first), rate M·log2(q)
+/// bits/dim before β side info.
+#[derive(Clone, Debug)]
+pub struct HierarchicalCodec {
+    codec: VoronoiCodec,
+    m_levels: usize,
+}
+
+impl HierarchicalCodec {
+    /// Build an M-level codec. The digit codec is the NestQuantM variant
+    /// so digit decode agrees bit-for-bit with the `DecodeConsts` integer
+    /// path used to build the LUT.
+    pub fn new(q: u32, m_levels: usize) -> Self {
+        assert!((2..=MAX_Q).contains(&q), "q must be in [2, {MAX_Q}], got {q}");
+        assert!(
+            (1..=MAX_LEVELS).contains(&m_levels),
+            "m_levels must be in [1, {MAX_LEVELS}], got {m_levels}"
+        );
+        HierarchicalCodec {
+            codec: VoronoiCodec::new_m(q),
+            m_levels,
+        }
+    }
+
+    pub fn q(&self) -> u32 {
+        self.codec.q as u32
+    }
+
+    pub fn m_levels(&self) -> usize {
+        self.m_levels
+    }
+
+    /// Rate in bits per entry: M·log2(q).
+    pub fn rate(&self) -> f64 {
+        self.m_levels as f64 * (self.codec.q as f64).log2()
+    }
+
+    /// Bytes of digit storage per 8-block (one byte per digit coordinate,
+    /// the unpacked `QuantizedMatrix` convention).
+    pub fn digits_per_block(&self) -> usize {
+        self.m_levels * D
+    }
+
+    /// Encode one block: `digits` receives M groups of 8 coset codes,
+    /// level ℓ (weight q^ℓ) at `digits[ℓ*8..][..8]`, finest first.
+    /// Returns the overload flag (true ⇔ Q_Λ(x) ∉ q^M·V_Λ, in which case
+    /// decode reconstructs a different — wrapped — lattice point).
+    pub fn encode_block(&self, x: &[f32; D], digits: &mut [u8]) -> bool {
+        debug_assert_eq!(digits.len(), self.digits_per_block());
+        // Track the residual lattice point in half-units (exact i32).
+        let p = nearest_e8(x);
+        let mut h = [0i32; D];
+        for i in 0..D {
+            h[i] = (2.0 * p[i]).round() as i32;
+            debug_assert_eq!(h[i] as f32, 2.0 * p[i], "nearest_e8 not on ½Z^8");
+        }
+        let q = self.codec.q as i32;
+        let mut pt = [0f32; D];
+        for l in 0..self.m_levels {
+            for i in 0..D {
+                pt[i] = h[i] as f32 * 0.5;
+            }
+            let c = self.codec.encode_point(&pt);
+            let d = self.codec.decode_halfunits(&c);
+            digits[l * D..(l + 1) * D].copy_from_slice(&c);
+            for i in 0..D {
+                // λ_ℓ − d_ℓ ∈ qΛ: the division is exact on the integer grid.
+                let r = h[i] - d[i];
+                debug_assert_eq!(r % q, 0, "digit residual not divisible by q");
+                h[i] = r / q;
+            }
+        }
+        h != [0i32; D]
+    }
+
+    /// Exact decode of the full M-level code, in half-units:
+    /// out = 2·Σ q^ℓ d_ℓ computed by Horner from the most significant
+    /// digit. Equals 2·Q_Λ(x) when the encoder did not overload.
+    pub fn decode_halfunits(&self, digits: &[u8], out: &mut [i32; D]) {
+        self.coarse_halfunits(digits, self.m_levels, out);
+    }
+
+    /// Decode only the top `m` levels at their own scale: returns
+    /// h = 2·λ_{M−m} (half-units of the *coarse* lattice point; multiply
+    /// by q^{M−m} for the original scale). `m == m_levels` is the full
+    /// decode.
+    pub fn coarse_halfunits(&self, digits: &[u8], m: usize, out: &mut [i32; D]) {
+        debug_assert_eq!(digits.len(), self.digits_per_block());
+        assert!(m >= 1 && m <= self.m_levels, "truncation level out of range");
+        let q = self.codec.q as i32;
+        let mut c = [0u8; D];
+        out.fill(0);
+        for l in (self.m_levels - m..self.m_levels).rev() {
+            c.copy_from_slice(&digits[l * D..(l + 1) * D]);
+            let d = self.codec.decode_halfunits(&c);
+            for i in 0..D {
+                out[i] = out[i] * q + d[i];
+            }
+        }
+    }
+
+    /// Full f32 decode (the reconstructed lattice point).
+    pub fn decode_block(&self, digits: &[u8]) -> [f32; D] {
+        let mut h = [0i32; D];
+        self.decode_halfunits(digits, &mut h);
+        let mut out = [0f32; D];
+        for i in 0..D {
+            out[i] = h[i] as f32 * 0.5;
+        }
+        out
+    }
+
+    /// The successive-refinement view: reconstruction from only the top
+    /// `m` levels, in the original scale — the fine digits are dropped,
+    /// leaving x quantized at granularity q^{M−m}.
+    pub fn decode_truncated(&self, digits: &[u8], m: usize) -> [f32; D] {
+        let mut h = [0i32; D];
+        self.coarse_halfunits(digits, m, &mut h);
+        let scale = (self.codec.q as f32).powi((self.m_levels - m) as i32) * 0.5;
+        let mut out = [0f32; D];
+        for i in 0..D {
+            out[i] = h[i] as f32 * scale;
+        }
+        out
+    }
+}
+
+/// Pack one digit group (8 coset codes < q) into a flat codebook index
+/// i = Σ c_j q^j < q^8. Only q ≤ [`LUT_MAX_Q`] fits u16.
+#[inline]
+pub fn pack_index(c: &[u8; D], q: u32) -> u16 {
+    debug_assert!(q >= 2 && q <= LUT_MAX_Q);
+    let mut idx = 0u32;
+    for j in (0..D).rev() {
+        debug_assert!((c[j] as u32) < q);
+        idx = idx * q + c[j] as u32;
+    }
+    idx as u16
+}
+
+/// Inverse of [`pack_index`].
+#[inline]
+pub fn unpack_index(idx: u16, q: u32) -> [u8; D] {
+    let mut c = [0u8; D];
+    let mut v = idx as u32;
+    for cj in c.iter_mut() {
+        *cj = (v % q) as u8;
+        v /= q;
+    }
+    debug_assert_eq!(v, 0);
+    c
+}
+
+/// Number of packed indices at base q: q^8.
+#[inline]
+pub fn codebook_size(q: u32) -> usize {
+    (q as usize).pow(D as u32)
+}
+
+/// Whether the LUT inner-product path serves a (q, m_levels) pair:
+/// q ∈ {2, 3} (table is q^16 entries — q=2: 128 KiB, q=3: ~82 MiB;
+/// beyond that it stops being a *small* lookup table and the block index
+/// no longer fits u16), m_levels ∈ [2, 8], and the worst-case M²-term
+/// accumulation must fit i32:
+///
+///   |Σ_{ℓ,m} q^{ℓ+m} T| ≤ ((q^M−1)/(q−1))² · 32q² < 2³¹
+///
+/// which admits every M ≤ 8 at q=2 and M ≤ 7 at q=3.
+pub fn lut_supported(q: u32, m_levels: u32) -> bool {
+    if !(2..=LUT_MAX_Q).contains(&q) || !(2..=MAX_LEVELS as u32).contains(&m_levels) {
+        return false;
+    }
+    let q = q as i64;
+    let radix = (q.pow(m_levels) - 1) / (q - 1); // Σ_{ℓ<M} q^ℓ
+    let entry_bound = D as i64 * (DIGIT_BOUND_PER_Q * q).pow(2); // 8·(2q)²
+    radix * radix * entry_bound <= i32::MAX as i64
+}
+
+/// The shared symmetric inner-product table at base q:
+/// `table[ia*n + ib] = ⟨decode(ia), decode(ib)⟩` in half-units² (i.e.
+/// 4× the real product — callers fold the ¼ into the β scales). One
+/// table serves all level pairs of all matrices at this q, so it is
+/// built once per process and shared via [`PairLut::shared`].
+pub struct PairLut {
+    pub q: u32,
+    /// codebook size q^8
+    pub n: usize,
+    /// n² exact products, row-major, symmetric
+    pub table: Vec<i16>,
+}
+
+impl PairLut {
+    /// Build the table from scratch (q^16 decode products; prefer
+    /// [`PairLut::shared`] which caches per q).
+    pub fn build(q: u32) -> Self {
+        assert!(
+            (2..=LUT_MAX_Q).contains(&q),
+            "pair LUT requires q in [2, {LUT_MAX_Q}], got {q}"
+        );
+        let n = codebook_size(q);
+        // Decode every codebook entry once through the same integer path
+        // the packed GEMV uses (DecodeConsts ≡ VoronoiCodec::new_m decode).
+        let consts = crate::quant::qgemm::DecodeConsts::new(q as i32);
+        let mut dec = vec![[0i16; D]; n];
+        let mut e = [0i32; D];
+        for (idx, d) in dec.iter_mut().enumerate() {
+            let c = unpack_index(idx as u16, q);
+            consts.decode(&c, &mut e);
+            for i in 0..D {
+                debug_assert!(e[i].abs() as i64 <= DIGIT_BOUND_PER_Q * q as i64);
+                d[i] = e[i] as i16;
+            }
+        }
+        let mut table = vec![0i16; n * n];
+        for a in 0..n {
+            let da = dec[a];
+            // symmetric: fill the upper triangle and mirror
+            for b in a..n {
+                let db = dec[b];
+                let mut acc = 0i32;
+                for i in 0..D {
+                    acc += da[i] as i32 * db[i] as i32;
+                }
+                debug_assert!(acc.unsigned_abs() <= 32 * q * q);
+                table[a * n + b] = acc as i16;
+                table[b * n + a] = acc as i16;
+            }
+        }
+        PairLut { q, n, table }
+    }
+
+    /// Process-wide cache: the q=3 table is ~82 MiB, so it is shared by
+    /// every matrix/engine at the same q and freed when the last user
+    /// drops (Weak entries keep the map from pinning memory).
+    pub fn shared(q: u32) -> Arc<PairLut> {
+        static CACHE: OnceLock<Mutex<HashMap<u32, Weak<PairLut>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = match cache.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(lut) = map.get(&q).and_then(Weak::upgrade) {
+            return lut;
+        }
+        let lut = Arc::new(PairLut::build(q));
+        map.insert(q, Arc::downgrade(&lut));
+        lut
+    }
+
+    /// ⟨decode(ia), decode(ib)⟩ in half-units².
+    #[inline(always)]
+    pub fn inner(&self, ia: u16, ib: u16) -> i32 {
+        self.table[ia as usize * self.n + ib as usize] as i32
+    }
+
+    /// Exact block inner product of two M-level codes via M² lookups:
+    /// Σ_{ℓ,m} q^{ℓ+m}·T[ia_ℓ][ib_m], in half-units². Fits i32 for every
+    /// [`lut_supported`] pair.
+    #[inline]
+    pub fn block_dot(&self, ia: &[u16], ib: &[u16]) -> i32 {
+        debug_assert_eq!(ia.len(), ib.len());
+        let q = self.q as i32;
+        let mut acc = 0i32;
+        let mut wl = 1i32; // q^ℓ
+        for &a in ia {
+            let row = &self.table[a as usize * self.n..(a as usize + 1) * self.n];
+            let mut inner = 0i32;
+            let mut wm = 1i32; // q^m
+            for &b in ib {
+                inner += wm * row[b as usize] as i32;
+                wm *= q;
+            }
+            acc += wl * inner;
+            wl *= q;
+        }
+        acc
+    }
+}
+
+/// Multi-β hierarchical quantizer: Algorithm-3 shaping (per-row √n/‖·‖
+/// normalization, per-block Opt-β over a β dictionary) with the M-level
+/// codec as the block quantizer. Produces `QuantizedMatrix` storage with
+/// `levels = M` (codes laid out `[row][block][level][coord]`).
+#[derive(Clone, Debug)]
+pub struct HierarchicalQuantizer {
+    pub codec: HierarchicalCodec,
+    /// scaling coefficients β_1 < … < β_k (k ≤ 4 for 2-bit packing)
+    pub betas: Vec<f32>,
+}
+
+impl HierarchicalQuantizer {
+    pub fn new(q: u32, m_levels: usize, mut betas: Vec<f32>) -> Self {
+        assert!(!betas.is_empty(), "need at least one β");
+        assert!(betas.len() <= 4, "hierarchical β dictionary is 2-bit packed (k ≤ 4)");
+        assert!(betas.iter().all(|&b| b > 0.0), "β must be positive");
+        betas.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        HierarchicalQuantizer {
+            codec: HierarchicalCodec::new(q, m_levels),
+            betas,
+        }
+    }
+
+    pub fn q(&self) -> u32 {
+        self.codec.q()
+    }
+
+    pub fn m_levels(&self) -> usize {
+        self.codec.m_levels()
+    }
+
+    pub fn k(&self) -> usize {
+        self.betas.len()
+    }
+
+    /// Quantize one normalized 8-block: Opt-β over the dictionary, digits
+    /// of the winner written to `digits` (`m_levels·8` bytes). Returns
+    /// (β index, reconstruction, overloaded-at-chosen-β).
+    pub fn quantize_block(&self, v: &[f32; D], digits: &mut [u8]) -> (u8, [f32; D], bool) {
+        debug_assert_eq!(digits.len(), self.codec.digits_per_block());
+        let mut best_err = f32::INFINITY;
+        let mut best_t = 0u8;
+        let mut best_recon = [0f32; D];
+        let mut best_over = false;
+        let mut cand = [0u8; MAX_LEVELS * D];
+        let nd = self.codec.digits_per_block();
+        for (t, &beta) in self.betas.iter().enumerate() {
+            let inv = 1.0 / beta;
+            let mut xs = [0f32; D];
+            for i in 0..D {
+                xs[i] = v[i] * inv;
+            }
+            let overload = self.codec.encode_block(&xs, &mut cand[..nd]);
+            let r = self.codec.decode_block(&cand[..nd]);
+            let mut err = 0f32;
+            let mut recon = [0f32; D];
+            for i in 0..D {
+                recon[i] = r[i] * beta;
+                let d = recon[i] - v[i];
+                err += d * d;
+            }
+            if err < best_err {
+                best_err = err;
+                best_t = t as u8;
+                best_recon = recon;
+                best_over = overload;
+                digits.copy_from_slice(&cand[..nd]);
+            }
+        }
+        (best_t, best_recon, best_over)
+    }
+
+    /// Quantize a full row (length divisible by 8) into caller buffers:
+    /// `digits` gets cols·M code bytes (`[block][level][coord]`),
+    /// `beta_idx` cols/8 entries. Returns the row scale s = ‖a‖₂.
+    pub fn quantize_row(&self, a: &[f32], digits: &mut [u8], beta_idx: &mut [u8]) -> f32 {
+        assert_eq!(a.len() % D, 0, "row length must be divisible by 8");
+        let nd = self.codec.digits_per_block();
+        debug_assert_eq!(digits.len(), (a.len() / D) * nd);
+        debug_assert_eq!(beta_idx.len(), a.len() / D);
+        let s = crate::util::stats::norm2(a) as f32;
+        if s == 0.0 {
+            digits.fill(0);
+            beta_idx.fill(0);
+            return 0.0;
+        }
+        let norm = (a.len() as f32).sqrt() / s;
+        let mut block = [0f32; D];
+        for (j, chunk) in a.chunks_exact(D).enumerate() {
+            for i in 0..D {
+                block[i] = chunk[i] * norm;
+            }
+            let (t, _, _) = self.quantize_block(&block, &mut digits[j * nd..(j + 1) * nd]);
+            beta_idx[j] = t;
+        }
+        s
+    }
+
+    /// Quantize a dense matrix row-wise into `QuantizedMatrix` storage
+    /// with `levels = M` — the carrier the engine's payload accounting
+    /// and the packed LUT format both consume.
+    pub fn quantize_matrix(&self, m: &crate::util::linalg::Mat) -> crate::quant::QuantizedMatrix {
+        assert_eq!(m.cols % D, 0, "cols must be divisible by 8");
+        let lv = self.m_levels();
+        let mut codes = vec![0u8; m.rows * m.cols * lv];
+        let mut beta_idx = vec![0u8; m.rows * m.cols / D];
+        let mut scales = vec![0f32; m.rows];
+        let per_row = m.cols * lv;
+        let bpr = m.cols / D;
+        for r in 0..m.rows {
+            scales[r] = self.quantize_row(
+                m.row(r),
+                &mut codes[r * per_row..(r + 1) * per_row],
+                &mut beta_idx[r * bpr..(r + 1) * bpr],
+            );
+        }
+        crate::quant::QuantizedMatrix {
+            rows: m.rows,
+            cols: m.cols,
+            q: self.q(),
+            levels: lv as u32,
+            codes,
+            beta_idx,
+            scales,
+        }
+    }
+
+    /// Dequantize one row of an M-level `QuantizedMatrix` into `out`.
+    pub fn dequantize_row(&self, digits: &[u8], beta_idx: &[u8], scale: f32, out: &mut [f32]) {
+        let nd = self.codec.digits_per_block();
+        debug_assert_eq!(digits.len(), beta_idx.len() * nd);
+        debug_assert_eq!(out.len(), beta_idx.len() * D);
+        if scale == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        let denorm = scale / (out.len() as f32).sqrt();
+        for (j, &t) in beta_idx.iter().enumerate() {
+            let r = self.codec.decode_block(&digits[j * nd..(j + 1) * nd]);
+            let beta = self.betas[t as usize];
+            for i in 0..D {
+                out[j * D + i] = r[i] * beta * denorm;
+            }
+        }
+    }
+
+    /// Full dequantization of an M-level matrix (reference path for
+    /// tests/propchecks; the LUT backend never calls this at serve time).
+    pub fn dequantize_matrix(&self, qm: &crate::quant::QuantizedMatrix) -> crate::util::linalg::Mat {
+        assert_eq!(qm.levels as usize, self.m_levels());
+        let mut out = crate::util::linalg::Mat::zeros(qm.rows, qm.cols);
+        let per_row = qm.cols * qm.levels as usize;
+        let bpr = qm.cols / D;
+        for r in 0..qm.rows {
+            self.dequantize_row(
+                &qm.codes[r * per_row..(r + 1) * per_row],
+                &qm.beta_idx[r * bpr..(r + 1) * bpr],
+                qm.scales[r],
+                out.row_mut(r),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, stats, Rng};
+
+    #[test]
+    fn decoded_digit_coords_bounded() {
+        // The |coord| ≤ 2q (i.e. 4q half-units / 2) bound every i16/i32
+        // safety window rests on, verified exhaustively for the LUT qs.
+        for q in 2..=LUT_MAX_Q {
+            let codec = VoronoiCodec::new_m(q);
+            for idx in 0..codebook_size(q) {
+                let c = unpack_index(idx as u16, q);
+                let e = codec.decode_halfunits(&c);
+                for &v in &e {
+                    assert!(
+                        (v.abs() as i64) <= DIGIT_BOUND_PER_Q * q as i64,
+                        "q={q} idx={idx}: |{v}| > 2q"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for q in 2..=LUT_MAX_Q {
+            for idx in 0..codebook_size(q) as u16 {
+                let c = unpack_index(idx, q);
+                assert!(c.iter().all(|&v| (v as u32) < q));
+                assert_eq!(pack_index(&c, q), idx, "q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_exact_without_overload() {
+        // Hierarchical decode must reproduce Q_Λ(x) exactly — for any
+        // decode oracle, since the recursion consumes its own decodes.
+        propcheck::check("hier-roundtrip", 300, 4101, |rng| {
+            for &(q, m) in &[(2u32, 4usize), (2, 8), (3, 3), (3, 6), (4, 3), (16, 2)] {
+                let codec = HierarchicalCodec::new(q, m);
+                let mut x = [0f32; D];
+                for v in x.iter_mut() {
+                    *v = rng.gauss_f32();
+                }
+                let mut digits = vec![0u8; codec.digits_per_block()];
+                let overload = codec.encode_block(&x, &mut digits);
+                if overload {
+                    continue; // σ=1 ≪ q^M/2: essentially never
+                }
+                let r = codec.decode_block(&digits);
+                let p = nearest_e8(&x);
+                if r != p {
+                    return Err(format!("q={q} M={m}: decode {r:?} != Q_Λ(x) {p:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn equal_rate_exactness_vs_flat_codec() {
+        // M levels at base q ≡ the flat codec at q^M: both reconstruct
+        // exactly Q_Λ(x) on non-overloading inputs, so at equal rate the
+        // codes describe the same point. (Flat codec caps at q ≤ 255.)
+        propcheck::check("hier-equal-rate", 200, 4102, |rng| {
+            for &(q, m) in &[(2u32, 4usize), (2, 7), (3, 4), (3, 5)] {
+                let hier = HierarchicalCodec::new(q, m);
+                let flat = VoronoiCodec::new_m(q.pow(m as u32));
+                let mut x = [0f32; D];
+                for v in x.iter_mut() {
+                    *v = rng.gauss_f32();
+                }
+                let mut digits = vec![0u8; hier.digits_per_block()];
+                let over_h = hier.encode_block(&x, &mut digits);
+                let (rf, over_f) = flat.encode_decode(&x);
+                if over_h || over_f {
+                    continue;
+                }
+                let rh = hier.decode_block(&digits);
+                if rh != rf {
+                    return Err(format!(
+                        "q={q} M={m}: hierarchical {rh:?} != flat q^M {rf:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncation_is_m_level_encoding() {
+        // Successive refinement, exact form: the top m digits of an
+        // M-level code ARE the m-level encoding of the coarse residual
+        // point λ_{M−m} (encoding is idempotent on lattice points).
+        propcheck::check("hier-truncate", 200, 4103, |rng| {
+            for &(q, mm) in &[(2u32, 6usize), (3, 4), (4, 3)] {
+                let codec = HierarchicalCodec::new(q, mm);
+                let mut x = [0f32; D];
+                for v in x.iter_mut() {
+                    *v = rng.gauss_f32() * 2.0;
+                }
+                let mut digits = vec![0u8; codec.digits_per_block()];
+                codec.encode_block(&x, &mut digits);
+                for m in 1..=mm {
+                    // coarse point λ_{M−m} from the top m digits
+                    let mut h = [0i32; D];
+                    codec.coarse_halfunits(&digits, m, &mut h);
+                    let mut coarse_pt = [0f32; D];
+                    for i in 0..D {
+                        coarse_pt[i] = h[i] as f32 * 0.5;
+                    }
+                    // re-encoding it with an m-level codec must reproduce
+                    // the top digit groups bit-for-bit
+                    let sub = HierarchicalCodec::new(q, m);
+                    let mut sub_digits = vec![0u8; sub.digits_per_block()];
+                    let over = sub.encode_block(&coarse_pt, &mut sub_digits);
+                    if over {
+                        return Err(format!("q={q} M={mm} m={m}: coarse point overloads"));
+                    }
+                    let top = &digits[(mm - m) * D..];
+                    if sub_digits != top {
+                        return Err(format!(
+                            "q={q} M={mm} m={m}: truncated digits differ from m-level code"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncation_error_decreases_with_levels() {
+        // Statistical face of successive refinement: more retained levels
+        // → smaller reconstruction error on gaussian blocks.
+        let mut rng = Rng::new(4104);
+        let codec = HierarchicalCodec::new(2, 6);
+        let n_blocks = 200;
+        let mut mse = vec![0f64; codec.m_levels()];
+        let mut digits = vec![0u8; codec.digits_per_block()];
+        for _ in 0..n_blocks {
+            let mut x = [0f32; D];
+            for v in x.iter_mut() {
+                *v = rng.gauss_f32();
+            }
+            codec.encode_block(&x, &mut digits);
+            for m in 1..=codec.m_levels() {
+                let r = codec.decode_truncated(&digits, m);
+                for i in 0..D {
+                    mse[m - 1] += ((r[i] - x[i]) as f64).powi(2);
+                }
+            }
+        }
+        for m in 1..codec.m_levels() {
+            assert!(
+                mse[m] < mse[m - 1],
+                "m={} mse {} not < m={} mse {}",
+                m + 1,
+                mse[m],
+                m,
+                mse[m - 1]
+            );
+        }
+        // and the full decode is essentially exact vs Q_Λ(x): the last
+        // tier's error is the lattice quantization error only
+        assert!(mse[codec.m_levels() - 1] / (n_blocks * D) as f64 < 0.2);
+    }
+
+    #[test]
+    fn overload_detection() {
+        let codec = HierarchicalCodec::new(2, 3); // covers q^M = 8 · V_Λ
+        let mut digits = vec![0u8; codec.digits_per_block()];
+        assert!(codec.encode_block(&[100.0; D], &mut digits), "huge input must overload");
+        assert!(!codec.encode_block(&[0.1; D], &mut digits), "tiny input must not");
+    }
+
+    #[test]
+    fn lut_supported_window() {
+        // derived from the documented i32 accumulation bound
+        for m in 2..=8 {
+            assert!(lut_supported(2, m), "q=2 M={m}");
+        }
+        for m in 2..=7 {
+            assert!(lut_supported(3, m), "q=3 M={m}");
+        }
+        assert!(!lut_supported(3, 8), "q=3 M=8 overflows i32");
+        assert!(!lut_supported(4, 2), "q=4 index exceeds u16");
+        assert!(!lut_supported(2, 1), "single level is the flat codec");
+        assert!(!lut_supported(2, 9));
+        assert!(!lut_supported(1, 2));
+    }
+
+    #[test]
+    fn pair_lut_entries_match_decoded_products() {
+        let lut = PairLut::shared(2);
+        assert_eq!(lut.n, 256);
+        let codec = VoronoiCodec::new_m(2);
+        let mut rng = Rng::new(4105);
+        for _ in 0..500 {
+            let ia = rng.below(lut.n) as u16;
+            let ib = rng.below(lut.n) as u16;
+            let ea = codec.decode_halfunits(&unpack_index(ia, 2));
+            let eb = codec.decode_halfunits(&unpack_index(ib, 2));
+            let expect: i32 = (0..D).map(|i| ea[i] * eb[i]).sum();
+            assert_eq!(lut.inner(ia, ib), expect);
+            assert_eq!(lut.inner(ib, ia), expect, "table must be symmetric");
+        }
+    }
+
+    #[test]
+    fn pair_lut_shared_is_cached() {
+        let a = PairLut::shared(2);
+        let b = PairLut::shared(2);
+        assert!(Arc::ptr_eq(&a, &b), "same-q LUTs must share storage");
+    }
+
+    #[test]
+    fn block_dot_is_exact_integer_inner_product() {
+        // LUT M²-lookup block dot == integer dot of the decoded M-level
+        // points — exactly, no tolerance.
+        propcheck::check("hier-lut-block-dot", 200, 4106, |rng| {
+            for &(q, m) in &[(2u32, 4usize), (2, 8), (3, 3)] {
+                let codec = HierarchicalCodec::new(q, m);
+                let lut = PairLut::shared(q);
+                let mut xa = [0f32; D];
+                let mut xb = [0f32; D];
+                for i in 0..D {
+                    xa[i] = rng.gauss_f32();
+                    xb[i] = rng.gauss_f32();
+                }
+                let nd = codec.digits_per_block();
+                let mut da = vec![0u8; nd];
+                let mut db = vec![0u8; nd];
+                codec.encode_block(&xa, &mut da);
+                codec.encode_block(&xb, &mut db);
+                let mut ia = vec![0u16; m];
+                let mut ib = vec![0u16; m];
+                for l in 0..m {
+                    let mut c = [0u8; D];
+                    c.copy_from_slice(&da[l * D..(l + 1) * D]);
+                    ia[l] = pack_index(&c, q);
+                    c.copy_from_slice(&db[l * D..(l + 1) * D]);
+                    ib[l] = pack_index(&c, q);
+                }
+                let fast = lut.block_dot(&ia, &ib) as i64;
+                let mut ha = [0i32; D];
+                let mut hb = [0i32; D];
+                codec.decode_halfunits(&da, &mut ha);
+                codec.decode_halfunits(&db, &mut hb);
+                let slow: i64 = (0..D).map(|i| ha[i] as i64 * hb[i] as i64).sum();
+                if fast != slow {
+                    return Err(format!("q={q} M={m}: lut {fast} != int {slow}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantizer_roundtrip_error_shrinks_with_levels() {
+        let mut rng = Rng::new(4107);
+        let a = rng.gauss_vec(256);
+        let mut last = f64::INFINITY;
+        for m in [2usize, 3, 4] {
+            let hq = HierarchicalQuantizer::new(2, m, vec![0.6, 1.0, 1.6, 2.4]);
+            let qm = hq.quantize_matrix(&crate::util::linalg::Mat::from_vec(1, 256, a.clone()));
+            let deq = hq.dequantize_matrix(&qm);
+            let e = stats::mse(&a, &deq.data);
+            assert!(e < last, "M={m}: mse {e} not < {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn quantize_matrix_levels_and_payload() {
+        let mut rng = Rng::new(4108);
+        let w = crate::util::linalg::Mat::from_vec(4, 64, rng.gauss_vec(256));
+        let hq = HierarchicalQuantizer::new(2, 3, vec![0.8, 1.4]);
+        let qm = hq.quantize_matrix(&w);
+        assert_eq!(qm.levels, 3);
+        assert_eq!(qm.codes.len(), 4 * 64 * 3);
+        assert_eq!(qm.beta_idx.len(), 4 * 64 / D);
+        // M levels × 1 bit (q=2) per entry + 2-bit β/block + f32 row scales
+        let expect_bits = 4 * 64 * 3 + 2 * (4 * 64 / D) + 4 * 32;
+        assert_eq!(qm.payload_bytes(), expect_bits / 8);
+    }
+
+    #[test]
+    fn zero_row_roundtrip() {
+        let hq = HierarchicalQuantizer::new(3, 3, vec![1.0]);
+        let w = crate::util::linalg::Mat::zeros(2, 32);
+        let qm = hq.quantize_matrix(&w);
+        assert_eq!(qm.scales, vec![0.0, 0.0]);
+        let deq = hq.dequantize_matrix(&qm);
+        assert!(deq.data.iter().all(|&v| v == 0.0));
+    }
+}

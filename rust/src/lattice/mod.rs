@@ -10,15 +10,21 @@
 //!   (Alg. 4).
 //! * [`beta_dp`] — the dynamic program selecting the optimal β subset
 //!   (Alg. 6, Appendix F).
+//! * [`hierarchical`] — M-level hierarchical nested-lattice codes
+//!   (Kaplan & Ordentlich, ISIT 2025): exact base-q digit expansion of
+//!   Q_Λ(x), successive-refinement truncation, and the shared pair LUT
+//!   behind the `quant::lut` GEMM backend.
 //! * [`hex`] — a 2-D hexagonal (A2) nested-lattice demo used to regenerate
 //!   Fig. 2's shaping-waste comparison.
 
 pub mod beta_dp;
 pub mod e8;
 pub mod hex;
+pub mod hierarchical;
 pub mod nested;
 pub mod voronoi;
 
 pub use e8::{e8_contains, nearest_e8, nearest_e8_m, D};
+pub use hierarchical::{HierarchicalCodec, HierarchicalQuantizer, PairLut};
 pub use nested::{NestedLatticeQuantizer, QuantizedVector, Strategy};
 pub use voronoi::VoronoiCodec;

@@ -96,14 +96,11 @@ fn apply_quant_flags(args: &[String], mut opts: EngineOptions) -> Result<EngineO
 /// was loaded.
 fn resolve_plan(args: &[String], base: EngineOptions) -> Result<(QuantPlan, Option<String>)> {
     if let Some(path) = flag(args, "--plan") {
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("read plan file '{path}'"))?;
-        let plan = QuantPlan::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parse '{path}': {e}"))?;
-        // validate here so a bad plan file is a CLI error with the file
-        // named, not a panic inside Engine::build_plan
-        plan.validate()
-            .map_err(|e| anyhow::anyhow!("invalid plan '{path}': {e}"))?;
+        // `QuantPlan::load` is the one typed load path (same taxonomy
+        // as `io::TensorFileError`): Io / Parse / Unsupported / Invalid,
+        // each naming the file — a bad or unserveable plan is a CLI
+        // error here, not a panic inside Engine::build_plan
+        let plan = QuantPlan::load(std::path::Path::new(&path))?;
         Ok((plan, Some(path)))
     } else {
         Ok((QuantPlan::uniform(apply_quant_flags(args, base)?), None))

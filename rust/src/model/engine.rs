@@ -27,16 +27,18 @@
 
 use crate::kvpool::{KvPool, PoolConfig, SessionKv};
 use crate::lattice::beta_dp::select_betas_for_data;
+use crate::lattice::hierarchical::HierarchicalQuantizer;
 use crate::lattice::e8::D;
 use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector, Strategy};
 use crate::lattice::voronoi::VoronoiCodec;
 use crate::model::forward::{embed_into, gelu, rmsnorm, rmsnorm_rows, softmax_inplace, window_nll};
 use crate::model::weights::ModelWeights;
-use crate::obs::trace::{EventKind, SiteTag, Trace, TRACK_ENGINE};
+use crate::obs::trace::{EventKind, GemmPath, SiteTag, Trace, TRACK_ENGINE};
 use crate::quant::gemm::GemmScratch;
 use crate::quant::ldlq::hessian_from_activations;
+use crate::quant::lut::{LutScratch, PackedLutMatrix};
 use crate::quant::matrix::QuantizedMatrix;
-use crate::quant::plan::{QuantPlan, SiteId, SiteKind, SitePolicy, SiteRole};
+use crate::quant::plan::{GemmBackend, QuantPlan, SiteId, SiteKind, SitePolicy, SiteRole};
 use crate::quant::qgemm::PackedNestMatrix;
 use crate::quant::uniform::UniformQuantizer;
 use crate::rotation::Rotation;
@@ -288,6 +290,11 @@ pub struct QLinear {
     /// `forward` through the decode-amortized GEMM instead of fp32
     /// matmul over the dequantized weight
     pub packed: Option<PackedNestMatrix>,
+    /// LUT inner-product backend (`backend = lut` sites): M-level
+    /// hierarchical codes served entirely by pair-LUT lookups — no
+    /// decoded rows and no fp32 weights resident; activations are
+    /// hierarchically encoded inside the GEMV, so `act` is `None` here
+    pub lut: Option<PackedLutMatrix>,
     /// input rotation (already folded into the stored weight)
     pub rot: Option<Rotation>,
     /// this site's activation treatment
@@ -312,6 +319,8 @@ pub struct LinScratch {
     act_codes: Vec<i8>,
     /// nested activation codes
     act_qv: QuantizedVector,
+    /// encoded-activation indices + staging for the LUT backend
+    lut: LutScratch,
 }
 
 impl LinScratch {
@@ -321,6 +330,7 @@ impl LinScratch {
             gemm: GemmScratch::new(),
             act_codes: Vec::new(),
             act_qv: QuantizedVector::default(),
+            lut: LutScratch::new(),
         }
     }
 }
@@ -389,7 +399,18 @@ impl QLinear {
         y.cols = self.out_features;
         y.data.clear();
         y.data.resize(s.xbuf.rows * self.out_features, 0.0);
-        if let Some(packed) = &self.packed {
+        if let Some(lut) = &self.lut {
+            // LUT sites: activations are hierarchically encoded inside
+            // the GEMV/GEMM and the product is pure table lookups —
+            // gemm_into is bit-for-bit the per-row gemv (`quant::lut`
+            // pins this), so `threads` never changes the bits here
+            // either.
+            if s.xbuf.rows == 1 {
+                lut.gemv_into(s.xbuf.row(0), y.row_mut(0), &mut s.lut);
+            } else {
+                lut.gemm_into(&s.xbuf, y, threads, &mut s.lut);
+            }
+        } else if let Some(packed) = &self.packed {
             if s.xbuf.rows == 1 {
                 packed.gemv_into(s.xbuf.row(0), y.row_mut(0));
             } else {
@@ -416,7 +437,13 @@ impl QLinear {
     /// baselines, 4 bytes/entry for fp sites.
     pub fn payload(&self) -> SitePayload {
         let entries = self.in_features * self.out_features;
-        let bytes = if let Some((qm, _)) = &self.coded {
+        let bytes = if let Some(lut) = &self.lut {
+            // M levels × ⌈log2 q⌉ bits per weight + β/scale side info —
+            // identical to the carrier matrix formula (`quant::lut`
+            // pins the equality), counted here from the packed form
+            // because LUT sites drop the carrier after packing
+            lut.payload_bytes()
+        } else if let Some((qm, _)) = &self.coded {
             qm.payload_bytes()
         } else if self.policy.quantize {
             (entries * self.policy.uniform_bits as usize).div_ceil(8) + self.out_features * 4
@@ -428,6 +455,18 @@ impl QLinear {
             bytes,
             bits_per_entry: bytes as f64 * 8.0 / entries.max(1) as f64,
             quantized: self.policy.quantize,
+        }
+    }
+
+    /// Which execution backend serves this site's GEMM — the label the
+    /// `site_gemm` trace spans attribute time to.
+    pub fn gemm_path(&self) -> GemmPath {
+        if self.lut.is_some() {
+            GemmPath::Lut
+        } else if self.packed.is_some() {
+            GemmPath::Packed
+        } else {
+            GemmPath::Fp
         }
     }
 }
@@ -847,6 +886,7 @@ impl Engine {
                 in_features: wm.cols,
                 wt_deq: Some(wm.transpose()),
                 packed: None,
+                lut: None,
                 rot: None,
                 act: Self::act_quant(stats, apol),
                 coded: None,
@@ -876,6 +916,7 @@ impl Engine {
                     in_features: wm.cols,
                     wt_deq: Some(deq.transpose()),
                     packed: None,
+                    lut: None,
                     rot,
                     act,
                     coded: None,
@@ -894,11 +935,73 @@ impl Engine {
                     in_features: wm.cols,
                     wt_deq: Some(deq.transpose()),
                     packed: None,
+                    lut: None,
                     rot,
                     act,
                     coded: None,
                     bits_zstd: wpol.uniform_bits as f64,
                     bits_packed: wpol.uniform_bits as f64,
+                }
+            }
+            // The LUT backend: M-level hierarchical codes at base q
+            // (rate M·log2 q bits/entry) served by pair-LUT inner
+            // products (`quant::lut`) — decoded rows never exist, and
+            // no fp32 copy stays resident. LDLQ is skipped here: the
+            // hierarchical encoder is a fixed lattice map (digit-exact
+            // for Q_Λ(x)), so codes come from direct Algorithm-3-style
+            // quantization. βs are DP-selected against the equal-rate
+            // flat M-variant codec (the M-level encoder reproduces flat
+            // rate-q^M reconstructions exactly when not overloaded;
+            // q^M is clamped to the flat codec's 255 ceiling for the DP
+            // only). The hierarchical digit decode always uses the
+            // hardware-simple M-variant oracle, whichever nested method
+            // the site names.
+            Method::NestQuant | Method::NestQuantM if wpol.backend == GemmBackend::Lut => {
+                let m = wpol.m_levels;
+                let flat_q = (wpol.q as u64).pow(m).min(255) as u32;
+                let flat = VoronoiCodec::new_m(flat_q);
+                let blocks = Self::row_blocks(&wrot);
+                let wbetas =
+                    select_betas_for_data(&flat, &blocks, wpol.k, 3.0 / flat_q as f32);
+                let wq = HierarchicalQuantizer::new(wpol.q, m as usize, wbetas);
+                // activation-side quantizer: the LUT product consumes
+                // *coded* inputs, so the site's ActQuant is not applied
+                // on top (encoding happens inside the GEMV) — it is
+                // calibrated here from the same taps the nested
+                // ActQuant would use, with the wider activation margin
+                let act_blocks = Self::norm_act_blocks(stats);
+                let abetas = if act_blocks.is_empty() {
+                    wq.betas.clone()
+                } else {
+                    select_betas_for_data(
+                        &flat,
+                        &act_blocks,
+                        apol.k.min(4),
+                        4.0 / flat_q as f32,
+                    )
+                };
+                let aq = HierarchicalQuantizer::new(wpol.q, m as usize, abetas);
+                let qm = wq.quantize_matrix(&wrot);
+                assert!(
+                    PackedLutMatrix::supports(&wq, qm.cols),
+                    "{}: plan validation admitted an unserveable LUT site",
+                    site.label()
+                );
+                let lut = PackedLutMatrix::from_quantized(&qm, &wq, aq);
+                let bits = lut.bits_per_entry();
+                QLinear {
+                    site,
+                    policy: *wpol,
+                    out_features: qm.rows,
+                    in_features: wm.cols,
+                    wt_deq: None,
+                    packed: None,
+                    lut: Some(lut),
+                    rot,
+                    act: ActQuant::None,
+                    coded: None,
+                    bits_zstd: bits,
+                    bits_packed: bits,
                 }
             }
             Method::NestQuant | Method::NestQuantM => {
@@ -979,6 +1082,7 @@ impl Engine {
                     in_features: wm.cols,
                     wt_deq,
                     packed,
+                    lut: None,
                     rot,
                     act,
                     coded: Some((qm, nq)),
@@ -1000,6 +1104,24 @@ impl Engine {
             return ActQuant::Uniform(apol.uniform_bits);
         }
         // normalize activation rows like Algorithm 3 will, then DP-select β
+        let blocks = Self::norm_act_blocks(stats);
+        if blocks.is_empty() {
+            return ActQuant::None;
+        }
+        let codec = apol.method.codec(apol.q);
+        let betas = select_betas_for_data(&codec, &blocks, apol.k, 4.0 / apol.q as f32);
+        ActQuant::Nested(NestedLatticeQuantizer::with_codec(
+            codec,
+            betas,
+            Strategy::OptBeta,
+        ))
+    }
+
+    /// Normalized 8-blocks of a site's calibration activations (rows
+    /// normalized ×√n/‖·‖₂ like Algorithm 3 will at runtime) — the β-DP
+    /// input shared by the nested `ActQuant` and the LUT backend's
+    /// activation-side quantizer.
+    fn norm_act_blocks(stats: &SiteStats) -> Vec<[f32; D]> {
         let mut blocks: Vec<[f32; D]> = Vec::new();
         for t in 0..stats.acts.rows.min(64) {
             let row = stats.acts.row(t);
@@ -1016,16 +1138,7 @@ impl Engine {
                 blocks.push(b);
             }
         }
-        if blocks.is_empty() {
-            return ActQuant::None;
-        }
-        let codec = apol.method.codec(apol.q);
-        let betas = select_betas_for_data(&codec, &blocks, apol.k, 4.0 / apol.q as f32);
-        ActQuant::Nested(NestedLatticeQuantizer::with_codec(
-            codec,
-            betas,
-            Strategy::OptBeta,
-        ))
+        blocks
     }
 
     /// Measured activation-quantizer noise: mean per-coordinate roundtrip
@@ -1439,9 +1552,23 @@ impl Engine {
         trace: Option<&Trace>,
     ) {
         #[inline]
-        fn gemm_span(trace: Option<&Trace>, layer: u16, site: SiteTag, start: Option<u64>) {
+        fn gemm_span(
+            trace: Option<&Trace>,
+            layer: u16,
+            site: SiteTag,
+            backend: GemmPath,
+            start: Option<u64>,
+        ) {
             if let (Some(tr), Some(t0)) = (trace, start) {
-                tr.span(TRACK_ENGINE, EventKind::SiteGemm { layer, site }, t0);
+                tr.span(
+                    TRACK_ENGINE,
+                    EventKind::SiteGemm {
+                        layer,
+                        site,
+                        backend,
+                    },
+                    t0,
+                );
             }
         }
         let n = tokens.len();
@@ -1480,13 +1607,13 @@ impl Engine {
             rmsnorm_rows(&scratch.x, &l.ln1, &mut scratch.normed);
             let t0 = trace.map(Trace::now);
             l.wq.forward_into(&scratch.normed, &mut scratch.q, &mut scratch.lin, 1);
-            gemm_span(trace, lt, SiteTag::Q, t0);
+            gemm_span(trace, lt, SiteTag::Q, l.wq.gemm_path(), t0);
             let t0 = trace.map(Trace::now);
             l.wk.forward_into(&scratch.normed, &mut scratch.k, &mut scratch.lin, 1);
-            gemm_span(trace, lt, SiteTag::K, t0);
+            gemm_span(trace, lt, SiteTag::K, l.wk.gemm_path(), t0);
             let t0 = trace.map(Trace::now);
             l.wv.forward_into(&scratch.normed, &mut scratch.v, &mut scratch.lin, 1);
-            gemm_span(trace, lt, SiteTag::V, t0);
+            gemm_span(trace, lt, SiteTag::V, l.wv.gemm_path(), t0);
             reshape(&mut scratch.att, n, d);
             for (s, cache) in caches.iter_mut().enumerate() {
                 for h in 0..cfg.n_head {
@@ -1520,7 +1647,7 @@ impl Engine {
             }
             let t0 = trace.map(Trace::now);
             l.wo.forward_into(&scratch.att, &mut scratch.proj, &mut scratch.lin, 1);
-            gemm_span(trace, lt, SiteTag::O, t0);
+            gemm_span(trace, lt, SiteTag::O, l.wo.gemm_path(), t0);
             for (xv, &pv) in scratch.x.data.iter_mut().zip(scratch.proj.data.iter()) {
                 *xv += pv;
             }
@@ -1528,14 +1655,14 @@ impl Engine {
             let t0 = trace.map(Trace::now);
             l.w_up
                 .forward_into(&scratch.normed, &mut scratch.hmid, &mut scratch.lin, 1);
-            gemm_span(trace, lt, SiteTag::Up, t0);
+            gemm_span(trace, lt, SiteTag::Up, l.w_up.gemm_path(), t0);
             for v in scratch.hmid.data.iter_mut() {
                 *v = gelu(*v);
             }
             let t0 = trace.map(Trace::now);
             l.w_down
                 .forward_into(&scratch.hmid, &mut scratch.proj, &mut scratch.lin, 1);
-            gemm_span(trace, lt, SiteTag::Down, t0);
+            gemm_span(trace, lt, SiteTag::Down, l.w_down.gemm_path(), t0);
             for (xv, &pv) in scratch.x.data.iter_mut().zip(scratch.proj.data.iter()) {
                 *xv += pv;
             }
@@ -1548,7 +1675,13 @@ impl Engine {
         rmsnorm_rows(&scratch.x, &self.final_norm, &mut scratch.normed);
         let t0 = trace.map(Trace::now);
         self.head.forward_into(&scratch.normed, logits, &mut scratch.lin, 1);
-        gemm_span(trace, self.layers.len() as u16, SiteTag::Head, t0);
+        gemm_span(
+            trace,
+            self.layers.len() as u16,
+            SiteTag::Head,
+            self.head.gemm_path(),
+            t0,
+        );
     }
 
     /// Perplexity over non-overlapping windows.
@@ -2020,6 +2153,132 @@ mod tests {
             (int_ppl / fake_ppl - 1.0).abs() < 0.02,
             "integer-backend ppl {int_ppl} vs fake-quant ppl {fake_ppl}"
         );
+    }
+
+    #[test]
+    fn lut_backend_engine_serves_weight_sites_end_to_end() {
+        // the LUT acceptance path: every weight site carries the LUT
+        // backend and nothing else (never-materialize: no packed, no
+        // wt_deq, no carrier codes), forward/forward_into agree bitwise
+        // across the GEMV / GEMM / threaded shapes, logits track an
+        // equal-rate decode-backend engine, payload accounting reports
+        // the M·log2 q hierarchical rate, and the plan round-trips
+        // through the .qplan text format.
+        let w = synth_weights();
+        let base = EngineOptions {
+            method: Method::NestQuantM,
+            regime: Regime::WKvA,
+            q: 16,
+            ldlq: false,
+            qa_ldlq: false,
+            calib_windows: 1,
+            ..Default::default()
+        };
+        let lut_patch = PolicyPatch {
+            backend: Some(GemmBackend::Lut),
+            q: Some(2),
+            m_levels: Some(4),
+            ..Default::default()
+        };
+        let builder = EngineBuilder::from_options(base.clone()).rule(
+            SiteSelector {
+                role: Some(SiteRole::Weights),
+                ..Default::default()
+            },
+            lut_patch,
+        );
+        let plan = builder.plan();
+        // backend + m_levels survive the .qplan text format
+        let back = QuantPlan::parse(&plan.render()).unwrap();
+        assert_eq!(back, plan);
+        let eng = Engine::build_plan(&w, plan);
+        for l in &eng.layers {
+            for lin in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_up, &l.w_down] {
+                assert!(lin.lut.is_some(), "LUT backend missing on {}", lin.site.label());
+                assert!(
+                    lin.packed.is_none() && lin.wt_deq.is_none() && lin.coded.is_none(),
+                    "{} materialized a non-LUT representation",
+                    lin.site.label()
+                );
+                assert_eq!(lin.gemm_path(), GemmPath::Lut);
+                assert!(matches!(lin.act, ActQuant::None), "LUT sites encode inside the GEMV");
+            }
+        }
+        assert!(eng.head.lut.is_some(), "LUT backend missing on head");
+
+        // forward vs forward_into, bitwise, with one shared dirty
+        // scratch — GEMV (rows=1), small GEMM, threaded GEMM
+        let mut rng = Rng::new(0x117);
+        let mut s = LinScratch::new();
+        for rows in [1usize, 3, 17] {
+            for lin in [&eng.layers[0].wq, &eng.layers[0].w_down, &eng.head] {
+                let x = Mat {
+                    rows,
+                    cols: lin.in_features,
+                    data: (0..rows * lin.in_features).map(|_| rng.f32() - 0.5).collect(),
+                };
+                let y_ref = lin.forward(&x);
+                let mut y = Mat::zeros(0, 0);
+                let threads = if rows >= 16 { 0 } else { 1 };
+                lin.forward_into(&x, &mut y, &mut s, threads);
+                assert_eq!((y.rows, y.cols), (rows, lin.out_features));
+                for (i, (a, b)) in y.data.iter().zip(y_ref.data.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{} rows={rows} out {i}: {a} vs {b}",
+                        lin.site.label()
+                    );
+                }
+            }
+        }
+
+        // equal-rate cross-check: q=2, M=4 hierarchical codes reproduce
+        // flat q=16 reconstructions except on (rare, DP-margin-guarded)
+        // overloaded blocks, and the LUT activation encoder matches the
+        // decode engine's nested ActQuant at the same rate — so logits
+        // must track the decode-backend engine closely in aggregate
+        let dec = Engine::build(&w, base);
+        let toks: Vec<i32> = w.val_tokens[..12].to_vec();
+        let a = eng.forward_window(&toks);
+        let b = dec.forward_window(&toks);
+        assert_eq!(a.data.len(), b.data.len());
+        // near-exact elementwise (both paths reconstruct the same flat
+        // codewords), with slack for isolated blocks where the flat and
+        // telescoped overload regions disagree
+        let (mut close, mut d2, mut n2) = (0usize, 0f64, 0f64);
+        for i in 0..a.data.len() {
+            let (av, bv) = (a.data[i] as f64, b.data[i] as f64);
+            if (av - bv).abs() <= 1e-2 * (1.0 + bv.abs()) {
+                close += 1;
+            }
+            d2 += (av - bv).powi(2);
+            n2 += bv.powi(2);
+        }
+        let rel = (d2 / n2.max(1e-12)).sqrt();
+        assert!(rel < 0.1, "LUT vs decode logits diverge: rel L2 {rel}");
+        assert!(
+            close * 20 >= a.data.len() * 19,
+            "only {close}/{} logits match the decode backend",
+            a.data.len()
+        );
+
+        // payload accounting: 4 bits/entry codes (M·log2 q) + β + scales
+        for sp in eng.site_payloads() {
+            assert!(sp.quantized, "{:?}", sp.site.label());
+            assert!(
+                sp.bits_per_entry > 4.0 && sp.bits_per_entry < 5.5,
+                "{}: {} bits/entry",
+                sp.site.label(),
+                sp.bits_per_entry
+            );
+        }
+
+        // generates through the fused incremental path (the same
+        // forward_into both the solo and fused steps share)
+        let mut sess = crate::coordinator::generator::GenSession::new(&eng);
+        let out = sess.generate(&w.val_tokens[..4].to_vec(), 8);
+        assert_eq!(out.len(), 8);
     }
 
     #[test]

@@ -52,9 +52,15 @@ fn event_args(kind: EventKind) -> String {
         } => format!("{{\"queue_wait_us\":{queue_wait_us},\"replayed\":{replayed}}}"),
         EventKind::Prefill { tokens } => format!("{{\"tokens\":{tokens}}}"),
         EventKind::DecodeStep { batch } => format!("{{\"batch\":{batch}}}"),
-        EventKind::SiteGemm { layer, site } => {
-            format!("{{\"layer\":{layer},\"site\":\"{}\"}}", site.name())
-        }
+        EventKind::SiteGemm {
+            layer,
+            site,
+            backend,
+        } => format!(
+            "{{\"layer\":{layer},\"site\":\"{}\",\"backend\":\"{}\"}}",
+            site.name(),
+            backend.name()
+        ),
         EventKind::Done { tokens } => format!("{{\"tokens\":{tokens}}}"),
         EventKind::ShutdownDrain { undrained } => format!("{{\"undrained\":{undrained}}}"),
         _ => "{}".to_string(),
@@ -519,7 +525,7 @@ impl Drop for MetricsServer {
 #[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
-    use crate::obs::trace::{req_track, SiteTag, Trace};
+    use crate::obs::trace::{req_track, GemmPath, SiteTag, Trace};
 
     fn demo_trace() -> Trace {
         let t = Trace::manual(256);
@@ -543,6 +549,7 @@ mod tests {
             EventKind::SiteGemm {
                 layer: 1,
                 site: SiteTag::Up,
+                backend: GemmPath::Packed,
             },
             t1,
         );
@@ -562,6 +569,7 @@ mod tests {
         assert!(json.contains("\"thread_name\""));
         assert!(json.contains("req-0"));
         assert!(json.contains("\"site\":\"w_up\""));
+        assert!(json.contains("\"backend\":\"packed\""));
     }
 
     #[test]

@@ -39,4 +39,4 @@ pub use export::{
     chrome_trace_json, validate_chrome_trace, validate_prometheus, MetricsServer, PromWriter,
 };
 pub use histogram::{HistSummary, LogHistogram};
-pub use trace::{Event, EventKind, SiteTag, Trace, TraceConfig};
+pub use trace::{Event, EventKind, GemmPath, SiteTag, Trace, TraceConfig};

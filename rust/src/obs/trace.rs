@@ -66,6 +66,28 @@ impl SiteTag {
     }
 }
 
+/// Which execution backend served a sampled `SiteGemm` span — the
+/// dequantized fp32 matmul, the packed integer-decode GEMM
+/// (`quant::qgemm`), or the hierarchical LUT inner-product backend
+/// (`quant::lut`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum GemmPath {
+    Fp,
+    Packed,
+    Lut,
+}
+
+impl GemmPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmPath::Fp => "fp",
+            GemmPath::Packed => "packed",
+            GemmPath::Lut => "lut",
+        }
+    }
+}
+
 /// Fixed-size event payloads — every variant is `Copy` so a ring push
 /// never allocates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,8 +105,13 @@ pub enum EventKind {
     Prefill { tokens: u32 },
     /// one fused decode step over `batch` live sessions (sampled)
     DecodeStep { batch: u32 },
-    /// one site's GEMM inside a sampled fused step
-    SiteGemm { layer: u16, site: SiteTag },
+    /// one site's GEMM inside a sampled fused step, attributed to the
+    /// backend that served it
+    SiteGemm {
+        layer: u16,
+        site: SiteTag,
+        backend: GemmPath,
+    },
     /// request preempted under pool pressure (pages released, requeued)
     Preempted,
     /// request deadline expired (shed from queue or mid-generation)
@@ -417,12 +444,16 @@ mod tests {
         assert_eq!(
             EventKind::SiteGemm {
                 layer: 0,
-                site: SiteTag::Q
+                site: SiteTag::Q,
+                backend: GemmPath::Packed
             }
             .category(),
             "engine"
         );
         assert_eq!(SiteTag::Down.name(), "w_down");
+        assert_eq!(GemmPath::Fp.name(), "fp");
+        assert_eq!(GemmPath::Packed.name(), "packed");
+        assert_eq!(GemmPath::Lut.name(), "lut");
         assert_eq!(
             EventKind::Admitted {
                 queue_wait_us: 1,

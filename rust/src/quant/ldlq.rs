@@ -191,6 +191,7 @@ fn ldlq_core(
         rows: w.rows,
         cols: n,
         q: nq.q(),
+        levels: 1,
         codes,
         beta_idx,
         scales,

@@ -1,0 +1,564 @@
+//! The LUT inner-product GEMM backend (Kaplan & Ordentlich, ISIT 2025):
+//! weights stored as M-level hierarchical digit *indices*, activations
+//! hierarchically encoded on the fly, and C = A·Bᵀ computed entirely by
+//! lookups into the shared [`PairLut`] — M² table reads per 8-block pair,
+//! i32 accumulation, **no decode**: unlike the decode-amortized backend
+//! (`quant::qgemm::PackedNestMatrix` + `quant::gemm`), no decoded i16 row
+//! buffer ever exists. That flips the compute story: the decode backend
+//! amortizes per-row decode over the batch (wins at large batch), the
+//! LUT backend pays per-activation encode once and then O(M²) integer
+//! lookups per block pair (wins at decode-step batch sizes, where the
+//! decode backend re-decodes every weight row per token).
+//!
+//! Scaling chain (mirrors Algorithm 4): digit decodes are in half-units,
+//! so a block's LUT dot is 4× the real lattice product; both β
+//! dictionaries are stored pre-halved (β/2), making the per-block factor
+//! (β_a/2)(β_w/2) = β_a·β_w/4 exact. Per-row f32 accumulation and the
+//! final (s_a/√n)(s_w/√n) denormalization match the decode path, so the
+//! only error vs a true inner product is the quantization error itself —
+//! the two-sided bound documented in `lattice::hierarchical` and pinned
+//! by `lut_dot_within_documented_bound` below.
+//!
+//! Threading reuses the `quant::gemm` driver shape: activations are
+//! encoded once per call, weight rows are partitioned across
+//! `std::thread::scope` workers writing disjoint chunks of a
+//! (rows, batch) staging buffer, transposed into the caller's
+//! (batch, rows) output. `threads == 1` with a warm [`LutScratch`] is
+//! allocation-free — the fused decode loop's requirement.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::sync::Arc;
+
+use super::gemm::{row_ranges, transpose_into};
+use super::matrix::QuantizedMatrix;
+use crate::lattice::e8::D;
+use crate::lattice::hierarchical::{
+    lut_supported, pack_index, HierarchicalQuantizer, PairLut, MAX_LEVELS,
+};
+use crate::util::linalg::Mat;
+
+/// Reusable buffers for [`PackedLutMatrix::gemv_into`]/[`gemm_into`]:
+/// the encoded activation indices, per-block activation β multipliers,
+/// per-row activation scales, and the (rows, batch) staging output.
+///
+/// [`gemm_into`]: PackedLutMatrix::gemm_into
+#[derive(Default)]
+pub struct LutScratch {
+    /// batch·(cols/8)·M packed digit indices, `[row][block][level]`
+    act_idx: Vec<u16>,
+    /// batch·(cols/8) chosen β_t/2 values (dictionary pre-dereferenced)
+    act_beta: Vec<f32>,
+    /// batch s_a/√n denormalization factors
+    act_scale: Vec<f32>,
+    /// (rows, batch) staging buffer for the GEMM path
+    ytmp: Vec<f32>,
+}
+
+impl LutScratch {
+    pub fn new() -> Self {
+        LutScratch::default()
+    }
+}
+
+/// A weight matrix in LUT-ready hierarchical storage: per 8-block, M
+/// packed u16 digit indices (coarsest-last), 2-bit β indices, per-row
+/// scales, plus the activation-side quantizer that encodes inputs at
+/// GEMV time. The shared pair LUT is held by `Arc` — one table per q
+/// process-wide.
+pub struct PackedLutMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub q: u32,
+    pub m_levels: usize,
+    lut: Arc<PairLut>,
+    /// rows·(cols/8)·M digit indices, `[row][block][level]`
+    idx: Vec<u16>,
+    /// 2-bit weight β indices, four per byte, row-major
+    beta_idx: Vec<u8>,
+    /// weight β dictionary, pre-halved (β_t/2)
+    beta_half: [f32; 4],
+    /// per-row s_r/√n
+    row_scale: Vec<f32>,
+    /// activation-side hierarchical quantizer (same codec, own β ladder)
+    act: HierarchicalQuantizer,
+    /// activation β dictionary, pre-halved
+    act_beta_half: [f32; 4],
+}
+
+impl PackedLutMatrix {
+    /// Whether a quantizer/shape pair is representable: the (q, M) pair
+    /// must be inside the LUT safety window ([`lut_supported`]), β
+    /// dictionaries 2-bit packable, columns in whole 8-blocks.
+    pub fn supports(hq: &HierarchicalQuantizer, cols: usize) -> bool {
+        lut_supported(hq.q(), hq.m_levels() as u32)
+            && hq.k() <= 4
+            && cols % D == 0
+            && cols > 0
+    }
+
+    /// Pack an already-quantized M-level matrix (`qm.levels == M`, codes
+    /// laid out `[row][block][level][coord]`) without re-quantizing.
+    /// `wq` is the quantizer that produced `qm`; `act` encodes
+    /// activations at GEMV time (same codec parameters, its own β
+    /// dictionary — typically calibrated separately).
+    pub fn from_quantized(
+        qm: &QuantizedMatrix,
+        wq: &HierarchicalQuantizer,
+        act: HierarchicalQuantizer,
+    ) -> Self {
+        let (q, m) = (wq.q(), wq.m_levels());
+        assert!(
+            lut_supported(q, m as u32),
+            "(q={q}, M={m}) outside the LUT safety window"
+        );
+        assert_eq!(qm.q, q, "carrier matrix quantized at a different q");
+        assert_eq!(qm.levels as usize, m, "carrier matrix has a different level count");
+        assert_eq!(act.q(), q, "activation quantizer at a different q");
+        assert_eq!(act.m_levels(), m, "activation quantizer level mismatch");
+        assert!(wq.k() <= 4 && act.k() <= 4, "β dictionaries are 2-bit packed");
+        assert_eq!(qm.cols % D, 0, "cols must be divisible by 8");
+        assert!(qm.cols > 0, "empty rows are not packable");
+
+        let bpr = qm.cols / D;
+        let mut idx = vec![0u16; qm.rows * bpr * m];
+        let mut c = [0u8; D];
+        for (g, slot) in idx.iter_mut().enumerate() {
+            // g = (row·bpr + block)·M + level ↔ codes group g·8
+            c.copy_from_slice(&qm.codes[g * D..(g + 1) * D]);
+            *slot = pack_index(&c, q);
+        }
+        let blocks = qm.rows * bpr;
+        let mut beta_idx = vec![0u8; blocks.div_ceil(4)];
+        for (i, &b) in qm.beta_idx.iter().enumerate() {
+            beta_idx[i / 4] |= b << (2 * (i % 4));
+        }
+        let mut beta_half = [0f32; 4];
+        for (t, &b) in wq.betas.iter().enumerate() {
+            beta_half[t] = b * 0.5;
+        }
+        let mut act_beta_half = [0f32; 4];
+        for (t, &b) in act.betas.iter().enumerate() {
+            act_beta_half[t] = b * 0.5;
+        }
+        let row_scale = qm
+            .scales
+            .iter()
+            .map(|&s| s / (qm.cols as f32).sqrt())
+            .collect();
+        PackedLutMatrix {
+            rows: qm.rows,
+            cols: qm.cols,
+            q,
+            m_levels: m,
+            lut: PairLut::shared(q),
+            idx,
+            beta_idx,
+            beta_half,
+            row_scale,
+            act,
+            act_beta_half,
+        }
+    }
+
+    /// Hierarchically encode one activation row into caller slices:
+    /// `idx_out` gets (cols/8)·M packed indices, `beta_out` the chosen
+    /// β_t/2 per block. Returns s_a/√n.
+    fn encode_act_row(&self, x: &[f32], idx_out: &mut [u16], beta_out: &mut [f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.cols);
+        let m = self.m_levels;
+        let s = crate::util::stats::norm2(x) as f32;
+        if s == 0.0 {
+            idx_out.fill(0);
+            beta_out.fill(0.0);
+            return 0.0;
+        }
+        let norm = (self.cols as f32).sqrt() / s;
+        let mut block = [0f32; D];
+        let mut digits = [0u8; MAX_LEVELS * D];
+        let mut c = [0u8; D];
+        for (j, chunk) in x.chunks_exact(D).enumerate() {
+            for i in 0..D {
+                block[i] = chunk[i] * norm;
+            }
+            let (t, _, _) = self.act.quantize_block(&block, &mut digits[..m * D]);
+            for l in 0..m {
+                c.copy_from_slice(&digits[l * D..(l + 1) * D]);
+                idx_out[j * m + l] = pack_index(&c, self.q);
+            }
+            beta_out[j] = self.act_beta_half[t as usize];
+        }
+        s / (self.cols as f32).sqrt()
+    }
+
+    /// One weight row × one encoded activation row, pure table lookups:
+    /// Σ_blocks (Σ_{ℓ,m} q^{ℓ+m}·T)·(β_w/2)(β_a/2). Shared by the GEMV
+    /// and GEMM paths so they are bit-for-bit identical.
+    #[inline]
+    fn accum_row(&self, r: usize, act_idx: &[u16], act_beta: &[f32]) -> f32 {
+        let m = self.m_levels;
+        let bpr = self.cols / D;
+        let widx = &self.idx[r * bpr * m..(r + 1) * bpr * m];
+        let mut acc = 0f32;
+        for j in 0..bpr {
+            let d = self
+                .lut
+                .block_dot(&act_idx[j * m..(j + 1) * m], &widx[j * m..(j + 1) * m])
+                as f32;
+            let bidx = r * bpr + j;
+            let wb =
+                self.beta_half[((self.beta_idx[bidx / 4] >> (2 * (bidx % 4))) & 0x3) as usize];
+            acc += d * (wb * act_beta[j]);
+        }
+        acc
+    }
+
+    /// y = W·x by table lookups (the decode-step hot path). Allocation-
+    /// free once `scratch` is warm — no decoded i16 row is ever built.
+    pub fn gemv_into(&self, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let m = self.m_levels;
+        let bpr = self.cols / D;
+        scratch.act_idx.clear();
+        scratch.act_idx.resize(bpr * m, 0);
+        scratch.act_beta.clear();
+        scratch.act_beta.resize(bpr, 0.0);
+        let a_scale = self.encode_act_row(x, &mut scratch.act_idx, &mut scratch.act_beta);
+        for r in 0..self.rows {
+            y[r] = self.accum_row(r, &scratch.act_idx, &scratch.act_beta)
+                * self.row_scale[r]
+                * a_scale;
+        }
+    }
+
+    /// Allocating convenience wrapper over [`Self::gemv_into`].
+    pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0f32; self.rows];
+        self.gemv_into(x, &mut y, &mut LutScratch::new());
+        y
+    }
+
+    /// Batched GEMM, Y = X·Wᵀ: `xt` is (batch, cols) row-major, `yt`
+    /// (batch, rows). Activations are encoded once per call; weight rows
+    /// are partitioned across `std::thread::scope` workers (`threads ==
+    /// 0` uses all cores) writing disjoint chunks of the staging buffer.
+    /// Results are bit-for-bit identical to [`Self::gemv_into`] per
+    /// batch row.
+    pub fn gemm_into(&self, xt: &Mat, yt: &mut Mat, threads: usize, scratch: &mut LutScratch) {
+        assert_eq!(xt.cols, self.cols, "activation panel width mismatch");
+        assert_eq!(yt.rows, xt.rows, "output batch mismatch");
+        assert_eq!(yt.cols, self.rows, "output width mismatch");
+        let batch = xt.rows;
+        if batch == 0 || self.rows == 0 {
+            return;
+        }
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            threads
+        };
+        let m = self.m_levels;
+        let bpr = self.cols / D;
+        scratch.act_idx.clear();
+        scratch.act_idx.resize(batch * bpr * m, 0);
+        scratch.act_beta.clear();
+        scratch.act_beta.resize(batch * bpr, 0.0);
+        scratch.act_scale.clear();
+        scratch.act_scale.resize(batch, 0.0);
+        for cidx in 0..batch {
+            scratch.act_scale[cidx] = self.encode_act_row(
+                xt.row(cidx),
+                &mut scratch.act_idx[cidx * bpr * m..(cidx + 1) * bpr * m],
+                &mut scratch.act_beta[cidx * bpr..(cidx + 1) * bpr],
+            );
+        }
+        scratch.ytmp.clear();
+        scratch.ytmp.resize(self.rows * batch, 0.0);
+        let LutScratch { act_idx, act_beta, act_scale, ytmp } = scratch;
+        let (act_idx, act_beta, act_scale) =
+            (act_idx.as_slice(), act_beta.as_slice(), act_scale.as_slice());
+
+        let run = |range: std::ops::Range<usize>, out: &mut [f32]| {
+            for (k, r) in range.enumerate() {
+                let rs = self.row_scale[r];
+                let orow = &mut out[k * batch..(k + 1) * batch];
+                for cidx in 0..batch {
+                    orow[cidx] = self.accum_row(
+                        r,
+                        &act_idx[cidx * bpr * m..(cidx + 1) * bpr * m],
+                        &act_beta[cidx * bpr..(cidx + 1) * bpr],
+                    ) * rs
+                        * act_scale[cidx];
+                }
+            }
+        };
+
+        if threads == 1 {
+            // allocation-free fast path: no range vector, no spawn
+            run(0..self.rows, ytmp.as_mut_slice());
+        } else {
+            let ranges = row_ranges(self.rows, threads);
+            let run = &run;
+            std::thread::scope(|s| {
+                let mut rest: &mut [f32] = ytmp.as_mut_slice();
+                for range in ranges {
+                    let (chunk, tail) =
+                        std::mem::take(&mut rest).split_at_mut(range.len() * batch);
+                    rest = tail;
+                    s.spawn(move || run(range, chunk));
+                }
+            });
+        }
+        transpose_into(ytmp, self.rows, batch, yt);
+    }
+
+    /// Allocating convenience wrapper over [`Self::gemm_into`].
+    pub fn gemm(&self, xt: &Mat, threads: usize) -> Mat {
+        let mut yt = Mat::zeros(xt.rows, self.rows);
+        self.gemm_into(xt, &mut yt, threads, &mut LutScratch::new());
+        yt
+    }
+
+    /// Stored payload in bytes at the packed rate — M·⌈log2 q⌉ bits per
+    /// logical weight + 2-bit β/block + f32 row scales. Identical to the
+    /// carrier `QuantizedMatrix::payload_bytes`, so the engine's per-site
+    /// accounting is the same number whichever representation it asks.
+    /// (The in-memory index array is u16 per digit group for lookup
+    /// speed; that is a working-set choice, not the stored rate.)
+    pub fn payload_bytes(&self) -> usize {
+        let code_bits = (self.q as f64).log2().ceil() as usize;
+        (self.rows * self.cols * self.m_levels * code_bits).div_ceil(8)
+            + (self.rows * self.cols / D * 2).div_ceil(8)
+            + self.row_scale.len() * 4
+    }
+
+    /// Bits per logical weight entry of the packed representation.
+    pub fn bits_per_entry(&self) -> f64 {
+        self.payload_bytes() as f64 * 8.0 / (self.rows * self.cols) as f64
+    }
+
+    /// The activation-side quantizer (for fake-quant references in tests
+    /// and the engine's eval path).
+    pub fn act_quantizer(&self) -> &HierarchicalQuantizer {
+        &self.act
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, stats, Rng};
+
+    fn quantizers(q: u32, m: usize) -> (HierarchicalQuantizer, HierarchicalQuantizer) {
+        // β ladders roughly covering N(0,1) blocks at small q^M volumes
+        let wq = HierarchicalQuantizer::new(q, m, vec![0.35, 0.55, 0.85, 1.3]);
+        let aq = HierarchicalQuantizer::new(q, m, vec![0.4, 0.6, 0.95, 1.5]);
+        (wq, aq)
+    }
+
+    fn pack(
+        w: &Mat,
+        q: u32,
+        m: usize,
+    ) -> (PackedLutMatrix, QuantizedMatrix, HierarchicalQuantizer) {
+        let (wq, aq) = quantizers(q, m);
+        let qm = wq.quantize_matrix(w);
+        let packed = PackedLutMatrix::from_quantized(&qm, &wq, aq);
+        (packed, qm, wq)
+    }
+
+    /// Fake-quant an activation row through the packed matrix's own
+    /// activation quantizer (the reference the GEMV is exact against).
+    fn fake_quant_act(packed: &PackedLutMatrix, x: &[f32]) -> Vec<f32> {
+        let aq = packed.act_quantizer();
+        let m = Mat::from_vec(1, x.len(), x.to_vec());
+        let qm = aq.quantize_matrix(&m);
+        aq.dequantize_matrix(&qm).data
+    }
+
+    #[test]
+    fn supports_window() {
+        let (wq, _) = quantizers(2, 4);
+        assert!(PackedLutMatrix::supports(&wq, 64));
+        assert!(!PackedLutMatrix::supports(&wq, 60), "ragged cols");
+        assert!(!PackedLutMatrix::supports(&wq, 0));
+        let (wq8, _) = quantizers(4, 2);
+        assert!(!PackedLutMatrix::supports(&wq8, 64), "q=4 outside LUT window");
+    }
+
+    #[test]
+    fn gemv_matches_dequantized_reference() {
+        // LUT gemv == ⟨x̂, ŵ⟩ computed the slow way (dequantize both,
+        // f64 dot) up to f32 scale-application rounding.
+        propcheck::check("lut-gemv-vs-deq", 10, 5101, |rng| {
+            for &(q, m) in &[(2u32, 3usize), (3, 2)] {
+                let w = Mat::from_vec(8, 64, rng.gauss_vec(512));
+                let (packed, qm, wq) = pack(&w, q, m);
+                let x = rng.gauss_vec(64);
+                let fast = packed.gemv(&x);
+                let wdeq = wq.dequantize_matrix(&qm);
+                let xdeq = fake_quant_act(&packed, &x);
+                for r in 0..8 {
+                    let slow: f64 = wdeq
+                        .row(r)
+                        .iter()
+                        .zip(&xdeq)
+                        .map(|(&a, &b)| a as f64 * b as f64)
+                        .sum();
+                    if (fast[r] as f64 - slow).abs() > 1e-4 * (1.0 + slow.abs()) {
+                        return Err(format!("q={q} M={m} row {r}: {} vs {slow}", fast[r]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lut_dot_within_documented_bound() {
+        // |⟨â,ŵ⟩ − ⟨a,w⟩| ≤ ‖ε_a‖‖w‖ + ‖ε_w‖‖a‖ + ‖ε_a‖‖ε_w‖ — the
+        // two-sided bound, checked across random shapes and seeds.
+        propcheck::check("lut-dot-bound", 20, 5102, |rng| {
+            for &(q, m, rows, cols) in &[(2u32, 4usize, 5usize, 64usize), (2, 3, 3, 32), (3, 2, 4, 48)]
+            {
+                let w = Mat::from_vec(rows, cols, rng.gauss_vec(rows * cols));
+                let (packed, qm, wq) = pack(&w, q, m);
+                let x = rng.gauss_vec(cols);
+                let y = packed.gemv(&x);
+                let wdeq = wq.dequantize_matrix(&qm);
+                let xdeq = fake_quant_act(&packed, &x);
+                let ea: Vec<f32> = xdeq.iter().zip(&x).map(|(a, b)| a - b).collect();
+                let na = stats::norm2(&ea);
+                let nx = stats::norm2(&x);
+                for r in 0..rows {
+                    let ew: Vec<f32> = wdeq
+                        .row(r)
+                        .iter()
+                        .zip(w.row(r))
+                        .map(|(a, b)| a - b)
+                        .collect();
+                    let nw = stats::norm2(&ew);
+                    let nwr = stats::norm2(w.row(r));
+                    let exact: f64 = w
+                        .row(r)
+                        .iter()
+                        .zip(&x)
+                        .map(|(&a, &b)| a as f64 * b as f64)
+                        .sum();
+                    let bound = na * nwr + nw * nx + na * nw;
+                    let slack = 1e-3 * (1.0 + exact.abs() + bound); // f32 rounding
+                    if (y[r] as f64 - exact).abs() > bound + slack {
+                        return Err(format!(
+                            "q={q} M={m} row {r}: |{} − {exact}| > bound {bound}",
+                            y[r]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_matches_per_row_gemv_bitexact() {
+        propcheck::check("lut-gemm-vs-gemv-bitexact", 4, 5103, |rng| {
+            for &(rows, cols) in &[(3usize, 16usize), (8, 64), (17, 40)] {
+                let w = Mat::from_vec(rows, cols, rng.gauss_vec(rows * cols));
+                let (packed, _, _) = pack(&w, 2, 3);
+                for &batch in &[1usize, 5, 16] {
+                    let xt = Mat::from_vec(batch, cols, rng.gauss_vec(batch * cols));
+                    for &threads in &[1usize, 3] {
+                        let yt = packed.gemm(&xt, threads);
+                        let mut y = vec![0f32; rows];
+                        let mut scratch = LutScratch::new();
+                        for c in 0..batch {
+                            packed.gemv_into(xt.row(c), &mut y, &mut scratch);
+                            for r in 0..rows {
+                                if yt[(c, r)].to_bits() != y[r].to_bits() {
+                                    return Err(format!(
+                                        "({rows}x{cols}) batch={batch} threads={threads} \
+                                         col {c} row {r}: gemm {} vs gemv {}",
+                                        yt[(c, r)],
+                                        y[r]
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemv_scratch_does_not_reallocate_once_warm() {
+        let mut rng = Rng::new(5104);
+        let w = Mat::from_vec(6, 64, rng.gauss_vec(384));
+        let (packed, _, _) = pack(&w, 2, 4);
+        let mut scratch = LutScratch::new();
+        let mut y = vec![0f32; 6];
+        packed.gemv_into(&rng.gauss_vec(64), &mut y, &mut scratch);
+        let caps = (scratch.act_idx.capacity(), scratch.act_beta.capacity());
+        for _ in 0..5 {
+            packed.gemv_into(&rng.gauss_vec(64), &mut y, &mut scratch);
+        }
+        assert_eq!(
+            (scratch.act_idx.capacity(), scratch.act_beta.capacity()),
+            caps,
+            "warm gemv must not grow scratch"
+        );
+    }
+
+    #[test]
+    fn payload_matches_carrier_matrix() {
+        let mut rng = Rng::new(5105);
+        let w = Mat::from_vec(16, 128, rng.gauss_vec(16 * 128));
+        for &(q, m) in &[(2u32, 4usize), (3, 2)] {
+            let (packed, qm, _) = pack(&w, q, m);
+            assert_eq!(packed.payload_bytes(), qm.payload_bytes(), "q={q} M={m}");
+            // q=2, M=4: 4 bits/entry codes + 0.25 β + 32/128 scale = 4.5
+            if (q, m) == (2, 4) {
+                let bits = packed.bits_per_entry();
+                assert!((4.4..4.6).contains(&bits), "bits/entry {bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_activation_and_empty_batch() {
+        let mut rng = Rng::new(5106);
+        let w = Mat::from_vec(4, 32, rng.gauss_vec(128));
+        let (packed, _, _) = pack(&w, 2, 3);
+        let y = packed.gemv(&vec![0.0; 32]);
+        assert!(y.iter().all(|&v| v == 0.0));
+        let yt = packed.gemm(&Mat::zeros(0, 32), 4);
+        assert_eq!(yt.rows, 0);
+    }
+
+    #[test]
+    fn gemm_scratch_reuse_across_shapes() {
+        let mut rng = Rng::new(5107);
+        let mut scratch = LutScratch::new();
+        for &(rows, cols, batch) in &[(12usize, 64usize, 9usize), (5, 24, 3), (9, 48, 17)] {
+            let w = Mat::from_vec(rows, cols, rng.gauss_vec(rows * cols));
+            let (packed, _, _) = pack(&w, 2, 2);
+            let xt = Mat::from_vec(batch, cols, rng.gauss_vec(batch * cols));
+            let mut yt = Mat::zeros(batch, rows);
+            packed.gemm_into(&xt, &mut yt, 2, &mut scratch);
+            let mut y = vec![0f32; rows];
+            let mut vs = LutScratch::new();
+            for c in 0..batch {
+                packed.gemv_into(xt.row(c), &mut y, &mut vs);
+                for r in 0..rows {
+                    assert_eq!(
+                        yt[(c, r)].to_bits(),
+                        y[r].to_bits(),
+                        "({rows}x{cols}) b={batch} c={c} r={r}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -16,7 +16,14 @@ pub struct QuantizedMatrix {
     /// time so byte accounting can never be called with a different rate
     /// than the payload actually uses.
     pub q: u32,
-    /// coset codes, row-major, one byte per entry (values < q)
+    /// hierarchical levels M (1 = the flat single-level code). M-level
+    /// matrices (`lattice::hierarchical`) store M digit groups per
+    /// 8-block — `codes.len() == rows·cols·levels`, laid out
+    /// `[row][block][level][coord]` — so payload accounting counts
+    /// M·⌈log2 q⌉ bits per logical entry automatically.
+    pub levels: u32,
+    /// coset codes, row-major, one byte per entry (values < q);
+    /// `rows·cols·levels` entries total
     pub codes: Vec<u8>,
     /// β indices, one per 8-block, row-major (rows × cols/8)
     pub beta_idx: Vec<u8>,
@@ -42,6 +49,7 @@ impl QuantizedMatrix {
             rows: m.rows,
             cols: m.cols,
             q: nq.q(),
+            levels: 1,
             codes,
             beta_idx,
             scales,
@@ -50,6 +58,7 @@ impl QuantizedMatrix {
 
     /// View row r as a `QuantizedVector` (clones the row's storage).
     pub fn row_qv(&self, r: usize) -> QuantizedVector {
+        debug_assert_eq!(self.levels, 1, "flat-code view of an M-level matrix");
         let bpr = self.cols / D;
         QuantizedVector {
             codes: self.codes[r * self.cols..(r + 1) * self.cols].to_vec(),
@@ -61,6 +70,7 @@ impl QuantizedMatrix {
 
     /// Full dequantization back to a dense matrix.
     pub fn dequantize(&self, nq: &NestedLatticeQuantizer) -> Mat {
+        debug_assert_eq!(self.levels, 1, "use HierarchicalQuantizer::dequantize_matrix");
         let mut out = Mat::zeros(self.rows, self.cols);
         let bpr = self.cols / D;
         for r in 0..self.rows {
@@ -85,6 +95,7 @@ impl QuantizedMatrix {
     /// the quantized payload, not fp32 weights — the paper's memory-bound
     /// GEMV case.
     pub fn qgemv(&self, nq: &NestedLatticeQuantizer, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(self.levels, 1, "flat-code GEMV on an M-level matrix");
         assert_eq!(x.len(), self.cols);
         let mut y = vec![0f32; self.rows];
         let bpr = self.cols / D;
@@ -118,6 +129,7 @@ impl QuantizedMatrix {
         nq: &NestedLatticeQuantizer,
         x: &QuantizedVector,
     ) -> Vec<f32> {
+        debug_assert_eq!(self.levels, 1, "flat-code GEMV on an M-level matrix");
         assert_eq!(x.n, self.cols);
         let mut y = vec![0f32; self.rows];
         let bpr = self.cols / D;
@@ -162,8 +174,12 @@ impl QuantizedMatrix {
     /// Stored payload in bytes with 2-bit β packing and ⌈log2 q⌉-bit
     /// codes, at the rate the codes were quantized with (recorded in
     /// `self.q` — callers can no longer pass a mismatched rate and get
-    /// silently wrong byte accounting).
+    /// silently wrong byte accounting). Hierarchical matrices are counted
+    /// exactly as well: `codes` holds `rows·cols·levels` digit entries,
+    /// so this is M·⌈log2 q⌉ bits per logical weight plus the unchanged
+    /// β/scale side info.
     pub fn payload_bytes(&self) -> usize {
+        debug_assert_eq!(self.codes.len(), self.rows * self.cols * self.levels as usize);
         let code_bits = (self.q as f64).log2().ceil() as usize;
         (self.codes.len() * code_bits).div_ceil(8)
             + (self.beta_idx.len() * 2).div_ceil(8)

@@ -8,6 +8,9 @@
 //! * [`gemm`] — the decode-amortized GEMM kernel core shared by the
 //!   packed formats: activation-panel packing, the 8×NC microkernel, and
 //!   the row-partitioned `std::thread::scope` driver.
+//! * [`lut`] — the LUT inner-product GEMM backend: M-level hierarchical
+//!   weight indices + the shared pair LUT (`lattice::hierarchical`), so
+//!   C = A·Bᵀ is computed by table lookups with no decoded rows.
 //! * [`uniform`] — the uniform scalar baseline with L∞ scaling (cubic
 //!   shaping; what SpinQuant/QuaRot use) and packed int4 GEMV.
 //! * [`ldlq`] — LDLQ feedback weight quantization (§4.5, Appendix B).
@@ -19,14 +22,17 @@
 
 pub mod gemm;
 pub mod ldlq;
+pub mod lut;
 pub mod matrix;
 pub mod plan;
 pub mod qaldlq;
 pub mod qgemm;
 pub mod uniform;
 
+pub use lut::{LutScratch, PackedLutMatrix};
 pub use matrix::QuantizedMatrix;
 pub use plan::{
-    EngineBuilder, PolicyPatch, QuantPlan, SiteId, SiteKind, SitePolicy, SiteRole, SiteSelector,
+    EngineBuilder, GemmBackend, PlanFileError, PolicyPatch, QuantPlan, SiteId, SiteKind,
+    SitePolicy, SiteRole, SiteSelector,
 };
 pub use uniform::UniformQuantizer;

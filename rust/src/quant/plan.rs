@@ -30,8 +30,10 @@
 //! ever needs to stand alone, the lowering and [`EngineBuilder::build`]
 //! are the two seams to hoist into `model`.
 
+use crate::lattice::hierarchical::lut_supported;
 use crate::model::engine::{Engine, EngineOptions, Method, RotKind};
 use crate::model::weights::ModelWeights;
+use std::path::{Path, PathBuf};
 
 /// What a site stores: weight entries, the activations flowing into a
 /// linear, or KV-cache entries.
@@ -109,6 +111,36 @@ impl SiteKind {
 
     pub fn parse(s: &str) -> Option<SiteKind> {
         Self::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// How a quantized weight site serves its GEMM.
+///
+/// `Decode` is the classic path: 4-bit nested codes decoded on the fly
+/// (packed integer GEMM when eligible, dequantize-then-matmul
+/// otherwise). `Lut` stores M-level hierarchical codes
+/// (`lattice::hierarchical`) and computes inner products by pair-LUT
+/// lookups without ever materializing decoded rows (`quant::lut`); it
+/// requires a nested method and an i32-safe `(q, m_levels)` combination
+/// (see `lattice::hierarchical::lut_supported`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GemmBackend {
+    Decode,
+    Lut,
+}
+
+impl GemmBackend {
+    pub const ALL: [GemmBackend; 2] = [GemmBackend::Decode, GemmBackend::Lut];
+
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            GemmBackend::Decode => "decode",
+            GemmBackend::Lut => "lut",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GemmBackend> {
+        Self::ALL.into_iter().find(|b| b.cli_name() == s)
     }
 }
 
@@ -211,6 +243,12 @@ pub struct SitePolicy {
     pub auto_eps2: bool,
     /// serve M-variant nested linears through the packed integer GEMM
     pub int_gemm: bool,
+    /// how a quantized weight site serves its GEMM: decode-on-the-fly
+    /// or the hierarchical LUT inner-product backend
+    pub backend: GemmBackend,
+    /// hierarchical levels M for `backend = lut` (rate = M·log2 q
+    /// bits/entry); ignored on the decode backend
+    pub m_levels: u32,
 }
 
 impl SitePolicy {
@@ -229,6 +267,10 @@ impl SitePolicy {
             eps2: opts.eps2,
             auto_eps2: opts.auto_eps2,
             int_gemm: opts.int_gemm,
+            // EngineOptions predates the LUT backend and carries no
+            // backend knobs — the legacy lowering always decodes.
+            backend: GemmBackend::Decode,
+            m_levels: 2,
         }
     }
 }
@@ -256,6 +298,8 @@ pub struct PolicyPatch {
     pub eps2: Option<f32>,
     pub auto_eps2: Option<bool>,
     pub int_gemm: Option<bool>,
+    pub backend: Option<GemmBackend>,
+    pub m_levels: Option<u32>,
 }
 
 /// Shared range checks — the `.qplan` parser, `QuantPlan::validate` and
@@ -282,6 +326,14 @@ fn check_uniform_bits(bits: u32) -> Result<(), String> {
         Ok(())
     } else {
         Err(format!("uniform_bits must be in [2, 8], got {bits}"))
+    }
+}
+
+fn check_m_levels(m: u32) -> Result<(), String> {
+    if (2..=8).contains(&m) {
+        Ok(())
+    } else {
+        Err(format!("m_levels must be in [2, 8], got {m}"))
     }
 }
 
@@ -334,6 +386,12 @@ impl PolicyPatch {
         if let Some(v) = self.int_gemm {
             p.int_gemm = v;
         }
+        if let Some(v) = self.backend {
+            p.backend = v;
+        }
+        if let Some(v) = self.m_levels {
+            p.m_levels = v;
+        }
     }
 
     /// Set one `key = value` pair from the `.qplan` text format.
@@ -369,6 +427,16 @@ impl PolicyPatch {
             "eps2" => self.eps2 = Some(parse_num(key, val)?),
             "auto_eps2" => self.auto_eps2 = Some(parse_bool(key, val)?),
             "int_gemm" => self.int_gemm = Some(parse_bool(key, val)?),
+            "backend" => {
+                self.backend = Some(GemmBackend::parse(val).ok_or_else(|| {
+                    format!("unknown backend '{val}' (known: decode, lut)")
+                })?)
+            }
+            "m_levels" => {
+                let m: u32 = parse_num(key, val)?;
+                check_m_levels(m)?;
+                self.m_levels = Some(m);
+            }
             _ => return Ok(false),
         }
         Ok(true)
@@ -406,6 +474,12 @@ impl PolicyPatch {
         if let Some(v) = self.int_gemm {
             s.push_str(&format!("int_gemm = {v}\n"));
         }
+        if let Some(v) = self.backend {
+            s.push_str(&format!("backend = {}\n", v.cli_name()));
+        }
+        if let Some(v) = self.m_levels {
+            s.push_str(&format!("m_levels = {v}\n"));
+        }
     }
 
     fn from_policy(p: &SitePolicy) -> Self {
@@ -420,6 +494,8 @@ impl PolicyPatch {
             eps2: Some(p.eps2),
             auto_eps2: Some(p.auto_eps2),
             int_gemm: Some(p.int_gemm),
+            backend: Some(p.backend),
+            m_levels: Some(p.m_levels),
         }
     }
 }
@@ -545,6 +621,9 @@ impl QuantPlan {
             if let Some(b) = p.uniform_bits {
                 check_uniform_bits(b).map_err(at)?;
             }
+            if let Some(m) = p.m_levels {
+                check_m_levels(m).map_err(at)?;
+            }
             Ok(())
         };
         check_patch("[default]", &PolicyPatch::from_policy(&self.default))?;
@@ -556,6 +635,58 @@ impl QuantPlan {
                 }
             }
             check_patch(&ctx, patch)?;
+        }
+        self.check_backend_support()
+    }
+
+    /// Reject plans that route a weight site to the LUT backend with a
+    /// combination the backend cannot serve: a non-nested method, or a
+    /// `(q, m_levels)` pair outside the i32-safe LUT window
+    /// (`lattice::hierarchical::lut_supported` — q ∈ {2, 3} with M
+    /// bounded so worst-case accumulation fits an i32). Per-field range
+    /// checks can't see this because it is a property of the *resolved*
+    /// policy, so we quantify over every site the rules can distinguish
+    /// (layers beyond any rule's range all resolve identically — probing
+    /// one past the deepest rule covers them).
+    pub fn check_backend_support(&self) -> Result<(), String> {
+        let deepest = self
+            .rules
+            .iter()
+            .filter_map(|(sel, _)| sel.layers.map(|(_, hi)| hi))
+            .max()
+            .unwrap_or(0);
+        for site in enumerate_sites(deepest + 2) {
+            if site.role != SiteRole::Weights {
+                continue;
+            }
+            let pol = self.resolve(site);
+            if !pol.quantize || pol.backend != GemmBackend::Lut {
+                continue;
+            }
+            if !pol.method.is_nested() {
+                return Err(format!(
+                    "{}: backend = lut requires a nested method, got '{}'",
+                    site.label(),
+                    pol.method.cli_name()
+                ));
+            }
+            if pol.k > 4 {
+                return Err(format!(
+                    "{}: backend = lut packs β indices 2-bit, so k must be <= 4, got {}",
+                    site.label(),
+                    pol.k
+                ));
+            }
+            if !lut_supported(pol.q, pol.m_levels) {
+                return Err(format!(
+                    "{}: backend = lut is unsupported at q = {}, m_levels = {} \
+                     (LUT window: q = 2 with M in [2, 8], q = 3 with M in [2, 7] \
+                     — the i32 accumulator bound)",
+                    site.label(),
+                    pol.q,
+                    pol.m_levels
+                ));
+            }
         }
         Ok(())
     }
@@ -708,6 +839,83 @@ impl QuantPlan {
         }
         plan.rules.extend(cur.take());
         Ok(plan)
+    }
+
+    /// Read, parse and validate a `.qplan` file — the one entry point
+    /// the CLI uses, so every failure carries the offending path and a
+    /// typed reason ([`PlanFileError`], same taxonomy as
+    /// `io::tensorfile::TensorFileError`): I/O failures, parse errors
+    /// with line numbers, out-of-range knobs, and LUT-backend
+    /// combinations the engine cannot serve.
+    pub fn load(path: &Path) -> Result<QuantPlan, PlanFileError> {
+        let text = std::fs::read_to_string(path).map_err(|source| PlanFileError::Io {
+            path: path.to_path_buf(),
+            source,
+        })?;
+        let plan = QuantPlan::parse(&text).map_err(|reason| PlanFileError::Parse {
+            path: path.to_path_buf(),
+            reason,
+        })?;
+        // validate() subsumes check_backend_support(), but splitting the
+        // two keeps the error typed: a syntactically fine plan asking
+        // for an unserveable LUT site is `Unsupported`, not `Invalid`.
+        plan.check_backend_support()
+            .map_err(|reason| PlanFileError::Unsupported {
+                path: path.to_path_buf(),
+                reason,
+            })?;
+        plan.validate().map_err(|reason| PlanFileError::Invalid {
+            path: path.to_path_buf(),
+            reason,
+        })?;
+        Ok(plan)
+    }
+}
+
+/// Why a `.qplan` file could not be loaded. Every variant names the
+/// offending path so CLI errors are actionable without a backtrace
+/// (mirrors `io::tensorfile::TensorFileError`).
+#[derive(Debug)]
+pub enum PlanFileError {
+    /// The underlying filesystem read failed.
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    /// The text did not parse (reason carries the line number).
+    Parse { path: PathBuf, reason: String },
+    /// The plan parsed but a knob is out of range.
+    Invalid { path: PathBuf, reason: String },
+    /// The plan resolves a weight site to a LUT-backend configuration
+    /// the engine cannot serve (reason names the site).
+    Unsupported { path: PathBuf, reason: String },
+}
+
+impl std::fmt::Display for PlanFileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanFileError::Io { path, source } => {
+                write!(f, "{}: read failed: {source}", path.display())
+            }
+            PlanFileError::Parse { path, reason } => {
+                write!(f, "{}: {reason}", path.display())
+            }
+            PlanFileError::Invalid { path, reason } => {
+                write!(f, "{}: invalid plan: {reason}", path.display())
+            }
+            PlanFileError::Unsupported { path, reason } => {
+                write!(f, "{}: unsupported plan: {reason}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanFileError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PlanFileError::Io { source, .. } => Some(source),
+            _ => None,
+        }
     }
 }
 
@@ -873,6 +1081,12 @@ mod tests {
         if rng.below(2) == 0 {
             p.int_gemm = Some(rng.below(2) == 0);
         }
+        if rng.below(2) == 0 {
+            p.backend = Some(GemmBackend::ALL[rng.below(GemmBackend::ALL.len())]);
+        }
+        if rng.below(2) == 0 {
+            p.m_levels = Some(2 + rng.below(7) as u32);
+        }
         p
     }
 
@@ -1032,6 +1246,10 @@ mod tests {
             ("[default]\nuniform_bits = 16", "uniform bits out of range"),
             ("[default]\nk = 0", "zero betas"),
             ("[plan]\ncalib_windows = 0", "no calibration windows"),
+            ("[default]\nbackend = simd", "unknown backend"),
+            ("[default]\nm_levels = 1", "m_levels below range"),
+            ("[default]\nm_levels = 9", "m_levels above range"),
+            ("[rule]\nm_levels = none", "non-numeric m_levels"),
         ] {
             assert!(QuantPlan::parse(bad).is_err(), "should reject: {why}");
         }
@@ -1080,6 +1298,124 @@ mod tests {
             },
         ));
         assert!(plan.validate().unwrap_err().contains("inverted layer range"));
+    }
+
+    #[test]
+    fn backend_knob_parses_resolves_and_validates() {
+        let text = "
+            [default]
+            method = nestquantm
+            q = 2
+            [rule]
+            kind = up
+            role = weights
+            backend = lut
+            m_levels = 4
+        ";
+        let plan = QuantPlan::parse(text).unwrap();
+        let up = plan.resolve(SiteId::weights(0, SiteKind::Up));
+        assert_eq!(up.backend, GemmBackend::Lut);
+        assert_eq!(up.m_levels, 4);
+        let q = plan.resolve(SiteId::weights(0, SiteKind::Q));
+        assert_eq!(q.backend, GemmBackend::Decode);
+        assert!(plan.validate().is_ok());
+        // and the knobs survive a render → parse roundtrip
+        let back = QuantPlan::parse(&plan.render()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn validate_rejects_unserveable_lut_sites() {
+        let mk = |method: Method, q: u32, m: u32| {
+            let mut plan = QuantPlan::default();
+            plan.default.method = method;
+            plan.default.q = q;
+            plan.default.m_levels = m;
+            plan.default.backend = GemmBackend::Lut;
+            plan
+        };
+        assert!(mk(Method::NestQuantM, 2, 4).validate().is_ok());
+        assert!(mk(Method::NestQuant, 3, 7).validate().is_ok());
+        // q = 3, M = 8 overflows the i32 LUT accumulator bound
+        let e = mk(Method::NestQuantM, 3, 8).validate().unwrap_err();
+        assert!(e.contains("backend = lut"), "{e}");
+        // q = 4 is outside the LUT index window entirely
+        let e = mk(Method::NestQuantM, 4, 2).validate().unwrap_err();
+        assert!(e.contains("unsupported"), "{e}");
+        // non-nested methods have no hierarchical codes to look up
+        let e = mk(Method::Rtn, 2, 4).validate().unwrap_err();
+        assert!(e.contains("nested method"), "{e}");
+        // a later weights-role rule can rescue an unserveable default
+        let mut plan = mk(Method::NestQuantM, 4, 2);
+        plan.rules.push((
+            SiteSelector {
+                role: Some(SiteRole::Weights),
+                ..Default::default()
+            },
+            PolicyPatch {
+                q: Some(2),
+                ..Default::default()
+            },
+        ));
+        assert!(plan.validate().is_ok());
+        // ...and a layer-bounded lut rule is checked inside its range
+        let mut plan = QuantPlan::default();
+        plan.default.method = Method::NestQuantM;
+        plan.rules.push((
+            SiteSelector {
+                layers: Some((3, 5)),
+                role: Some(SiteRole::Weights),
+                ..Default::default()
+            },
+            PolicyPatch {
+                backend: Some(GemmBackend::Lut),
+                q: Some(3),
+                m_levels: Some(8),
+                ..Default::default()
+            },
+        ));
+        assert!(plan.validate().unwrap_err().contains("L3."));
+    }
+
+    #[test]
+    fn load_reports_typed_path_bearing_errors() {
+        let dir = std::env::temp_dir().join("nqt_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let missing = dir.join("missing.qplan");
+        let _ = std::fs::remove_file(&missing);
+        let err = QuantPlan::load(&missing).unwrap_err();
+        assert!(matches!(err, PlanFileError::Io { .. }), "{err}");
+        assert!(err.to_string().contains("missing.qplan"));
+
+        let bad = dir.join("bad.qplan");
+        std::fs::write(&bad, "[default]\nq = twelve\n").unwrap();
+        let err = QuantPlan::load(&bad).unwrap_err();
+        assert!(matches!(err, PlanFileError::Parse { .. }), "{err}");
+        assert!(err.to_string().contains("bad.qplan"));
+        assert!(err.to_string().contains("line 2"), "{err}");
+
+        let unsup = dir.join("unsup.qplan");
+        std::fs::write(
+            &unsup,
+            "[default]\nmethod = nestquantm\nbackend = lut\nq = 3\nm_levels = 8\n",
+        )
+        .unwrap();
+        let err = QuantPlan::load(&unsup).unwrap_err();
+        assert!(matches!(err, PlanFileError::Unsupported { .. }), "{err}");
+        assert!(err.to_string().contains("unsup.qplan"));
+
+        let good = dir.join("good.qplan");
+        std::fs::write(
+            &good,
+            "[default]\nmethod = nestquantm\n[rule]\nkind = up\nrole = weights\nbackend = lut\nq = 2\nm_levels = 4\n",
+        )
+        .unwrap();
+        let plan = QuantPlan::load(&good).unwrap();
+        assert_eq!(
+            plan.resolve(SiteId::weights(0, SiteKind::Up)).backend,
+            GemmBackend::Lut
+        );
     }
 
     #[test]

@@ -149,6 +149,28 @@ impl BenchSuite {
     }
 }
 
+/// Combined multi-suite document `{"suites": [...]}`. `bench_main`
+/// sections each build their own [`BenchSuite`] and the binary writes
+/// them to `BENCH_gemm.json` in ONE call — previously each section
+/// clobbered the file with its own single-suite object.
+pub fn suites_json(suites: &[&BenchSuite]) -> String {
+    let mut s = String::from("{\n\"suites\": [\n");
+    for (i, su) in suites.iter().enumerate() {
+        s.push_str(su.to_json().trim_end());
+        if i + 1 < suites.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("]\n}\n");
+    s
+}
+
+/// Write the combined `{"suites": [...]}` document to `path`.
+pub fn write_suites_json(path: &std::path::Path, suites: &[&BenchSuite]) -> std::io::Result<()> {
+    std::fs::write(path, suites_json(suites))
+}
+
 fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v:.6}")
@@ -219,6 +241,31 @@ mod tests {
         // round-trip to disk
         let p = std::env::temp_dir().join("nqt_bench_suite_test.json");
         suite.write_json(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), j);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn multi_suite_document_serializes_every_suite() {
+        let r = BenchResult {
+            name: "x".into(),
+            median: Duration::from_micros(5),
+            mad: Duration::ZERO,
+            iters: 3,
+        };
+        let mut a = BenchSuite::new("core");
+        a.push(&r, &[("batch", 1.0)]);
+        let mut b = BenchSuite::new("lut");
+        b.push(&r, &[("q", 2.0), ("m_levels", 4.0)]);
+        let j = suites_json(&[&a, &b]);
+        assert!(j.starts_with("{\n\"suites\": ["));
+        assert!(j.contains("\"suite\": \"core\""));
+        assert!(j.contains("\"suite\": \"lut\""));
+        assert!(j.contains("\"m_levels\": 4.000000"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        let p = std::env::temp_dir().join("nqt_bench_suites_test.json");
+        write_suites_json(&p, &[&a, &b]).unwrap();
         assert_eq!(std::fs::read_to_string(&p).unwrap(), j);
         std::fs::remove_file(&p).ok();
     }

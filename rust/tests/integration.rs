@@ -423,6 +423,125 @@ fn fused_decode_hot_loop_is_allocation_free_for_every_lane_codec() {
 }
 
 #[test]
+fn lut_backend_fused_decode_hot_loop_is_allocation_free() {
+    // The LUT backend's zero-alloc acceptance: a fused decode step
+    // through hierarchical-LUT weight sites (activation encode + pure
+    // table-lookup GEMV inside `quant::lut`, no decoded rows ever
+    // materialized) must not touch the allocator after one warm-up that
+    // sizes the LutScratch index/β/scale buffers — with tracing live,
+    // so the `site_gemm` spans also prove every weight site really
+    // served through the LUT path.
+    use nestquant::kvpool::{PoolConfig, SessionKv};
+    use nestquant::model::engine::StepScratch;
+    use nestquant::obs::GemmPath;
+    use nestquant::quant::plan::{EngineBuilder, GemmBackend, PolicyPatch, SiteRole, SiteSelector};
+    use nestquant::util::linalg::Mat;
+    let cfg = nestquant::model::ModelConfig {
+        vocab: 48,
+        ctx: 64,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 64,
+    };
+    let w = ModelWeights::synthetic(cfg, 0xA110C3);
+    let eng = EngineBuilder::from_options(EngineOptions {
+        method: Method::NestQuantM,
+        regime: Regime::W,
+        calib_windows: 1,
+        ..Default::default()
+    })
+    .rule(
+        SiteSelector {
+            role: Some(SiteRole::Weights),
+            ..Default::default()
+        },
+        PolicyPatch {
+            backend: Some(GemmBackend::Lut),
+            q: Some(2),
+            m_levels: Some(4),
+            ..Default::default()
+        },
+    )
+    .build(&w);
+    assert!(
+        eng.layers.iter().all(|l| {
+            l.wq.lut.is_some()
+                && l.wk.lut.is_some()
+                && l.wv.lut.is_some()
+                && l.wo.lut.is_some()
+                && l.w_up.lut.is_some()
+                && l.w_down.lut.is_some()
+        }) && eng.head.lut.is_some(),
+        "LUT backend not wired on every weight site"
+    );
+    let pool = eng.kv_pool(PoolConfig::default());
+    let trace = std::sync::Arc::new(nestquant::obs::Trace::manual(2048));
+    pool.set_trace(trace.clone());
+    let mut s0 = SessionKv::new(pool.clone());
+    let mut s1 = SessionKv::new(pool.clone());
+    let mut s2 = SessionKv::new(pool);
+    for s in [&mut s0, &mut s1, &mut s2] {
+        s.reserve_tokens(cfg.ctx);
+    }
+    let mut caches: Vec<&mut SessionKv> = vec![&mut s0, &mut s1, &mut s2];
+    let mut scratch = StepScratch::new();
+    let mut logits = Mat::zeros(0, 0);
+    let mut tokens = [0i32; 3];
+    let mut positions = [0usize; 3];
+    for it in 0..6usize {
+        for (s, t) in tokens.iter_mut().enumerate() {
+            *t = ((it * 7 + s * 3 + 1) % 48) as i32;
+        }
+        eng.forward_step_fused(&tokens, &positions, &mut caches, &mut scratch, &mut logits);
+        for p in positions.iter_mut() {
+            *p += 1;
+        }
+    }
+    let before = alloc_counter::thread_allocs();
+    for it in 6..14usize {
+        for (s, t) in tokens.iter_mut().enumerate() {
+            *t = ((it * 5 + s * 2 + 3) % 48) as i32;
+        }
+        eng.forward_step_fused_traced(
+            &tokens,
+            &positions,
+            &mut caches,
+            &mut scratch,
+            &mut logits,
+            Some(&*trace),
+        );
+        for p in positions.iter_mut() {
+            *p += 1;
+        }
+    }
+    let after = alloc_counter::thread_allocs();
+    assert_eq!(logits.rows, 3);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+    assert_eq!(
+        after,
+        before,
+        "LUT fused decode hot loop allocated {} time(s)",
+        after - before
+    );
+    // every span of the 8 traced steps × 13 weight sites must be
+    // attributed to the LUT backend
+    let (mut lut_spans, mut other_spans) = (0usize, 0usize);
+    for e in trace.snapshot() {
+        if let nestquant::obs::EventKind::SiteGemm { backend, .. } = e.kind {
+            if backend == GemmPath::Lut {
+                lut_spans += 1;
+            } else {
+                other_spans += 1;
+            }
+        }
+    }
+    assert_eq!(lut_spans, 8 * 13, "missing LUT-attributed site_gemm spans");
+    assert_eq!(other_spans, 0, "a weight site served off the LUT path");
+    assert_eq!(trace.dropped(), 0, "trace ring overflowed");
+}
+
+#[test]
 fn trace_smoke_soak_exports_perfetto_and_prometheus() {
     // The `make trace-smoke` gate: a multi-session soak through the
     // full server with every decode step traced must export (a) a
