@@ -2,6 +2,9 @@
 #
 #   make build        release build of the rust crate
 #   make test         tier-1 test suite (cargo test -q)
+#   make test-kernels kernel-focused tests re-run once per SIMD dispatch
+#                     tier (NESTQUANT_KERNEL=scalar/avx2/neon; tiers the
+#                     host lacks fall back to detection with a warning)
 #   make clippy       lint gate (cargo clippy -- -D warnings)
 #   make bench        full perf suite -> bench_output.txt + BENCH_gemm.json
 #                     + BENCH_serve.json + BENCH_plan.json + BENCH_kvmix.json
@@ -14,22 +17,34 @@
 #                     fused step, worker respawn)
 #   make trace-smoke  observability gate: a traced multi-session soak
 #                     whose Perfetto/Prometheus exports must shape-validate
-#   make ci           fmt-check + clippy + build + test + soak-faults +
-#                     trace-smoke + the kvmix, serve and gemm smoke
-#                     benches (what a CI job runs)
+#   make ci           fmt-check + clippy + build + test + test-kernels +
+#                     soak-faults + trace-smoke + the kvmix, serve and
+#                     gemm smoke benches (what a CI job runs)
 #   make clean        remove build artifacts
 #
 # The python layer (training + AOT lowering, `make artifacts`) is only
 # needed for the artifact-gated integration tests; the rust suite skips
 # those gracefully when artifacts/ is absent.
 
-.PHONY: build test clippy bench bench-gemm bench-serve bench-plan bench-kvmix soak-faults trace-smoke fmt-check ci artifacts clean
+.PHONY: build test test-kernels clippy bench bench-gemm bench-serve bench-plan bench-kvmix soak-faults trace-smoke fmt-check ci artifacts clean
 
 build:
 	cd rust && cargo build --release
 
 test:
 	cd rust && cargo test -q
+
+# SIMD dispatch gate: the kernel parity/dispatch tests ("kernel" in the
+# name) once per tier, each in its own process with NESTQUANT_KERNEL
+# pinned. The dispatch choice is OnceLock-cached, so per-process env is
+# the only way to force a tier end to end; requesting a tier the host
+# lacks (neon on x86, avx2 on arm) warns and falls back to detection, so
+# every leg runs everywhere — the scalar leg is the guaranteed fallback
+# coverage.
+test-kernels:
+	cd rust && NESTQUANT_KERNEL=scalar cargo test -q kernel
+	cd rust && NESTQUANT_KERNEL=avx2 cargo test -q kernel
+	cd rust && NESTQUANT_KERNEL=neon cargo test -q kernel
 
 clippy:
 	cd rust && cargo clippy -- -D warnings
@@ -54,7 +69,7 @@ trace-smoke:
 # bench-kvmix, bench-serve and bench-gemm double as the CI smoke runs of
 # the mixed-lane serving path, the fused decode-batch scheduler and the
 # hierarchical-LUT GEMM backend (seconds each on synthetic inputs)
-ci: fmt-check clippy build test soak-faults trace-smoke bench-kvmix bench-serve bench-gemm
+ci: fmt-check clippy build test test-kernels soak-faults trace-smoke bench-kvmix bench-serve bench-gemm
 
 # no pipefail in POSIX sh: redirect, propagate the bench exit status,
 # then show the log — a crashed bench must not leave a "fresh" log

@@ -20,6 +20,12 @@
 //! * the hierarchical-LUT GEMM sweep: pair-LUT inner products
 //!   (M ∈ {2,3,4} × q ∈ {2,3}) against the packed decode backend at the
 //!   equal flat rate q_eff = q^M
+//! * SIMD kernel tier sweeps: the packed-decode, int4 and LUT backends
+//!   re-run per available dispatch tier (`quant::kernels::available()`)
+//!   through the `*_with` entry points, so BENCH_gemm.json carries
+//!   scalar-vs-SIMD rows on the same shapes. Every quantized record
+//!   tags a `kernel` column (0 = scalar, 1 = avx2, 2 = neon; dispatched
+//!   rows use the active tier's index)
 //!
 //! Sections are selectable by argument (`-- core` / `-- gemm` /
 //! `-- serve` / `-- plan` / `-- kvmix`; no argument runs everything):
@@ -116,6 +122,8 @@ fn gemm_lut_benches() -> BenchSuite {
     let mut suite = BenchSuite::new("lut");
     let mut scratch = LutScratch::new();
     let mut gscratch = GemmScratch::new();
+    // dispatched rows ran on the process-wide active tier
+    let kern_active = nestquant::quant::kernels::active().index() as f64;
     for &q in &[2u32, 3] {
         for &m in &[2usize, 3, 4] {
             if !lut_supported(q, m as u32) {
@@ -140,6 +148,7 @@ fn gemm_lut_benches() -> BenchSuite {
                     ("m_levels", m as f64),
                     ("batch", 1.0),
                     ("threads", 1.0),
+                    ("kernel", kern_active),
                     ("bits_per_entry", bits),
                 ],
             );
@@ -156,6 +165,7 @@ fn gemm_lut_benches() -> BenchSuite {
                     ("m_levels", m as f64),
                     ("batch", batch as f64),
                     ("threads", 1.0),
+                    ("kernel", kern_active),
                     ("bits_per_entry", bits),
                 ],
             );
@@ -176,6 +186,7 @@ fn gemm_lut_benches() -> BenchSuite {
                         ("m_levels", 1.0),
                         ("batch", 1.0),
                         ("threads", 1.0),
+                        ("kernel", kern_active),
                     ],
                 );
                 let mut yt2 = Mat::zeros(batch, n);
@@ -195,6 +206,7 @@ fn gemm_lut_benches() -> BenchSuite {
                         ("m_levels", 1.0),
                         ("batch", batch as f64),
                         ("threads", 1.0),
+                        ("kernel", kern_active),
                     ],
                 );
             } else {
@@ -204,6 +216,35 @@ fn gemm_lut_benches() -> BenchSuite {
                 );
             }
         }
+    }
+
+    // --- LUT kernel tier sweep (q=2, M=3): the gathered accum path
+    //     forced per tier via `gemm_into_with` ---
+    println!("\n## LUT SIMD kernel tiers (q=2, M=3, b={batch}, 1 thread)");
+    let wq = HierarchicalQuantizer::new(2, 3, betas.clone());
+    let aq = HierarchicalQuantizer::new(2, 3, betas.clone());
+    let lut = PackedLutMatrix::from_quantized(&wq.quantize_matrix(&w), &wq, aq);
+    let mut yt = Mat::zeros(batch, n);
+    for kern in nestquant::quant::kernels::available() {
+        let r = bench(
+            &format!("lut gemm b={batch} q=2 M=3 kernel={}", kern.name()),
+            budget,
+            || {
+                lut.gemm_into_with(kern, &xt, &mut yt, 1, &mut scratch);
+                yt.data[0]
+            },
+        );
+        println!("{}", r.report());
+        suite.push(
+            &r,
+            &[
+                ("q", 2.0),
+                ("m_levels", 3.0),
+                ("batch", batch as f64),
+                ("threads", 1.0),
+                ("kernel", kern.index() as f64),
+            ],
+        );
     }
     suite
 }
@@ -314,9 +355,27 @@ fn core_benches() -> BenchSuite {
     );
 
     let mut suite = BenchSuite::new("table4_gemv_gemm_n2048");
+    // dispatched rows ran on the process-wide active tier
+    let kern_active = nestquant::quant::kernels::active().index() as f64;
     suite.push(&r_fp, &[("batch", 1.0), ("threads", 1.0), ("per_col_us", r_fp.median_us())]);
-    suite.push(&r_nest, &[("batch", 1.0), ("threads", 1.0), ("per_col_us", r_nest.median_us())]);
-    suite.push(&r_i4, &[("batch", 1.0), ("threads", 1.0), ("per_col_us", r_i4.median_us())]);
+    suite.push(
+        &r_nest,
+        &[
+            ("batch", 1.0),
+            ("threads", 1.0),
+            ("kernel", kern_active),
+            ("per_col_us", r_nest.median_us()),
+        ],
+    );
+    suite.push(
+        &r_i4,
+        &[
+            ("batch", 1.0),
+            ("threads", 1.0),
+            ("kernel", kern_active),
+            ("per_col_us", r_i4.median_us()),
+        ],
+    );
 
     // --- decode-amortized GEMM sweep (the tentpole claim: amortizing the
     //     8-block decode over a batch beats per-column GEMV ≥ 3× at
@@ -341,6 +400,7 @@ fn core_benches() -> BenchSuite {
             &[
                 ("batch", batch as f64),
                 ("threads", 1.0),
+                ("kernel", kern_active),
                 ("per_col_us", r_loop.median_us() / batch as f64),
             ],
         );
@@ -368,6 +428,7 @@ fn core_benches() -> BenchSuite {
                 &[
                     ("batch", batch as f64),
                     ("threads", threads as f64),
+                    ("kernel", kern_active),
                     ("per_col_us", r.median_us() / batch as f64),
                 ],
             );
@@ -383,7 +444,66 @@ fn core_benches() -> BenchSuite {
             &[
                 ("batch", batch as f64),
                 ("threads", 1.0),
+                ("kernel", kern_active),
                 ("per_col_us", r4.median_us() / batch as f64),
+            ],
+        );
+    }
+
+    // --- SIMD kernel tier sweep: the same packed/int4 shapes, but the
+    //     dispatch tier forced per row via the `*_with` entry points, so
+    //     one bench run carries scalar-vs-SIMD deltas regardless of the
+    //     host's active tier ---
+    println!("\n## SIMD kernel tiers (n=2048): scalar vs dispatched");
+    let tier_batch = 32usize;
+    let xt_tier = Mat::from_vec(tier_batch, n, rng.gauss_vec(tier_batch * n));
+    let mut yt_tier = Mat::zeros(tier_batch, n);
+    for kern in nestquant::quant::kernels::available() {
+        let kname = kern.name();
+        let kidx = kern.index() as f64;
+        let r = bench(&format!("nest gemv kernel={kname}"), sweep_budget, || {
+            packed.gemv_into_with(kern, &x, &mut y2);
+            y2[0]
+        });
+        println!("{}", r.report());
+        suite.push(
+            &r,
+            &[("batch", 1.0), ("threads", 1.0), ("kernel", kidx), ("per_col_us", r.median_us())],
+        );
+        let r = bench(
+            &format!("nest gemm b={tier_batch} t=1 kernel={kname}"),
+            sweep_budget,
+            || {
+                packed.gemm_into_with(kern, &xt_tier, &mut yt_tier, 1, &mut scratch);
+                yt_tier.data[0]
+            },
+        );
+        println!("{}  [{:.2} µs/col]", r.report(), r.median_us() / tier_batch as f64);
+        suite.push(
+            &r,
+            &[
+                ("batch", tier_batch as f64),
+                ("threads", 1.0),
+                ("kernel", kidx),
+                ("per_col_us", r.median_us() / tier_batch as f64),
+            ],
+        );
+        let r = bench(
+            &format!("int4 gemm b={tier_batch} t=1 kernel={kname}"),
+            sweep_budget,
+            || {
+                int4.gemm_into_with(kern, &xt_tier, &mut yt_tier, 1, &mut scratch);
+                yt_tier.data[0]
+            },
+        );
+        println!("{}  [{:.2} µs/col]", r.report(), r.median_us() / tier_batch as f64);
+        suite.push(
+            &r,
+            &[
+                ("batch", tier_batch as f64),
+                ("threads", 1.0),
+                ("kernel", kidx),
+                ("per_col_us", r.median_us() / tier_batch as f64),
             ],
         );
     }

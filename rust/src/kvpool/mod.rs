@@ -46,6 +46,7 @@ pub use prefix::PrefixIndex;
 use crate::lattice::e8::D;
 use crate::lattice::nested::{payload_bits_for, NestedLatticeQuantizer, QuantizedVector};
 use crate::obs::trace::{EventKind, Trace, TRACK_POOL};
+use crate::quant::kernels;
 use crate::quant::qgemm::DecodeConsts;
 use crate::quant::uniform::UniformQuantizer;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -736,6 +737,9 @@ impl SessionKv {
                 let q = nq.q() as i32;
                 let use_int = nq.codec.m_variant && q <= 16;
                 let consts = DecodeConsts::new(q);
+                // dispatch tier resolved once per call, shared with the
+                // GEMM backends — KV attention rides the SIMD decode
+                let kern = kernels::active();
                 let bpv = shape.blocks_per_vec();
                 let sqrt_dh = (dh as f32).sqrt();
                 let mut c = [0u8; D];
@@ -754,7 +758,7 @@ impl SessionKv {
                         c.copy_from_slice(&codes[j * D..(j + 1) * D]);
                         let xb = &qvec[j * D..(j + 1) * D];
                         if use_int {
-                            consts.decode(&c, &mut e);
+                            kernels::decode_block(kern, consts, &c, &mut e);
                             let mut d = 0f32;
                             for i in 0..D {
                                 d += e[i] as f32 * xb[i];
@@ -822,6 +826,7 @@ impl SessionKv {
                 let q = nq.q() as i32;
                 let use_int = nq.codec.m_variant && q <= 16;
                 let consts = DecodeConsts::new(q);
+                let kern = kernels::active();
                 let bpv = shape.blocks_per_vec();
                 let sqrt_dh = (dh as f32).sqrt();
                 let mut c = [0u8; D];
@@ -839,7 +844,7 @@ impl SessionKv {
                         c.copy_from_slice(&codes[j * D..(j + 1) * D]);
                         let ob = &mut out[j * D..(j + 1) * D];
                         if use_int {
-                            consts.decode(&c, &mut e);
+                            kernels::decode_block(kern, consts, &c, &mut e);
                             let beta = nq.betas[bidx[j] as usize];
                             for i in 0..D {
                                 // (e·0.5)·β·denorm mirrors dequantize's

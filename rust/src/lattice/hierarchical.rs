@@ -256,7 +256,10 @@ pub struct PairLut {
     pub q: u32,
     /// codebook size q^8
     pub n: usize,
-    /// n² exact products, row-major, symmetric
+    /// n² exact products, row-major, symmetric, plus one trailing zero
+    /// pad: the AVX2 LUT kernel gathers 32 bits per 16-bit entry, so a
+    /// lookup of the last real entry reads 2 bytes beyond it — the pad
+    /// keeps that read inside the allocation.
     pub table: Vec<i16>,
 }
 
@@ -297,6 +300,8 @@ impl PairLut {
                 table[b * n + a] = acc as i16;
             }
         }
+        // 16-bit-gather overhang pad (see the `table` field docs)
+        table.push(0);
         PairLut { q, n, table }
     }
 

@@ -1566,6 +1566,7 @@ impl Engine {
                         layer,
                         site,
                         backend,
+                        kernel: crate::quant::kernels::active(),
                     },
                     t0,
                 );

@@ -56,10 +56,12 @@ fn event_args(kind: EventKind) -> String {
             layer,
             site,
             backend,
+            kernel,
         } => format!(
-            "{{\"layer\":{layer},\"site\":\"{}\",\"backend\":\"{}\"}}",
+            "{{\"layer\":{layer},\"site\":\"{}\",\"backend\":\"{}\",\"kernel\":\"{}\"}}",
             site.name(),
-            backend.name()
+            backend.name(),
+            kernel.name()
         ),
         EventKind::Done { tokens } => format!("{{\"tokens\":{tokens}}}"),
         EventKind::ShutdownDrain { undrained } => format!("{{\"undrained\":{undrained}}}"),
@@ -550,6 +552,7 @@ mod tests {
                 layer: 1,
                 site: SiteTag::Up,
                 backend: GemmPath::Packed,
+                kernel: crate::quant::Kernel::Scalar,
             },
             t1,
         );
@@ -570,6 +573,7 @@ mod tests {
         assert!(json.contains("req-0"));
         assert!(json.contains("\"site\":\"w_up\""));
         assert!(json.contains("\"backend\":\"packed\""));
+        assert!(json.contains("\"kernel\":\"scalar\""));
     }
 
     #[test]

@@ -106,11 +106,12 @@ pub enum EventKind {
     /// one fused decode step over `batch` live sessions (sampled)
     DecodeStep { batch: u32 },
     /// one site's GEMM inside a sampled fused step, attributed to the
-    /// backend that served it
+    /// backend that served it and the SIMD dispatch tier it ran on
     SiteGemm {
         layer: u16,
         site: SiteTag,
         backend: GemmPath,
+        kernel: crate::quant::Kernel,
     },
     /// request preempted under pool pressure (pages released, requeued)
     Preempted,
@@ -445,7 +446,8 @@ mod tests {
             EventKind::SiteGemm {
                 layer: 0,
                 site: SiteTag::Q,
-                backend: GemmPath::Packed
+                backend: GemmPath::Packed,
+                kernel: crate::quant::Kernel::Scalar
             }
             .category(),
             "engine"

@@ -15,7 +15,9 @@
 //!   fused-multiply loops with no gather).
 //! * Each weight row is decoded to an `i16` entry buffer plus per-block
 //!   scale multipliers by a format-specific `decode_row` callback, then
-//!   swept across every panel by [`row_times_panels`].
+//!   swept across every panel by the runtime-dispatched 8×NC microkernel
+//!   (`quant::kernels::row_times_panels` — scalar/AVX2/NEON tiers, all
+//!   bitwise identical).
 //! * Weight rows are partitioned across `std::thread::scope` workers
 //!   (no thread pool, no dependencies); workers write disjoint chunks of
 //!   a (rows, batch) staging buffer which is transposed into the caller's
@@ -117,44 +119,12 @@ pub(crate) fn pack_panels(xt: &Mat, xp: &mut Vec<f32>) -> usize {
     n_panels
 }
 
-/// The 8×NC microkernel swept over every panel: one decoded weight row
-/// (`ebuf`, `cols` half-unit/integer entries) times the packed activation
-/// panels. `bscale[j]` multiplies block j's dot product (β_t/2 for
-/// NestQuant, 1.0 for formats with row-only scales), `row_scale` the
-/// final accumulator. `out_row` receives the `batch` outputs of this row.
-pub(crate) fn row_times_panels(
-    ebuf: &[i16],
-    bscale: &[f32],
-    xp: &[f32],
-    batch: usize,
-    row_scale: f32,
-    out_row: &mut [f32],
-) {
-    let bpr = bscale.len();
-    let n_panels = batch.div_ceil(PANEL);
-    for p in 0..n_panels {
-        let mut acc = [0f32; PANEL];
-        for j in 0..bpr {
-            let e = &ebuf[j * D..(j + 1) * D];
-            let xb = &xp[(p * bpr + j) * D * PANEL..(p * bpr + j + 1) * D * PANEL];
-            let mut d = [0f32; PANEL];
-            for i in 0..D {
-                let ev = e[i] as f32;
-                let lane = &xb[i * PANEL..(i + 1) * PANEL];
-                for (dc, &xv) in d.iter_mut().zip(lane) {
-                    *dc += ev * xv;
-                }
-            }
-            let b = bscale[j];
-            for (ac, &dc) in acc.iter_mut().zip(&d) {
-                *ac += dc * b;
-            }
-        }
-        let c0 = p * PANEL;
-        let c_lim = (batch - c0).min(PANEL);
-        for c in 0..c_lim {
-            out_row[c0 + c] = acc[c] * row_scale;
-        }
+/// Resolve a caller thread count: `0` means all available cores.
+pub(crate) fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    } else {
+        threads
     }
 }
 
@@ -173,6 +143,34 @@ pub(crate) fn row_ranges(rows: usize, threads: usize) -> Vec<std::ops::Range<usi
     out
 }
 
+/// Shared row-partitioned thread driver: run `run(range, chunk)` for
+/// balanced contiguous weight-row ranges, each writing its disjoint
+/// `range.len()·batch` chunk of the (rows, batch) staging buffer. One
+/// range runs inline (no spawn); more fan out across `std::thread::scope`
+/// workers. This is the single threading shape behind all three packed
+/// GEMM backends (`qgemm`, `uniform`, `lut`), so the SIMD kernels are
+/// wired into one driver, not three copies of it.
+pub(crate) fn drive_rows<F>(rows: usize, batch: usize, threads: usize, ytmp: &mut [f32], run: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(ytmp.len(), rows * batch);
+    let ranges = row_ranges(rows, threads);
+    if ranges.len() == 1 {
+        run(ranges[0].clone(), ytmp);
+        return;
+    }
+    let run = &run;
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = ytmp;
+        for range in ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(range.len() * batch);
+            rest = tail;
+            s.spawn(move || run(range, chunk));
+        }
+    });
+}
+
 /// Transpose the (rows, batch) staging buffer into the caller's
 /// (batch, rows) output.
 pub(crate) fn transpose_into(src: &[f32], rows: usize, batch: usize, dst: &mut Mat) {
@@ -187,14 +185,19 @@ pub(crate) fn transpose_into(src: &[f32], rows: usize, batch: usize, dst: &mut M
 
 /// Shared GEMM driver for the packed weight formats. `decode_row(r, ebuf,
 /// bscale)` fills the decoded integer entries and per-block multipliers
-/// for weight row `r` and returns the row scale. `threads == 0` uses all
-/// available cores; weight rows are partitioned across scoped workers.
+/// for weight row `r` and returns the row scale; `kernel` picks the
+/// [`row_times_panels`] dispatch tier (callers pass `kernels::active()`
+/// unless a test/bench forces one). `threads == 0` uses all available
+/// cores; weight rows are partitioned across scoped workers.
+///
+/// [`row_times_panels`]: super::kernels::row_times_panels
 pub(crate) fn gemm_driver<F>(
     rows: usize,
     cols: usize,
     xt: &Mat,
     yt: &mut Mat,
     threads: usize,
+    kernel: super::kernels::Kernel,
     scratch: &mut GemmScratch,
     decode_row: F,
 ) where
@@ -208,11 +211,7 @@ pub(crate) fn gemm_driver<F>(
     if batch == 0 || rows == 0 {
         return;
     }
-    let threads = if threads == 0 {
-        std::thread::available_parallelism().map_or(1, |n| n.get())
-    } else {
-        threads
-    };
+    let threads = resolve_threads(threads);
     pack_panels(xt, &mut scratch.xp);
     scratch.ytmp.clear();
     scratch.ytmp.resize(rows * batch, 0.0);
@@ -230,7 +229,8 @@ pub(crate) fn gemm_driver<F>(
         bscale.resize(bpr, 0.0);
         for r in 0..rows {
             let row_scale = decode_row(r, ebuf, bscale);
-            row_times_panels(
+            super::kernels::row_times_panels(
+                kernel,
                 ebuf,
                 bscale,
                 xp,
@@ -243,12 +243,13 @@ pub(crate) fn gemm_driver<F>(
         return;
     }
 
-    let run = |range: std::ops::Range<usize>, out: &mut [f32]| {
+    drive_rows(rows, batch, threads, ytmp, |range, out| {
         let mut ebuf = vec![0i16; cols];
         let mut bscale = vec![0f32; bpr];
         for (k, r) in range.enumerate() {
             let row_scale = decode_row(r, &mut ebuf, &mut bscale);
-            row_times_panels(
+            super::kernels::row_times_panels(
+                kernel,
                 &ebuf,
                 &bscale,
                 xp,
@@ -257,23 +258,7 @@ pub(crate) fn gemm_driver<F>(
                 &mut out[k * batch..(k + 1) * batch],
             );
         }
-    };
-
-    let ranges = row_ranges(rows, threads);
-    if ranges.len() == 1 {
-        run(ranges[0].clone(), ytmp.as_mut_slice());
-    } else {
-        let run = &run;
-        std::thread::scope(|s| {
-            let mut rest: &mut [f32] = ytmp.as_mut_slice();
-            for range in ranges {
-                let (chunk, tail) =
-                    std::mem::take(&mut rest).split_at_mut(range.len() * batch);
-                rest = tail;
-                s.spawn(move || run(range, chunk));
-            }
-        });
-    }
+    });
     transpose_into(ytmp, rows, batch, yt);
 }
 
@@ -300,6 +285,26 @@ mod tests {
                     let max = ranges.iter().map(|r| r.len()).max().unwrap();
                     assert!(max - min <= 1);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn drive_rows_writes_disjoint_chunks() {
+        // every (row, col) staging slot is written exactly once whatever
+        // the worker count — the invariant all three backends lean on.
+        for &(rows, batch, threads) in &[(7usize, 3usize, 1usize), (8, 2, 3), (5, 4, 8)] {
+            let mut ytmp = vec![f32::NAN; rows * batch];
+            drive_rows(rows, batch, threads, &mut ytmp, |range, out| {
+                assert_eq!(out.len(), range.len() * batch);
+                for (k, r) in range.enumerate() {
+                    for c in 0..batch {
+                        out[k * batch + c] = (r * batch + c) as f32;
+                    }
+                }
+            });
+            for (i, &v) in ytmp.iter().enumerate() {
+                assert_eq!(v, i as f32, "rows={rows} batch={batch} threads={threads}");
             }
         }
     }
@@ -378,7 +383,8 @@ mod tests {
         for threads in [1usize, 4] {
             let mut yt = Mat::zeros(batch, rows);
             let mut scratch = GemmScratch::new();
-            gemm_driver(rows, cols, &xt, &mut yt, threads, &mut scratch, |r, ebuf, bscale| {
+            let kernel = crate::quant::kernels::active();
+            gemm_driver(rows, cols, &xt, &mut yt, threads, kernel, &mut scratch, |r, ebuf, bscale| {
                 ebuf.copy_from_slice(&wq[r * cols..(r + 1) * cols]);
                 bscale.fill(1.0);
                 0.5

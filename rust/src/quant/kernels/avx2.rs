@@ -1,0 +1,231 @@
+//! AVX2 kernel tier (x86_64). Every function here is marked
+//! `#[target_feature(enable = "avx2")]` and must only be called after
+//! the dispatcher (`quant::kernels::active`) has verified AVX2 + FMA
+//! support — the `Kernel::Avx2` match arms in `quant::kernels` are the
+//! only callers.
+//!
+//! Bitwise contract: the f32 microkernel issues, per output lane, the
+//! *same* IEEE operation sequence as the scalar tier — separate multiply
+//! then add (`_mm256_mul_ps` + `_mm256_add_ps`), never `_mm256_fmadd_ps`.
+//! FMA contraction rounds once where the scalar kernel rounds twice, so
+//! using it would silently break the scalar≡SIMD bitwise-parity
+//! guarantee the propchecks enforce (the FMA units still help: the
+//! detector requires the `fma` cpuid bit so this tier only runs on
+//! cores whose vector ALUs handle the mul/add pair at full width). The
+//! integer decode and LUT paths are exact by construction — i32
+//! arithmetic has no rounding — so they mirror the scalar control flow
+//! with 8 lanes per instruction.
+
+use core::arch::x86_64::*;
+
+use crate::lattice::e8::D;
+use crate::lattice::hierarchical::PairLut;
+use crate::quant::gemm::PANEL;
+use crate::quant::qgemm::{gmul, DecodeConsts};
+
+/// Sum the eight i32 lanes. Store-based on purpose: the extract/shuffle
+/// reduction ladder saves a couple of cycles but is exactly the kind of
+/// lane-order subtlety that breaks exactness reviews; an L1 round-trip
+/// is cheap and obviously correct.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes.iter().sum()
+}
+
+/// The 8×PANEL f32 microkernel, two 256-bit vectors covering the
+/// PANEL=16 batch lanes. Per lane the op sequence matches
+/// `scalar::row_times_panels` exactly (see module docs).
+///
+/// # Safety
+/// Requires AVX2; `xp` must hold the packed panels for `batch` columns
+/// and `out_row` at least `batch` entries (same contract as scalar).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn row_times_panels(
+    ebuf: &[i16],
+    bscale: &[f32],
+    xp: &[f32],
+    batch: usize,
+    row_scale: f32,
+    out_row: &mut [f32],
+) {
+    let bpr = bscale.len();
+    let n_panels = batch.div_ceil(PANEL);
+    for p in 0..n_panels {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        for j in 0..bpr {
+            let e = &ebuf[j * D..(j + 1) * D];
+            let base = (p * bpr + j) * D * PANEL;
+            let mut d0 = _mm256_setzero_ps();
+            let mut d1 = _mm256_setzero_ps();
+            for (i, &ei) in e.iter().enumerate() {
+                let ev = _mm256_set1_ps(ei as f32);
+                let x0 = _mm256_loadu_ps(xp.as_ptr().add(base + i * PANEL));
+                let x1 = _mm256_loadu_ps(xp.as_ptr().add(base + i * PANEL + 8));
+                // d += e·x as mul-then-add — NOT fmadd (see module docs)
+                d0 = _mm256_add_ps(d0, _mm256_mul_ps(ev, x0));
+                d1 = _mm256_add_ps(d1, _mm256_mul_ps(ev, x1));
+            }
+            let b = _mm256_set1_ps(bscale[j]);
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(d0, b));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(d1, b));
+        }
+        let rs = _mm256_set1_ps(row_scale);
+        let mut lanes = [0f32; PANEL];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), _mm256_mul_ps(acc0, rs));
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(8), _mm256_mul_ps(acc1, rs));
+        let c0 = p * PANEL;
+        let c_lim = (batch - c0).min(PANEL);
+        out_row[c0..c0 + c_lim].copy_from_slice(&lanes[..c_lim]);
+    }
+}
+
+/// Vectorized `DecodeConsts::decode` core: both NestQuantM residual
+/// candidates computed across the 8 block coordinates at once, parity
+/// fix restricted to lane 0 by mask, minimum-energy pick by (scalar)
+/// cost compare. Returns the chosen residual in half-units, identical
+/// lane-for-lane to the scalar oracle — every operation is exact i32.
+///
+/// # Safety
+/// Requires AVX2.
+#[target_feature(enable = "avx2")]
+unsafe fn decode_core(consts: DecodeConsts, c: &[u8; D]) -> __m256i {
+    // t = G·c is 8 small integer adds — scalar, the vector win is in the
+    // 16 magic divisions + parity/cost work below
+    let t_arr = gmul(c);
+    let t = _mm256_loadu_si256(t_arr.as_ptr() as *const __m256i);
+    let q = consts.q;
+    let m = consts.m;
+    let qv = _mm256_set1_epi32(q);
+    let mv = _mm256_set1_epi32(m);
+    let magic = _mm256_set1_epi32(consts.magic as i32);
+    // floor(x / m) = (x·magic) >> 21, exact for 0 ≤ x < 4096
+    // (`magic_division_exact` pins this); products stay < 2^31 so the
+    // signed low-32 mullo equals the u32 wrapping multiply
+    let r1 = _mm256_srli_epi32::<21>(_mm256_mullo_epi32(_mm256_add_epi32(t, qv), magic));
+    let mut e1 = _mm256_sub_epi32(t, _mm256_mullo_epi32(mv, r1));
+    let r2 = _mm256_srli_epi32::<21>(_mm256_mullo_epi32(t, magic));
+    let mut e2 = _mm256_sub_epi32(_mm256_sub_epi32(t, qv), _mm256_mullo_epi32(mv, r2));
+    let par1 = hsum_epi32(r1);
+    let par2 = hsum_epi32(r2);
+    // parity fix on coordinate 0 only: e0 −= m·dir·(par&1) with
+    // dir = 1 | (e0 >> 31); computed lane-parallel, masked to lane 0
+    let lane0 = _mm256_setr_epi32(-1, 0, 0, 0, 0, 0, 0, 0);
+    let dir1 = _mm256_or_si256(_mm256_srai_epi32::<31>(e1), _mm256_set1_epi32(1));
+    let fix1 = _mm256_mullo_epi32(dir1, _mm256_set1_epi32(m * (par1 & 1)));
+    e1 = _mm256_sub_epi32(e1, _mm256_and_si256(fix1, lane0));
+    let dir2 = _mm256_or_si256(_mm256_srai_epi32::<31>(e2), _mm256_set1_epi32(1));
+    let fix2 = _mm256_mullo_epi32(dir2, _mm256_set1_epi32(m * (par2 & 1)));
+    e2 = _mm256_sub_epi32(e2, _mm256_and_si256(fix2, lane0));
+    let cost1 = hsum_epi32(_mm256_mullo_epi32(e1, e1));
+    let cost2 = hsum_epi32(_mm256_mullo_epi32(e2, e2));
+    if cost1 <= cost2 {
+        e1
+    } else {
+        e2
+    }
+}
+
+/// [`decode_core`] into a caller i32 block — the kvpool streaming-decode
+/// entry point.
+///
+/// # Safety
+/// Requires AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn decode_block(consts: DecodeConsts, c: &[u8; D], out: &mut [i32; D]) {
+    let e = decode_core(consts, c);
+    _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, e);
+}
+
+/// Decode a packed-nibble code row into i16 entries: per block, unpack
+/// the 8 nibbles (scalar — 4 byte loads), run the vector decode core,
+/// and narrow 8×i32 → 8×i16 with one saturating pack (values are
+/// bounded by 2m ≪ i16::MAX, so saturation never fires).
+///
+/// # Safety
+/// Requires AVX2; `crow.len() ≥ ebuf.len()/2` and `ebuf.len() % 8 == 0`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn decode_nibble_row(consts: DecodeConsts, crow: &[u8], ebuf: &mut [i16]) {
+    let bpr = ebuf.len() / D;
+    let mut cbuf = [0u8; D];
+    for j in 0..bpr {
+        for b in 0..4 {
+            let byte = crow[j * 4 + b];
+            cbuf[2 * b] = byte & 0x0F;
+            cbuf[2 * b + 1] = byte >> 4;
+        }
+        let e = decode_core(consts, &cbuf);
+        let lo = _mm256_castsi256_si128(e);
+        let hi = _mm256_extracti128_si256::<1>(e);
+        // packs(lo, hi) lays out lanes [lo0..lo3, hi0..hi3] = e[0..8]
+        let narrow = _mm_packs_epi32(lo, hi);
+        _mm_storeu_si128(ebuf.as_mut_ptr().add(j * D) as *mut __m128i, narrow);
+    }
+}
+
+/// Gathered per-block LUT dots: 8 blocks per iteration, one hardware
+/// gather per (ℓ, m) level pair resolving all 8 table lookups in
+/// flight — the table walk is the cache-miss-bound part of the LUT
+/// backend, and overlapping the misses is where the win lives. The
+/// i32 radix accumulation (`inner += q^m·T`, `acc += q^ℓ·inner`) is
+/// lane-exact vs [`PairLut::block_dot`].
+///
+/// # Safety
+/// Requires AVX2. Gathers load 32 bits per 16-bit entry, so the last
+/// table entry's load runs 2 bytes past it — [`PairLut`] pads its table
+/// with one trailing element to keep that in-bounds (asserted here).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn lut_block_dots(
+    lut: &PairLut,
+    m: usize,
+    act_idx: &[u16],
+    widx: &[u16],
+    dots: &mut [i32],
+) {
+    let bpr = dots.len();
+    let n = lut.n as i32;
+    let q = lut.q as i32;
+    debug_assert!(
+        lut.table.len() > lut.n * lut.n,
+        "PairLut table must carry the 16-bit gather padding entry"
+    );
+    let base = lut.table.as_ptr() as *const i32;
+    let mut j0 = 0usize;
+    while j0 + 8 <= bpr {
+        let mut acc = _mm256_setzero_si256();
+        let mut wl = 1i32; // q^ℓ
+        for l in 0..m {
+            let mut rowoff = [0i32; 8];
+            for (jj, ro) in rowoff.iter_mut().enumerate() {
+                *ro = act_idx[(j0 + jj) * m + l] as i32 * n;
+            }
+            let mut inner = _mm256_setzero_si256();
+            let mut wm = 1i32; // q^m
+            for mm in 0..m {
+                let mut off = [0i32; 8];
+                for (jj, o) in off.iter_mut().enumerate() {
+                    *o = rowoff[jj] + widx[(j0 + jj) * m + mm] as i32;
+                }
+                let offv = _mm256_loadu_si256(off.as_ptr() as *const __m256i);
+                // scale=2: offsets index i16 entries; sign-extend the
+                // low half of each 32-bit gathered word
+                let raw = _mm256_i32gather_epi32::<2>(base, offv);
+                let val = _mm256_srai_epi32::<16>(_mm256_slli_epi32::<16>(raw));
+                inner =
+                    _mm256_add_epi32(inner, _mm256_mullo_epi32(_mm256_set1_epi32(wm), val));
+                wm *= q;
+            }
+            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(_mm256_set1_epi32(wl), inner));
+            wl *= q;
+        }
+        _mm256_storeu_si256(dots.as_mut_ptr().add(j0) as *mut __m256i, acc);
+        j0 += 8;
+    }
+    // ragged tail: exact scalar
+    for j in j0..bpr {
+        dots[j] = lut.block_dot(&act_idx[j * m..(j + 1) * m], &widx[j * m..(j + 1) * m]);
+    }
+}

@@ -1,0 +1,481 @@
+//! Runtime-dispatched SIMD kernels for the decode and LUT GEMM backends.
+//!
+//! Three tiers serve the same three operations — the 8×PANEL f32
+//! microkernel ([`row_times_panels`]), the branch-free NestQuantM block
+//! decode ([`decode_block`] / [`decode_nibble_row`]), and the per-block
+//! pair-LUT dots ([`lut_block_dots`]):
+//!
+//! * **scalar** — the portable reference; exactly the loops that served
+//!   production before this module existed.
+//! * **avx2** — x86_64, gated on runtime `avx2` + `fma` cpuid detection;
+//!   8-lane f32/i32 vectors, hardware gathers for the LUT table walk.
+//! * **neon** — aarch64 (NEON is baseline there); 4-lane vectors.
+//!
+//! The tier is picked **once** per process ([`active`], cached in a
+//! `OnceLock`): best supported tier by default, overridable with the
+//! `NESTQUANT_KERNEL=scalar|avx2|neon` environment knob so every tier is
+//! testable on one host (`make test-kernels` runs the suite once per
+//! tier). Requesting a tier the host can't run falls back to
+//! auto-detection with a one-line warning — a typo in a deployment env
+//! file must cost speed, not the server.
+//!
+//! Parity contract (enforced by the propchecks below and re-proven
+//! end-to-end by the gemm≡gemv suites in `quant::{qgemm, lut}`): the f32
+//! microkernel is **bitwise identical** across tiers — lane-parallel
+//! accumulation preserves the scalar per-column reduction order and no
+//! tier uses FMA contraction (single-rounding fused multiply-add would
+//! silently diverge from the scalar mul-then-add) — and the integer
+//! decode / LUT paths are exact, being i32 arithmetic in the same
+//! operation order. So switching tiers never changes a single output
+//! bit anywhere in the stack, which is what lets one env knob flip the
+//! whole serving path without invalidating any golden output.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub(crate) mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+use std::sync::OnceLock;
+
+use crate::lattice::e8::D;
+use crate::lattice::hierarchical::PairLut;
+use crate::quant::qgemm::DecodeConsts;
+
+/// Environment knob forcing a dispatch tier (`scalar|avx2|neon`).
+pub const ENV_KERNEL: &str = "NESTQUANT_KERNEL";
+
+/// A dispatch tier. `repr(u8)` indices are stable — they are what the
+/// bench sweep records in the BENCH_gemm.json `kernel` column (0 =
+/// scalar, 1 = avx2, 2 = neon) and what trace exports name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Kernel {
+    Scalar = 0,
+    Avx2 = 1,
+    Neon = 2,
+}
+
+impl Kernel {
+    pub const ALL: [Kernel; 3] = [Kernel::Scalar, Kernel::Avx2, Kernel::Neon];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Stable numeric id for bench/metric columns.
+    pub fn index(self) -> u8 {
+        self as u8
+    }
+
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Kernel::Scalar),
+            "avx2" => Some(Kernel::Avx2),
+            "neon" => Some(Kernel::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this tier can run on the current host. Scalar always
+    /// can; AVX2 needs runtime `avx2` + `fma` cpuid bits on x86_64;
+    /// NEON is architecturally mandatory on aarch64.
+    pub fn supported(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            Kernel::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Kernel::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// Best tier the host supports (no env override).
+fn detect() -> Kernel {
+    if Kernel::Avx2.supported() {
+        Kernel::Avx2
+    } else if Kernel::Neon.supported() {
+        Kernel::Neon
+    } else {
+        Kernel::Scalar
+    }
+}
+
+/// Every tier the host supports, scalar first — the iteration set for
+/// cross-tier parity tests and the bench sweep's kernel column.
+pub fn available() -> Vec<Kernel> {
+    Kernel::ALL.iter().copied().filter(|k| k.supported()).collect()
+}
+
+/// Resolve the active tier from an (optional) env override — pure so
+/// the fallback rules are unit-testable without touching process env.
+fn resolve(env: Option<&str>) -> Kernel {
+    let auto = detect();
+    let Some(v) = env.map(str::trim).filter(|v| !v.is_empty()) else {
+        return auto;
+    };
+    match Kernel::parse(v) {
+        Some(k) if k.supported() => k,
+        Some(k) => {
+            eprintln!(
+                "{ENV_KERNEL}={v}: tier '{}' is not supported on this host, \
+                 falling back to '{}'",
+                k.name(),
+                auto.name()
+            );
+            auto
+        }
+        None => {
+            eprintln!(
+                "{ENV_KERNEL}={v}: unknown tier (expected scalar|avx2|neon), \
+                 falling back to '{}'",
+                auto.name()
+            );
+            auto
+        }
+    }
+}
+
+/// The process-wide active tier, resolved once: `NESTQUANT_KERNEL` if
+/// set and supported, else the best detected tier. Hot paths call this
+/// once per GEMM/stream call (a cached atomic load), not per block.
+pub fn active() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| resolve(std::env::var(ENV_KERNEL).ok().as_deref()))
+}
+
+#[inline]
+#[track_caller]
+fn require(k: Kernel) {
+    // Dispatching an unsupported tier would execute illegal instructions
+    // (UB), so the explicit-tier entry points are hard-gated. supported()
+    // is a cached cpuid read — one atomic load per kernel call.
+    assert!(
+        k.supported(),
+        "kernel tier '{}' is not supported on this host",
+        k.name()
+    );
+}
+
+/// The 8×PANEL microkernel: one decoded weight row times the packed
+/// activation panels (see `quant::gemm::pack_panels` for the layout).
+/// Output is bitwise identical across tiers.
+#[inline]
+pub fn row_times_panels(
+    k: Kernel,
+    ebuf: &[i16],
+    bscale: &[f32],
+    xp: &[f32],
+    batch: usize,
+    row_scale: f32,
+    out_row: &mut [f32],
+) {
+    require(k);
+    match k {
+        Kernel::Scalar => scalar::row_times_panels(ebuf, bscale, xp, batch, row_scale, out_row),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: require(k) verified the avx2+fma cpuid bits
+        Kernel::Avx2 => unsafe {
+            avx2::row_times_panels(ebuf, bscale, xp, batch, row_scale, out_row)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 (require(k) passed)
+        Kernel::Neon => unsafe {
+            neon::row_times_panels(ebuf, bscale, xp, batch, row_scale, out_row)
+        },
+        #[allow(unreachable_patterns)] // cross-arch variants: require() already rejected them
+        _ => scalar::row_times_panels(ebuf, bscale, xp, batch, row_scale, out_row),
+    }
+}
+
+/// Branch-free NestQuantM decode of one coset-code 8-block into
+/// half-unit i32 entries — the kvpool streaming-decode kernel. Exact
+/// across tiers (integer arithmetic, same operation order).
+#[inline]
+pub fn decode_block(k: Kernel, consts: DecodeConsts, c: &[u8; D], out: &mut [i32; D]) {
+    require(k);
+    match k {
+        Kernel::Scalar => scalar::decode_block(consts, c, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: require(k) verified the avx2+fma cpuid bits
+        Kernel::Avx2 => unsafe { avx2::decode_block(consts, c, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 (require(k) passed)
+        Kernel::Neon => unsafe { neon::decode_block(consts, c, out) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::decode_block(consts, c, out),
+    }
+}
+
+/// Decode a packed-nibble code row (4-bit codes, two per byte) into i16
+/// half-unit entries — the per-row decode feeding the GEMM microkernel.
+/// Exact across tiers.
+#[inline]
+pub fn decode_nibble_row(k: Kernel, consts: DecodeConsts, crow: &[u8], ebuf: &mut [i16]) {
+    debug_assert_eq!(ebuf.len() % D, 0);
+    debug_assert!(crow.len() * 2 >= ebuf.len());
+    require(k);
+    match k {
+        Kernel::Scalar => scalar::decode_nibble_row(consts, crow, ebuf),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: require(k) verified the avx2+fma cpuid bits
+        Kernel::Avx2 => unsafe { avx2::decode_nibble_row(consts, crow, ebuf) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 (require(k) passed)
+        Kernel::Neon => unsafe { neon::decode_nibble_row(consts, crow, ebuf) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::decode_nibble_row(consts, crow, ebuf),
+    }
+}
+
+/// Per-block pair-LUT dots of one weight row against one encoded
+/// activation row: `dots[j] = PairLut::block_dot(act_idx[j], widx[j])`,
+/// gathered/batched on the SIMD tiers. Exact i32 across tiers inside
+/// the `lut_supported` window.
+#[inline]
+pub fn lut_block_dots(
+    k: Kernel,
+    lut: &PairLut,
+    m: usize,
+    act_idx: &[u16],
+    widx: &[u16],
+    dots: &mut [i32],
+) {
+    debug_assert_eq!(act_idx.len(), dots.len() * m);
+    debug_assert_eq!(widx.len(), dots.len() * m);
+    require(k);
+    match k {
+        Kernel::Scalar => scalar::lut_block_dots(lut, m, act_idx, widx, dots),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: require(k) verified the avx2+fma cpuid bits
+        Kernel::Avx2 => unsafe { avx2::lut_block_dots(lut, m, act_idx, widx, dots) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 (require(k) passed)
+        Kernel::Neon => unsafe { neon::lut_block_dots(lut, m, act_idx, widx, dots) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::lut_block_dots(lut, m, act_idx, widx, dots),
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::quant::gemm::{pack_panels, PANEL};
+    use crate::util::linalg::Mat;
+    use crate::util::{propcheck, Rng};
+
+    #[test]
+    fn kernel_names_parse_roundtrip() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+            assert_eq!(Kernel::parse(&k.name().to_uppercase()), Some(k));
+        }
+        assert_eq!(Kernel::parse("sse9"), None);
+        assert_eq!(Kernel::parse(""), None);
+        assert_eq!(Kernel::Scalar.index(), 0);
+        assert_eq!(Kernel::Avx2.index(), 1);
+        assert_eq!(Kernel::Neon.index(), 2);
+    }
+
+    #[test]
+    fn kernel_dispatch_resolution_rules() {
+        // no override → best detected tier; that tier must be supported
+        let auto = resolve(None);
+        assert!(auto.supported());
+        assert_eq!(resolve(Some("")), auto);
+        assert_eq!(resolve(Some("   ")), auto);
+        // unknown names fall back rather than fail
+        assert_eq!(resolve(Some("avx512-please")), auto);
+        // scalar is always honorable
+        assert_eq!(resolve(Some("scalar")), Kernel::Scalar);
+        assert_eq!(resolve(Some(" SCALAR ")), Kernel::Scalar);
+        // a supported tier is honored, an unsupported one falls back
+        for k in [Kernel::Avx2, Kernel::Neon] {
+            let want = if k.supported() { k } else { auto };
+            assert_eq!(resolve(Some(k.name())), want, "tier {}", k.name());
+        }
+        // the process-wide choice is one of the host's tiers
+        assert!(active().supported());
+        assert!(available().contains(&active()));
+        assert_eq!(available()[0], Kernel::Scalar);
+    }
+
+    #[test]
+    fn kernel_row_times_panels_bitwise_parity() {
+        // every SIMD tier must match the scalar microkernel bit-for-bit
+        // across block counts, ragged batches and scales — the guarantee
+        // that lets gemm≡gemv propchecks keep their teeth whatever tier
+        // dispatch picks.
+        propcheck::check("kernel-rtp-parity", 20, 7101, |rng| {
+            for &bpr in &[1usize, 2, 5] {
+                for &batch in &[1usize, 7, PANEL, PANEL + 1, 2 * PANEL + 3] {
+                    let cols = bpr * D;
+                    let ebuf: Vec<i16> =
+                        (0..cols).map(|_| rng.below(193) as i16 - 96).collect();
+                    let bscale: Vec<f32> =
+                        (0..bpr).map(|_| rng.gauss_f32() * 0.3 + 0.5).collect();
+                    let row_scale = rng.gauss_f32() * 0.1 + 0.25;
+                    let xt = Mat::from_vec(batch, cols, rng.gauss_vec(batch * cols));
+                    let mut xp = Vec::new();
+                    pack_panels(&xt, &mut xp);
+                    let mut want = vec![0f32; batch];
+                    row_times_panels(
+                        Kernel::Scalar,
+                        &ebuf,
+                        &bscale,
+                        &xp,
+                        batch,
+                        row_scale,
+                        &mut want,
+                    );
+                    for k in available() {
+                        let mut got = vec![0f32; batch];
+                        row_times_panels(k, &ebuf, &bscale, &xp, batch, row_scale, &mut got);
+                        for c in 0..batch {
+                            if got[c].to_bits() != want[c].to_bits() {
+                                return Err(format!(
+                                    "tier {} bpr={bpr} batch={batch} col {c}: {} vs scalar {}",
+                                    k.name(),
+                                    got[c],
+                                    want[c]
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kernel_block_decode_exact_parity() {
+        // the vectorized branch-free decode is pure integer arithmetic:
+        // every tier must equal DecodeConsts::decode exactly, for every
+        // q the packed formats serve.
+        propcheck::check("kernel-decode-parity", 50, 7102, |rng| {
+            for &q in &[2i32, 3, 8, 14, 16] {
+                let consts = DecodeConsts::new(q);
+                let mut c = [0u8; D];
+                for v in c.iter_mut() {
+                    *v = rng.below(q as usize) as u8;
+                }
+                let mut want = [0i32; D];
+                consts.decode(&c, &mut want);
+                for k in available() {
+                    let mut got = [0i32; D];
+                    decode_block(k, consts, &c, &mut got);
+                    if got != want {
+                        return Err(format!(
+                            "tier {} q={q} code {c:?}: {got:?} vs scalar {want:?}",
+                            k.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kernel_nibble_row_decode_exact_parity() {
+        propcheck::check("kernel-nibble-row-parity", 30, 7103, |rng| {
+            for &q in &[3i32, 14, 16] {
+                for &bpr in &[1usize, 3, 7] {
+                    let consts = DecodeConsts::new(q);
+                    let cols = bpr * D;
+                    let crow: Vec<u8> = (0..cols / 2)
+                        .map(|_| {
+                            let lo = rng.below(q as usize) as u8;
+                            let hi = rng.below(q as usize) as u8;
+                            lo | (hi << 4)
+                        })
+                        .collect();
+                    let mut want = vec![0i16; cols];
+                    decode_nibble_row(Kernel::Scalar, consts, &crow, &mut want);
+                    for k in available() {
+                        let mut got = vec![0i16; cols];
+                        decode_nibble_row(k, consts, &crow, &mut got);
+                        if got != want {
+                            return Err(format!(
+                                "tier {} q={q} bpr={bpr}: {got:?} vs scalar {want:?}",
+                                k.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kernel_lut_block_dots_exact_parity() {
+        // the gathered LUT path must reproduce PairLut::block_dot i32-
+        // exactly for every supported (q, M) shape, including ragged
+        // tails around the 4/8-block SIMD groups.
+        let mut rng = Rng::new(7104);
+        for &(q, m) in &[(2u32, 2usize), (2, 4), (2, 8), (3, 2), (3, 7)] {
+            assert!(crate::lattice::hierarchical::lut_supported(q, m as u32));
+            let lut = PairLut::shared(q);
+            let n = lut.n as u32;
+            for &bpr in &[1usize, 4, 8, 9, 17] {
+                let act: Vec<u16> =
+                    (0..bpr * m).map(|_| rng.below(n as usize) as u16).collect();
+                let wid: Vec<u16> =
+                    (0..bpr * m).map(|_| rng.below(n as usize) as u16).collect();
+                let mut want = vec![0i32; bpr];
+                lut_block_dots(Kernel::Scalar, &lut, m, &act, &wid, &mut want);
+                for (j, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        *w,
+                        lut.block_dot(&act[j * m..(j + 1) * m], &wid[j * m..(j + 1) * m]),
+                        "scalar tier must be block_dot verbatim"
+                    );
+                }
+                for k in available() {
+                    let mut got = vec![0i32; bpr];
+                    lut_block_dots(k, &lut, m, &act, &wid, &mut got);
+                    assert_eq!(
+                        got,
+                        want,
+                        "tier {} q={q} M={m} bpr={bpr}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported on this host")]
+    fn kernel_explicit_unsupported_tier_panics() {
+        // the explicit-tier API must refuse (not UB) a tier the host
+        // can't run; at least one of avx2/neon is always foreign.
+        let foreign = if Kernel::Avx2.supported() {
+            Kernel::Neon
+        } else {
+            Kernel::Avx2
+        };
+        let consts = DecodeConsts::new(4);
+        let mut out = [0i32; D];
+        decode_block(foreign, consts, &[0u8; D], &mut out);
+    }
+}

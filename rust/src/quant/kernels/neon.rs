@@ -1,0 +1,209 @@
+//! NEON kernel tier (aarch64). NEON is architecturally mandatory on
+//! aarch64, so `supported()` is a compile-target check; the functions
+//! still carry `#[target_feature(enable = "neon")]` and are only called
+//! through the `Kernel::Neon` match arms in `quant::kernels`.
+//!
+//! Bitwise contract: the f32 microkernel uses `vaddq_f32(…, vmulq_f32)`
+//! — explicitly NOT `vfmaq_f32`/`vmlaq_f32`, whose fused single-rounding
+//! FMLA would diverge from the scalar tier's mul-then-add double
+//! rounding and break the scalar≡SIMD bitwise-parity propchecks. The
+//! integer decode and LUT paths are exact i32 arithmetic in the scalar
+//! tier's operation order, four lanes per instruction (two vectors per
+//! 8-block). There is no gather on NEON; the LUT kernel loads table
+//! entries scalar and vectorizes the radix accumulation, which still
+//! lets the core issue the four loads of a lane group back-to-back.
+
+use core::arch::aarch64::*;
+
+use crate::lattice::e8::D;
+use crate::lattice::hierarchical::PairLut;
+use crate::quant::gemm::PANEL;
+use crate::quant::qgemm::{gmul, DecodeConsts};
+
+/// The 8×PANEL f32 microkernel, four 128-bit vectors covering the
+/// PANEL=16 batch lanes; per-lane op sequence identical to scalar.
+///
+/// # Safety
+/// Requires NEON (aarch64 baseline); same slice contract as scalar.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn row_times_panels(
+    ebuf: &[i16],
+    bscale: &[f32],
+    xp: &[f32],
+    batch: usize,
+    row_scale: f32,
+    out_row: &mut [f32],
+) {
+    let bpr = bscale.len();
+    let n_panels = batch.div_ceil(PANEL);
+    for p in 0..n_panels {
+        let mut acc = [vdupq_n_f32(0.0); 4];
+        for j in 0..bpr {
+            let e = &ebuf[j * D..(j + 1) * D];
+            let base = (p * bpr + j) * D * PANEL;
+            let mut d = [vdupq_n_f32(0.0); 4];
+            for (i, &ei) in e.iter().enumerate() {
+                let ev = vdupq_n_f32(ei as f32);
+                for (k, dk) in d.iter_mut().enumerate() {
+                    let x = vld1q_f32(xp.as_ptr().add(base + i * PANEL + 4 * k));
+                    // d += e·x as mul-then-add — NOT fused (see module docs)
+                    *dk = vaddq_f32(*dk, vmulq_f32(ev, x));
+                }
+            }
+            let b = vdupq_n_f32(bscale[j]);
+            for (ak, &dk) in acc.iter_mut().zip(&d) {
+                *ak = vaddq_f32(*ak, vmulq_f32(dk, b));
+            }
+        }
+        let rs = vdupq_n_f32(row_scale);
+        let mut lanes = [0f32; PANEL];
+        for (k, &ak) in acc.iter().enumerate() {
+            vst1q_f32(lanes.as_mut_ptr().add(4 * k), vmulq_f32(ak, rs));
+        }
+        let c0 = p * PANEL;
+        let c_lim = (batch - c0).min(PANEL);
+        out_row[c0..c0 + c_lim].copy_from_slice(&lanes[..c_lim]);
+    }
+}
+
+/// floor(x / m) by magic multiply for non-negative lanes — the vector
+/// form of `DecodeConsts::div_m`, exact over the decode range.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn div_m(x: int32x4_t, magic: uint32x4_t) -> int32x4_t {
+    vreinterpretq_s32_u32(vshrq_n_u32::<21>(vmulq_u32(vreinterpretq_u32_s32(x), magic)))
+}
+
+/// Vectorized NestQuantM decode core over one 8-block, split into low
+/// (coords 0–3) and high (coords 4–7) halves. Writes the chosen
+/// half-unit residual to `out`, lane-exact vs [`DecodeConsts::decode`].
+///
+/// # Safety
+/// Requires NEON.
+#[target_feature(enable = "neon")]
+unsafe fn decode_core(consts: DecodeConsts, c: &[u8; D], out: &mut [i32; D]) {
+    let t_arr = gmul(c);
+    let t_lo = vld1q_s32(t_arr.as_ptr());
+    let t_hi = vld1q_s32(t_arr.as_ptr().add(4));
+    let q = consts.q;
+    let m = consts.m;
+    let qv = vdupq_n_s32(q);
+    let mv = vdupq_n_s32(m);
+    let magic = vdupq_n_u32(consts.magic);
+
+    let r1_lo = div_m(vaddq_s32(t_lo, qv), magic);
+    let r1_hi = div_m(vaddq_s32(t_hi, qv), magic);
+    let mut e1_lo = vsubq_s32(t_lo, vmulq_s32(mv, r1_lo));
+    let e1_hi = vsubq_s32(t_hi, vmulq_s32(mv, r1_hi));
+    let r2_lo = div_m(t_lo, magic);
+    let r2_hi = div_m(t_hi, magic);
+    let mut e2_lo = vsubq_s32(vsubq_s32(t_lo, qv), vmulq_s32(mv, r2_lo));
+    let e2_hi = vsubq_s32(vsubq_s32(t_hi, qv), vmulq_s32(mv, r2_hi));
+    let par1 = vaddvq_s32(r1_lo) + vaddvq_s32(r1_hi);
+    let par2 = vaddvq_s32(r2_lo) + vaddvq_s32(r2_hi);
+
+    // parity fix on coordinate 0 (low half, lane 0): e0 −= m·dir·(par&1)
+    let fix1 = {
+        let dir = 1 | (vgetq_lane_s32::<0>(e1_lo) >> 31);
+        m * dir * (par1 & 1)
+    };
+    e1_lo = vsetq_lane_s32::<0>(vgetq_lane_s32::<0>(e1_lo) - fix1, e1_lo);
+    let fix2 = {
+        let dir = 1 | (vgetq_lane_s32::<0>(e2_lo) >> 31);
+        m * dir * (par2 & 1)
+    };
+    e2_lo = vsetq_lane_s32::<0>(vgetq_lane_s32::<0>(e2_lo) - fix2, e2_lo);
+
+    let cost1 = vaddvq_s32(vmulq_s32(e1_lo, e1_lo)) + vaddvq_s32(vmulq_s32(e1_hi, e1_hi));
+    let cost2 = vaddvq_s32(vmulq_s32(e2_lo, e2_lo)) + vaddvq_s32(vmulq_s32(e2_hi, e2_hi));
+    if cost1 <= cost2 {
+        vst1q_s32(out.as_mut_ptr(), e1_lo);
+        vst1q_s32(out.as_mut_ptr().add(4), e1_hi);
+    } else {
+        vst1q_s32(out.as_mut_ptr(), e2_lo);
+        vst1q_s32(out.as_mut_ptr().add(4), e2_hi);
+    }
+}
+
+/// Streaming-decode entry point (kvpool): one block, i32 out.
+///
+/// # Safety
+/// Requires NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn decode_block(consts: DecodeConsts, c: &[u8; D], out: &mut [i32; D]) {
+    decode_core(consts, c, out);
+}
+
+/// Decode a packed-nibble code row into i16 entries: scalar nibble
+/// unpack, vector decode core, saturating-narrow store (values bounded
+/// by 2m ≪ i16::MAX, saturation never fires).
+///
+/// # Safety
+/// Requires NEON; `crow.len() ≥ ebuf.len()/2` and `ebuf.len() % 8 == 0`.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn decode_nibble_row(consts: DecodeConsts, crow: &[u8], ebuf: &mut [i16]) {
+    let bpr = ebuf.len() / D;
+    let mut cbuf = [0u8; D];
+    let mut e = [0i32; D];
+    for j in 0..bpr {
+        for b in 0..4 {
+            let byte = crow[j * 4 + b];
+            cbuf[2 * b] = byte & 0x0F;
+            cbuf[2 * b + 1] = byte >> 4;
+        }
+        decode_core(consts, &cbuf, &mut e);
+        let lo = vqmovn_s32(vld1q_s32(e.as_ptr()));
+        let hi = vqmovn_s32(vld1q_s32(e.as_ptr().add(4)));
+        vst1q_s16(ebuf.as_mut_ptr().add(j * D), vcombine_s16(lo, hi));
+    }
+}
+
+/// Per-block LUT dots, four blocks per iteration: table entries are
+/// loaded scalar (no NEON gather) into a lane group, the q-radix
+/// weighting and accumulation run vectorized. Exact i32 per lane vs
+/// [`PairLut::block_dot`].
+///
+/// # Safety
+/// Requires NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn lut_block_dots(
+    lut: &PairLut,
+    m: usize,
+    act_idx: &[u16],
+    widx: &[u16],
+    dots: &mut [i32],
+) {
+    let bpr = dots.len();
+    let n = lut.n;
+    let q = lut.q as i32;
+    let table = lut.table.as_slice();
+    let mut j0 = 0usize;
+    while j0 + 4 <= bpr {
+        let mut acc = vdupq_n_s32(0);
+        let mut wl = 1i32; // q^ℓ
+        for l in 0..m {
+            let mut rowoff = [0usize; 4];
+            for (jj, ro) in rowoff.iter_mut().enumerate() {
+                *ro = act_idx[(j0 + jj) * m + l] as usize * n;
+            }
+            let mut inner = vdupq_n_s32(0);
+            let mut wm = 1i32; // q^m
+            for mm in 0..m {
+                let mut vals = [0i32; 4];
+                for (jj, v) in vals.iter_mut().enumerate() {
+                    *v = table[rowoff[jj] + widx[(j0 + jj) * m + mm] as usize] as i32;
+                }
+                let v = vld1q_s32(vals.as_ptr());
+                inner = vaddq_s32(inner, vmulq_s32(vdupq_n_s32(wm), v));
+                wm *= q;
+            }
+            acc = vaddq_s32(acc, vmulq_s32(vdupq_n_s32(wl), inner));
+            wl *= q;
+        }
+        vst1q_s32(dots.as_mut_ptr().add(j0), acc);
+        j0 += 4;
+    }
+    for j in j0..bpr {
+        dots[j] = lut.block_dot(&act_idx[j * m..(j + 1) * m], &widx[j * m..(j + 1) * m]);
+    }
+}

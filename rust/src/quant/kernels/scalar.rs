@@ -1,0 +1,97 @@
+//! Portable scalar kernel tier — the reference implementation every SIMD
+//! tier must match bit-for-bit (f32 paths) or exactly (integer paths).
+//! These are the loops the crate shipped before the `std::arch` tiers
+//! existed, moved here verbatim so the parity propchecks in
+//! `quant::kernels::tests` compare SIMD output against the exact code
+//! that used to serve production traffic.
+
+use crate::lattice::e8::D;
+use crate::lattice::hierarchical::PairLut;
+use crate::quant::gemm::PANEL;
+use crate::quant::qgemm::DecodeConsts;
+
+/// The 8×NC microkernel: one decoded weight row (`ebuf`, half-unit /
+/// integer entries) times the packed `[panel][block][lane][col]`
+/// activation panels. Per output column the operation sequence is
+/// exactly: for each block, an 8-term sequential multiply-add chain,
+/// then one multiply-accumulate by the block scale; finally one multiply
+/// by the row scale — the order every SIMD tier preserves lane-by-lane.
+pub(crate) fn row_times_panels(
+    ebuf: &[i16],
+    bscale: &[f32],
+    xp: &[f32],
+    batch: usize,
+    row_scale: f32,
+    out_row: &mut [f32],
+) {
+    let bpr = bscale.len();
+    let n_panels = batch.div_ceil(PANEL);
+    for p in 0..n_panels {
+        let mut acc = [0f32; PANEL];
+        for j in 0..bpr {
+            let e = &ebuf[j * D..(j + 1) * D];
+            let xb = &xp[(p * bpr + j) * D * PANEL..(p * bpr + j + 1) * D * PANEL];
+            let mut d = [0f32; PANEL];
+            for i in 0..D {
+                let ev = e[i] as f32;
+                let lane = &xb[i * PANEL..(i + 1) * PANEL];
+                for (dc, &xv) in d.iter_mut().zip(lane) {
+                    *dc += ev * xv;
+                }
+            }
+            let b = bscale[j];
+            for (ac, &dc) in acc.iter_mut().zip(&d) {
+                *ac += dc * b;
+            }
+        }
+        let c0 = p * PANEL;
+        let c_lim = (batch - c0).min(PANEL);
+        for c in 0..c_lim {
+            out_row[c0 + c] = acc[c] * row_scale;
+        }
+    }
+}
+
+/// Branch-free NestQuantM decode of one coset-code block into half-unit
+/// integers — delegates to [`DecodeConsts::decode`], the all-integer
+/// oracle the SIMD tiers replicate operation-for-operation.
+#[inline(always)]
+pub(crate) fn decode_block(consts: DecodeConsts, c: &[u8; D], out: &mut [i32; D]) {
+    consts.decode(c, out);
+}
+
+/// Decode a whole packed-nibble code row (4-bit codes, two per byte,
+/// `crow.len() = cols/2`) into i16 half-unit entries (`ebuf`, `cols`
+/// entries) — the per-row decode feeding the GEMM microkernel.
+pub(crate) fn decode_nibble_row(consts: DecodeConsts, crow: &[u8], ebuf: &mut [i16]) {
+    let bpr = ebuf.len() / D;
+    let mut cbuf = [0u8; D];
+    let mut e = [0i32; D];
+    for j in 0..bpr {
+        for b in 0..4 {
+            let byte = crow[j * 4 + b];
+            cbuf[2 * b] = byte & 0x0F;
+            cbuf[2 * b + 1] = byte >> 4;
+        }
+        consts.decode(&cbuf, &mut e);
+        for i in 0..D {
+            ebuf[j * D + i] = e[i] as i16;
+        }
+    }
+}
+
+/// Per-block pair-LUT dots of one weight row against one encoded
+/// activation row: `dots[j] = Σ_{ℓ,m} q^{ℓ+m}·T[a_{jℓ}][w_{jm}]`, the
+/// exact i32 [`PairLut::block_dot`] per block (`act_idx`/`widx` are
+/// `bpr·m` packed digit indices, `[block][level]`).
+pub(crate) fn lut_block_dots(
+    lut: &PairLut,
+    m: usize,
+    act_idx: &[u16],
+    widx: &[u16],
+    dots: &mut [i32],
+) {
+    for (j, d) in dots.iter_mut().enumerate() {
+        *d = lut.block_dot(&act_idx[j * m..(j + 1) * m], &widx[j * m..(j + 1) * m]);
+    }
+}

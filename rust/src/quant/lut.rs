@@ -29,7 +29,8 @@
 
 use std::sync::Arc;
 
-use super::gemm::{row_ranges, transpose_into};
+use super::gemm::{drive_rows, resolve_threads, transpose_into};
+use super::kernels::{self, Kernel};
 use super::matrix::QuantizedMatrix;
 use crate::lattice::e8::D;
 use crate::lattice::hierarchical::{
@@ -52,6 +53,10 @@ pub struct LutScratch {
     act_scale: Vec<f32>,
     /// (rows, batch) staging buffer for the GEMM path
     ytmp: Vec<f32>,
+    /// cols/8 per-block LUT dots — the SIMD kernel's i32 staging row
+    /// (worker threads use their own; this one serves the alloc-free
+    /// `threads == 1` / GEMV paths)
+    dots: Vec<i32>,
 }
 
 impl LutScratch {
@@ -192,22 +197,31 @@ impl PackedLutMatrix {
 
     /// One weight row × one encoded activation row, pure table lookups:
     /// Σ_blocks (Σ_{ℓ,m} q^{ℓ+m}·T)·(β_w/2)(β_a/2). Shared by the GEMV
-    /// and GEMM paths so they are bit-for-bit identical.
+    /// and GEMM paths so they are bit-for-bit identical. The per-block
+    /// i32 dots are staged in `dots` (len cols/8) by the dispatched
+    /// [`kernels::lut_block_dots`] — exact integers, so splitting the
+    /// lookup stage from the f32 fold changes no output bit: the fold
+    /// runs the same f32 operations in the same block order as the old
+    /// fused loop.
     #[inline]
-    fn accum_row(&self, r: usize, act_idx: &[u16], act_beta: &[f32]) -> f32 {
+    fn accum_row(
+        &self,
+        kern: Kernel,
+        r: usize,
+        act_idx: &[u16],
+        act_beta: &[f32],
+        dots: &mut [i32],
+    ) -> f32 {
         let m = self.m_levels;
         let bpr = self.cols / D;
         let widx = &self.idx[r * bpr * m..(r + 1) * bpr * m];
+        kernels::lut_block_dots(kern, &self.lut, m, act_idx, widx, dots);
         let mut acc = 0f32;
-        for j in 0..bpr {
-            let d = self
-                .lut
-                .block_dot(&act_idx[j * m..(j + 1) * m], &widx[j * m..(j + 1) * m])
-                as f32;
+        for (j, &d) in dots.iter().enumerate() {
             let bidx = r * bpr + j;
             let wb =
                 self.beta_half[((self.beta_idx[bidx / 4] >> (2 * (bidx % 4))) & 0x3) as usize];
-            acc += d * (wb * act_beta[j]);
+            acc += d as f32 * (wb * act_beta[j]);
         }
         acc
     }
@@ -215,6 +229,12 @@ impl PackedLutMatrix {
     /// y = W·x by table lookups (the decode-step hot path). Allocation-
     /// free once `scratch` is warm — no decoded i16 row is ever built.
     pub fn gemv_into(&self, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
+        self.gemv_into_with(kernels::active(), x, y, scratch)
+    }
+
+    /// [`Self::gemv_into`] with an explicit dispatch tier — the direct
+    /// entry point tests and benches use to compare tiers in one process.
+    pub fn gemv_into_with(&self, kern: Kernel, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         let m = self.m_levels;
@@ -223,9 +243,11 @@ impl PackedLutMatrix {
         scratch.act_idx.resize(bpr * m, 0);
         scratch.act_beta.clear();
         scratch.act_beta.resize(bpr, 0.0);
+        scratch.dots.clear();
+        scratch.dots.resize(bpr, 0);
         let a_scale = self.encode_act_row(x, &mut scratch.act_idx, &mut scratch.act_beta);
         for r in 0..self.rows {
-            y[r] = self.accum_row(r, &scratch.act_idx, &scratch.act_beta)
+            y[r] = self.accum_row(kern, r, &scratch.act_idx, &scratch.act_beta, &mut scratch.dots)
                 * self.row_scale[r]
                 * a_scale;
         }
@@ -245,6 +267,19 @@ impl PackedLutMatrix {
     /// Results are bit-for-bit identical to [`Self::gemv_into`] per
     /// batch row.
     pub fn gemm_into(&self, xt: &Mat, yt: &mut Mat, threads: usize, scratch: &mut LutScratch) {
+        self.gemm_into_with(kernels::active(), xt, yt, threads, scratch)
+    }
+
+    /// [`Self::gemm_into`] with an explicit dispatch tier (see
+    /// [`Self::gemv_into_with`]).
+    pub fn gemm_into_with(
+        &self,
+        kern: Kernel,
+        xt: &Mat,
+        yt: &mut Mat,
+        threads: usize,
+        scratch: &mut LutScratch,
+    ) {
         assert_eq!(xt.cols, self.cols, "activation panel width mismatch");
         assert_eq!(yt.rows, xt.rows, "output batch mismatch");
         assert_eq!(yt.cols, self.rows, "output width mismatch");
@@ -252,11 +287,7 @@ impl PackedLutMatrix {
         if batch == 0 || self.rows == 0 {
             return;
         }
-        let threads = if threads == 0 {
-            std::thread::available_parallelism().map_or(1, |n| n.get())
-        } else {
-            threads
-        };
+        let threads = resolve_threads(threads);
         let m = self.m_levels;
         let bpr = self.cols / D;
         scratch.act_idx.clear();
@@ -274,38 +305,45 @@ impl PackedLutMatrix {
         }
         scratch.ytmp.clear();
         scratch.ytmp.resize(self.rows * batch, 0.0);
-        let LutScratch { act_idx, act_beta, act_scale, ytmp } = scratch;
+        let LutScratch { act_idx, act_beta, act_scale, ytmp, dots } = scratch;
         let (act_idx, act_beta, act_scale) =
             (act_idx.as_slice(), act_beta.as_slice(), act_scale.as_slice());
 
-        let run = |range: std::ops::Range<usize>, out: &mut [f32]| {
-            for (k, r) in range.enumerate() {
+        if threads == 1 {
+            // allocation-free fast path: the dots staging row lives in
+            // the scratch, no range vector, no spawn
+            dots.clear();
+            dots.resize(bpr, 0);
+            for r in 0..self.rows {
                 let rs = self.row_scale[r];
-                let orow = &mut out[k * batch..(k + 1) * batch];
+                let orow = &mut ytmp[r * batch..(r + 1) * batch];
                 for cidx in 0..batch {
                     orow[cidx] = self.accum_row(
+                        kern,
                         r,
                         &act_idx[cidx * bpr * m..(cidx + 1) * bpr * m],
                         &act_beta[cidx * bpr..(cidx + 1) * bpr],
+                        dots,
                     ) * rs
                         * act_scale[cidx];
                 }
             }
-        };
-
-        if threads == 1 {
-            // allocation-free fast path: no range vector, no spawn
-            run(0..self.rows, ytmp.as_mut_slice());
         } else {
-            let ranges = row_ranges(self.rows, threads);
-            let run = &run;
-            std::thread::scope(|s| {
-                let mut rest: &mut [f32] = ytmp.as_mut_slice();
-                for range in ranges {
-                    let (chunk, tail) =
-                        std::mem::take(&mut rest).split_at_mut(range.len() * batch);
-                    rest = tail;
-                    s.spawn(move || run(range, chunk));
+            drive_rows(self.rows, batch, threads, ytmp, |range, out| {
+                let mut dots = vec![0i32; bpr];
+                for (k, r) in range.enumerate() {
+                    let rs = self.row_scale[r];
+                    let orow = &mut out[k * batch..(k + 1) * batch];
+                    for cidx in 0..batch {
+                        orow[cidx] = self.accum_row(
+                            kern,
+                            r,
+                            &act_idx[cidx * bpr * m..(cidx + 1) * bpr * m],
+                            &act_beta[cidx * bpr..(cidx + 1) * bpr],
+                            &mut dots,
+                        ) * rs
+                            * act_scale[cidx];
+                    }
                 }
             });
         }
@@ -490,6 +528,36 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn gemm_kernel_tiers_bitexact_vs_scalar_gemv() {
+        // the gathered SIMD LUT path is exact i32, so every supported
+        // tier must reproduce the forced-scalar GEMV bit-for-bit.
+        let mut rng = Rng::new(5108);
+        for &(q, m) in &[(2u32, 3usize), (3, 2)] {
+            let w = Mat::from_vec(9, 72, rng.gauss_vec(9 * 72));
+            let (packed, _, _) = pack(&w, q, m);
+            let batch = 7;
+            let xt = Mat::from_vec(batch, 72, rng.gauss_vec(batch * 72));
+            let mut y = vec![0f32; 9];
+            let mut vs = LutScratch::new();
+            for k in kernels::available() {
+                let mut yt = Mat::zeros(batch, 9);
+                packed.gemm_into_with(k, &xt, &mut yt, 2, &mut LutScratch::new());
+                for c in 0..batch {
+                    packed.gemv_into_with(Kernel::Scalar, xt.row(c), &mut y, &mut vs);
+                    for r in 0..9 {
+                        assert_eq!(
+                            yt[(c, r)].to_bits(),
+                            y[r].to_bits(),
+                            "tier {} q={q} M={m} c={c} r={r}",
+                            k.name()
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //! * [`gemm`] — the decode-amortized GEMM kernel core shared by the
 //!   packed formats: activation-panel packing, the 8×NC microkernel, and
 //!   the row-partitioned `std::thread::scope` driver.
+//! * [`kernels`] — runtime-dispatched SIMD tiers (scalar/AVX2/NEON) for
+//!   the microkernel, the block decode, and the LUT block dots; picked
+//!   once per process, overridable via `NESTQUANT_KERNEL`.
 //! * [`lut`] — the LUT inner-product GEMM backend: M-level hierarchical
 //!   weight indices + the shared pair LUT (`lattice::hierarchical`), so
 //!   C = A·Bᵀ is computed by table lookups with no decoded rows.
@@ -21,6 +24,7 @@
 //!   `.qplan` text format for mixed-precision deployments.
 
 pub mod gemm;
+pub mod kernels;
 pub mod ldlq;
 pub mod lut;
 pub mod matrix;
@@ -29,6 +33,7 @@ pub mod qaldlq;
 pub mod qgemm;
 pub mod uniform;
 
+pub use kernels::Kernel;
 pub use lut::{LutScratch, PackedLutMatrix};
 pub use matrix::QuantizedMatrix;
 pub use plan::{

@@ -19,6 +19,7 @@
 //! Appendix D) and matches `lattice::e8::nearest_e8_m` bit-for-bit.
 
 use super::gemm::{self, GemmScratch};
+use super::kernels::{self, Kernel};
 use super::matrix::QuantizedMatrix;
 use crate::lattice::e8::D;
 use crate::lattice::nested::{NestedLatticeQuantizer, QuantizedVector};
@@ -61,10 +62,12 @@ pub fn decode_block_i32(c: &[u8; D], q: i32) -> [i32; D] {
 #[derive(Clone, Copy, Debug)]
 pub struct DecodeConsts {
     pub q: i32,
-    m: i32,
+    /// m = 2q (crate-visible so the SIMD tiers in `quant::kernels` can
+    /// broadcast it without re-deriving)
+    pub(crate) m: i32,
     /// floor(x/m) = (x+BIAS)·magic >> 21 − BIAS/m trick avoided: t ≥ 0 here,
     /// so floor(t/m) = (t·magic) >> 21 with magic = ⌈2^21/m⌉.
-    magic: u32,
+    pub(crate) magic: u32,
 }
 
 impl DecodeConsts {
@@ -208,6 +211,14 @@ impl PackedNestMatrix {
     /// (`DecodeConsts::decode`) — the two top hotspots of the naive
     /// decode (16 idiv + 2 unpredictable branches per 8-block).
     pub fn gemv_into(&self, x: &[f32], y: &mut [f32]) {
+        self.gemv_into_with(kernels::active(), x, y)
+    }
+
+    /// [`Self::gemv_into`] with an explicit dispatch tier — the direct
+    /// entry point tests and benches use to compare tiers in one process
+    /// (the `OnceLock`-cached [`kernels::active`] choice cannot change
+    /// after first use).
+    pub fn gemv_into_with(&self, kern: Kernel, x: &[f32], y: &mut [f32]) {
         let bpr = self.cols / D; // blocks per row
         let code_bytes_per_row = self.cols / 2;
         let consts = DecodeConsts::new(self.q);
@@ -222,7 +233,7 @@ impl PackedNestMatrix {
                     cbuf[2 * b] = byte & 0x0F;
                     cbuf[2 * b + 1] = byte >> 4;
                 }
-                consts.decode(&cbuf, &mut e);
+                kernels::decode_block(kern, consts, &cbuf, &mut e);
                 let xb = &x[j * D..(j + 1) * D];
                 let mut d = 0f32;
                 for i in 0..D {
@@ -241,24 +252,21 @@ impl PackedNestMatrix {
     /// entries) and the per-block β_t/2 multipliers (`bscale`, cols/8
     /// entries) — one decode per 8-block, shared by every activation
     /// column of a GEMM panel.
-    fn decode_row(&self, r: usize, consts: DecodeConsts, ebuf: &mut [i16], bscale: &mut [f32]) {
+    fn decode_row(
+        &self,
+        kern: Kernel,
+        r: usize,
+        consts: DecodeConsts,
+        ebuf: &mut [i16],
+        bscale: &mut [f32],
+    ) {
         let bpr = self.cols / D;
         let code_bytes_per_row = self.cols / 2;
         let crow = &self.codes[r * code_bytes_per_row..(r + 1) * code_bytes_per_row];
-        let mut cbuf = [0u8; D];
-        let mut e = [0i32; D];
-        for j in 0..bpr {
-            for b in 0..4 {
-                let byte = crow[j * 4 + b];
-                cbuf[2 * b] = byte & 0x0F;
-                cbuf[2 * b + 1] = byte >> 4;
-            }
-            consts.decode(&cbuf, &mut e);
-            for i in 0..D {
-                ebuf[j * D + i] = e[i] as i16;
-            }
+        kernels::decode_nibble_row(kern, consts, crow, ebuf);
+        for (j, b) in bscale.iter_mut().enumerate() {
             let bidx = r * bpr + j;
-            bscale[j] = self.beta_half
+            *b = self.beta_half
                 [((self.beta_idx[bidx / 4] >> (2 * (bidx % 4))) & 0x3) as usize];
         }
     }
@@ -272,6 +280,19 @@ impl PackedNestMatrix {
     /// uses all available cores). Results are bit-for-bit identical to
     /// calling [`Self::gemv_into`] once per batch row.
     pub fn gemm_into(&self, xt: &Mat, yt: &mut Mat, threads: usize, scratch: &mut GemmScratch) {
+        self.gemm_into_with(kernels::active(), xt, yt, threads, scratch)
+    }
+
+    /// [`Self::gemm_into`] with an explicit dispatch tier (see
+    /// [`Self::gemv_into_with`]).
+    pub fn gemm_into_with(
+        &self,
+        kern: Kernel,
+        xt: &Mat,
+        yt: &mut Mat,
+        threads: usize,
+        scratch: &mut GemmScratch,
+    ) {
         let consts = DecodeConsts::new(self.q);
         gemm::gemm_driver(
             self.rows,
@@ -279,9 +300,10 @@ impl PackedNestMatrix {
             xt,
             yt,
             threads,
+            kern,
             scratch,
             |r, ebuf, bscale| {
-                self.decode_row(r, consts, ebuf, bscale);
+                self.decode_row(kern, r, consts, ebuf, bscale);
                 self.row_scale[r]
             },
         );
@@ -496,6 +518,35 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn gemm_kernel_tiers_bitexact_vs_scalar_gemv() {
+        // every host-supported dispatch tier must produce the same bits
+        // as the forced-scalar GEMV — the end-to-end form of the
+        // per-kernel parity propchecks in quant::kernels.
+        let mut rng = Rng::new(1112);
+        let nq = NestedLatticeQuantizer::new_m(14, vec![0.25, 0.32, 0.45, 1.0]);
+        let (rows, cols, batch) = (9usize, 40usize, 19usize);
+        let m = Mat::from_vec(rows, cols, rng.gauss_vec(rows * cols));
+        let packed = PackedNestMatrix::quantize(&m, &nq);
+        let xt = Mat::from_vec(batch, cols, rng.gauss_vec(batch * cols));
+        let mut y = vec![0f32; rows];
+        for k in kernels::available() {
+            let mut yt = Mat::zeros(batch, rows);
+            packed.gemm_into_with(k, &xt, &mut yt, 2, &mut GemmScratch::new());
+            for c in 0..batch {
+                packed.gemv_into_with(Kernel::Scalar, xt.row(c), &mut y);
+                for r in 0..rows {
+                    assert_eq!(
+                        yt[(c, r)].to_bits(),
+                        y[r].to_bits(),
+                        "tier {} c={c} r={r}",
+                        k.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! as the Table 4 runtime comparator.
 
 use super::gemm::{self, GemmScratch};
+use super::kernels::{self, Kernel};
 use crate::util::linalg::Mat;
 
 /// Symmetric uniform quantizer at `bits` bits per entry.
@@ -143,6 +144,20 @@ impl PackedInt4Matrix {
     /// `xt` is (batch, cols) row-major, `yt` (batch, rows); requires
     /// cols divisible by 8. `threads == 0` uses all available cores.
     pub fn gemm_into(&self, xt: &Mat, yt: &mut Mat, threads: usize, scratch: &mut GemmScratch) {
+        self.gemm_into_with(kernels::active(), xt, yt, threads, scratch)
+    }
+
+    /// [`Self::gemm_into`] with an explicit dispatch tier for the shared
+    /// panel microkernel (int4 nibble unpack stays scalar — it is not a
+    /// lattice decode).
+    pub fn gemm_into_with(
+        &self,
+        kern: Kernel,
+        xt: &Mat,
+        yt: &mut Mat,
+        threads: usize,
+        scratch: &mut GemmScratch,
+    ) {
         let half = self.cols / 2;
         gemm::gemm_driver(
             self.rows,
@@ -150,6 +165,7 @@ impl PackedInt4Matrix {
             xt,
             yt,
             threads,
+            kern,
             scratch,
             |r, ebuf, bscale| {
                 let row = &self.packed[r * half..(r + 1) * half];
